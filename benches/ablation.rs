@@ -1,0 +1,101 @@
+//! Ablation bench — isolates the §Perf design choices recorded in
+//! EXPERIMENTS.md so each claim regenerates independently:
+//!
+//!   A1. TableMult partial-sum combiner cap (0 = write-through, then
+//!       2^16 … 2^22) — the bounded server cache vs store round-trips.
+//!   A2. Tablet compaction policy: size-tiered (ship) vs major-on-every-
+//!       threshold (the naive merge-all this repo replaced).
+//!   A3. BatchWriter batch size on the raw store write path.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use d4m::connectors::{AccumuloConnector, D4mTableConfig};
+use d4m::gen::{kronecker_assoc, KroneckerParams};
+use d4m::graphulo::{table_mult, TableMultOpts};
+use d4m::kvstore::{Entry, Key, KvStore, TabletConfig, WriterConfig};
+use d4m::util::fmt_rate;
+
+fn ablate_combiner_cap() {
+    println!("# A1: TableMult combiner cap (SCALE-11 Kronecker, ef=16)");
+    println!("{:<12} {:>10} {:>12}", "cap", "seconds", "rate");
+    let g = kronecker_assoc(&KroneckerParams::new(11, 16, 20170710));
+    for cap in [0usize, 1 << 16, 1 << 18, 1 << 20, 1 << 22] {
+        let store = Arc::new(KvStore::new());
+        let acc = AccumuloConnector::with_store(store.clone());
+        let cfg = D4mTableConfig { transpose: false, degrees: false, ..Default::default() };
+        let t = acc.bind("A", &cfg).unwrap();
+        t.put_assoc(&g).unwrap();
+        let c = store.ensure_table("C", vec![]);
+        let opts = TableMultOpts { combiner_cap: cap, ..Default::default() };
+        let t0 = Instant::now();
+        let stats = table_mult(&t.main(), &t.main(), &c, &opts).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<12} {:>10.3} {:>12}",
+            cap,
+            dt,
+            fmt_rate(stats.partial_products as f64 / dt)
+        );
+    }
+}
+
+fn ablate_compaction() {
+    println!("\n# A2: compaction policy on a 600k-entry write burst");
+    println!("{:<12} {:>10} {:>12} {:>12}", "policy", "seconds", "rate", "compactions");
+    let entries: Vec<Entry> = (0..600_000u64)
+        .map(|i| {
+            Entry::new(
+                Key::cell(format!("r{:07}", i % 100_000), format!("c{:03}", i % 500), i),
+                "1",
+            )
+        })
+        .collect();
+    // size-tiered (ship): max_runs 8, merge small half
+    for (name, cfg) in [
+        ("tiered", TabletConfig { memtable_flush_bytes: 1 << 20, max_runs: 8 }),
+        // "major-ish": force frequent full merges by keeping max_runs tiny
+        ("eager", TabletConfig { memtable_flush_bytes: 1 << 20, max_runs: 2 }),
+        ("no-compact", TabletConfig { memtable_flush_bytes: 1 << 20, max_runs: usize::MAX }),
+    ] {
+        let store = KvStore::with_config(cfg);
+        let t = store.create_table("t", vec![]).unwrap();
+        let t0 = Instant::now();
+        t.put_batch(entries.clone());
+        t.flush();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<12} {:>10.3} {:>12} {:>12}",
+            name,
+            dt,
+            fmt_rate(entries.len() as f64 / dt),
+            "-"
+        );
+    }
+}
+
+fn ablate_batch_size() {
+    println!("\n# A3: BatchWriter batch size, 300k writes through one writer");
+    println!("{:<12} {:>10} {:>12}", "max_batch", "seconds", "rate");
+    for batch in [100usize, 1_000, 10_000, 100_000] {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec![]).unwrap();
+        let mut w = d4m::kvstore::BatchWriter::new(
+            t.clone(),
+            WriterConfig { max_batch: batch, max_bytes: usize::MAX },
+        );
+        let t0 = Instant::now();
+        for i in 0..300_000u64 {
+            w.put(&format!("r{:07}", i % 50_000), "c", "1");
+        }
+        w.flush();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("{:<12} {:>10.3} {:>12}", batch, dt, fmt_rate(300_000.0 / dt));
+    }
+}
+
+fn main() {
+    ablate_combiner_cap();
+    ablate_compaction();
+    ablate_batch_size();
+}

@@ -1,0 +1,119 @@
+//! Bench: **T-jl** — the D4M.jl vs MATLAB D4M comparison (Chen et al.
+//! 2016). The published result: same API, different implementation
+//! maturity; the new implementation is comparable and sometimes faster.
+//!
+//! We reproduce the comparison *shape* with two interchangeable backends
+//! of the identical op suite:
+//!   naive — BTreeMap-of-cells interpreter style (MATLAB-class stand-in)
+//!   csr   — sorted-key + CSR backend (the tuned implementation)
+//!
+//! Ops: construct, add, elem-mult, matmul, transpose, subsref-range.
+
+use std::time::Instant;
+
+use d4m::assoc::naive::NaiveAssoc;
+use d4m::assoc::{Assoc, KeySel};
+use d4m::util::XorShift64;
+
+fn rand_triples(n: usize, keyspace: u64, seed: u64) -> Vec<(String, String, f64)> {
+    let mut rng = XorShift64::new(seed);
+    (0..n)
+        .map(|_| {
+            (
+                format!("r{:06}", rng.below(keyspace)),
+                format!("c{:06}", rng.below(keyspace)),
+                (rng.below(9) + 1) as f64,
+            )
+        })
+        .collect()
+}
+
+fn time_op(f: impl FnOnce()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("# T-jl: identical op suite on naive (MATLAB-class) vs csr (tuned) backends");
+    println!(
+        "{:<8} {:<12} {:>12} {:>12} {:>9}",
+        "n", "op", "naive(s)", "csr(s)", "speedup"
+    );
+    for &exp in &[10u32, 12, 14, 16] {
+        let n = 1usize << exp;
+        let keyspace = (n as u64 / 2).max(16);
+        let t1 = rand_triples(n, keyspace, 1);
+        let t2 = rand_triples(n, keyspace, 2);
+
+        // construct
+        let dt_naive = time_op(|| {
+            std::hint::black_box(NaiveAssoc::from_triples(&t1));
+        });
+        let dt_csr = time_op(|| {
+            std::hint::black_box(Assoc::from_triples(&t1));
+        });
+        report(n, "construct", dt_naive, dt_csr);
+
+        let na = NaiveAssoc::from_triples(&t1);
+        let nb = NaiveAssoc::from_triples(&t2);
+        let ca = Assoc::from_triples(&t1);
+        let cb = Assoc::from_triples(&t2);
+
+        let dt_naive = time_op(|| {
+            std::hint::black_box(na.add(&nb));
+        });
+        let dt_csr = time_op(|| {
+            std::hint::black_box(ca.add(&cb));
+        });
+        report(n, "add", dt_naive, dt_csr);
+
+        let dt_naive = time_op(|| {
+            std::hint::black_box(na.elem_mult(&nb));
+        });
+        let dt_csr = time_op(|| {
+            std::hint::black_box(ca.elem_mult(&cb));
+        });
+        report(n, "elem-mult", dt_naive, dt_csr);
+
+        // matmul gets quadratic on naive quickly; cap the size
+        if exp <= 14 {
+            let dt_naive = time_op(|| {
+                std::hint::black_box(na.matmul(&nb));
+            });
+            let dt_csr = time_op(|| {
+                std::hint::black_box(ca.matmul(&cb));
+            });
+            report(n, "matmul", dt_naive, dt_csr);
+        }
+
+        let dt_naive = time_op(|| {
+            std::hint::black_box(na.transpose());
+        });
+        let dt_csr = time_op(|| {
+            std::hint::black_box(ca.transpose());
+        });
+        report(n, "transpose", dt_naive, dt_csr);
+
+        let lo = format!("r{:06}", keyspace / 4);
+        let hi = format!("r{:06}", keyspace / 2);
+        let dt_naive = time_op(|| {
+            std::hint::black_box(na.select_row_range(&lo, &hi));
+        });
+        let dt_csr = time_op(|| {
+            std::hint::black_box(ca.select_rows(&KeySel::Range(lo.clone(), hi.clone())));
+        });
+        report(n, "subsref", dt_naive, dt_csr);
+    }
+}
+
+fn report(n: usize, op: &str, naive: f64, csr: f64) {
+    println!(
+        "{:<8} {:<12} {:>12.5} {:>12.5} {:>8.1}x",
+        n,
+        op,
+        naive,
+        csr,
+        naive / csr.max(1e-12)
+    );
+}

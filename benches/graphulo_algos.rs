@@ -1,0 +1,73 @@
+//! Bench: **T-algos** — the Graphulo algorithm suite (Hutchison et al.
+//! 2015/2016): BFS, Jaccard and k-truss, server-side (in-database) vs
+//! the client-side D4M baseline, across Kronecker scales.
+//!
+//! The published shape: server-side is competitive while never
+//! materialising the full operands client-side; the gap narrows (or
+//! flips) as data grows and client memory pressure rises.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use d4m::connectors::{AccumuloConnector, D4mTableConfig};
+use d4m::gen::{kronecker_assoc, vertex_key, KroneckerParams};
+use d4m::graphulo;
+use d4m::kvstore::KvStore;
+
+struct Setup {
+    store: Arc<KvStore>,
+    table: d4m::connectors::D4mTable,
+    graph: d4m::assoc::Assoc,
+}
+
+fn setup(scale: u32) -> Setup {
+    let g = kronecker_assoc(&KroneckerParams::new(scale, 8, 0xA160));
+    let store = Arc::new(KvStore::new());
+    let acc = AccumuloConnector::with_store(store.clone());
+    let t = acc.bind("G", &D4mTableConfig::default()).unwrap();
+    t.put_assoc(&g).unwrap();
+    Setup { store, table: t, graph: g }
+}
+
+fn bench(name: &str, scale: u32, nnz: usize, f: impl FnOnce()) {
+    let t0 = Instant::now();
+    f();
+    println!("{:<8} {:<10} {:>10} {:>12.4}", scale, name, nnz, t0.elapsed().as_secs_f64());
+}
+
+fn main() {
+    println!("# T-algos: Graphulo server-side vs D4M client-side algorithms");
+    println!("{:<8} {:<10} {:>10} {:>12}", "scale", "algo", "nnz", "seconds");
+    for &scale in &[9u32, 10, 11, 12] {
+        let s = setup(scale);
+        let seeds = vec![vertex_key(0), vertex_key(1)];
+
+        bench("bfs-srv", scale, s.graph.nnz(), || {
+            std::hint::black_box(graphulo::bfs_server(&s.table.main(), &seeds, 3));
+        });
+        bench("bfs-cli", scale, s.graph.nnz(), || {
+            std::hint::black_box(graphulo::bfs_assoc(&s.graph, &seeds, 3));
+        });
+
+        let deg = s.table.degree_table().unwrap();
+        bench("jac-srv", scale, s.graph.nnz(), || {
+            std::hint::black_box(
+                graphulo::jaccard_server(&s.store, &s.table.main(), &deg, "J").unwrap(),
+            );
+        });
+        bench("jac-cli", scale, s.graph.nnz(), || {
+            std::hint::black_box(graphulo::jaccard_assoc(&s.graph));
+        });
+
+        // k-truss is the heavy one; keep it to the smaller scales
+        if scale <= 10 {
+            bench("kt3-srv", scale, s.graph.nnz(), || {
+                let sym = graphulo::symmetrise_table(&s.store, &s.table.main(), "Gs").unwrap();
+                std::hint::black_box(graphulo::ktruss_server(&s.store, &sym, 3, "KT").unwrap());
+            });
+            bench("kt3-cli", scale, s.graph.nnz(), || {
+                std::hint::black_box(graphulo::ktruss_assoc(&s.graph, 3));
+            });
+        }
+    }
+}

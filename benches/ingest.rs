@@ -1,0 +1,88 @@
+//! Bench: **T-ingest-acc** (Kepner 2014, "100M inserts/sec") and
+//! **T-ingest-scidb** (Samsi 2016, "~3M inserts/sec SciDB import").
+//!
+//! Accumulo group: ingest rate vs. number of parallel pipeline workers
+//! and batch size — the paper's claim is near-linear scaling with
+//! parallelism (their 100M/s needed 216 nodes; we reproduce the *scaling
+//! shape* on threads).
+//!
+//! SciDB group: chunked array import rate vs. chunk size.
+
+use std::sync::Arc;
+
+use d4m::arraystore::{ArraySchema, ArrayStore};
+use d4m::connectors::{AccumuloConnector, D4mTableConfig};
+use d4m::gen::doc_word_triples;
+use d4m::pipeline::{IngestPipeline, PipelineConfig};
+use d4m::util::{fmt_rate, XorShift64};
+
+fn accumulo_group() {
+    println!("# T-ingest-acc: pipeline ingest rate vs workers / batch size");
+    println!(
+        "{:<9} {:<9} {:>10} {:>12} {:>14} {:>14} {:>8}",
+        "workers", "batch", "triples", "seconds", "logical", "physical", "stalls"
+    );
+    let triples: Vec<(String, String, String)> = doc_word_triples(2_000, 100, 5_000, 99)
+        .into_iter()
+        .collect();
+    for &workers in &[1usize, 2, 4, 8] {
+        for &batch in &[512usize, 4096, 16384] {
+            let acc = AccumuloConnector::new();
+            let t = Arc::new(acc.bind("T", &D4mTableConfig::default()).unwrap());
+            let p = IngestPipeline::new(
+                t,
+                PipelineConfig {
+                    num_workers: workers,
+                    batch_size: batch,
+                    queue_depth: 8,
+                    shard_by_row: true,
+                },
+            );
+            let rep = p.run(triples.iter().cloned()).unwrap();
+            println!(
+                "{:<9} {:<9} {:>10} {:>12.3} {:>14} {:>14} {:>8}",
+                workers,
+                batch,
+                rep.triples,
+                rep.elapsed.as_secs_f64(),
+                fmt_rate(rep.rate),
+                fmt_rate(rep.physical_rate),
+                rep.backpressure_stalls
+            );
+        }
+    }
+}
+
+fn scidb_group() {
+    println!("\n# T-ingest-scidb: array import rate vs chunk size");
+    println!("{:<9} {:>10} {:>12} {:>14} {:>8}", "chunk", "cells", "seconds", "rate", "chunks");
+    let n: u64 = 1 << 20; // 1M cells
+    let side: u64 = 4096;
+    for &chunk in &[64u64, 128, 256, 512, 1024] {
+        let store = ArrayStore::new();
+        let arr = store.create(ArraySchema::new("ing", (side, side), chunk, &["val"])).unwrap();
+        let mut rng = XorShift64::new(2016);
+        let cells: Vec<(u64, u64, Vec<f64>)> = (0..n)
+            .map(|_| (rng.below(side), rng.below(side), vec![rng.f64()]))
+            .collect();
+        let t0 = std::time::Instant::now();
+        // batched, chunk-aligned import
+        for batch in cells.chunks(65_536) {
+            arr.put_batch(batch.to_vec()).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<9} {:>10} {:>12.3} {:>14} {:>8}",
+            chunk,
+            arr.count(),
+            dt,
+            fmt_rate(n as f64 / dt),
+            arr.num_chunks()
+        );
+    }
+}
+
+fn main() {
+    accumulo_group();
+    scidb_group();
+}

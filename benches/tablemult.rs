@@ -1,0 +1,98 @@
+//! Bench: **Figure 2** — Graphulo vs. D4M TableMult scaling.
+//!
+//! For each Kronecker SCALE, runs C = A^T A three ways:
+//!   graphulo  — server-side streaming TableMult (bounded memory)
+//!   d4m       — client-side assoc matmul under a RAM budget
+//!   d4m-pjrt  — client-side dense-block path through the AOT Pallas
+//!               kernels (only when density makes it sensible)
+//!
+//! Output: one row per (SCALE, mode) with rate in partial products/sec.
+//! The paper's shape to reproduce: graphulo ≈ d4m at small scale, d4m
+//! hits the memory wall (OOM) at large scale while graphulo continues.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use d4m::connectors::{AccumuloConnector, D4mTableConfig};
+use d4m::gen::{kronecker_assoc, KroneckerParams};
+use d4m::graphulo::{self, ClientCtx, TableMultOpts};
+use d4m::kvstore::KvStore;
+use d4m::util::{fmt_bytes, fmt_rate};
+
+const CLIENT_MEM_LIMIT: usize = 24 << 20;
+
+fn main() {
+    let scales = [8u32, 9, 10, 11, 12, 13];
+    println!("# Figure 2: Graphulo vs D4M TableMult scaling");
+    println!("# client memory budget = {}", fmt_bytes(CLIENT_MEM_LIMIT));
+    println!("{:<7} {:<10} {:>10} {:>14} {:>14} {:>12}", "scale", "mode", "edges", "partials", "seconds", "rate");
+
+    for &scale in &scales {
+        let params = KroneckerParams::new(scale, 16, 0xF162);
+        let g = kronecker_assoc(&params);
+        let store = Arc::new(KvStore::new());
+        let acc = AccumuloConnector::with_store(store.clone());
+        let cfg = D4mTableConfig { degrees: false, transpose: false, ..Default::default() };
+        let t = acc.bind("G", &cfg).unwrap();
+        t.put_assoc(&g).unwrap();
+
+        // graphulo server-side
+        let c = store.create_table("C", vec![]).unwrap();
+        let t0 = Instant::now();
+        let stats =
+            graphulo::table_mult(&t.main(), &t.main(), &c, &TableMultOpts::default()).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<7} {:<10} {:>10} {:>14} {:>14.3} {:>12}",
+            scale,
+            "graphulo",
+            g.nnz(),
+            stats.partial_products,
+            dt,
+            fmt_rate(stats.partial_products as f64 / dt)
+        );
+
+        // d4m client-side with memory budget
+        let ctx = ClientCtx::with_limit(CLIENT_MEM_LIMIT);
+        let t1 = Instant::now();
+        match ctx.table_mult(&t.main(), &t.main()) {
+            Ok(_) => {
+                let dt = t1.elapsed().as_secs_f64();
+                println!(
+                    "{:<7} {:<10} {:>10} {:>14} {:>14.3} {:>12}",
+                    scale,
+                    "d4m",
+                    g.nnz(),
+                    stats.partial_products,
+                    dt,
+                    fmt_rate(stats.partial_products as f64 / dt)
+                );
+            }
+            Err(e) => {
+                println!(
+                    "{:<7} {:<10} {:>10} {:>14} {:>14} {:>12}",
+                    scale, "d4m", g.nnz(), stats.partial_products, "-", format!("OOM ({e})").chars().take(12).collect::<String>()
+                );
+            }
+        }
+
+        // d4m dense path through PJRT (small scales only: dense blocks
+        // over the full vertex space get huge fast)
+        if scale <= 9 {
+            if let Ok(engine) = d4m::runtime::PjrtEngine::new(d4m::runtime::PjrtEngine::default_dir()) {
+                let t2 = Instant::now();
+                let _ = d4m::runtime::blocks::assoc_at_b_dense(&engine, &g, &g, 128).unwrap();
+                let dt = t2.elapsed().as_secs_f64();
+                println!(
+                    "{:<7} {:<10} {:>10} {:>14} {:>14.3} {:>12}",
+                    scale,
+                    "d4m-pjrt",
+                    g.nnz(),
+                    stats.partial_products,
+                    dt,
+                    fmt_rate(stats.partial_products as f64 / dt)
+                );
+            }
+        }
+    }
+}

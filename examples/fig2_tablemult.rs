@@ -1,0 +1,84 @@
+//! Figure 2 reproduction: "Graphulo vs. D4M TableMult Scaling".
+//!
+//! Sweeps Kronecker graph SCALE and measures TableMult (C = A^T * A)
+//! throughput for:
+//!   * **Graphulo** — server-side, streaming, bounded memory;
+//!   * **D4M client** — full tables pulled into RAM, under a client
+//!     memory budget that reproduces the paper's memory wall.
+//!
+//! The paper's claim (its Figure 2): Graphulo multiplies at rates close
+//! to in-memory D4M but keeps working where the client runs out of
+//! memory. Expect the same *shape* here: comparable rates at small
+//! SCALE, and `OOM` rows for the client at large SCALE.
+//!
+//! Run with: `cargo run --release --example fig2_tablemult`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use d4m::connectors::{AccumuloConnector, D4mTableConfig};
+use d4m::gen::{kronecker_assoc, KroneckerParams};
+use d4m::graphulo::{self, ClientCtx, TableMultOpts};
+use d4m::kvstore::KvStore;
+use d4m::util::{fmt_bytes, fmt_rate};
+
+/// Client RAM budget (bytes) — small enough that the largest SCALEs blow
+/// through it, as in the paper's testbed.
+const CLIENT_MEM_LIMIT: usize = 24 << 20;
+
+fn main() {
+    let scales: Vec<u32> = std::env::args()
+        .nth(1)
+        .map(|s| s.split(',').map(|x| x.parse().unwrap()).collect())
+        .unwrap_or_else(|| vec![8, 9, 10, 11, 12]);
+    println!("client memory budget: {}", fmt_bytes(CLIENT_MEM_LIMIT));
+    println!(
+        "{:<7} {:>10} {:>14} {:>16} {:>16} {:>8}",
+        "SCALE", "edges", "partials", "graphulo", "d4m-client", "winner"
+    );
+
+    for scale in scales {
+        let params = KroneckerParams::new(scale, 16, 0xF162);
+        let g = kronecker_assoc(&params);
+
+        // load into the store
+        let store = Arc::new(KvStore::new());
+        let acc = AccumuloConnector::with_store(store.clone());
+        let cfg = D4mTableConfig { degrees: false, transpose: false, ..Default::default() };
+        let t = acc.bind("G", &cfg).unwrap();
+        t.put_assoc(&g).unwrap();
+
+        // ---- Graphulo (server-side)
+        let c = store.create_table("C", vec![]).unwrap();
+        let t0 = Instant::now();
+        let stats = graphulo::table_mult(&t.main(), &t.main(), &c, &TableMultOpts::default())
+            .unwrap();
+        let dt_server = t0.elapsed().as_secs_f64();
+        let server_rate = stats.partial_products as f64 / dt_server;
+
+        // ---- D4M client (memory-budgeted)
+        let ctx = ClientCtx::with_limit(CLIENT_MEM_LIMIT);
+        let t1 = Instant::now();
+        let client = ctx.table_mult(&t.main(), &t.main());
+        let (client_cell, winner) = match client {
+            Ok(out) => {
+                let dt = t1.elapsed().as_secs_f64();
+                let rate = stats.partial_products as f64 / dt;
+                let w = if rate > server_rate { "d4m" } else { "graphulo" };
+                (fmt_rate(rate), w)
+            }
+            Err(_) => ("OOM".to_string(), "graphulo"),
+        };
+
+        println!(
+            "{:<7} {:>10} {:>14} {:>16} {:>16} {:>8}",
+            scale,
+            g.nnz(),
+            stats.partial_products,
+            fmt_rate(server_rate),
+            client_cell,
+            winner
+        );
+    }
+    println!("\n(rates are partial products per second; OOM = client memory wall, Fig. 2's right edge)");
+}

@@ -1,0 +1,62 @@
+//! Quickstart: the associative-array tour from the D4M papers — build,
+//! query, and do linear algebra over heterogeneous string data.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use d4m::assoc::io::display_full;
+use d4m::assoc::{Assoc, KeySel};
+
+fn main() {
+    // -------------------------------------------------- construction
+    // An entity-edge table from an (imaginary) document corpus.
+    let a = Assoc::from_triples(&[
+        ("doc01", "word|apple", 2.0),
+        ("doc01", "word|berry", 1.0),
+        ("doc02", "word|apple", 1.0),
+        ("doc02", "word|cherry", 4.0),
+        ("doc03", "word|berry", 3.0),
+        ("doc03", "word|cherry", 1.0),
+    ]);
+    println!("A (doc x word counts):\n{}", display_full(&a));
+
+    // string-valued arrays work too (D4M value-key encoding)
+    let meta = Assoc::from_str_triples(&[
+        ("doc01", "lang", "en"),
+        ("doc02", "lang", "fr"),
+        ("doc03", "lang", "en"),
+    ]);
+    println!("doc02 language: {:?}", meta.get_str("doc02", "lang"));
+
+    // -------------------------------------------------- subsref
+    // all docs mentioning apple-ish words: A(:, starts_with("word|a"))
+    let apple = a.select_cols(&KeySel::Prefix("word|a".into()));
+    println!("docs with word|a*: {:?}", apple.row_keys());
+
+    // row range (D4M 'doc01,:,doc02,')
+    let first_two = a.select_rows(&KeySel::Range("doc01".into(), "doc02".into()));
+    println!("rows doc01..doc02 have {} entries", first_two.nnz());
+
+    // -------------------------------------------------- algebra
+    // word co-occurrence: C = A' * A (the TableMult of Figure 2)
+    let c = a.transpose().matmul(&a);
+    println!("\nword co-occurrence C = A'*A:\n{}", display_full(&c));
+
+    // degree vectors
+    println!("word degrees (sum down rows):\n{}", display_full(&a.sum(1)));
+
+    // union-add and intersection-multiply
+    let b = Assoc::from_triples(&[("doc01", "word|apple", 10.0), ("doc04", "word|durian", 1.0)]);
+    println!("A + B has {} entries (union)", a.add(&b).nnz());
+    println!("A & B has {} entries (intersection)", a.elem_mult(&b).nnz());
+
+    // provenance-tracking multiply: which docs connect two words?
+    let cat = a.transpose().catkeymul(&a);
+    println!(
+        "apple-berry connected through: {:?}",
+        cat.get_str("word|apple", "word|berry")
+    );
+
+    // thresholding (A > 2)
+    let heavy = a.filter_values(|v| v > 2.0);
+    println!("entries with count > 2: {:?}", heavy.triples());
+}

@@ -1,0 +1,82 @@
+"""L1 Pallas kernels: elementwise combiners used by the Graphulo algorithms.
+
+jaccard_combine — given the co-occurrence counts N = A^T A and the vertex
+degrees, produce the Jaccard coefficient matrix
+    J[i,j] = N[i,j] / (deg[i] + deg[j] - N[i,j]).
+
+degree_rowsum — row sums of a dense block (the D4M ``sum(A, 2)`` / degree
+table primitive), emitted as an (m, 1) column so it fuses into the same
+AOT artifact set.
+
+Both are pure VPU elementwise/reduce work: one (bm, bn) tile per grid
+step, trivially VMEM resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jaccard_kernel(n_ref, dr_ref, dc_ref, o_ref):
+    n = n_ref[...]
+    # deg rows broadcast down columns, deg cols across rows.
+    denom = dr_ref[...] + dc_ref[...] - n
+    # guard zero denominators (isolated vertex pairs): define J = 0 there.
+    safe = jnp.where(denom > 0, denom, 1.0)
+    o_ref[...] = jnp.where(denom > 0, n / safe, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def jaccard_combine(
+    n: jax.Array, deg_row: jax.Array, deg_col: jax.Array, *, bm: int = 128, bn: int = 128
+):
+    """J = n / (deg_row + deg_col - n), elementwise, tiled.
+
+    n: (M, N) co-occurrence counts; deg_row: (M, 1); deg_col: (1, N).
+    """
+    m, nn = n.shape
+    assert deg_row.shape == (m, 1) and deg_col.shape == (1, nn)
+    assert m % bm == 0 and nn % bn == 0
+    grid = (m // bm, nn // bn)
+    return pl.pallas_call(
+        _jaccard_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, nn), jnp.float32),
+        interpret=True,
+    )(n, deg_row, deg_col)
+
+
+def _rowsum_kernel(x_ref, o_ref, *, n_j: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...], axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def degree_rowsum(x: jax.Array, *, bm: int = 128, bn: int = 128):
+    """(M, N) -> (M, 1) row sums (vertex out-degrees of a block)."""
+    m, n = x.shape
+    assert m % bm == 0 and n % bn == 0
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_rowsum_kernel, n_j=grid[1]),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: pytest asserts kernel output ==
+oracle output (allclose) across a hypothesis sweep of shapes/dtypes.
+No pallas, no tiling — just the mathematical definition.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """C = x @ y, f32 accumulation."""
+    return jnp.dot(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def at_b(a, b):
+    """C = a^T @ b, f32 accumulation."""
+    return jnp.dot(
+        a.astype(jnp.float32).T, b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def jaccard_combine(n, deg_row, deg_col):
+    """J = n / (deg_row + deg_col - n), 0 where the denominator is <= 0."""
+    denom = deg_row + deg_col - n
+    return jnp.where(denom > 0, n / jnp.where(denom > 0, denom, 1.0), 0.0)
+
+
+def degree_rowsum(x):
+    """(M, N) -> (M, 1) row sums."""
+    return jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)
+
+
+def jaccard_end_to_end(a):
+    """Full Jaccard over an unweighted incidence block a (K, M):
+    N = a^T a, deg = colsum(a), J = N / (deg_i + deg_j - N)."""
+    n = at_b(a, a)
+    deg = jnp.sum(a.astype(jnp.float32), axis=0, keepdims=True)  # (1, M)
+    return jaccard_combine(n, deg.T, deg)

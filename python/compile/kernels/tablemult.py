@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: tiled dense-block matmul for the D4M TableMult hot path.
+
+D4M's TableMult over numeric associative arrays reduces, after key
+alignment, to C = A^T * B on the underlying sparse matrices.  The L3
+coordinator blocks the aligned matrices into dense tiles and dispatches
+the dense tile product to this kernel (via the AOT-compiled L2 graph).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * grid = (M/bm, N/bn, K/bk); the K axis is the innermost grid dim so a
+    given (i, j) output tile stays resident in VMEM across the whole K
+    sweep (revisiting semantics of pallas grids).
+  * tiles default to 128x128 — exactly one MXU systolic pass per
+    jnp.dot, 3 * 64KiB = 192KiB of VMEM per step.
+  * accumulation is f32 regardless of input dtype.
+
+On this image kernels run under interpret=True (CPU); real-TPU lowering
+would emit a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One grid step: o[i,j] (+)= x[i,k] @ y[k,j].
+
+    The K grid axis is innermost; on k == 0 we initialise the output tile,
+    afterwards we accumulate into it.  ``n_k`` is captured statically.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """C = x @ y with (bm, bn, bk) tiling.  Shapes must divide evenly.
+
+    The L3 runtime pads CSR blocks to tile multiples before dispatch, so
+    the even-division restriction never bites at runtime.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by tiles ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _at_b_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """One grid step of C = A^T @ B: o[i,j] (+)= a[k,i]^T @ b[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def at_b(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """C = a^T @ b without materialising a^T (TableMult's native form).
+
+    a: (K, M), b: (K, N) -> (M, N).  The transpose happens inside the
+    tile (a VMEM-local relayout feeding the MXU), never in HBM.
+    """
+    k, m = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({k},{m})^T x ({k},{n}) not divisible by ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_at_b_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

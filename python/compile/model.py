@@ -1,0 +1,79 @@
+"""L2: the D4M numeric compute graph, calling the L1 Pallas kernels.
+
+Three exported computations, each AOT-lowered by aot.py into one HLO
+artifact per tile configuration:
+
+  tablemult   C = A^T B          (the TableMult dense-block hot path)
+  degree      d = rowsum(A)      (degree-table primitive, sum(A, 2))
+  jaccard     J = jacc(A^T A, deg A)   (fused Graphulo Jaccard block)
+
+All dense-block shapes are fixed at lowering time (AOT); the L3 runtime
+pads CSR blocks up to the artifact's shape and slices results back down.
+Python never runs at request time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import combine, tablemult
+
+
+def tablemult_fn(a, b):
+    """TableMult dense-block product: (K, M) x (K, N) -> (M, N) = a^T b."""
+    return (tablemult.at_b(a, b),)
+
+
+def matmul_fn(a, b):
+    """Plain block product (M, K) x (K, N) -> (M, N)."""
+    return (tablemult.matmul(a, b),)
+
+
+def degree_fn(a):
+    """Row-degree of a block: (M, N) -> (M, 1)."""
+    return (combine.degree_rowsum(a),)
+
+
+def jaccard_fn(a):
+    """Fused Jaccard over an incidence block a (K, M):
+    N = a^T a; deg = colsum(a); J = N / (deg_i + deg_j - N).
+    The colsum reuses the rowsum kernel on the implicit transpose by
+    summing along axis 0 with a degree_rowsum over a^T a's structure —
+    here computed via the tablemult kernel against a ones vector would
+    cost a full pass, so we let XLA fuse a jnp colsum with the two
+    pallas calls.
+    """
+    n = tablemult.at_b(a, a)
+    deg = jnp.sum(a.astype(jnp.float32), axis=0, keepdims=True)  # (1, M)
+    return (combine.jaccard_combine(n, deg.T, deg),)
+
+
+#: artifact name -> (function, example-arg builder)
+def _specs(k: int, m: int, n: int):
+    f32 = jnp.float32
+    return {
+        f"tablemult_{k}x{m}x{n}": (
+            tablemult_fn,
+            (jax.ShapeDtypeStruct((k, m), f32), jax.ShapeDtypeStruct((k, n), f32)),
+        ),
+        f"matmul_{m}x{k}x{n}": (
+            matmul_fn,
+            (jax.ShapeDtypeStruct((m, k), f32), jax.ShapeDtypeStruct((k, n), f32)),
+        ),
+        f"degree_{m}x{n}": (
+            degree_fn,
+            (jax.ShapeDtypeStruct((m, n), f32),),
+        ),
+        f"jaccard_{k}x{m}": (
+            jaccard_fn,
+            (jax.ShapeDtypeStruct((k, m), f32),),
+        ),
+    }
+
+
+#: the artifact set the rust runtime expects (see rust/src/runtime/).
+#: one small config for tests, one production 512-block config.
+ARTIFACTS = {}
+for _k, _m, _n in [(128, 128, 128), (512, 512, 512)]:
+    ARTIFACTS.update(_specs(_k, _m, _n))

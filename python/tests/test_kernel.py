@@ -1,0 +1,117 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (ref.py).
+
+hypothesis sweeps tile-divisible shapes and dtypes; assert_allclose
+against the oracle is THE correctness signal for the compiled artifacts
+the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import combine, ref, tablemult
+
+# small tiles so the sweep stays fast under interpret=True
+BM = BN = BK = 8
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if dtype == jnp.bfloat16:
+        return jnp.asarray(rng.standard_normal(shape, dtype=np.float32)).astype(dtype)
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+dims = st.integers(min_value=1, max_value=4).map(lambda t: t * BM)
+dtypes = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, dtype=dtypes, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, dtype, seed):
+    x = _rand((m, k), dtype, seed)
+    y = _rand((k, n), dtype, seed + 1)
+    got = tablemult.matmul(x, y, bm=BM, bn=BN, bk=BK)
+    want = ref.matmul(x, y)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * k)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, dtype=dtypes, seed=st.integers(0, 2**31 - 1))
+def test_at_b_matches_ref(m, k, n, dtype, seed):
+    a = _rand((k, m), dtype, seed)
+    b = _rand((k, n), dtype, seed + 1)
+    got = tablemult.at_b(a, b, bm=BM, bn=BN, bk=BK)
+    want = ref.at_b(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * k)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_jaccard_combine_matches_ref(m, n, seed):
+    rng = np.random.default_rng(seed)
+    # counts are nonneg; degrees >= the counts so denominators behave
+    cnt = jnp.asarray(rng.integers(0, 5, size=(m, n)).astype(np.float32))
+    dr = jnp.asarray(rng.integers(0, 10, size=(m, 1)).astype(np.float32))
+    dc = jnp.asarray(rng.integers(0, 10, size=(1, n)).astype(np.float32))
+    got = combine.jaccard_combine(cnt, dr, dc, bm=BM, bn=BN)
+    want = ref.jaccard_combine(cnt, dr, dc)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_degree_rowsum_matches_ref(m, n, seed):
+    x = _rand((m, n), jnp.float32, seed)
+    got = combine.degree_rowsum(x, bm=BM, bn=BN)
+    want = ref.degree_rowsum(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_identity():
+    eye = jnp.eye(16, dtype=jnp.float32)
+    x = _rand((16, 16), jnp.float32, 7)
+    np.testing.assert_allclose(tablemult.matmul(x, eye, bm=8, bn=8, bk=8), x, rtol=1e-6)
+
+
+def test_at_b_equals_transpose_matmul():
+    a = _rand((24, 16), jnp.float32, 3)
+    b = _rand((24, 8), jnp.float32, 4)
+    got = tablemult.at_b(a, b, bm=8, bn=8, bk=8)
+    want = tablemult.matmul(jnp.asarray(a).T.copy(), b, bm=8, bn=8, bk=8)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_jaccard_zero_denominator_is_zero():
+    n = jnp.zeros((8, 8), jnp.float32)
+    d = jnp.zeros((8, 1), jnp.float32)
+    out = combine.jaccard_combine(n, d, d.T, bm=8, bn=8)
+    assert not np.any(np.isnan(out))
+    np.testing.assert_array_equal(out, np.zeros((8, 8)))
+
+
+def test_jaccard_self_similarity_is_one():
+    # identical columns: N[i,i] = deg_i, so J on the diagonal = 1
+    a = jnp.asarray((np.random.default_rng(0).random((16, 16)) < 0.5).astype(np.float32))
+    j = ref.jaccard_end_to_end(a)
+    deg = np.asarray(a).sum(axis=0)
+    diag = np.diag(np.asarray(j))
+    np.testing.assert_allclose(diag[deg > 0], 1.0, rtol=1e-6)
+
+
+def test_shape_mismatch_raises():
+    x = jnp.zeros((8, 8), jnp.float32)
+    y = jnp.zeros((16, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        tablemult.matmul(x, y, bm=8, bn=8, bk=8)
+
+
+def test_non_divisible_raises():
+    x = jnp.zeros((9, 8), jnp.float32)
+    y = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(AssertionError):
+        tablemult.matmul(x, y, bm=8, bn=8, bk=8)

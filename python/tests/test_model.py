@@ -1,0 +1,60 @@
+"""L2 correctness: model-level graphs (the things AOT actually lowers)
+match the oracle end-to-end, and the artifact registry is well-formed."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape).astype(np.float32))
+
+
+def test_tablemult_fn():
+    a, b = _rand((128, 128), 1), _rand((128, 128), 2)
+    (got,) = model.tablemult_fn(a, b)
+    np.testing.assert_allclose(got, ref.at_b(a, b), rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_fn():
+    a, b = _rand((128, 128), 3), _rand((128, 128), 4)
+    (got,) = model.matmul_fn(a, b)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-3)
+
+
+def test_degree_fn():
+    a = _rand((128, 128), 5)
+    (got,) = model.degree_fn(a)
+    np.testing.assert_allclose(got, ref.degree_rowsum(a), rtol=1e-5, atol=1e-4)
+
+
+def test_jaccard_fn():
+    a = jnp.asarray(
+        (np.random.default_rng(6).random((128, 128)) < 0.1).astype(np.float32)
+    )
+    (got,) = model.jaccard_fn(a)
+    want = ref.jaccard_end_to_end(a)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert not np.any(np.isnan(got))
+
+
+def test_artifact_registry_shapes():
+    assert len(model.ARTIFACTS) == 8  # 4 graphs x 2 tile configs
+    for name, (fn, args) in model.ARTIFACTS.items():
+        assert callable(fn)
+        for a in args:
+            assert all(s in (128, 512, 1) for s in a.shape), (name, a.shape)
+
+
+def test_artifacts_lower_to_hlo_text():
+    # lowering every artifact is what `make artifacts` does; make sure the
+    # small config lowers and mentions the expected ops.
+    from compile.aot import to_hlo_text
+
+    fn, args = model.ARTIFACTS["tablemult_128x128x128"]
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    assert "HloModule" in text
+    assert "dot(" in text or "dot " in text

@@ -1,0 +1,381 @@
+//! SciDB-class array-store substrate (see DESIGN.md substitutions).
+//!
+//! A chunked 2-D array database: arrays are declared with integer
+//! dimensions and a chunk size; cells carry one or more named f64
+//! attributes; operations (`subarray`, `filter`, `spgemm`, `sum`) execute
+//! *inside the store*, chunk at a time — reproducing SciDB's "compute on
+//! the data without exporting it" model that the D4M-SciDB connector
+//! leverages.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Mutex, RwLock};
+
+use crate::error::{D4mError, Result};
+
+/// Schema of a 2-D array: dimension bounds and attribute names.
+#[derive(Debug, Clone)]
+pub struct ArraySchema {
+    pub name: String,
+    /// Dimension extents: valid coordinates are `[0, shape.0) x [0, shape.1)`.
+    pub shape: (u64, u64),
+    /// Square chunk edge length.
+    pub chunk: u64,
+    /// Attribute names (each cell stores one f64 per attribute).
+    pub attrs: Vec<String>,
+}
+
+impl ArraySchema {
+    pub fn new(name: &str, shape: (u64, u64), chunk: u64, attrs: &[&str]) -> Self {
+        assert!(chunk > 0, "chunk must be positive");
+        ArraySchema {
+            name: name.to_string(),
+            shape,
+            chunk,
+            attrs: attrs.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    fn chunk_of(&self, i: u64, j: u64) -> (u64, u64) {
+        (i / self.chunk, j / self.chunk)
+    }
+}
+
+/// One cell value: per-attribute f64s.
+pub type Cell = Vec<f64>;
+
+/// A chunk: sparse map from in-chunk coordinates to cells.
+#[derive(Debug, Default, Clone)]
+pub struct Chunk {
+    pub cells: BTreeMap<(u64, u64), Cell>,
+}
+
+/// A stored array: schema + chunk map.
+pub struct StoredArray {
+    pub schema: ArraySchema,
+    chunks: Mutex<HashMap<(u64, u64), Chunk>>,
+}
+
+impl StoredArray {
+    fn new(schema: ArraySchema) -> Self {
+        StoredArray { schema, chunks: Mutex::new(HashMap::new()) }
+    }
+
+    /// Insert one cell (all attributes).
+    pub fn put(&self, i: u64, j: u64, cell: Cell) -> Result<()> {
+        if i >= self.schema.shape.0 || j >= self.schema.shape.1 {
+            return Err(D4mError::InvalidArg(format!(
+                "coordinate ({i},{j}) outside array shape {:?}",
+                self.schema.shape
+            )));
+        }
+        if cell.len() != self.schema.attrs.len() {
+            return Err(D4mError::InvalidArg(format!(
+                "cell has {} attrs, schema {} wants {}",
+                cell.len(),
+                self.schema.name,
+                self.schema.attrs.len()
+            )));
+        }
+        let ck = self.schema.chunk_of(i, j);
+        self.chunks.lock().unwrap().entry(ck).or_default().cells.insert((i, j), cell);
+        Ok(())
+    }
+
+    /// Bulk insert; chunk-aligned grouping is done internally (this is the
+    /// fast-ingest path the Samsi 2016 benchmark measures).
+    pub fn put_batch(&self, cells: Vec<(u64, u64, Cell)>) -> Result<()> {
+        // group by chunk first, then take the lock once
+        let mut grouped: HashMap<(u64, u64), Vec<(u64, u64, Cell)>> = HashMap::new();
+        for (i, j, c) in cells {
+            if i >= self.schema.shape.0 || j >= self.schema.shape.1 {
+                return Err(D4mError::InvalidArg(format!("coordinate ({i},{j}) out of bounds")));
+            }
+            if c.len() != self.schema.attrs.len() {
+                return Err(D4mError::InvalidArg("attr arity mismatch".into()));
+            }
+            grouped.entry(self.schema.chunk_of(i, j)).or_default().push((i, j, c));
+        }
+        let mut chunks = self.chunks.lock().unwrap();
+        for (ck, group) in grouped {
+            let chunk = chunks.entry(ck).or_default();
+            for (i, j, c) in group {
+                chunk.cells.insert((i, j), c);
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of stored cells.
+    pub fn count(&self) -> usize {
+        self.chunks.lock().unwrap().values().map(|c| c.cells.len()).sum()
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.lock().unwrap().len()
+    }
+
+    /// Read one cell.
+    pub fn get(&self, i: u64, j: u64) -> Option<Cell> {
+        let ck = self.schema.chunk_of(i, j);
+        self.chunks.lock().unwrap().get(&ck).and_then(|c| c.cells.get(&(i, j)).cloned())
+    }
+
+    /// All cells of attribute `attr` as triples (sorted by coordinate).
+    pub fn scan_attr(&self, attr: &str) -> Result<Vec<(u64, u64, f64)>> {
+        let ai = self.attr_index(attr)?;
+        let chunks = self.chunks.lock().unwrap();
+        let mut out: Vec<(u64, u64, f64)> = chunks
+            .values()
+            .flat_map(|c| c.cells.iter().map(move |(&(i, j), cell)| (i, j, cell[ai])))
+            .collect();
+        out.sort_by_key(|&(i, j, _)| (i, j));
+        Ok(out)
+    }
+
+    fn attr_index(&self, attr: &str) -> Result<usize> {
+        self.schema
+            .attrs
+            .iter()
+            .position(|a| a == attr)
+            .ok_or_else(|| D4mError::NotFound(format!("attribute {attr}")))
+    }
+
+    // ------------------------------------------------------ in-store ops
+
+    /// `subarray(lo, hi)` — the SciDB window op; executes chunk-at-a-time,
+    /// only touching chunks that overlap the window.
+    pub fn subarray(&self, lo: (u64, u64), hi: (u64, u64)) -> Result<Vec<(u64, u64, Cell)>> {
+        let chunks = self.chunks.lock().unwrap();
+        let c = self.schema.chunk;
+        let mut out = Vec::new();
+        for (&(ci, cj), chunk) in chunks.iter() {
+            // chunk bounding box vs window
+            let (clo_i, clo_j) = (ci * c, cj * c);
+            if clo_i > hi.0 || clo_j > hi.1 || clo_i + c <= lo.0 || clo_j + c <= lo.1 {
+                continue;
+            }
+            for (&(i, j), cell) in &chunk.cells {
+                if i >= lo.0 && i <= hi.0 && j >= lo.1 && j <= hi.1 {
+                    out.push((i, j, cell.clone()));
+                }
+            }
+        }
+        out.sort_by_key(|&(i, j, _)| (i, j));
+        Ok(out)
+    }
+
+    /// `filter(attr, pred)` executed in-store.
+    pub fn filter(&self, attr: &str, pred: impl Fn(f64) -> bool) -> Result<Vec<(u64, u64, f64)>> {
+        Ok(self.scan_attr(attr)?.into_iter().filter(|&(_, _, v)| pred(v)).collect())
+    }
+
+    /// In-store aggregate: sum of an attribute.
+    pub fn sum(&self, attr: &str) -> Result<f64> {
+        Ok(self.scan_attr(attr)?.into_iter().map(|(_, _, v)| v).sum())
+    }
+}
+
+/// The array store: named arrays.
+#[derive(Default)]
+pub struct ArrayStore {
+    arrays: RwLock<HashMap<String, std::sync::Arc<StoredArray>>>,
+}
+
+impl ArrayStore {
+    pub fn new() -> Self {
+        ArrayStore::default()
+    }
+
+    pub fn create(&self, schema: ArraySchema) -> Result<std::sync::Arc<StoredArray>> {
+        let mut arrays = self.arrays.write().unwrap();
+        if arrays.contains_key(&schema.name) {
+            return Err(D4mError::AlreadyExists(format!("array {}", schema.name)));
+        }
+        let name = schema.name.clone();
+        let a = std::sync::Arc::new(StoredArray::new(schema));
+        arrays.insert(name, a.clone());
+        Ok(a)
+    }
+
+    pub fn array(&self, name: &str) -> Option<std::sync::Arc<StoredArray>> {
+        self.arrays.read().unwrap().get(name).cloned()
+    }
+
+    pub fn array_or_err(&self, name: &str) -> Result<std::sync::Arc<StoredArray>> {
+        self.array(name).ok_or_else(|| D4mError::NotFound(format!("array {name}")))
+    }
+
+    pub fn drop_array(&self, name: &str) -> Result<()> {
+        self.arrays
+            .write()
+            .unwrap()
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| D4mError::NotFound(format!("array {name}")))
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.arrays.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// In-store sparse matrix multiply `C = A * B` on attribute 0 —
+    /// SciDB's `spgemm()` AFL operator. The result array is created with
+    /// the given name (attribute "val"), computed without any data leaving
+    /// the store.
+    pub fn spgemm(&self, a: &str, b: &str, out: &str) -> Result<std::sync::Arc<StoredArray>> {
+        let a = self.array_or_err(a)?;
+        let b = self.array_or_err(b)?;
+        if a.schema.shape.1 != b.schema.shape.0 {
+            return Err(D4mError::Shape(format!(
+                "spgemm inner mismatch: {:?} x {:?}",
+                a.schema.shape, b.schema.shape
+            )));
+        }
+        let attr_a = 0usize;
+        // index B rows
+        let mut b_rows: HashMap<u64, Vec<(u64, f64)>> = HashMap::new();
+        {
+            let chunks = b.chunks.lock().unwrap();
+            for chunk in chunks.values() {
+                for (&(i, j), cell) in &chunk.cells {
+                    b_rows.entry(i).or_default().push((j, cell[0]));
+                }
+            }
+        }
+        let mut acc: HashMap<(u64, u64), f64> = HashMap::new();
+        {
+            let chunks = a.chunks.lock().unwrap();
+            for chunk in chunks.values() {
+                for (&(i, k), cell) in &chunk.cells {
+                    if let Some(brow) = b_rows.get(&k) {
+                        let av = cell[attr_a];
+                        for &(j, bv) in brow {
+                            *acc.entry((i, j)).or_insert(0.0) += av * bv;
+                        }
+                    }
+                }
+            }
+        }
+        let schema = ArraySchema::new(
+            out,
+            (a.schema.shape.0, b.schema.shape.1),
+            a.schema.chunk,
+            &["val"],
+        );
+        let c = self.create(schema)?;
+        let cells: Vec<(u64, u64, Cell)> = acc
+            .into_iter()
+            .filter(|&(_, v)| v != 0.0)
+            .map(|((i, j), v)| (i, j, vec![v]))
+            .collect();
+        c.put_batch(cells)?;
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_with(name: &str, shape: (u64, u64), chunk: u64) -> (ArrayStore, std::sync::Arc<StoredArray>) {
+        let s = ArrayStore::new();
+        let a = s.create(ArraySchema::new(name, shape, chunk, &["val"])).unwrap();
+        (s, a)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let (_s, a) = store_with("a", (100, 100), 10);
+        a.put(5, 7, vec![3.5]).unwrap();
+        assert_eq!(a.get(5, 7), Some(vec![3.5]));
+        assert_eq!(a.get(5, 8), None);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let (_s, a) = store_with("a", (10, 10), 4);
+        assert!(a.put(10, 0, vec![1.0]).is_err());
+        assert!(a.put(0, 0, vec![1.0, 2.0]).is_err()); // arity
+    }
+
+    #[test]
+    fn chunking_counts() {
+        let (_s, a) = store_with("a", (100, 100), 10);
+        a.put(1, 1, vec![1.0]).unwrap(); // chunk (0,0)
+        a.put(11, 1, vec![1.0]).unwrap(); // chunk (1,0)
+        a.put(2, 2, vec![1.0]).unwrap(); // chunk (0,0)
+        assert_eq!(a.num_chunks(), 2);
+        assert_eq!(a.count(), 3);
+    }
+
+    #[test]
+    fn subarray_window() {
+        let (_s, a) = store_with("a", (100, 100), 10);
+        for i in 0..20 {
+            a.put(i, i, vec![i as f64]).unwrap();
+        }
+        let w = a.subarray((5, 5), (9, 9)).unwrap();
+        assert_eq!(w.len(), 5);
+        assert_eq!(w[0].0, 5);
+    }
+
+    #[test]
+    fn filter_in_store() {
+        let (_s, a) = store_with("a", (10, 10), 4);
+        a.put(0, 0, vec![1.0]).unwrap();
+        a.put(1, 1, vec![5.0]).unwrap();
+        let f = a.filter("val", |v| v > 2.0).unwrap();
+        assert_eq!(f, vec![(1, 1, 5.0)]);
+    }
+
+    #[test]
+    fn missing_attr_errors() {
+        let (_s, a) = store_with("a", (10, 10), 4);
+        assert!(a.scan_attr("nope").is_err());
+    }
+
+    #[test]
+    fn spgemm_matches_dense() {
+        let s = ArrayStore::new();
+        let a = s.create(ArraySchema::new("a", (2, 3), 2, &["val"])).unwrap();
+        let b = s.create(ArraySchema::new("b", (3, 2), 2, &["val"])).unwrap();
+        // A = [[1,2,0],[0,0,3]]; B = [[1,0],[0,1],[1,1]]
+        a.put(0, 0, vec![1.0]).unwrap();
+        a.put(0, 1, vec![2.0]).unwrap();
+        a.put(1, 2, vec![3.0]).unwrap();
+        b.put(0, 0, vec![1.0]).unwrap();
+        b.put(1, 1, vec![1.0]).unwrap();
+        b.put(2, 0, vec![1.0]).unwrap();
+        b.put(2, 1, vec![1.0]).unwrap();
+        let c = s.spgemm("a", "b", "c").unwrap();
+        assert_eq!(c.get(0, 0), Some(vec![1.0]));
+        assert_eq!(c.get(0, 1), Some(vec![2.0]));
+        assert_eq!(c.get(1, 0), Some(vec![3.0]));
+        assert_eq!(c.get(1, 1), Some(vec![3.0]));
+    }
+
+    #[test]
+    fn spgemm_shape_mismatch() {
+        let s = ArrayStore::new();
+        s.create(ArraySchema::new("a", (2, 3), 2, &["val"])).unwrap();
+        s.create(ArraySchema::new("b", (2, 2), 2, &["val"])).unwrap();
+        assert!(s.spgemm("a", "b", "c").is_err());
+    }
+
+    #[test]
+    fn sum_aggregate() {
+        let (_s, a) = store_with("a", (10, 10), 4);
+        a.put(0, 0, vec![1.5]).unwrap();
+        a.put(1, 1, vec![2.5]).unwrap();
+        assert_eq!(a.sum("val").unwrap(), 4.0);
+    }
+
+    #[test]
+    fn duplicate_array_errors() {
+        let s = ArrayStore::new();
+        s.create(ArraySchema::new("a", (4, 4), 2, &["v"])).unwrap();
+        assert!(s.create(ArraySchema::new("a", (4, 4), 2, &["v"])).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Associative-array I/O: TSV triple files (the D4M exploded-schema
+//! interchange format) and a dense pretty-printer for small arrays.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::Assoc;
+use crate::error::{D4mError, Result};
+
+/// Render a numeric value the way D4M prints it (integers without `.0`).
+pub fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Write `(row, col, value)` TSV triples.
+pub fn write_tsv(a: &Assoc, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for (r, c, v) in a.str_triples() {
+        writeln!(f, "{r}\t{c}\t{v}")?;
+    }
+    Ok(())
+}
+
+/// Read TSV triples into a numeric [`Assoc`]. Values that do not parse as
+/// f64 produce a string-valued array (all-or-nothing per file).
+pub fn read_tsv(path: &Path) -> Result<Assoc> {
+    let f = BufReader::new(std::fs::File::open(path)?);
+    let mut rows = Vec::new();
+    for (lineno, line) in f.lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        if parts.len() != 3 {
+            return Err(D4mError::Parse(format!(
+                "{}:{}: expected 3 tab-separated fields, got {}",
+                path.display(),
+                lineno + 1,
+                parts.len()
+            )));
+        }
+        rows.push((parts[0].to_string(), parts[1].to_string(), parts[2].to_string()));
+    }
+    parse_triples(rows)
+}
+
+/// Build an Assoc from string triples; numeric if every value parses.
+pub fn parse_triples(rows: Vec<(String, String, String)>) -> Result<Assoc> {
+    let all_numeric = rows.iter().all(|(_, _, v)| v.parse::<f64>().is_ok());
+    if all_numeric {
+        let t: Vec<(&str, &str, f64)> = rows
+            .iter()
+            .map(|(r, c, v)| (r.as_str(), c.as_str(), v.parse::<f64>().unwrap()))
+            .collect();
+        Ok(Assoc::from_triples(&t))
+    } else {
+        let t: Vec<(&str, &str, &str)> =
+            rows.iter().map(|(r, c, v)| (r.as_str(), c.as_str(), v.as_str())).collect();
+        Ok(Assoc::from_str_triples(&t))
+    }
+}
+
+/// Dense tabular rendering for small arrays (D4M `displayFull`).
+pub fn display_full(a: &Assoc) -> String {
+    let mut out = String::new();
+    let colw = 10usize;
+    out.push_str(&" ".repeat(colw));
+    for c in a.col_keys() {
+        out.push_str(&format!("{c:>colw$}"));
+    }
+    out.push('\n');
+    for r in a.row_keys() {
+        out.push_str(&format!("{r:>colw$}"));
+        for c in a.col_keys() {
+            let s = match a.get_str(r, c) {
+                Some(v) => v.to_string(),
+                None => {
+                    let v = a.get(r, c);
+                    if v == 0.0 { String::new() } else { fmt_num(v) }
+                }
+            };
+            out.push_str(&format!("{s:>colw$}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_num_integers() {
+        assert_eq!(fmt_num(3.0), "3");
+        assert_eq!(fmt_num(3.5), "3.5");
+        assert_eq!(fmt_num(-2.0), "-2");
+    }
+
+    #[test]
+    fn tsv_roundtrip_numeric() {
+        let a = Assoc::from_triples(&[("r1", "c1", 1.5), ("r2", "c2", 2.0)]);
+        let dir = std::env::temp_dir().join("d4m_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("nums.tsv");
+        write_tsv(&a, &p).unwrap();
+        let b = read_tsv(&p).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tsv_roundtrip_strings() {
+        let a = Assoc::from_str_triples(&[("r1", "c1", "blue"), ("r2", "c2", "red")]);
+        let dir = std::env::temp_dir().join("d4m_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("strs.tsv");
+        write_tsv(&a, &p).unwrap();
+        let b = read_tsv(&p).unwrap();
+        assert_eq!(a.str_triples(), b.str_triples());
+    }
+
+    #[test]
+    fn read_rejects_bad_lines() {
+        let dir = std::env::temp_dir().join("d4m_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.tsv");
+        std::fs::write(&p, "only_two\tfields\n").unwrap();
+        assert!(read_tsv(&p).is_err());
+    }
+
+    #[test]
+    fn display_full_contains_keys() {
+        let a = Assoc::from_triples(&[("alice", "bob", 2.0)]);
+        let s = display_full(&a);
+        assert!(s.contains("alice") && s.contains("bob") && s.contains('2'));
+    }
+}

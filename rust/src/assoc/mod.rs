@@ -1,0 +1,497 @@
+//! Associative arrays — the mathematical core of D4M.
+//!
+//! An [`Assoc`] maps pairs of string keys `(row, col)` to values. Values
+//! are either numeric (f64) or strings; string values are stored D4M-style
+//! as 1-based indices into a sorted value-key table, so the numeric CSR
+//! core ([`spmat::SpMat`]) backs both cases.
+//!
+//! Operations follow the associative-array algebra of the D4M papers:
+//! `+` is union (numeric sum on collisions), elementwise `&`/`*` is
+//! intersection (numeric product), and matrix multiply contracts over the
+//! *intersection* of A's column keys and B's row keys. Key alignment is by
+//! string identity, never by position.
+
+pub mod io;
+pub mod text;
+pub mod naive;
+pub mod spmat;
+
+use crate::error::{D4mError, Result};
+use crate::util::{find_key, intersect_sorted_keys, merge_sorted_keys};
+use spmat::SpMat;
+
+/// Associative array: `(row key, col key) -> value`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assoc {
+    /// Sorted, unique row keys.
+    row_keys: Vec<String>,
+    /// Sorted, unique column keys.
+    col_keys: Vec<String>,
+    /// Numeric core; when `vals` is `Some`, entries are 1-based indices
+    /// into it (the D4M string-value encoding).
+    mat: SpMat,
+    /// Sorted, unique value keys for string-valued arrays.
+    vals: Option<Vec<String>>,
+}
+
+/// One triple of an associative array, as strings + numeric value.
+pub type Triple = (String, String, f64);
+
+impl Assoc {
+    // ------------------------------------------------------------------
+    // construction
+
+    /// Empty associative array.
+    pub fn empty() -> Self {
+        Assoc { row_keys: vec![], col_keys: vec![], mat: SpMat::zeros(0, 0), vals: None }
+    }
+
+    /// Build a numeric associative array from `(row, col, value)` triples.
+    /// Duplicate `(row, col)` pairs are summed (D4M default collision op);
+    /// entries summing to zero are dropped.
+    pub fn from_triples<R: AsRef<str>, C: AsRef<str>>(triples: &[(R, C, f64)]) -> Self {
+        let mut rows: Vec<String> = triples.iter().map(|t| t.0.as_ref().to_string()).collect();
+        let mut cols: Vec<String> = triples.iter().map(|t| t.1.as_ref().to_string()).collect();
+        rows.sort();
+        rows.dedup();
+        cols.sort();
+        cols.dedup();
+        let idx_triples: Vec<(usize, usize, f64)> = triples
+            .iter()
+            .map(|(r, c, v)| {
+                (
+                    find_key(&rows, r.as_ref()).unwrap(),
+                    find_key(&cols, c.as_ref()).unwrap(),
+                    *v,
+                )
+            })
+            .collect();
+        let mat = SpMat::from_triples(rows.len(), cols.len(), &idx_triples);
+        Assoc { row_keys: rows, col_keys: cols, mat, vals: None }.compacted()
+    }
+
+    /// Build a string-valued associative array. Duplicate `(row, col)`
+    /// pairs keep the lexicographically greatest value (deterministic).
+    pub fn from_str_triples<R: AsRef<str>, C: AsRef<str>, V: AsRef<str>>(
+        triples: &[(R, C, V)],
+    ) -> Self {
+        let mut rows: Vec<String> = triples.iter().map(|t| t.0.as_ref().to_string()).collect();
+        let mut cols: Vec<String> = triples.iter().map(|t| t.1.as_ref().to_string()).collect();
+        let mut vals: Vec<String> = triples.iter().map(|t| t.2.as_ref().to_string()).collect();
+        rows.sort();
+        rows.dedup();
+        cols.sort();
+        cols.dedup();
+        vals.sort();
+        vals.dedup();
+        // keep max value index per cell
+        let mut cells: std::collections::BTreeMap<(usize, usize), usize> =
+            std::collections::BTreeMap::new();
+        for (r, c, v) in triples {
+            let ri = find_key(&rows, r.as_ref()).unwrap();
+            let ci = find_key(&cols, c.as_ref()).unwrap();
+            let vi = find_key(&vals, v.as_ref()).unwrap() + 1; // 1-based
+            let e = cells.entry((ri, ci)).or_insert(vi);
+            *e = (*e).max(vi);
+        }
+        let idx_triples: Vec<(usize, usize, f64)> =
+            cells.into_iter().map(|((r, c), v)| (r, c, v as f64)).collect();
+        let mat = SpMat::from_triples(rows.len(), cols.len(), &idx_triples);
+        Assoc { row_keys: rows, col_keys: cols, mat, vals: Some(vals) }
+    }
+
+    /// Build from parallel key/value slices (the D4M `Assoc(r, c, v)` form).
+    pub fn new<R: AsRef<str>, C: AsRef<str>>(rows: &[R], cols: &[C], vals: &[f64]) -> Result<Self> {
+        if rows.len() != cols.len() || rows.len() != vals.len() {
+            return Err(D4mError::InvalidArg(format!(
+                "Assoc::new length mismatch: {} rows, {} cols, {} vals",
+                rows.len(),
+                cols.len(),
+                vals.len()
+            )));
+        }
+        let triples: Vec<(&str, &str, f64)> = rows
+            .iter()
+            .zip(cols.iter())
+            .zip(vals.iter())
+            .map(|((r, c), v)| (r.as_ref(), c.as_ref(), *v))
+            .collect();
+        Ok(Assoc::from_triples(&triples))
+    }
+
+    /// Internal: construct from pre-sorted key vectors + matrix.
+    pub(crate) fn from_parts(
+        row_keys: Vec<String>,
+        col_keys: Vec<String>,
+        mat: SpMat,
+        vals: Option<Vec<String>>,
+    ) -> Self {
+        debug_assert_eq!(mat.nr, row_keys.len());
+        debug_assert_eq!(mat.nc, col_keys.len());
+        debug_assert!(row_keys.windows(2).all(|w| w[0] < w[1]));
+        debug_assert!(col_keys.windows(2).all(|w| w[0] < w[1]));
+        Assoc { row_keys, col_keys, mat, vals }
+    }
+
+    /// Drop rows/cols that have become entirely empty (D4M `condense`).
+    pub fn compacted(&self) -> Self {
+        let live_rows: Vec<usize> =
+            (0..self.mat.nr).filter(|&r| self.mat.indptr[r + 1] > self.mat.indptr[r]).collect();
+        let mut live_col_mask = vec![false; self.mat.nc];
+        for &c in &self.mat.indices {
+            live_col_mask[c] = true;
+        }
+        let live_cols: Vec<usize> =
+            (0..self.mat.nc).filter(|&c| live_col_mask[c]).collect();
+        if live_rows.len() == self.mat.nr && live_cols.len() == self.mat.nc {
+            return self.clone();
+        }
+        let mat = self.mat.select(&live_rows, &live_cols);
+        Assoc {
+            row_keys: live_rows.iter().map(|&r| self.row_keys[r].clone()).collect(),
+            col_keys: live_cols.iter().map(|&c| self.col_keys[c].clone()).collect(),
+            mat,
+            vals: self.vals.clone(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // accessors
+
+    pub fn row_keys(&self) -> &[String] {
+        &self.row_keys
+    }
+
+    pub fn col_keys(&self) -> &[String] {
+        &self.col_keys
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.mat.nnz()
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.row_keys.len(), self.col_keys.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nnz() == 0
+    }
+
+    /// True if this array stores string values.
+    pub fn is_string_valued(&self) -> bool {
+        self.vals.is_some()
+    }
+
+    /// The underlying numeric matrix (string-valued arrays expose their
+    /// value indices).
+    pub fn matrix(&self) -> &SpMat {
+        &self.mat
+    }
+
+    /// Approximate heap footprint (keys + matrix), for memory-cap checks.
+    pub fn mem_bytes(&self) -> usize {
+        let keys: usize = self
+            .row_keys
+            .iter()
+            .chain(self.col_keys.iter())
+            .chain(self.vals.iter().flatten())
+            .map(|k| k.len() + 24)
+            .sum();
+        keys + self.mat.mem_bytes()
+    }
+
+    /// Numeric value at `(row, col)`; 0.0 if absent. For string-valued
+    /// arrays this is the 1-based value index.
+    pub fn get(&self, row: &str, col: &str) -> f64 {
+        match (find_key(&self.row_keys, row), find_key(&self.col_keys, col)) {
+            (Ok(r), Ok(c)) => self.mat.get(r, c),
+            _ => 0.0,
+        }
+    }
+
+    /// String value at `(row, col)` for string-valued arrays.
+    pub fn get_str(&self, row: &str, col: &str) -> Option<&str> {
+        let vals = self.vals.as_ref()?;
+        let v = self.get(row, col);
+        if v == 0.0 {
+            None
+        } else {
+            vals.get(v as usize - 1).map(|s| s.as_str())
+        }
+    }
+
+    /// All triples `(row, col, numeric value)` in row-major key order.
+    pub fn triples(&self) -> Vec<Triple> {
+        self.mat
+            .to_triples()
+            .into_iter()
+            .map(|(r, c, v)| (self.row_keys[r].clone(), self.col_keys[c].clone(), v))
+            .collect()
+    }
+
+    /// All triples with string values rendered (numeric arrays render the
+    /// number).
+    pub fn str_triples(&self) -> Vec<(String, String, String)> {
+        self.mat
+            .to_triples()
+            .into_iter()
+            .map(|(r, c, v)| {
+                let val = match &self.vals {
+                    Some(vals) => vals[v as usize - 1].clone(),
+                    None => crate::assoc::io::fmt_num(v),
+                };
+                (self.row_keys[r].clone(), self.col_keys[c].clone(), val)
+            })
+            .collect()
+    }
+
+    /// Convert a string-valued array to numeric by replacing every stored
+    /// value with 1.0 (D4M `logical`/`double(A)` pattern).
+    pub fn logical(&self) -> Assoc {
+        Assoc {
+            row_keys: self.row_keys.clone(),
+            col_keys: self.col_keys.clone(),
+            mat: self.mat.map(|_| 1.0),
+            vals: None,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // algebra
+
+    /// `A + B`: union of patterns, numeric sum on collisions. String-valued
+    /// inputs are first converted with [`Assoc::logical`].
+    pub fn add(&self, other: &Assoc) -> Assoc {
+        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
+        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
+        let (rows, ra, rb) = merge_sorted_keys(&a.row_keys, &b.row_keys);
+        let (cols, ca, cb) = merge_sorted_keys(&a.col_keys, &b.col_keys);
+        let ea = a.mat.embed(rows.len(), cols.len(), &ra, &ca);
+        let eb = b.mat.embed(rows.len(), cols.len(), &rb, &cb);
+        Assoc::from_parts(rows, cols, ea.union_combine(&eb, |x, y| x + y), None).compacted()
+    }
+
+    /// Elementwise subtract: union pattern, `a - b`.
+    pub fn sub(&self, other: &Assoc) -> Assoc {
+        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
+        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
+        let (rows, ra, rb) = merge_sorted_keys(&a.row_keys, &b.row_keys);
+        let (cols, ca, cb) = merge_sorted_keys(&a.col_keys, &b.col_keys);
+        let ea = a.mat.embed(rows.len(), cols.len(), &ra, &ca);
+        let eb = b.mat.embed(rows.len(), cols.len(), &rb, &cb);
+        Assoc::from_parts(rows, cols, ea.union_combine(&eb, |x, y| x - y), None).compacted()
+    }
+
+    /// Elementwise multiply (`A & B` / `A .* B`): intersection of patterns,
+    /// numeric product.
+    pub fn elem_mult(&self, other: &Assoc) -> Assoc {
+        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
+        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
+        let (rows, ra, rb) = intersect_sorted_keys(&a.row_keys, &b.row_keys);
+        let (cols, ca, cb) = intersect_sorted_keys(&a.col_keys, &b.col_keys);
+        let sa = a.mat.select(&ra, &ca);
+        let sb = b.mat.select(&rb, &cb);
+        Assoc::from_parts(rows, cols, sa.intersect_combine(&sb, |x, y| x * y), None).compacted()
+    }
+
+    /// Elementwise min over the union (missing = 0, so min(x,0)=0 drops —
+    /// this matches set-intersection semantics for logical arrays).
+    pub fn elem_min(&self, other: &Assoc) -> Assoc {
+        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
+        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
+        let (rows, ra, rb) = intersect_sorted_keys(&a.row_keys, &b.row_keys);
+        let (cols, ca, cb) = intersect_sorted_keys(&a.col_keys, &b.col_keys);
+        let sa = a.mat.select(&ra, &ca);
+        let sb = b.mat.select(&rb, &cb);
+        Assoc::from_parts(rows, cols, sa.intersect_combine(&sb, f64::min), None).compacted()
+    }
+
+    /// Elementwise max over the union of patterns.
+    pub fn elem_max(&self, other: &Assoc) -> Assoc {
+        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
+        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
+        let (rows, ra, rb) = merge_sorted_keys(&a.row_keys, &b.row_keys);
+        let (cols, ca, cb) = merge_sorted_keys(&a.col_keys, &b.col_keys);
+        let ea = a.mat.embed(rows.len(), cols.len(), &ra, &ca);
+        let eb = b.mat.embed(rows.len(), cols.len(), &rb, &cb);
+        Assoc::from_parts(rows, cols, ea.union_combine(&eb, f64::max), None).compacted()
+    }
+
+    /// Matrix multiply `A * B`: contracts over the intersection of A's
+    /// column keys and B's row keys (key-aligned, never positional).
+    pub fn matmul(&self, other: &Assoc) -> Assoc {
+        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
+        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
+        let (_, ia, ib) = intersect_sorted_keys(&a.col_keys, &b.row_keys);
+        // slice A's cols and B's rows down to the shared inner keys
+        let all_rows_a: Vec<usize> = (0..a.mat.nr).collect();
+        let all_cols_b: Vec<usize> = (0..b.mat.nc).collect();
+        let sa = a.mat.select(&all_rows_a, &ia);
+        let sb = b.mat.select(&ib, &all_cols_b);
+        Assoc::from_parts(a.row_keys.clone(), b.col_keys.clone(), sa.matmul(&sb), None)
+            .compacted()
+    }
+
+    /// D4M `CatKeyMul`: like [`Assoc::matmul`] but each output value is the
+    /// `;`-joined list of inner keys that contributed (provenance-tracking
+    /// multiply). Returns a string-valued array.
+    pub fn catkeymul(&self, other: &Assoc) -> Assoc {
+        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
+        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
+        let (inner, ia, ib) = intersect_sorted_keys(&a.col_keys, &b.row_keys);
+        let all_rows_a: Vec<usize> = (0..a.mat.nr).collect();
+        let all_cols_b: Vec<usize> = (0..b.mat.nc).collect();
+        let sa = a.mat.select(&all_rows_a, &ia);
+        let sb = b.mat.select(&ib, &all_cols_b);
+        // accumulate contributing key lists per output cell
+        let mut cells: std::collections::BTreeMap<(usize, usize), Vec<&str>> =
+            std::collections::BTreeMap::new();
+        for r in 0..sa.nr {
+            for (k, _) in sa.row(r) {
+                for (c, _) in sb.row(k) {
+                    cells.entry((r, c)).or_default().push(&inner[k]);
+                }
+            }
+        }
+        let triples: Vec<(String, String, String)> = cells
+            .into_iter()
+            .map(|((r, c), keys)| {
+                (a.row_keys[r].clone(), b.col_keys[c].clone(), keys.join(";"))
+            })
+            .collect();
+        Assoc::from_str_triples(&triples)
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Assoc {
+        Assoc {
+            row_keys: self.col_keys.clone(),
+            col_keys: self.row_keys.clone(),
+            mat: self.mat.transpose(),
+            vals: self.vals.clone(),
+        }
+    }
+
+    /// Sum along a dimension (D4M `sum(A, dim)`): `dim = 1` sums down
+    /// columns (result has single row key `""`), `dim = 2` sums across rows.
+    pub fn sum(&self, dim: usize) -> Assoc {
+        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
+        match dim {
+            1 => {
+                let sums = a.mat.col_sums();
+                let triples: Vec<(&str, &str, f64)> = a
+                    .col_keys
+                    .iter()
+                    .zip(sums.iter())
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(c, &v)| ("", c.as_str(), v))
+                    .collect();
+                Assoc::from_triples(&triples)
+            }
+            2 => {
+                let sums = a.mat.row_sums();
+                let triples: Vec<(&str, &str, f64)> = a
+                    .row_keys
+                    .iter()
+                    .zip(sums.iter())
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(r, &v)| (r.as_str(), "", v))
+                    .collect();
+                Assoc::from_triples(&triples)
+            }
+            _ => panic!("sum dim must be 1 or 2"),
+        }
+    }
+
+    /// Scalar multiply.
+    pub fn scale(&self, s: f64) -> Assoc {
+        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
+        Assoc { mat: a.mat.map(|v| v * s), ..a }.compacted()
+    }
+
+    /// Keep entries whose value satisfies `pred` (D4M `A > t` etc.).
+    pub fn filter_values(&self, pred: impl Fn(f64) -> bool) -> Assoc {
+        Assoc {
+            row_keys: self.row_keys.clone(),
+            col_keys: self.col_keys.clone(),
+            mat: self.mat.map(|v| if pred(v) { v } else { 0.0 }),
+            vals: self.vals.clone(),
+        }
+        .compacted()
+    }
+
+    /// Global sum of all numeric values.
+    pub fn total(&self) -> f64 {
+        self.mat.data.iter().sum()
+    }
+
+    // ------------------------------------------------------------------
+    // subsref
+
+    /// Select rows by predicate on the key (D4M `A(rows, :)`).
+    pub fn select_rows(&self, sel: &KeySel) -> Assoc {
+        let rows: Vec<usize> = (0..self.row_keys.len())
+            .filter(|&r| sel.matches(&self.row_keys[r]))
+            .collect();
+        let cols: Vec<usize> = (0..self.col_keys.len()).collect();
+        Assoc {
+            row_keys: rows.iter().map(|&r| self.row_keys[r].clone()).collect(),
+            col_keys: self.col_keys.clone(),
+            mat: self.mat.select(&rows, &cols),
+            vals: self.vals.clone(),
+        }
+        .compacted()
+    }
+
+    /// Select columns by predicate on the key (D4M `A(:, cols)`).
+    pub fn select_cols(&self, sel: &KeySel) -> Assoc {
+        let rows: Vec<usize> = (0..self.row_keys.len()).collect();
+        let cols: Vec<usize> = (0..self.col_keys.len())
+            .filter(|&c| sel.matches(&self.col_keys[c]))
+            .collect();
+        Assoc {
+            row_keys: self.row_keys.clone(),
+            col_keys: cols.iter().map(|&c| self.col_keys[c].clone()).collect(),
+            mat: self.mat.select(&rows, &cols),
+            vals: self.vals.clone(),
+        }
+        .compacted()
+    }
+
+    /// `A(rowsel, colsel)`.
+    pub fn subsref(&self, rows: &KeySel, cols: &KeySel) -> Assoc {
+        self.select_rows(rows).select_cols(cols)
+    }
+}
+
+/// Key selector for subsref: the D4M `A('a,:,b,', :)` patterns, Rust-shaped.
+#[derive(Debug, Clone)]
+pub enum KeySel {
+    /// All keys (`:`).
+    All,
+    /// An explicit key list.
+    Keys(Vec<String>),
+    /// Inclusive lexicographic range (D4M `'a,:,b,'`).
+    Range(String, String),
+    /// Keys with the given prefix (D4M `'a.*'` StartsWith).
+    Prefix(String),
+}
+
+impl KeySel {
+    pub fn keys<S: AsRef<str>>(ks: &[S]) -> Self {
+        KeySel::Keys(ks.iter().map(|s| s.as_ref().to_string()).collect())
+    }
+
+    pub fn matches(&self, key: &str) -> bool {
+        match self {
+            KeySel::All => true,
+            KeySel::Keys(ks) => ks.iter().any(|k| k == key),
+            KeySel::Range(lo, hi) => key >= lo.as_str() && key <= hi.as_str(),
+            KeySel::Prefix(p) => key.starts_with(p.as_str()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,153 @@
+//! Naive map-based associative array backend.
+//!
+//! Serves two roles:
+//!  1. **Oracle** for property tests: same algebra as [`super::Assoc`]
+//!     computed the obvious O(n log n)-per-op way over a `BTreeMap`.
+//!  2. **"MATLAB-class" backend** for the T-jl benchmark (DESIGN.md):
+//!     the D4M.jl paper compared a mature MATLAB implementation against a
+//!     new Julia one; we reproduce the *shape* of that comparison by
+//!     benchmarking this interpreter-style backend against the tuned CSR
+//!     backend on the identical op suite.
+
+use std::collections::BTreeMap;
+
+/// Naive associative array: a sorted map from (row, col) to value.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct NaiveAssoc {
+    pub cells: BTreeMap<(String, String), f64>,
+}
+
+impl NaiveAssoc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_triples<R: AsRef<str>, C: AsRef<str>>(triples: &[(R, C, f64)]) -> Self {
+        let mut cells: BTreeMap<(String, String), f64> = BTreeMap::new();
+        for (r, c, v) in triples {
+            *cells.entry((r.as_ref().to_string(), c.as_ref().to_string())).or_insert(0.0) += v;
+        }
+        cells.retain(|_, v| *v != 0.0);
+        NaiveAssoc { cells }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn get(&self, r: &str, c: &str) -> f64 {
+        self.cells.get(&(r.to_string(), c.to_string())).copied().unwrap_or(0.0)
+    }
+
+    pub fn triples(&self) -> Vec<(String, String, f64)> {
+        self.cells.iter().map(|((r, c), v)| (r.clone(), c.clone(), *v)).collect()
+    }
+
+    /// Union sum.
+    pub fn add(&self, other: &NaiveAssoc) -> NaiveAssoc {
+        let mut out = self.cells.clone();
+        for (k, v) in &other.cells {
+            *out.entry(k.clone()).or_insert(0.0) += v;
+        }
+        out.retain(|_, v| *v != 0.0);
+        NaiveAssoc { cells: out }
+    }
+
+    /// Intersection product.
+    pub fn elem_mult(&self, other: &NaiveAssoc) -> NaiveAssoc {
+        let mut out = BTreeMap::new();
+        for (k, v) in &self.cells {
+            if let Some(w) = other.cells.get(k) {
+                let p = v * w;
+                if p != 0.0 {
+                    out.insert(k.clone(), p);
+                }
+            }
+        }
+        NaiveAssoc { cells: out }
+    }
+
+    /// Key-aligned matrix multiply (triple loop over maps).
+    pub fn matmul(&self, other: &NaiveAssoc) -> NaiveAssoc {
+        // index B by row key for the contraction
+        let mut b_rows: BTreeMap<&str, Vec<(&str, f64)>> = BTreeMap::new();
+        for ((r, c), v) in &other.cells {
+            b_rows.entry(r.as_str()).or_default().push((c.as_str(), *v));
+        }
+        let mut out: BTreeMap<(String, String), f64> = BTreeMap::new();
+        for ((ar, ak), av) in &self.cells {
+            if let Some(brow) = b_rows.get(ak.as_str()) {
+                for (bc, bv) in brow {
+                    *out.entry((ar.clone(), bc.to_string())).or_insert(0.0) += av * bv;
+                }
+            }
+        }
+        out.retain(|_, v| *v != 0.0);
+        NaiveAssoc { cells: out }
+    }
+
+    pub fn transpose(&self) -> NaiveAssoc {
+        NaiveAssoc {
+            cells: self.cells.iter().map(|((r, c), v)| ((c.clone(), r.clone()), *v)).collect(),
+        }
+    }
+
+    /// Row selection by inclusive key range.
+    pub fn select_row_range(&self, lo: &str, hi: &str) -> NaiveAssoc {
+        NaiveAssoc {
+            cells: self
+                .cells
+                .iter()
+                .filter(|((r, _), _)| r.as_str() >= lo && r.as_str() <= hi)
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+        }
+    }
+
+    pub fn sum_rows(&self) -> BTreeMap<String, f64> {
+        let mut out: BTreeMap<String, f64> = BTreeMap::new();
+        for ((r, _), v) in &self.cells {
+            *out.entry(r.clone()).or_insert(0.0) += v;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_union_sums() {
+        let a = NaiveAssoc::from_triples(&[("r1", "c1", 1.0), ("r1", "c2", 2.0)]);
+        let b = NaiveAssoc::from_triples(&[("r1", "c2", 3.0), ("r2", "c1", 4.0)]);
+        let c = a.add(&b);
+        assert_eq!(c.get("r1", "c2"), 5.0);
+        assert_eq!(c.get("r2", "c1"), 4.0);
+        assert_eq!(c.nnz(), 3);
+    }
+
+    #[test]
+    fn matmul_key_aligned() {
+        // A: r1 -> k1; B: k1 -> c1. Product contracts on k1.
+        let a = NaiveAssoc::from_triples(&[("r1", "k1", 2.0), ("r1", "zz", 9.0)]);
+        let b = NaiveAssoc::from_triples(&[("k1", "c1", 3.0)]);
+        let c = a.matmul(&b);
+        assert_eq!(c.get("r1", "c1"), 6.0);
+        assert_eq!(c.nnz(), 1);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = NaiveAssoc::from_triples(&[("r", "c", 1.5)]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn row_range() {
+        let a = NaiveAssoc::from_triples(&[("a", "c", 1.0), ("m", "c", 2.0), ("z", "c", 3.0)]);
+        let s = a.select_row_range("b", "y");
+        assert_eq!(s.nnz(), 1);
+        assert_eq!(s.get("m", "c"), 2.0);
+    }
+}

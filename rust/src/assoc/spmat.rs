@@ -1,0 +1,441 @@
+//! CSR sparse-matrix core backing numeric associative arrays.
+//!
+//! Pure index-space kernel layer: no string keys here. All f64 values;
+//! explicit zeros are dropped at construction (D4M semantics: zero means
+//! "absent").
+
+/// Compressed sparse row matrix, `nr x nc`, f64 values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpMat {
+    pub nr: usize,
+    pub nc: usize,
+    /// Row pointer, length `nr + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices per row, sorted within each row.
+    pub indices: Vec<usize>,
+    /// Values aligned with `indices`.
+    pub data: Vec<f64>,
+}
+
+impl SpMat {
+    /// Empty matrix of the given shape.
+    pub fn zeros(nr: usize, nc: usize) -> Self {
+        SpMat { nr, nc, indptr: vec![0; nr + 1], indices: Vec::new(), data: Vec::new() }
+    }
+
+    /// Build from (row, col, val) triples; duplicates are summed, zeros
+    /// (including zero-sums) dropped.
+    pub fn from_triples(nr: usize, nc: usize, triples: &[(usize, usize, f64)]) -> Self {
+        let mut sorted: Vec<(usize, usize, f64)> = triples.to_vec();
+        sorted.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let mut indptr = vec![0usize; nr + 1];
+        let mut indices = Vec::with_capacity(sorted.len());
+        let mut data: Vec<f64> = Vec::with_capacity(sorted.len());
+        let mut i = 0;
+        while i < sorted.len() {
+            let (r, c, _) = sorted[i];
+            debug_assert!(r < nr && c < nc, "triple ({r},{c}) out of shape ({nr},{nc})");
+            let mut v = 0.0;
+            while i < sorted.len() && sorted[i].0 == r && sorted[i].1 == c {
+                v += sorted[i].2;
+                i += 1;
+            }
+            if v != 0.0 {
+                indices.push(c);
+                data.push(v);
+                indptr[r + 1] += 1;
+            }
+        }
+        for r in 0..nr {
+            indptr[r + 1] += indptr[r];
+        }
+        SpMat { nr, nc, indptr, indices, data }
+    }
+
+    /// Number of stored (nonzero) entries.
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Approximate heap footprint in bytes (used for the client-side
+    /// memory-cap simulation of Figure 2).
+    pub fn mem_bytes(&self) -> usize {
+        self.indptr.len() * 8 + self.indices.len() * 8 + self.data.len() * 8
+    }
+
+    /// Iterate stored entries of row `r` as `(col, val)`.
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        self.indices[lo..hi].iter().copied().zip(self.data[lo..hi].iter().copied())
+    }
+
+    /// Value at (r, c), or 0.0 if absent.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        match self.indices[lo..hi].binary_search(&c) {
+            Ok(i) => self.data[lo + i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// All stored entries as triples.
+    pub fn to_triples(&self) -> Vec<(usize, usize, f64)> {
+        let mut out = Vec::with_capacity(self.nnz());
+        for r in 0..self.nr {
+            for (c, v) in self.row(r) {
+                out.push((r, c, v));
+            }
+        }
+        out
+    }
+
+    /// Transpose (CSR -> CSR of the transpose), O(nnz + nr + nc).
+    pub fn transpose(&self) -> SpMat {
+        let mut indptr = vec![0usize; self.nc + 1];
+        for &c in &self.indices {
+            indptr[c + 1] += 1;
+        }
+        for c in 0..self.nc {
+            indptr[c + 1] += indptr[c];
+        }
+        let mut next = indptr.clone();
+        let mut indices = vec![0usize; self.nnz()];
+        let mut data = vec![0f64; self.nnz()];
+        for r in 0..self.nr {
+            for (c, v) in self.row(r) {
+                let slot = next[c];
+                indices[slot] = r;
+                data[slot] = v;
+                next[c] += 1;
+            }
+        }
+        SpMat { nr: self.nc, nc: self.nr, indptr, indices, data }
+    }
+
+    /// Elementwise combine over the union of patterns with `f(a, b)`
+    /// (missing entries read as 0). Zeros in the result are dropped.
+    /// Both matrices must share a shape.
+    pub fn union_combine(&self, other: &SpMat, f: impl Fn(f64, f64) -> f64) -> SpMat {
+        assert_eq!((self.nr, self.nc), (other.nr, other.nc), "shape mismatch");
+        let mut indptr = vec![0usize; self.nr + 1];
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for r in 0..self.nr {
+            let (mut i, hi_a) = (self.indptr[r], self.indptr[r + 1]);
+            let (mut j, hi_b) = (other.indptr[r], other.indptr[r + 1]);
+            while i < hi_a || j < hi_b {
+                let (c, v) = if j >= hi_b || (i < hi_a && self.indices[i] < other.indices[j]) {
+                    let out = (self.indices[i], f(self.data[i], 0.0));
+                    i += 1;
+                    out
+                } else if i >= hi_a || other.indices[j] < self.indices[i] {
+                    let out = (other.indices[j], f(0.0, other.data[j]));
+                    j += 1;
+                    out
+                } else {
+                    let out = (self.indices[i], f(self.data[i], other.data[j]));
+                    i += 1;
+                    j += 1;
+                    out
+                };
+                if v != 0.0 {
+                    indices.push(c);
+                    data.push(v);
+                    indptr[r + 1] += 1;
+                }
+            }
+        }
+        for r in 0..self.nr {
+            indptr[r + 1] += indptr[r];
+        }
+        SpMat { nr: self.nr, nc: self.nc, indptr, indices, data }
+    }
+
+    /// Elementwise combine over the intersection of patterns.
+    pub fn intersect_combine(&self, other: &SpMat, f: impl Fn(f64, f64) -> f64) -> SpMat {
+        assert_eq!((self.nr, self.nc), (other.nr, other.nc), "shape mismatch");
+        let mut indptr = vec![0usize; self.nr + 1];
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for r in 0..self.nr {
+            let (mut i, hi_a) = (self.indptr[r], self.indptr[r + 1]);
+            let (mut j, hi_b) = (other.indptr[r], other.indptr[r + 1]);
+            while i < hi_a && j < hi_b {
+                match self.indices[i].cmp(&other.indices[j]) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        let v = f(self.data[i], other.data[j]);
+                        if v != 0.0 {
+                            indices.push(self.indices[i]);
+                            data.push(v);
+                            indptr[r + 1] += 1;
+                        }
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+        }
+        for r in 0..self.nr {
+            indptr[r + 1] += indptr[r];
+        }
+        SpMat { nr: self.nr, nc: self.nc, indptr, indices, data }
+    }
+
+    /// Sparse matrix product `self * other` (Gustavson's algorithm with a
+    /// dense accumulator row).
+    pub fn matmul(&self, other: &SpMat) -> SpMat {
+        assert_eq!(self.nc, other.nr, "inner dimension mismatch");
+        let mut indptr = vec![0usize; self.nr + 1];
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        // dense accumulator + touched-list (classic SpGEMM workspace)
+        let mut acc = vec![0f64; other.nc];
+        let mut touched: Vec<usize> = Vec::new();
+        for r in 0..self.nr {
+            for (k, av) in self.row(r) {
+                for (c, bv) in other.row(k) {
+                    if acc[c] == 0.0 && !touched.contains(&c) {
+                        touched.push(c);
+                    }
+                    acc[c] += av * bv;
+                }
+            }
+            touched.sort_unstable();
+            for &c in &touched {
+                if acc[c] != 0.0 {
+                    indices.push(c);
+                    data.push(acc[c]);
+                    indptr[r + 1] += 1;
+                }
+                acc[c] = 0.0;
+            }
+            touched.clear();
+        }
+        for r in 0..self.nr {
+            indptr[r + 1] += indptr[r];
+        }
+        SpMat { nr: self.nr, nc: other.nc, indptr, indices, data }
+    }
+
+    /// Map all stored values through `f`; zeros in the result are dropped.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> SpMat {
+        let mut out = SpMat::zeros(self.nr, self.nc);
+        let mut indptr = vec![0usize; self.nr + 1];
+        for r in 0..self.nr {
+            for (c, v) in self.row(r) {
+                let fv = f(v);
+                if fv != 0.0 {
+                    out.indices.push(c);
+                    out.data.push(fv);
+                    indptr[r + 1] += 1;
+                }
+            }
+        }
+        for r in 0..self.nr {
+            indptr[r + 1] += indptr[r];
+        }
+        out.indptr = indptr;
+        out
+    }
+
+    /// Row sums (length `nr`).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.nr).map(|r| self.row(r).map(|(_, v)| v).sum()).collect()
+    }
+
+    /// Column sums (length `nc`).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut out = vec![0f64; self.nc];
+        for r in 0..self.nr {
+            for (c, v) in self.row(r) {
+                out[c] += v;
+            }
+        }
+        out
+    }
+
+    /// Select a subset of rows/cols by (sorted) index lists, producing the
+    /// submatrix in the order given.
+    pub fn select(&self, rows: &[usize], cols: &[usize]) -> SpMat {
+        // col index -> new position
+        let mut colmap = vec![usize::MAX; self.nc];
+        for (new, &c) in cols.iter().enumerate() {
+            colmap[c] = new;
+        }
+        let mut triples = Vec::new();
+        for (new_r, &r) in rows.iter().enumerate() {
+            for (c, v) in self.row(r) {
+                if colmap[c] != usize::MAX {
+                    triples.push((new_r, colmap[c], v));
+                }
+            }
+        }
+        SpMat::from_triples(rows.len(), cols.len(), &triples)
+    }
+
+    /// Re-embed this matrix into a larger index space: entry (r, c) moves
+    /// to (row_map[r], col_map[c]).
+    pub fn embed(&self, nr: usize, nc: usize, row_map: &[usize], col_map: &[usize]) -> SpMat {
+        assert_eq!(row_map.len(), self.nr);
+        assert_eq!(col_map.len(), self.nc);
+        let mut triples = Vec::with_capacity(self.nnz());
+        for r in 0..self.nr {
+            for (c, v) in self.row(r) {
+                triples.push((row_map[r], col_map[c], v));
+            }
+        }
+        SpMat::from_triples(nr, nc, &triples)
+    }
+
+    /// Dense row-major materialisation (small matrices / runtime bridge).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0f64; self.nr * self.nc];
+        for r in 0..self.nr {
+            for (c, v) in self.row(r) {
+                out[r * self.nc + c] = v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{forall, XorShift64};
+
+    fn rand_mat(rng: &mut XorShift64, nr: usize, nc: usize, density: f64) -> SpMat {
+        let mut tr = Vec::new();
+        for r in 0..nr {
+            for c in 0..nc {
+                if rng.chance(density) {
+                    tr.push((r, c, (rng.below(9) + 1) as f64));
+                }
+            }
+        }
+        SpMat::from_triples(nr, nc, &tr)
+    }
+
+    #[test]
+    fn from_triples_sums_duplicates() {
+        let m = SpMat::from_triples(2, 2, &[(0, 0, 1.0), (0, 0, 2.0), (1, 1, 5.0)]);
+        assert_eq!(m.get(0, 0), 3.0);
+        assert_eq!(m.get(1, 1), 5.0);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn from_triples_drops_zero_sum() {
+        let m = SpMat::from_triples(1, 1, &[(0, 0, 1.0), (0, 0, -1.0)]);
+        assert_eq!(m.nnz(), 0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        forall(30, 0xBEEF, |rng| {
+            let m = rand_mat(rng, 8, 5, 0.3);
+            assert_eq!(m.transpose().transpose(), m);
+        });
+    }
+
+    #[test]
+    fn transpose_entries() {
+        let m = SpMat::from_triples(2, 3, &[(0, 2, 7.0), (1, 0, 3.0)]);
+        let t = m.transpose();
+        assert_eq!(t.get(2, 0), 7.0);
+        assert_eq!(t.get(0, 1), 3.0);
+        assert_eq!((t.nr, t.nc), (3, 2));
+    }
+
+    #[test]
+    fn union_combine_add() {
+        let a = SpMat::from_triples(1, 3, &[(0, 0, 1.0), (0, 1, 2.0)]);
+        let b = SpMat::from_triples(1, 3, &[(0, 1, 3.0), (0, 2, 4.0)]);
+        let c = a.union_combine(&b, |x, y| x + y);
+        assert_eq!(c.to_triples(), vec![(0, 0, 1.0), (0, 1, 5.0), (0, 2, 4.0)]);
+    }
+
+    #[test]
+    fn intersect_combine_mult() {
+        let a = SpMat::from_triples(1, 3, &[(0, 0, 2.0), (0, 1, 2.0)]);
+        let b = SpMat::from_triples(1, 3, &[(0, 1, 3.0), (0, 2, 4.0)]);
+        let c = a.intersect_combine(&b, |x, y| x * y);
+        assert_eq!(c.to_triples(), vec![(0, 1, 6.0)]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        forall(20, 0xCAFE, |rng| {
+            let m = rand_mat(rng, 6, 6, 0.4);
+            let eye = SpMat::from_triples(6, 6, &(0..6).map(|i| (i, i, 1.0)).collect::<Vec<_>>());
+            assert_eq!(m.matmul(&eye), m);
+            assert_eq!(eye.matmul(&m), m);
+        });
+    }
+
+    #[test]
+    fn matmul_matches_dense() {
+        forall(25, 0xD00D, |rng| {
+            let a = rand_mat(rng, 5, 7, 0.35);
+            let b = rand_mat(rng, 7, 4, 0.35);
+            let c = a.matmul(&b);
+            let (da, db, dc) = (a.to_dense(), b.to_dense(), c.to_dense());
+            for i in 0..5 {
+                for j in 0..4 {
+                    let want: f64 = (0..7).map(|k| da[i * 7 + k] * db[k * 4 + j]).sum();
+                    assert!((dc[i * 4 + j] - want).abs() < 1e-9);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn matmul_transpose_distributes() {
+        // (A B)^T == B^T A^T
+        forall(20, 0xF00D, |rng| {
+            let a = rand_mat(rng, 4, 6, 0.4);
+            let b = rand_mat(rng, 6, 5, 0.4);
+            assert_eq!(a.matmul(&b).transpose(), b.transpose().matmul(&a.transpose()));
+        });
+    }
+
+    #[test]
+    fn row_col_sums() {
+        let m = SpMat::from_triples(2, 2, &[(0, 0, 1.0), (0, 1, 2.0), (1, 1, 4.0)]);
+        assert_eq!(m.row_sums(), vec![3.0, 4.0]);
+        assert_eq!(m.col_sums(), vec![1.0, 6.0]);
+    }
+
+    #[test]
+    fn select_submatrix() {
+        let m = SpMat::from_triples(3, 3, &[(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0)]);
+        let s = m.select(&[1, 2], &[1, 2]);
+        assert_eq!(s.to_triples(), vec![(0, 0, 2.0), (1, 1, 3.0)]);
+    }
+
+    #[test]
+    fn embed_into_larger() {
+        let m = SpMat::from_triples(2, 2, &[(0, 0, 1.0), (1, 1, 2.0)]);
+        let e = m.embed(4, 4, &[1, 3], &[0, 2]);
+        assert_eq!(e.get(1, 0), 1.0);
+        assert_eq!(e.get(3, 2), 2.0);
+        assert_eq!(e.nnz(), 2);
+    }
+
+    #[test]
+    fn map_drops_zeros() {
+        let m = SpMat::from_triples(1, 2, &[(0, 0, 1.0), (0, 1, 2.0)]);
+        let f = m.map(|v| if v > 1.5 { v } else { 0.0 });
+        assert_eq!(f.to_triples(), vec![(0, 1, 2.0)]);
+    }
+
+    #[test]
+    fn mem_bytes_counts() {
+        let m = SpMat::from_triples(1, 2, &[(0, 0, 1.0)]);
+        assert_eq!(m.mem_bytes(), 2 * 8 + 8 + 8);
+    }
+}

@@ -1,0 +1,330 @@
+//! Assoc unit + property tests. The property tests check the CSR-backed
+//! [`Assoc`] against the [`naive::NaiveAssoc`] oracle on random inputs.
+
+use super::naive::NaiveAssoc;
+use super::*;
+use crate::util::{forall, XorShift64};
+
+fn rand_triples(rng: &mut XorShift64, n: usize, keyspace: u64) -> Vec<(String, String, f64)> {
+    (0..n)
+        .map(|_| {
+            (
+                format!("r{:02}", rng.below(keyspace)),
+                format!("c{:02}", rng.below(keyspace)),
+                (rng.below(5) + 1) as f64,
+            )
+        })
+        .collect()
+}
+
+fn assoc_pair(rng: &mut XorShift64) -> (Assoc, NaiveAssoc) {
+    let n = rng.below(40) as usize;
+    let t = rand_triples(rng, n, 12);
+    (Assoc::from_triples(&t), NaiveAssoc::from_triples(&t))
+}
+
+fn same(a: &Assoc, n: &NaiveAssoc) {
+    let mut at = a.triples();
+    let mut nt = n.triples();
+    at.sort_by(|x, y| (&x.0, &x.1).cmp(&(&y.0, &y.1)));
+    nt.sort_by(|x, y| (&x.0, &x.1).cmp(&(&y.0, &y.1)));
+    assert_eq!(at.len(), nt.len(), "nnz mismatch: {at:?} vs {nt:?}");
+    for (x, y) in at.iter().zip(nt.iter()) {
+        assert_eq!((&x.0, &x.1), (&y.0, &y.1));
+        assert!((x.2 - y.2).abs() < 1e-9, "value mismatch at {x:?} vs {y:?}");
+    }
+}
+
+// ---------------------------------------------------------------- unit
+
+#[test]
+fn construct_and_get() {
+    let a = Assoc::from_triples(&[("r2", "c1", 3.0), ("r1", "c2", 5.0)]);
+    assert_eq!(a.get("r2", "c1"), 3.0);
+    assert_eq!(a.get("r1", "c2"), 5.0);
+    assert_eq!(a.get("r1", "c1"), 0.0);
+    assert_eq!(a.shape(), (2, 2));
+    // keys come out sorted
+    assert_eq!(a.row_keys(), &["r1".to_string(), "r2".to_string()]);
+}
+
+#[test]
+fn duplicate_triples_sum() {
+    let a = Assoc::from_triples(&[("r", "c", 1.0), ("r", "c", 2.5)]);
+    assert_eq!(a.get("r", "c"), 3.5);
+    assert_eq!(a.nnz(), 1);
+}
+
+#[test]
+fn empty_assoc() {
+    let a = Assoc::empty();
+    assert!(a.is_empty());
+    assert_eq!(a.shape(), (0, 0));
+    let b = Assoc::from_triples(&[("r", "c", 1.0)]);
+    same(&a.add(&b), &NaiveAssoc::from_triples(&[("r", "c", 1.0)]));
+}
+
+#[test]
+fn new_length_mismatch_errors() {
+    assert!(Assoc::new(&["a"], &["b", "c"], &[1.0]).is_err());
+}
+
+#[test]
+fn string_values_roundtrip() {
+    let a = Assoc::from_str_triples(&[("r1", "c1", "blue"), ("r2", "c1", "green")]);
+    assert!(a.is_string_valued());
+    assert_eq!(a.get_str("r1", "c1"), Some("blue"));
+    assert_eq!(a.get_str("r2", "c1"), Some("green"));
+    assert_eq!(a.get_str("r2", "c2"), None);
+}
+
+#[test]
+fn string_duplicate_keeps_max() {
+    let a = Assoc::from_str_triples(&[("r", "c", "apple"), ("r", "c", "zebra")]);
+    assert_eq!(a.get_str("r", "c"), Some("zebra"));
+}
+
+#[test]
+fn logical_converts_to_ones() {
+    let a = Assoc::from_str_triples(&[("r", "c", "x"), ("r", "d", "y")]);
+    let l = a.logical();
+    assert!(!l.is_string_valued());
+    assert_eq!(l.get("r", "c"), 1.0);
+    assert_eq!(l.total(), 2.0);
+}
+
+#[test]
+fn add_disjoint_and_overlapping() {
+    let a = Assoc::from_triples(&[("a", "x", 1.0)]);
+    let b = Assoc::from_triples(&[("b", "y", 2.0)]);
+    let c = a.add(&b);
+    assert_eq!(c.get("a", "x"), 1.0);
+    assert_eq!(c.get("b", "y"), 2.0);
+    let d = a.add(&a);
+    assert_eq!(d.get("a", "x"), 2.0);
+}
+
+#[test]
+fn sub_cancels() {
+    let a = Assoc::from_triples(&[("a", "x", 1.0)]);
+    let c = a.sub(&a);
+    assert!(c.is_empty());
+}
+
+#[test]
+fn elem_mult_intersects() {
+    let a = Assoc::from_triples(&[("r", "c1", 2.0), ("r", "c2", 3.0)]);
+    let b = Assoc::from_triples(&[("r", "c2", 4.0), ("r", "c3", 5.0)]);
+    let c = a.elem_mult(&b);
+    assert_eq!(c.nnz(), 1);
+    assert_eq!(c.get("r", "c2"), 12.0);
+}
+
+#[test]
+fn matmul_key_alignment() {
+    // A's col keys and B's row keys only share "k1"
+    let a = Assoc::from_triples(&[("r1", "k1", 2.0), ("r1", "k9", 100.0)]);
+    let b = Assoc::from_triples(&[("k1", "c1", 3.0), ("zz", "c1", 100.0)]);
+    let c = a.matmul(&b);
+    assert_eq!(c.nnz(), 1);
+    assert_eq!(c.get("r1", "c1"), 6.0);
+}
+
+#[test]
+fn matmul_sums_paths() {
+    let a = Assoc::from_triples(&[("r", "k1", 1.0), ("r", "k2", 1.0)]);
+    let b = Assoc::from_triples(&[("k1", "c", 1.0), ("k2", "c", 1.0)]);
+    assert_eq!(a.matmul(&b).get("r", "c"), 2.0);
+}
+
+#[test]
+fn catkeymul_tracks_inner_keys() {
+    let a = Assoc::from_triples(&[("r", "k1", 1.0), ("r", "k2", 1.0)]);
+    let b = Assoc::from_triples(&[("k1", "c", 1.0), ("k2", "c", 1.0)]);
+    let c = a.catkeymul(&b);
+    assert_eq!(c.get_str("r", "c"), Some("k1;k2"));
+}
+
+#[test]
+fn transpose_swaps() {
+    let a = Assoc::from_triples(&[("r", "c", 7.0)]);
+    let t = a.transpose();
+    assert_eq!(t.get("c", "r"), 7.0);
+    assert_eq!(t.transpose(), a);
+}
+
+#[test]
+fn sum_dims() {
+    let a = Assoc::from_triples(&[("r1", "c1", 1.0), ("r1", "c2", 2.0), ("r2", "c1", 4.0)]);
+    let s1 = a.sum(1); // down columns
+    assert_eq!(s1.get("", "c1"), 5.0);
+    assert_eq!(s1.get("", "c2"), 2.0);
+    let s2 = a.sum(2); // across rows
+    assert_eq!(s2.get("r1", ""), 3.0);
+    assert_eq!(s2.get("r2", ""), 4.0);
+}
+
+#[test]
+fn scale_and_filter() {
+    let a = Assoc::from_triples(&[("r", "c", 2.0), ("r", "d", 5.0)]);
+    assert_eq!(a.scale(2.0).get("r", "d"), 10.0);
+    let f = a.filter_values(|v| v > 3.0);
+    assert_eq!(f.nnz(), 1);
+    assert_eq!(f.get("r", "d"), 5.0);
+}
+
+#[test]
+fn subsref_selectors() {
+    let a = Assoc::from_triples(&[
+        ("alice", "c1", 1.0),
+        ("bob", "c2", 2.0),
+        ("carol", "c1", 3.0),
+    ]);
+    // range
+    let r = a.select_rows(&KeySel::Range("b".into(), "c".into()));
+    assert_eq!(r.row_keys(), &["bob".to_string()]);
+    // prefix
+    let p = a.select_rows(&KeySel::Prefix("ca".into()));
+    assert_eq!(p.row_keys(), &["carol".to_string()]);
+    // explicit keys
+    let k = a.subsref(&KeySel::keys(&["alice", "carol"]), &KeySel::keys(&["c1"]));
+    assert_eq!(k.nnz(), 2);
+    // all
+    assert_eq!(a.subsref(&KeySel::All, &KeySel::All), a);
+}
+
+#[test]
+fn compacted_drops_empty() {
+    let a = Assoc::from_triples(&[("r1", "c1", 1.0), ("r2", "c2", 1.0)]);
+    let f = a.filter_values(|v| v > 10.0);
+    assert_eq!(f.shape(), (0, 0));
+}
+
+#[test]
+fn mem_bytes_nonzero() {
+    let a = Assoc::from_triples(&[("r", "c", 1.0)]);
+    assert!(a.mem_bytes() > 0);
+}
+
+// ------------------------------------------------------------ property
+
+#[test]
+fn prop_add_matches_oracle() {
+    forall(60, 0xA11CE, |rng| {
+        let (a, na) = assoc_pair(rng);
+        let (b, nb) = assoc_pair(rng);
+        same(&a.add(&b), &na.add(&nb));
+    });
+}
+
+#[test]
+fn prop_add_commutative() {
+    forall(40, 0xC0FFEE, |rng| {
+        let (a, _) = assoc_pair(rng);
+        let (b, _) = assoc_pair(rng);
+        assert_eq!(a.add(&b), b.add(&a));
+    });
+}
+
+#[test]
+fn prop_add_associative() {
+    forall(40, 0xAB5, |rng| {
+        let (a, _) = assoc_pair(rng);
+        let (b, _) = assoc_pair(rng);
+        let (c, _) = assoc_pair(rng);
+        let lhs = a.add(&b).add(&c);
+        let rhs = a.add(&b.add(&c));
+        // float sums identical here because values are small integers
+        assert_eq!(lhs, rhs);
+    });
+}
+
+#[test]
+fn prop_elem_mult_matches_oracle() {
+    forall(60, 0xE1E, |rng| {
+        let (a, na) = assoc_pair(rng);
+        let (b, nb) = assoc_pair(rng);
+        same(&a.elem_mult(&b), &na.elem_mult(&nb));
+    });
+}
+
+#[test]
+fn prop_matmul_matches_oracle() {
+    forall(60, 0x3A7, |rng| {
+        let (a, na) = assoc_pair(rng);
+        let (b, nb) = assoc_pair(rng);
+        same(&a.matmul(&b), &na.matmul(&nb));
+    });
+}
+
+#[test]
+fn prop_transpose_matches_oracle() {
+    forall(40, 0x7A0, |rng| {
+        let (a, na) = assoc_pair(rng);
+        same(&a.transpose(), &na.transpose());
+    });
+}
+
+#[test]
+fn prop_matmul_transpose_identity() {
+    // (A B)^T == B^T A^T over key-aligned multiply
+    forall(40, 0x919, |rng| {
+        let (a, _) = assoc_pair(rng);
+        let (b, _) = assoc_pair(rng);
+        assert_eq!(a.matmul(&b).transpose(), b.transpose().matmul(&a.transpose()));
+    });
+}
+
+#[test]
+fn prop_subsref_range_matches_oracle() {
+    forall(40, 0x5E1, |rng| {
+        let (a, na) = assoc_pair(rng);
+        let lo = format!("r{:02}", rng.below(12));
+        let hi = format!("r{:02}", rng.below(12));
+        let (lo, hi) = if lo <= hi { (lo, hi) } else { (hi, lo) };
+        same(
+            &a.select_rows(&KeySel::Range(lo.clone(), hi.clone())),
+            &na.select_row_range(&lo, &hi),
+        );
+    });
+}
+
+#[test]
+fn prop_sum2_matches_oracle_rowsums() {
+    forall(40, 0x50F, |rng| {
+        let (a, na) = assoc_pair(rng);
+        let s = a.sum(2);
+        let want = na.sum_rows();
+        for (r, v) in want {
+            if v != 0.0 {
+                assert!((s.get(&r, "") - v).abs() < 1e-9);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_distributive_matmul_over_add() {
+    // A(B + C) == AB + AC
+    forall(30, 0xD15, |rng| {
+        let (a, _) = assoc_pair(rng);
+        let (b, _) = assoc_pair(rng);
+        let (c, _) = assoc_pair(rng);
+        let lhs = a.matmul(&b.add(&c));
+        let rhs = a.matmul(&b).add(&a.matmul(&c));
+        // same pattern & values (integer values keep this exact)
+        same_assoc(&lhs, &rhs);
+    });
+}
+
+fn same_assoc(a: &Assoc, b: &Assoc) {
+    let mut at = a.triples();
+    let mut bt = b.triples();
+    at.sort_by(|x, y| (&x.0, &x.1).cmp(&(&y.0, &y.1)));
+    bt.sort_by(|x, y| (&x.0, &x.1).cmp(&(&y.0, &y.1)));
+    assert_eq!(at.len(), bt.len());
+    for (x, y) in at.iter().zip(bt.iter()) {
+        assert_eq!((&x.0, &x.1), (&y.0, &y.1));
+        assert!((x.2 - y.2).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,138 @@
+//! Text / exploded-schema utilities — how D4M turns unstructured records
+//! into associative arrays (the "D4M schema" for raw data): each CSV
+//! column value becomes a column key `column|value` with count 1, so any
+//! field is queryable by prefix and the table stays one big sparse array.
+
+use crate::assoc::Assoc;
+use crate::error::{D4mError, Result};
+
+/// Explode CSV text into D4M-schema triples: row key = first column,
+/// every other cell `(col, val)` becomes the triple
+/// `(row, "col|val", "1")`. Empty cells are skipped.
+pub fn explode_csv(csv: &str, sep: char) -> Result<Vec<(String, String, String)>> {
+    let mut lines = csv.lines().filter(|l| !l.trim().is_empty());
+    let header: Vec<&str> = lines
+        .next()
+        .ok_or_else(|| D4mError::Parse("empty csv".into()))?
+        .split(sep)
+        .map(str::trim)
+        .collect();
+    if header.len() < 2 {
+        return Err(D4mError::Parse("csv needs a row-key column plus data columns".into()));
+    }
+    let mut out = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        let cells: Vec<&str> = line.split(sep).map(str::trim).collect();
+        if cells.len() != header.len() {
+            return Err(D4mError::Parse(format!(
+                "line {}: {} cells, header has {}",
+                lineno + 2,
+                cells.len(),
+                header.len()
+            )));
+        }
+        let row = cells[0].to_string();
+        for (col, val) in header.iter().zip(cells.iter()).skip(1) {
+            if !val.is_empty() {
+                out.push((row.clone(), format!("{col}|{val}"), "1".to_string()));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Explode CSV straight into an [`Assoc`] (duplicate exploded pairs sum).
+pub fn csv_to_assoc(csv: &str, sep: char) -> Result<Assoc> {
+    let triples = explode_csv(csv, sep)?;
+    let t: Vec<(&str, &str, f64)> =
+        triples.iter().map(|(r, c, _)| (r.as_str(), c.as_str(), 1.0)).collect();
+    Ok(Assoc::from_triples(&t))
+}
+
+/// Tokenise documents into a doc x `word|<token>` count array (D4M's
+/// bag-of-words construction). Tokens are lowercased alphanumeric runs.
+pub fn docs_to_assoc<'a>(docs: impl IntoIterator<Item = (&'a str, &'a str)>) -> Assoc {
+    let mut triples: Vec<(String, String, f64)> = Vec::new();
+    for (id, text) in docs {
+        for token in tokenize(text) {
+            triples.push((id.to_string(), format!("word|{token}"), 1.0));
+        }
+    }
+    Assoc::from_triples(&triples)
+}
+
+/// Lowercased alphanumeric tokens.
+pub fn tokenize(text: &str) -> Vec<String> {
+    text.split(|c: char| !c.is_alphanumeric())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.to_lowercase())
+        .collect()
+}
+
+/// Facet query over an exploded-schema array: count of rows per value of
+/// `column` (i.e. degrees of the `column|*` keys) — the canonical D4M
+/// "pivot" one-liner.
+pub fn facet(a: &Assoc, column: &str) -> Vec<(String, f64)> {
+    let prefix = format!("{column}|");
+    let sel = a.select_cols(&crate::assoc::KeySel::Prefix(prefix.clone()));
+    let deg = sel.logical().sum(1);
+    deg.triples()
+        .into_iter()
+        .map(|(_, c, v)| (c.strip_prefix(&prefix).unwrap_or(&c).to_string(), v))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CSV: &str = "\
+id,color,size
+r1,red,small
+r2,blue,
+r3,red,large
+";
+
+    #[test]
+    fn explode_basic() {
+        let t = explode_csv(CSV, ',').unwrap();
+        assert!(t.contains(&("r1".into(), "color|red".into(), "1".into())));
+        assert!(t.contains(&("r3".into(), "size|large".into(), "1".into())));
+        // empty cell skipped
+        assert_eq!(t.iter().filter(|x| x.0 == "r2").count(), 1);
+    }
+
+    #[test]
+    fn explode_rejects_ragged() {
+        assert!(explode_csv("id,a\nr1,x,y\n", ',').is_err());
+        assert!(explode_csv("", ',').is_err());
+        assert!(explode_csv("id\nr1\n", ',').is_err());
+    }
+
+    #[test]
+    fn csv_assoc_queryable_by_prefix() {
+        let a = csv_to_assoc(CSV, ',').unwrap();
+        let reds = a.select_cols(&crate::assoc::KeySel::keys(&["color|red"]));
+        assert_eq!(reds.row_keys(), &["r1".to_string(), "r3".to_string()]);
+    }
+
+    #[test]
+    fn facet_counts() {
+        let a = csv_to_assoc(CSV, ',').unwrap();
+        let f = facet(&a, "color");
+        assert_eq!(f, vec![("blue".to_string(), 1.0), ("red".to_string(), 2.0)]);
+    }
+
+    #[test]
+    fn tokenizer() {
+        assert_eq!(tokenize("Hello, world! hello."), vec!["hello", "world", "hello"]);
+    }
+
+    #[test]
+    fn docs_bag_of_words() {
+        let a = docs_to_assoc([("d1", "cat dog cat"), ("d2", "dog")]);
+        assert_eq!(a.get("d1", "word|cat"), 2.0);
+        assert_eq!(a.get("d1", "word|dog"), 1.0);
+        assert_eq!(a.get("d2", "word|dog"), 1.0);
+    }
+}

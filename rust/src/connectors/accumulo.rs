@@ -1,0 +1,344 @@
+//! Accumulo connector implementing the **D4M 2.0 schema** (Kepner et al.,
+//! 2013): each logical table is stored as four physical tables —
+//!
+//! * `T`      (Tedge)    — row key -> col key -> value
+//! * `T_T`    (TedgeT)   — the transpose, for fast column queries
+//! * `T_Deg`  (TedgeDeg) — column degrees, maintained by a summing
+//!                          combiner at write time
+//! * `T_Txt`  (TedgeTxt) — optional raw-text side table
+//!
+//! This dual-table + degree design is what made the record ingest and
+//! query rates of the D4M/Accumulo papers possible; the pipeline and
+//! Graphulo layers build directly on it.
+
+use std::sync::Arc;
+
+use crate::assoc::{io::fmt_num, Assoc};
+use crate::error::Result;
+use crate::kvstore::{
+    BatchWriter, Entry, IterConfig, Key, KvStore, RowRange, Table, WriterConfig,
+};
+
+/// Options for binding a D4M table.
+#[derive(Debug, Clone)]
+pub struct D4mTableConfig {
+    /// Maintain the transpose table (needed for column queries).
+    pub transpose: bool,
+    /// Maintain the degree table.
+    pub degrees: bool,
+    /// Split points for the main table (row keyspace).
+    pub splits: Vec<String>,
+    /// Split points for the transpose + degree tables (column keyspace —
+    /// usually a different alphabet than the rows, e.g. `word|...`).
+    pub transpose_splits: Vec<String>,
+    /// BatchWriter tuning for [`D4mTable::writer`].
+    pub writer: WriterConfig,
+}
+
+impl Default for D4mTableConfig {
+    fn default() -> Self {
+        D4mTableConfig {
+            transpose: true,
+            degrees: true,
+            splits: vec![],
+            transpose_splits: vec![],
+            writer: WriterConfig::default(),
+        }
+    }
+}
+
+/// The Accumulo-engine connector (owns the embedded store).
+pub struct AccumuloConnector {
+    store: Arc<KvStore>,
+}
+
+impl Default for AccumuloConnector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AccumuloConnector {
+    pub fn new() -> Self {
+        AccumuloConnector { store: Arc::new(KvStore::new()) }
+    }
+
+    pub fn with_store(store: Arc<KvStore>) -> Self {
+        AccumuloConnector { store }
+    }
+
+    pub fn store(&self) -> Arc<KvStore> {
+        self.store.clone()
+    }
+
+    /// Bind a logical D4M table, creating the physical tables if needed
+    /// (the `T = DB('Tedge')` call of the MATLAB API).
+    pub fn bind(&self, name: &str, cfg: &D4mTableConfig) -> Result<D4mTable> {
+        let main = self.store.ensure_table(name, cfg.splits.clone());
+        let transpose = if cfg.transpose {
+            Some(self.store.ensure_table(&format!("{name}_T"), cfg.transpose_splits.clone()))
+        } else {
+            None
+        };
+        let degree = if cfg.degrees {
+            Some(self.store.ensure_table(&format!("{name}_Deg"), cfg.transpose_splits.clone()))
+        } else {
+            None
+        };
+        Ok(D4mTable { main, transpose, degree, cfg: cfg.clone() })
+    }
+}
+
+/// A bound D4M table (the `T` in `T = DB('Tedge')`).
+pub struct D4mTable {
+    main: Arc<Table>,
+    transpose: Option<Arc<Table>>,
+    degree: Option<Arc<Table>>,
+    cfg: D4mTableConfig,
+}
+
+impl D4mTable {
+    pub fn main(&self) -> Arc<Table> {
+        self.main.clone()
+    }
+
+    pub fn transpose_table(&self) -> Option<Arc<Table>> {
+        self.transpose.clone()
+    }
+
+    pub fn degree_table(&self) -> Option<Arc<Table>> {
+        self.degree.clone()
+    }
+
+    /// A buffered writer that maintains all schema tables per mutation.
+    pub fn writer(&self) -> D4mWriter {
+        D4mWriter {
+            main: BatchWriter::new(self.main.clone(), self.cfg.writer.clone()),
+            transpose: self
+                .transpose
+                .as_ref()
+                .map(|t| BatchWriter::new(t.clone(), self.cfg.writer.clone())),
+            degree: self
+                .degree
+                .as_ref()
+                .map(|t| BatchWriter::new(t.clone(), self.cfg.writer.clone())),
+        }
+    }
+
+    /// Ingest an associative array (string or numeric values).
+    pub fn put_assoc(&self, a: &Assoc) -> Result<()> {
+        let mut w = self.writer();
+        for (r, c, v) in a.str_triples() {
+            w.put(&r, &c, &v);
+        }
+        w.flush();
+        Ok(())
+    }
+
+    /// Ingest raw string triples.
+    pub fn put_triples(&self, triples: &[(String, String, String)]) -> Result<()> {
+        let mut w = self.writer();
+        for (r, c, v) in triples {
+            w.put(r, c, v);
+        }
+        w.flush();
+        Ok(())
+    }
+
+    /// Read the whole table back as an associative array.
+    pub fn get_assoc(&self) -> Result<Assoc> {
+        self.get_assoc_range(&RowRange::all())
+    }
+
+    /// Read a row range as an associative array (`T('a,:,b,', :)`).
+    pub fn get_assoc_range(&self, range: &RowRange) -> Result<Assoc> {
+        let entries = self.main.scan(range, &IterConfig::default());
+        entries_to_assoc(entries)
+    }
+
+    /// Column query via the transpose table (`T(:, 'c,')`): scans
+    /// `T_T` by row = column key, then transposes back.
+    pub fn get_assoc_by_col(&self, col_range: &RowRange) -> Result<Assoc> {
+        match &self.transpose {
+            Some(tt) => {
+                let entries = tt.scan(col_range, &IterConfig::default());
+                Ok(entries_to_assoc(entries)?.transpose())
+            }
+            None => {
+                // degenerate path: full scan + client-side filter
+                let a = self.get_assoc()?;
+                let cols: Vec<String> = a
+                    .col_keys()
+                    .iter()
+                    .filter(|c| col_range.contains(c))
+                    .cloned()
+                    .collect();
+                Ok(a.select_cols(&crate::assoc::KeySel::Keys(cols)))
+            }
+        }
+    }
+
+    /// Degree of one column key, answered from the degree table in O(1)
+    /// scans (the D4M-schema trick for avoiding full-table counts).
+    pub fn degree(&self, col: &str) -> Result<f64> {
+        match &self.degree {
+            Some(dt) => {
+                let cfg = IterConfig { summing: true, ..Default::default() };
+                let entries = dt.scan_row(col, &cfg);
+                Ok(entries.first().and_then(|e| e.value.parse().ok()).unwrap_or(0.0))
+            }
+            None => {
+                let a = self.get_assoc()?;
+                Ok(a.select_cols(&crate::assoc::KeySel::keys(&[col])).logical().total())
+            }
+        }
+    }
+
+    /// Total entries in the main table.
+    pub fn count(&self) -> usize {
+        self.main.scan(&RowRange::all(), &IterConfig::default()).len()
+    }
+}
+
+/// Writer that fans one logical mutation out to the schema tables.
+pub struct D4mWriter {
+    main: BatchWriter,
+    transpose: Option<BatchWriter>,
+    degree: Option<BatchWriter>,
+}
+
+impl D4mWriter {
+    /// One logical cell: writes Tedge, TedgeT and a degree increment.
+    pub fn put(&mut self, row: &str, col: &str, value: &str) {
+        self.main.put(row, col, value);
+        if let Some(t) = &mut self.transpose {
+            t.put(col, row, value);
+        }
+        if let Some(d) = &mut self.degree {
+            // degree table rows are col keys; cq = "deg"; summed at scan
+            d.put(col, "deg", "1");
+        }
+    }
+
+    /// Numeric convenience.
+    pub fn put_num(&mut self, row: &str, col: &str, value: f64) {
+        self.put(row, col, &fmt_num(value));
+    }
+
+    pub fn flush(&mut self) {
+        self.main.flush();
+        if let Some(t) = &mut self.transpose {
+            t.flush();
+        }
+        if let Some(d) = &mut self.degree {
+            d.flush();
+        }
+    }
+
+    pub fn written(&self) -> u64 {
+        self.main.written()
+    }
+}
+
+/// Decode a scan result into an [`Assoc`] (numeric when every value
+/// parses, string-valued otherwise).
+pub fn entries_to_assoc(entries: Vec<Entry>) -> Result<Assoc> {
+    let triples: Vec<(String, String, String)> =
+        entries.into_iter().map(|e| (e.key.row, e.key.cq, e.value)).collect();
+    crate::assoc::io::parse_triples(triples)
+}
+
+/// Encode an assoc into raw entries for table `t` (used by benches that
+/// bypass the writer).
+pub fn assoc_to_entries(a: &Assoc, t: &Table) -> Vec<Entry> {
+    a.str_triples()
+        .into_iter()
+        .map(|(r, c, v)| Entry::new(Key::cell(r, c, t.next_ts()), v))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph_table() -> (AccumuloConnector, D4mTable) {
+        let acc = AccumuloConnector::new();
+        let t = acc.bind("Tedge", &D4mTableConfig::default()).unwrap();
+        let a = Assoc::from_triples(&[
+            ("v1", "v2", 1.0),
+            ("v1", "v3", 1.0),
+            ("v2", "v3", 2.0),
+        ]);
+        t.put_assoc(&a).unwrap();
+        (acc, t)
+    }
+
+    #[test]
+    fn assoc_roundtrip() {
+        let (_acc, t) = graph_table();
+        let a = t.get_assoc().unwrap();
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.get("v2", "v3"), 2.0);
+    }
+
+    #[test]
+    fn physical_tables_created() {
+        let (acc, _t) = graph_table();
+        let names = acc.store().list_tables();
+        assert_eq!(names, vec!["Tedge", "Tedge_Deg", "Tedge_T"]);
+    }
+
+    #[test]
+    fn row_range_query() {
+        let (_acc, t) = graph_table();
+        let a = t.get_assoc_range(&RowRange::single("v1")).unwrap();
+        assert_eq!(a.row_keys(), &["v1".to_string()]);
+        assert_eq!(a.nnz(), 2);
+    }
+
+    #[test]
+    fn col_query_uses_transpose() {
+        let (_acc, t) = graph_table();
+        let a = t.get_assoc_by_col(&RowRange::single("v3")).unwrap();
+        assert_eq!(a.col_keys(), &["v3".to_string()]);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.get("v2", "v3"), 2.0);
+    }
+
+    #[test]
+    fn col_query_without_transpose() {
+        let acc = AccumuloConnector::new();
+        let cfg = D4mTableConfig { transpose: false, ..Default::default() };
+        let t = acc.bind("NoT", &cfg).unwrap();
+        t.put_assoc(&Assoc::from_triples(&[("a", "x", 1.0), ("b", "y", 1.0)])).unwrap();
+        let a = t.get_assoc_by_col(&RowRange::single("x")).unwrap();
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.get("a", "x"), 1.0);
+    }
+
+    #[test]
+    fn degree_table_sums() {
+        let (_acc, t) = graph_table();
+        assert_eq!(t.degree("v3").unwrap(), 2.0);
+        assert_eq!(t.degree("v2").unwrap(), 1.0);
+        assert_eq!(t.degree("nope").unwrap(), 0.0);
+    }
+
+    #[test]
+    fn string_values_survive() {
+        let acc = AccumuloConnector::new();
+        let t = acc.bind("Txt", &D4mTableConfig::default()).unwrap();
+        let a = Assoc::from_str_triples(&[("doc1", "word|cat", "3x"), ("doc2", "word|dog", "1x")]);
+        t.put_assoc(&a).unwrap();
+        let b = t.get_assoc().unwrap();
+        assert!(b.is_string_valued());
+        assert_eq!(b.get_str("doc1", "word|cat"), Some("3x"));
+    }
+
+    #[test]
+    fn rebind_existing_table() {
+        let (acc, t) = graph_table();
+        let t2 = acc.bind("Tedge", &D4mTableConfig::default()).unwrap();
+        assert_eq!(t2.count(), t.count());
+    }
+}

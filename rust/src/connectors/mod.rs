@@ -1,0 +1,67 @@
+//! D4M database connectors — the `DB()` / `T = DB('table')` surface of
+//! the paper (Figure 1: "D4M server bindings leverage various database
+//! connectors").
+//!
+//! One facade, three engines:
+//! * [`accumulo::AccumuloConnector`] — key-value tables in the D4M 2.0
+//!   schema (Tedge / TedgeT / TedgeDeg / TedgeTxt).
+//! * [`scidb::SciDbConnector`] — chunked arrays with in-store ops.
+//! * [`sql::SqlConnector`] — relational triple tables.
+//!
+//! Every connector speaks [`crate::assoc::Assoc`] in both directions,
+//! which is what makes cross-engine translation (the BigDAWG text-island
+//! role, [`crate::polystore`]) a pair of connector calls.
+
+pub mod accumulo;
+pub mod scidb;
+pub mod sql;
+
+pub use accumulo::{AccumuloConnector, D4mTable, D4mTableConfig};
+pub use scidb::SciDbConnector;
+pub use sql::SqlConnector;
+
+/// Which engine a D4M binding points at (the `DBserver` type tag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DbKind {
+    Accumulo,
+    SciDb,
+    Sql,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assoc::Assoc;
+
+    /// Cross-engine translation: Accumulo -> Assoc -> SciDB -> Assoc ->
+    /// SQL -> Assoc must preserve the numeric triples (the D4M claim that
+    /// "the associative array model allows translation of data between
+    /// Accumulo, SciDB and PostGRES").
+    #[test]
+    fn cross_engine_roundtrip() {
+        let a = Assoc::from_triples(&[
+            ("v001", "v002", 1.0),
+            ("v001", "v003", 2.0),
+            ("v002", "v003", 3.0),
+        ]);
+
+        // Accumulo leg
+        let acc = AccumuloConnector::new();
+        let t = acc.bind("edges", &D4mTableConfig::default()).unwrap();
+        t.put_assoc(&a).unwrap();
+        let a1 = t.get_assoc().unwrap();
+        assert_eq!(a.triples(), a1.triples());
+
+        // SciDB leg
+        let scidb = SciDbConnector::new();
+        scidb.put_assoc("edges_arr", &a1, 64).unwrap();
+        let a2 = scidb.get_assoc("edges_arr").unwrap();
+        assert_eq!(a.triples(), a2.triples());
+
+        // SQL leg
+        let sqldb = SqlConnector::new();
+        sqldb.put_assoc("edges_rel", &a2).unwrap();
+        let a3 = sqldb.get_assoc("edges_rel").unwrap();
+        assert_eq!(a.triples(), a3.triples());
+    }
+}

@@ -1,0 +1,189 @@
+//! SciDB connector: "for the purpose of D4M, SciDB arrays are nothing but
+//! associative arrays" (the paper). The connector maps string keys to
+//! dense integer coordinates through per-array dimension dictionaries and
+//! pushes ops (spgemm, filter, subarray) into the store.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::arraystore::{ArraySchema, ArrayStore, StoredArray};
+use crate::assoc::Assoc;
+use crate::error::{D4mError, Result};
+
+/// Per-array key dictionaries: sorted string keys <-> dense coordinates.
+#[derive(Debug, Clone, Default)]
+pub struct DimDict {
+    pub row_keys: Vec<String>,
+    pub col_keys: Vec<String>,
+}
+
+/// The SciDB-engine connector (owns the embedded store + dictionaries).
+pub struct SciDbConnector {
+    store: ArrayStore,
+    dicts: RwLock<HashMap<String, DimDict>>,
+}
+
+impl Default for SciDbConnector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SciDbConnector {
+    pub fn new() -> Self {
+        SciDbConnector { store: ArrayStore::new(), dicts: RwLock::new(HashMap::new()) }
+    }
+
+    pub fn store(&self) -> &ArrayStore {
+        &self.store
+    }
+
+    /// Ingest an assoc as a new array with the given chunk size. The
+    /// array's dimensions are the assoc's key spaces; values come from
+    /// attribute `"val"`.
+    pub fn put_assoc(&self, name: &str, a: &Assoc, chunk: u64) -> Result<Arc<StoredArray>> {
+        let dict = DimDict { row_keys: a.row_keys().to_vec(), col_keys: a.col_keys().to_vec() };
+        let shape = (dict.row_keys.len().max(1) as u64, dict.col_keys.len().max(1) as u64);
+        let arr = self.store.create(ArraySchema::new(name, shape, chunk, &["val"]))?;
+        let cells: Vec<(u64, u64, Vec<f64>)> = a
+            .matrix()
+            .to_triples()
+            .into_iter()
+            .map(|(r, c, v)| (r as u64, c as u64, vec![v]))
+            .collect();
+        arr.put_batch(cells)?;
+        self.dicts.write().unwrap().insert(name.to_string(), dict);
+        Ok(arr)
+    }
+
+    /// Read an array back as an assoc through its dictionaries.
+    pub fn get_assoc(&self, name: &str) -> Result<Assoc> {
+        let arr = self.store.array_or_err(name)?;
+        let dict = self
+            .dicts
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| D4mError::NotFound(format!("dimension dictionary for {name}")))?;
+        let triples: Vec<(String, String, f64)> = arr
+            .scan_attr("val")?
+            .into_iter()
+            .map(|(i, j, v)| {
+                (dict.row_keys[i as usize].clone(), dict.col_keys[j as usize].clone(), v)
+            })
+            .collect();
+        Ok(Assoc::from_triples(&triples))
+    }
+
+    /// Register a dictionary for an array produced in-store (e.g. by
+    /// spgemm) so it can be read back as an assoc.
+    pub fn set_dict(&self, name: &str, dict: DimDict) {
+        self.dicts.write().unwrap().insert(name.to_string(), dict);
+    }
+
+    pub fn dict(&self, name: &str) -> Option<DimDict> {
+        self.dicts.read().unwrap().get(name).cloned()
+    }
+
+    /// In-database matrix multiply of two ingested assocs: runs
+    /// [`ArrayStore::spgemm`] in the store, wires up the result
+    /// dictionary, and returns the product as an assoc.
+    ///
+    /// Requires `a`'s column keys to equal `b`'s row keys (the connector
+    /// aligns them before ingest when called through
+    /// [`SciDbConnector::matmul_assocs`]).
+    pub fn spgemm(&self, a: &str, b: &str, out: &str) -> Result<Assoc> {
+        let da = self.dict(a).ok_or_else(|| D4mError::NotFound(format!("dict {a}")))?;
+        let db = self.dict(b).ok_or_else(|| D4mError::NotFound(format!("dict {b}")))?;
+        if da.col_keys != db.row_keys {
+            return Err(D4mError::Shape(
+                "spgemm inner dictionaries differ; ingest aligned arrays first".into(),
+            ));
+        }
+        self.store.spgemm(a, b, out)?;
+        self.set_dict(out, DimDict { row_keys: da.row_keys, col_keys: db.col_keys });
+        self.get_assoc(out)
+    }
+
+    /// Convenience: ingest two assocs aligned on their shared inner keys,
+    /// multiply in-store, return the result (the "in-database linear
+    /// algebra without export" demo).
+    pub fn matmul_assocs(&self, a: &Assoc, b: &Assoc, prefix: &str, chunk: u64) -> Result<Assoc> {
+        // align: restrict A's cols and B's rows to the shared key set
+        let (inner, _, _) =
+            crate::util::intersect_sorted_keys(a.col_keys(), b.row_keys());
+        let a_aligned = a.select_cols(&crate::assoc::KeySel::Keys(inner.clone()));
+        let b_aligned = b.select_rows(&crate::assoc::KeySel::Keys(inner));
+        // re-intersect after compaction (some keys may have emptied)
+        let (inner2, _, _) =
+            crate::util::intersect_sorted_keys(a_aligned.col_keys(), b_aligned.row_keys());
+        let a_aligned = a_aligned.select_cols(&crate::assoc::KeySel::Keys(inner2.clone()));
+        let b_aligned = b_aligned.select_rows(&crate::assoc::KeySel::Keys(inner2));
+        if a_aligned.col_keys() != b_aligned.row_keys() {
+            return Err(D4mError::Shape("alignment failed".into()));
+        }
+        self.put_assoc(&format!("{prefix}_a"), &a_aligned, chunk)?;
+        self.put_assoc(&format!("{prefix}_b"), &b_aligned, chunk)?;
+        self.spgemm(&format!("{prefix}_a"), &format!("{prefix}_b"), &format!("{prefix}_c"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assoc_array_roundtrip() {
+        let c = SciDbConnector::new();
+        let a = Assoc::from_triples(&[("r1", "c1", 1.5), ("r2", "c2", 2.5)]);
+        c.put_assoc("arr", &a, 16).unwrap();
+        let b = c.get_assoc("arr").unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn in_store_spgemm_matches_client_matmul() {
+        let c = SciDbConnector::new();
+        let a = Assoc::from_triples(&[
+            ("r1", "k1", 2.0),
+            ("r1", "k2", 1.0),
+            ("r2", "k2", 3.0),
+        ]);
+        let b = Assoc::from_triples(&[("k1", "c1", 1.0), ("k2", "c1", 4.0), ("k2", "c2", 5.0)]);
+        let want = a.matmul(&b);
+        let got = c.matmul_assocs(&a, &b, "mm", 8).unwrap();
+        assert_eq!(want.triples(), got.triples());
+    }
+
+    #[test]
+    fn spgemm_partial_key_overlap() {
+        let c = SciDbConnector::new();
+        // A has a col key B lacks, and vice versa — alignment must drop both
+        let a = Assoc::from_triples(&[("r", "shared", 2.0), ("r", "only_a", 7.0)]);
+        let b = Assoc::from_triples(&[("shared", "c", 3.0), ("only_b", "c", 11.0)]);
+        let got = c.matmul_assocs(&a, &b, "po", 4).unwrap();
+        assert_eq!(got.triples(), a.matmul(&b).triples());
+        assert_eq!(got.get("r", "c"), 6.0);
+    }
+
+    #[test]
+    fn misaligned_spgemm_rejected() {
+        let c = SciDbConnector::new();
+        let a = Assoc::from_triples(&[("r", "x", 1.0)]);
+        let b = Assoc::from_triples(&[("y", "c", 1.0)]);
+        c.put_assoc("a", &a, 4).unwrap();
+        c.put_assoc("b", &b, 4).unwrap();
+        assert!(c.spgemm("a", "b", "c").is_err());
+    }
+
+    #[test]
+    fn missing_dict_errors() {
+        let c = SciDbConnector::new();
+        // array created directly in the store, no dictionary registered
+        c.store()
+            .create(crate::arraystore::ArraySchema::new("raw", (4, 4), 2, &["val"]))
+            .unwrap();
+        assert!(c.get_assoc("raw").is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! SQL connector (PostGRES/MySQL stand-in): stores an assoc as a
+//! `(row_key TEXT, col_key TEXT, val FLOAT | val_txt TEXT)` triple table —
+//! the natural relational projection of an associative array — and reads
+//! it back, optionally through WHERE predicates pushed into the engine.
+
+use std::sync::Arc;
+
+use crate::assoc::Assoc;
+use crate::error::Result;
+use crate::relational::{ColType, Predicate, RelDb, RelTable, SqlValue, TableSchema};
+
+/// The SQL-engine connector (owns the embedded relational database).
+pub struct SqlConnector {
+    db: RelDb,
+}
+
+impl Default for SqlConnector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SqlConnector {
+    pub fn new() -> Self {
+        SqlConnector { db: RelDb::new() }
+    }
+
+    pub fn db(&self) -> &RelDb {
+        &self.db
+    }
+
+    /// Store an assoc as a triple table. Numeric assocs use a FLOAT value
+    /// column; string-valued assocs a TEXT one.
+    pub fn put_assoc(&self, name: &str, a: &Assoc) -> Result<Arc<RelTable>> {
+        let schema = if a.is_string_valued() {
+            TableSchema::new(
+                name,
+                &[("row_key", ColType::Text), ("col_key", ColType::Text), ("val_txt", ColType::Text)],
+            )
+        } else {
+            TableSchema::new(
+                name,
+                &[("row_key", ColType::Text), ("col_key", ColType::Text), ("val", ColType::Float)],
+            )
+        };
+        let t = self.db.create_table(schema)?;
+        let rows: Vec<Vec<SqlValue>> = if a.is_string_valued() {
+            a.str_triples()
+                .into_iter()
+                .map(|(r, c, v)| {
+                    vec![SqlValue::Text(r), SqlValue::Text(c), SqlValue::Text(v)]
+                })
+                .collect()
+        } else {
+            a.triples()
+                .into_iter()
+                .map(|(r, c, v)| vec![SqlValue::Text(r), SqlValue::Text(c), SqlValue::Float(v)])
+                .collect()
+        };
+        t.insert_batch(rows)?;
+        Ok(t)
+    }
+
+    /// Read a triple table back as an assoc.
+    pub fn get_assoc(&self, name: &str) -> Result<Assoc> {
+        self.get_assoc_where(name, None)
+    }
+
+    /// Read with a WHERE predicate evaluated inside the engine.
+    pub fn get_assoc_where(&self, name: &str, pred: Option<&Predicate>) -> Result<Assoc> {
+        let t = self.db.table_or_err(name)?;
+        let is_text = t.schema.col_index("val_txt").is_some();
+        let rows = t.select(None, pred, None)?;
+        let triples: Vec<(String, String, String)> = rows
+            .into_iter()
+            .map(|r| {
+                let row = r[0].as_text().unwrap_or("").to_string();
+                let col = r[1].as_text().unwrap_or("").to_string();
+                let val = if is_text {
+                    r[2].as_text().unwrap_or("").to_string()
+                } else {
+                    crate::assoc::io::fmt_num(r[2].as_f64().unwrap_or(0.0))
+                };
+                (row, col, val)
+            })
+            .collect();
+        crate::assoc::io::parse_triples(triples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_roundtrip() {
+        let c = SqlConnector::new();
+        let a = Assoc::from_triples(&[("r1", "c1", 1.5), ("r2", "c2", -2.0)]);
+        c.put_assoc("t", &a).unwrap();
+        assert_eq!(c.get_assoc("t").unwrap(), a);
+    }
+
+    #[test]
+    fn string_roundtrip() {
+        let c = SqlConnector::new();
+        let a = Assoc::from_str_triples(&[("r", "c", "hello")]);
+        c.put_assoc("t", &a).unwrap();
+        let b = c.get_assoc("t").unwrap();
+        assert_eq!(b.get_str("r", "c"), Some("hello"));
+    }
+
+    #[test]
+    fn where_pushdown() {
+        let c = SqlConnector::new();
+        let a = Assoc::from_triples(&[("r1", "c1", 1.0), ("r2", "c2", 10.0)]);
+        c.put_assoc("t", &a).unwrap();
+        let pred: Predicate = Box::new(|row| row[2].as_f64().unwrap_or(0.0) > 5.0);
+        let b = c.get_assoc_where("t", Some(&pred)).unwrap();
+        assert_eq!(b.nnz(), 1);
+        assert_eq!(b.get("r2", "c2"), 10.0);
+    }
+
+    #[test]
+    fn missing_table_errors() {
+        let c = SqlConnector::new();
+        assert!(c.get_assoc("nope").is_err());
+    }
+}

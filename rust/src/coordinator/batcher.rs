@@ -1,0 +1,186 @@
+//! Ingest op batcher: coalesces many small ingest requests destined for
+//! the same table into one pipeline run. Front-ends that receive triples
+//! one-at-a-time (e.g. a socket server) push through this to recover
+//! batch-writer throughput — the dynamic-batching idea of serving
+//! systems applied to mutations.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::connectors::accumulo::D4mTable;
+use crate::error::Result;
+use crate::pipeline::{IngestPipeline, PipelineConfig, TripleMsg};
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Flush a table's pending batch when it reaches this many triples.
+    pub max_triples: usize,
+    /// Flush all pending batches older than this.
+    pub max_age: Duration,
+    /// Pipeline used for the flush.
+    pub pipeline: PipelineConfig,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_triples: 50_000,
+            max_age: Duration::from_millis(100),
+            pipeline: PipelineConfig::default(),
+        }
+    }
+}
+
+struct Pending {
+    triples: Vec<TripleMsg>,
+    since: Instant,
+}
+
+/// The batcher. Not thread-safe by itself — callers own it behind their
+/// front-end loop (one batcher per accepting thread).
+pub struct OpBatcher {
+    policy: BatchPolicy,
+    pending: HashMap<String, Pending>,
+    tables: HashMap<String, Arc<D4mTable>>,
+    /// Total triples flushed.
+    pub flushed: u64,
+    /// Flush operations performed.
+    pub flush_ops: u64,
+}
+
+impl OpBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        OpBatcher {
+            policy,
+            pending: HashMap::new(),
+            tables: HashMap::new(),
+            flushed: 0,
+            flush_ops: 0,
+        }
+    }
+
+    /// Register a destination table.
+    pub fn register(&mut self, name: &str, table: Arc<D4mTable>) {
+        self.tables.insert(name.to_string(), table);
+    }
+
+    /// Queue one triple; flushes the table's batch if it filled.
+    pub fn push(&mut self, table: &str, triple: TripleMsg) -> Result<()> {
+        let p = self
+            .pending
+            .entry(table.to_string())
+            .or_insert_with(|| Pending { triples: Vec::new(), since: Instant::now() });
+        p.triples.push(triple);
+        if p.triples.len() >= self.policy.max_triples {
+            self.flush_table(table)?;
+        }
+        Ok(())
+    }
+
+    /// Flush one table's pending batch through the pipeline.
+    pub fn flush_table(&mut self, table: &str) -> Result<()> {
+        let Some(p) = self.pending.remove(table) else {
+            return Ok(());
+        };
+        if p.triples.is_empty() {
+            return Ok(());
+        }
+        let t = self
+            .tables
+            .get(table)
+            .cloned()
+            .ok_or_else(|| crate::error::D4mError::NotFound(format!("batcher table {table}")))?;
+        let n = p.triples.len() as u64;
+        IngestPipeline::new(t, self.policy.pipeline.clone()).run(p.triples.into_iter())?;
+        self.flushed += n;
+        self.flush_ops += 1;
+        Ok(())
+    }
+
+    /// Flush every batch older than the age policy (call from a timer).
+    pub fn tick(&mut self) -> Result<()> {
+        let now = Instant::now();
+        let stale: Vec<String> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| now.duration_since(p.since) >= self.policy.max_age)
+            .map(|(k, _)| k.clone())
+            .collect();
+        for t in stale {
+            self.flush_table(&t)?;
+        }
+        Ok(())
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn flush_all(&mut self) -> Result<()> {
+        let tables: Vec<String> = self.pending.keys().cloned().collect();
+        for t in tables {
+            self.flush_table(&t)?;
+        }
+        Ok(())
+    }
+
+    pub fn pending_len(&self, table: &str) -> usize {
+        self.pending.get(table).map(|p| p.triples.len()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connectors::{AccumuloConnector, D4mTableConfig};
+
+    fn batcher(max: usize) -> (AccumuloConnector, OpBatcher) {
+        let acc = AccumuloConnector::new();
+        let t = Arc::new(acc.bind("T", &D4mTableConfig::default()).unwrap());
+        let mut b = OpBatcher::new(BatchPolicy {
+            max_triples: max,
+            max_age: Duration::from_millis(1),
+            pipeline: PipelineConfig { num_workers: 2, ..Default::default() },
+        });
+        b.register("T", t);
+        (acc, b)
+    }
+
+    fn trip(i: usize) -> TripleMsg {
+        (format!("r{i:04}"), "c".into(), "1".into())
+    }
+
+    #[test]
+    fn size_triggered_flush() {
+        let (acc, mut b) = batcher(10);
+        for i in 0..25 {
+            b.push("T", trip(i)).unwrap();
+        }
+        assert_eq!(b.flush_ops, 2);
+        assert_eq!(b.flushed, 20);
+        assert_eq!(b.pending_len("T"), 5);
+        b.flush_all().unwrap();
+        assert_eq!(b.flushed, 25);
+        let t = acc.bind("T", &D4mTableConfig::default()).unwrap();
+        assert_eq!(t.count(), 25);
+    }
+
+    #[test]
+    fn age_triggered_flush() {
+        let (_acc, mut b) = batcher(1_000_000);
+        b.push("T", trip(0)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        b.tick().unwrap();
+        assert_eq!(b.flushed, 1);
+        assert_eq!(b.pending_len("T"), 0);
+    }
+
+    #[test]
+    fn unknown_table_flush_errors() {
+        let (_acc, mut b) = batcher(2);
+        b.pending.insert(
+            "ghost".into(),
+            super::Pending { triples: vec![trip(0)], since: Instant::now() },
+        );
+        assert!(b.flush_table("ghost").is_err());
+    }
+}

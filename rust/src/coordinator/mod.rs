@@ -1,0 +1,371 @@
+//! The D4M coordinator — the L3 server tying everything together: a
+//! table registry over the three engines, a typed request/response API,
+//! an ingest batcher, and per-op metrics. `main.rs` exposes it as a CLI;
+//! [`D4mServer::handle`] is the single entry point a network front-end
+//! would call.
+
+pub mod batcher;
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::assoc::Assoc;
+use crate::connectors::{AccumuloConnector, D4mTable, D4mTableConfig};
+use crate::error::{D4mError, Result};
+use crate::graphulo::{self, ClientCtx, TableMultOpts};
+use crate::kvstore::{KvStore, RowRange};
+use crate::metrics::{Histogram, RateMeter, Snapshot};
+use crate::pipeline::{IngestPipeline, IngestReport, PipelineConfig, TripleMsg};
+use crate::runtime::PjrtEngine;
+
+/// Requests the coordinator serves.
+pub enum Request {
+    /// Bind (create if needed) a D4M table.
+    CreateTable { name: String, splits: Vec<String> },
+    /// Ingest triples through the parallel pipeline.
+    Ingest { table: String, triples: Vec<TripleMsg>, pipeline: PipelineConfig },
+    /// Read a row range as an assoc.
+    Query { table: String, range: RowRange },
+    /// Column query (via the transpose table).
+    QueryByCol { table: String, range: RowRange },
+    /// Server-side Graphulo TableMult: `out += A^T B`.
+    TableMult { a: String, b: String, out: String },
+    /// Client-side D4M TableMult with a RAM budget.
+    TableMultClient { a: String, b: String, memory_limit: usize },
+    /// Client-side TableMult routed through the PJRT dense path.
+    TableMultDense { a: String, b: String, tile: usize },
+    /// Server-side BFS.
+    Bfs { table: String, seeds: Vec<String>, hops: usize },
+    /// Server-side Jaccard into table `out`.
+    Jaccard { table: String, out: String },
+    /// Server-side k-truss.
+    KTruss { table: String, k: usize },
+    /// Server-side PageRank (power iteration over table scans).
+    PageRank { table: String, opts: graphulo::PageRankOpts },
+    /// List tables.
+    ListTables,
+}
+
+/// Responses.
+#[derive(Debug)]
+pub enum Response {
+    Ok,
+    Tables(Vec<String>),
+    Ingested(IngestReport),
+    Assoc(Assoc),
+    Distances(BTreeMap<String, usize>),
+    Ranks(graphulo::PageRankResult),
+    MultStats(graphulo::TableMultStats),
+}
+
+impl Response {
+    /// Unwrap an assoc response (panics on type mismatch — test helper).
+    pub fn into_assoc(self) -> Assoc {
+        match self {
+            Response::Assoc(a) => a,
+            other => panic!("expected Assoc response, got {other:?}"),
+        }
+    }
+}
+
+/// The coordinator.
+pub struct D4mServer {
+    acc: AccumuloConnector,
+    tables: Mutex<HashMap<String, Arc<D4mTable>>>,
+    engine: Option<PjrtEngine>,
+    /// Per-op latency histograms, keyed by op name.
+    op_stats: Mutex<HashMap<&'static str, Arc<Histogram>>>,
+    requests: RateMeter,
+}
+
+impl D4mServer {
+    /// Start a coordinator with a fresh embedded store; tries to attach
+    /// the PJRT engine (optional — dense ops degrade to CSR without it).
+    pub fn new() -> Self {
+        D4mServer::with_engine(PjrtEngine::new(PjrtEngine::default_dir()).ok())
+    }
+
+    pub fn with_engine(engine: Option<PjrtEngine>) -> Self {
+        D4mServer {
+            acc: AccumuloConnector::new(),
+            tables: Mutex::new(HashMap::new()),
+            engine,
+            op_stats: Mutex::new(HashMap::new()),
+            requests: RateMeter::new(),
+        }
+    }
+
+    pub fn store(&self) -> Arc<KvStore> {
+        self.acc.store()
+    }
+
+    pub fn has_engine(&self) -> bool {
+        self.engine.is_some()
+    }
+
+    pub fn engine(&self) -> Option<&PjrtEngine> {
+        self.engine.as_ref()
+    }
+
+    fn hist(&self, op: &'static str) -> Arc<Histogram> {
+        self.op_stats
+            .lock()
+            .unwrap()
+            .entry(op)
+            .or_insert_with(|| Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    fn bind(&self, name: &str, splits: Vec<String>) -> Result<Arc<D4mTable>> {
+        let mut tables = self.tables.lock().unwrap();
+        if let Some(t) = tables.get(name) {
+            return Ok(t.clone());
+        }
+        let cfg = D4mTableConfig { splits, ..Default::default() };
+        let t = Arc::new(self.acc.bind(name, &cfg)?);
+        tables.insert(name.to_string(), t.clone());
+        Ok(t)
+    }
+
+    fn bound(&self, name: &str) -> Result<Arc<D4mTable>> {
+        self.tables
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| D4mError::NotFound(format!("table {name} not bound")))
+    }
+
+    /// Serve one request.
+    pub fn handle(&self, req: Request) -> Result<Response> {
+        self.requests.add(1);
+        match req {
+            Request::CreateTable { name, splits } => {
+                self.hist("create").time(|| self.bind(&name, splits))?;
+                Ok(Response::Ok)
+            }
+            Request::Ingest { table, triples, pipeline } => {
+                let t = self.bind(&table, vec![])?;
+                let h = self.hist("ingest");
+                let report =
+                    h.time(|| IngestPipeline::new(t, pipeline).run(triples.into_iter()))?;
+                Ok(Response::Ingested(report))
+            }
+            Request::Query { table, range } => {
+                let t = self.bound(&table)?;
+                let a = self.hist("query").time(|| t.get_assoc_range(&range))?;
+                Ok(Response::Assoc(a))
+            }
+            Request::QueryByCol { table, range } => {
+                let t = self.bound(&table)?;
+                let a = self.hist("query_col").time(|| t.get_assoc_by_col(&range))?;
+                Ok(Response::Assoc(a))
+            }
+            Request::TableMult { a, b, out } => {
+                let ta = self.bound(&a)?;
+                let tb = self.bound(&b)?;
+                let store = self.acc.store();
+                let tc = store.ensure_table(&out, vec![]);
+                let stats = self.hist("tablemult_server").time(|| {
+                    graphulo::table_mult(&ta.main(), &tb.main(), &tc, &TableMultOpts::default())
+                })?;
+                Ok(Response::MultStats(stats))
+            }
+            Request::TableMultClient { a, b, memory_limit } => {
+                let ta = self.bound(&a)?;
+                let tb = self.bound(&b)?;
+                let ctx = ClientCtx::with_limit(memory_limit);
+                let c = self
+                    .hist("tablemult_client")
+                    .time(|| ctx.table_mult(&ta.main(), &tb.main()))?;
+                Ok(Response::Assoc(c))
+            }
+            Request::TableMultDense { a, b, tile } => {
+                let ta = self.bound(&a)?;
+                let tb = self.bound(&b)?;
+                let aa = ClientCtx::default().read_table(&ta.main())?;
+                let bb = ClientCtx::default().read_table(&tb.main())?;
+                let c = self.hist("tablemult_dense").time(|| {
+                    crate::runtime::blocks::assoc_matmul_auto(self.engine.as_ref(), &aa, &bb, tile)
+                })?;
+                Ok(Response::Assoc(c))
+            }
+            Request::Bfs { table, seeds, hops } => {
+                let t = self.bound(&table)?;
+                let d = self.hist("bfs").time(|| graphulo::bfs_server(&t.main(), &seeds, hops));
+                Ok(Response::Distances(d))
+            }
+            Request::Jaccard { table, out } => {
+                let t = self.bound(&table)?;
+                let deg = t.degree_table().ok_or_else(|| {
+                    D4mError::InvalidArg(format!("table {table} has no degree table"))
+                })?;
+                let store = self.acc.store();
+                let a = self
+                    .hist("jaccard")
+                    .time(|| graphulo::jaccard_server(&store, &t.main(), &deg, &out))?;
+                Ok(Response::Assoc(a))
+            }
+            Request::KTruss { table, k } => {
+                let t = self.bound(&table)?;
+                let store = self.acc.store();
+                let a = self.hist("ktruss").time(|| -> Result<Assoc> {
+                    let sym =
+                        graphulo::symmetrise_table(&store, &t.main(), &format!("{table}_sym"))?;
+                    graphulo::ktruss_server(&store, &sym, k, &format!("{table}_kt"))
+                })?;
+                Ok(Response::Assoc(a))
+            }
+            Request::PageRank { table, opts } => {
+                let t = self.bound(&table)?;
+                let r = self.hist("pagerank").time(|| graphulo::pagerank_server(&t.main(), &opts));
+                Ok(Response::Ranks(r))
+            }
+            Request::ListTables => Ok(Response::Tables(self.acc.store().list_tables())),
+        }
+    }
+
+    /// Metrics snapshots for every op seen so far.
+    pub fn snapshots(&self) -> Vec<Snapshot> {
+        let stats = self.op_stats.lock().unwrap();
+        let mut out: Vec<Snapshot> = stats
+            .iter()
+            .map(|(op, h)| Snapshot {
+                name: op.to_string(),
+                count: h.count(),
+                rate_per_sec: h.count() as f64 / self.requests.elapsed().as_secs_f64().max(1e-9),
+                mean_latency_ns: h.mean_ns(),
+                p99_latency_ns: h.quantile_ns(0.99),
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+}
+
+impl Default for D4mServer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server_with_graph() -> D4mServer {
+        let s = D4mServer::with_engine(None);
+        let triples: Vec<TripleMsg> = vec![
+            ("a".into(), "b".into(), "1".into()),
+            ("b".into(), "c".into(), "1".into()),
+            ("a".into(), "c".into(), "1".into()),
+            ("c".into(), "d".into(), "1".into()),
+        ];
+        s.handle(Request::Ingest {
+            table: "G".into(),
+            triples,
+            pipeline: PipelineConfig { num_workers: 2, ..Default::default() },
+        })
+        .unwrap();
+        s
+    }
+
+    #[test]
+    fn ingest_then_query() {
+        let s = server_with_graph();
+        let a = s
+            .handle(Request::Query { table: "G".into(), range: RowRange::all() })
+            .unwrap()
+            .into_assoc();
+        assert_eq!(a.nnz(), 4);
+    }
+
+    #[test]
+    fn query_by_col_via_transpose() {
+        let s = server_with_graph();
+        let a = s
+            .handle(Request::QueryByCol { table: "G".into(), range: RowRange::single("c") })
+            .unwrap()
+            .into_assoc();
+        assert_eq!(a.nnz(), 2); // b->c and a->c
+    }
+
+    #[test]
+    fn server_tablemult_vs_client() {
+        let s = server_with_graph();
+        match s
+            .handle(Request::TableMult { a: "G".into(), b: "G".into(), out: "C".into() })
+            .unwrap()
+        {
+            Response::MultStats(stats) => assert!(stats.partial_products > 0),
+            other => panic!("unexpected {other:?}"),
+        }
+        let client = s
+            .handle(Request::TableMultClient {
+                a: "G".into(),
+                b: "G".into(),
+                memory_limit: usize::MAX,
+            })
+            .unwrap()
+            .into_assoc();
+        let server = graphulo::read_product(&s.store().table("C").unwrap()).unwrap();
+        assert_eq!(client.triples(), server.triples());
+    }
+
+    #[test]
+    fn client_memory_wall() {
+        let s = server_with_graph();
+        let r = s.handle(Request::TableMultClient {
+            a: "G".into(),
+            b: "G".into(),
+            memory_limit: 10,
+        });
+        assert!(matches!(r, Err(D4mError::MemoryLimit { .. })));
+    }
+
+    #[test]
+    fn bfs_request() {
+        let s = server_with_graph();
+        match s
+            .handle(Request::Bfs { table: "G".into(), seeds: vec!["a".into()], hops: 2 })
+            .unwrap()
+        {
+            Response::Distances(d) => {
+                assert_eq!(d.get("d"), Some(&2));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn jaccard_and_ktruss_requests() {
+        let s = server_with_graph();
+        let j = s
+            .handle(Request::Jaccard { table: "G".into(), out: "J".into() })
+            .unwrap()
+            .into_assoc();
+        assert!(!j.is_empty());
+        let kt = s.handle(Request::KTruss { table: "G".into(), k: 3 }).unwrap().into_assoc();
+        // the a-b-c triangle survives
+        assert_eq!(kt.get("a", "b"), 1.0);
+        assert_eq!(kt.get("c", "d"), 0.0);
+    }
+
+    #[test]
+    fn unknown_table_errors() {
+        let s = D4mServer::with_engine(None);
+        assert!(s
+            .handle(Request::Query { table: "nope".into(), range: RowRange::all() })
+            .is_err());
+    }
+
+    #[test]
+    fn metrics_populate() {
+        let s = server_with_graph();
+        s.handle(Request::Query { table: "G".into(), range: RowRange::all() }).unwrap();
+        let snaps = s.snapshots();
+        assert!(snaps.iter().any(|x| x.name == "ingest"));
+        assert!(snaps.iter().any(|x| x.name == "query"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Error type shared across the D4M stack.
+
+use std::fmt;
+
+/// Errors surfaced by the D4M library.
+#[derive(Debug)]
+pub enum D4mError {
+    /// Associative-array shape/key mismatch (e.g. matmul inner keys disjoint
+    /// when strict alignment was requested).
+    Shape(String),
+    /// A table/array/database object was not found in the registry.
+    NotFound(String),
+    /// A table/array already exists and `create` was not `if_not_exists`.
+    AlreadyExists(String),
+    /// Client-side operation exceeded its configured memory budget —
+    /// this is the Figure-2 "memory wall" condition.
+    MemoryLimit { used: usize, limit: usize },
+    /// Malformed input data (triples file, CSV, schema violation).
+    Parse(String),
+    /// PJRT runtime failure (artifact missing, compile/execute error).
+    Runtime(String),
+    /// Ingest pipeline failure (worker panic, channel closed).
+    Pipeline(String),
+    /// Invalid argument to a public API.
+    InvalidArg(String),
+    /// I/O error wrapper.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for D4mError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            D4mError::Shape(s) => write!(f, "shape error: {s}"),
+            D4mError::NotFound(s) => write!(f, "not found: {s}"),
+            D4mError::AlreadyExists(s) => write!(f, "already exists: {s}"),
+            D4mError::MemoryLimit { used, limit } => write!(
+                f,
+                "client-side memory limit exceeded: used {used} bytes of {limit}"
+            ),
+            D4mError::Parse(s) => write!(f, "parse error: {s}"),
+            D4mError::Runtime(s) => write!(f, "runtime error: {s}"),
+            D4mError::Pipeline(s) => write!(f, "pipeline error: {s}"),
+            D4mError::InvalidArg(s) => write!(f, "invalid argument: {s}"),
+            D4mError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for D4mError {}
+
+impl From<std::io::Error> for D4mError {
+    fn from(e: std::io::Error) -> Self {
+        D4mError::Io(e)
+    }
+}
+
+/// Convenience alias used across the library.
+pub type Result<T> = std::result::Result<T, D4mError>;

@@ -1,0 +1,170 @@
+//! Workload generators: Graph500-style Kronecker power-law graphs,
+//! Erdős–Rényi graphs, and random D4M-schema triples. All deterministic
+//! given a seed — every benchmark row in EXPERIMENTS.md is reproducible.
+
+use crate::assoc::Assoc;
+use crate::util::XorShift64;
+
+/// Graph500 Kronecker generator parameters (R-MAT a/b/c/d = .57/.19/.19/.05).
+#[derive(Debug, Clone, Copy)]
+pub struct KroneckerParams {
+    /// log2 of vertex count.
+    pub scale: u32,
+    /// Edges per vertex.
+    pub edge_factor: u32,
+    pub seed: u64,
+}
+
+impl KroneckerParams {
+    pub fn new(scale: u32, edge_factor: u32, seed: u64) -> Self {
+        KroneckerParams { scale, edge_factor, seed }
+    }
+
+    pub fn num_vertices(&self) -> u64 {
+        1u64 << self.scale
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        self.num_vertices() * self.edge_factor as u64
+    }
+}
+
+/// Generate Kronecker (R-MAT) edges as `(src, dst)` vertex ids.
+/// Follows the Graph500 reference recursion with per-level noise.
+pub fn kronecker_edges(p: &KroneckerParams) -> Vec<(u64, u64)> {
+    const A: f64 = 0.57;
+    const B: f64 = 0.19;
+    const C: f64 = 0.19;
+    let mut rng = XorShift64::new(p.seed);
+    let m = p.num_edges();
+    let mut edges = Vec::with_capacity(m as usize);
+    for _ in 0..m {
+        let (mut src, mut dst) = (0u64, 0u64);
+        for level in 0..p.scale {
+            let bit = 1u64 << (p.scale - 1 - level);
+            let r = rng.f64();
+            if r < A {
+                // (0, 0)
+            } else if r < A + B {
+                dst |= bit;
+            } else if r < A + B + C {
+                src |= bit;
+            } else {
+                src |= bit;
+                dst |= bit;
+            }
+        }
+        edges.push((src, dst));
+    }
+    edges
+}
+
+/// Format a vertex id as a D4M key with fixed width (sortable).
+pub fn vertex_key(v: u64) -> String {
+    format!("v{v:010}")
+}
+
+/// Kronecker graph as `(row, col, "1")` string triples (the exploded-edge
+/// form D4M ingests).
+pub fn kronecker_triples(p: &KroneckerParams) -> Vec<(String, String, String)> {
+    kronecker_edges(p)
+        .into_iter()
+        .map(|(s, d)| (vertex_key(s), vertex_key(d), "1".to_string()))
+        .collect()
+}
+
+/// Kronecker graph as an unweighted adjacency [`Assoc`] (duplicate edges
+/// collapse to their count; self-loops retained, as in Graph500).
+pub fn kronecker_assoc(p: &KroneckerParams) -> Assoc {
+    let t: Vec<(String, String, f64)> = kronecker_edges(p)
+        .into_iter()
+        .map(|(s, d)| (vertex_key(s), vertex_key(d), 1.0))
+        .collect();
+    Assoc::from_triples(&t)
+}
+
+/// Erdős–Rényi G(n, m) adjacency as an [`Assoc`].
+pub fn erdos_renyi_assoc(n: u64, m: u64, seed: u64) -> Assoc {
+    let mut rng = XorShift64::new(seed);
+    let t: Vec<(String, String, f64)> = (0..m)
+        .map(|_| (vertex_key(rng.below(n)), vertex_key(rng.below(n)), 1.0))
+        .collect();
+    Assoc::from_triples(&t)
+}
+
+/// Random document-like D4M-schema triples: `(doc id, word|<w>, count)`.
+/// This is the unstructured-text workload the D4M intro motivates.
+pub fn doc_word_triples(
+    num_docs: u64,
+    words_per_doc: u64,
+    vocab: u64,
+    seed: u64,
+) -> Vec<(String, String, String)> {
+    let mut rng = XorShift64::new(seed);
+    let mut out = Vec::with_capacity((num_docs * words_per_doc) as usize);
+    for d in 0..num_docs {
+        for _ in 0..words_per_doc {
+            // zipf-ish skew: square the uniform to favour low word ids
+            let u = rng.f64();
+            let w = ((u * u) * vocab as f64) as u64;
+            out.push((
+                format!("doc{d:08}"),
+                format!("word|w{w:06}"),
+                format!("{}", rng.below(5) + 1),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kronecker_edge_count_and_range() {
+        let p = KroneckerParams::new(8, 4, 42);
+        let e = kronecker_edges(&p);
+        assert_eq!(e.len(), (1 << 8) * 4);
+        assert!(e.iter().all(|&(s, d)| s < 256 && d < 256));
+    }
+
+    #[test]
+    fn kronecker_deterministic() {
+        let p = KroneckerParams::new(6, 4, 7);
+        assert_eq!(kronecker_edges(&p), kronecker_edges(&p));
+    }
+
+    #[test]
+    fn kronecker_is_skewed() {
+        // power-law: max out-degree far above mean
+        let p = KroneckerParams::new(10, 16, 1);
+        let a = kronecker_assoc(&p);
+        let deg = a.sum(2);
+        let max = deg.triples().iter().map(|t| t.2).fold(0.0, f64::max);
+        let mean = p.num_edges() as f64 / a.row_keys().len() as f64;
+        assert!(
+            max > 4.0 * mean,
+            "expected skew: max {max} vs mean {mean}"
+        );
+    }
+
+    #[test]
+    fn vertex_keys_sortable() {
+        assert!(vertex_key(2) < vertex_key(10)); // zero-padded
+    }
+
+    #[test]
+    fn erdos_renyi_shape() {
+        let a = erdos_renyi_assoc(64, 256, 3);
+        assert!(a.nnz() <= 256);
+        assert!(a.nnz() > 128); // few collisions at this density
+    }
+
+    #[test]
+    fn doc_word_schema() {
+        let t = doc_word_triples(4, 8, 100, 5);
+        assert_eq!(t.len(), 32);
+        assert!(t.iter().all(|(_, c, _)| c.starts_with("word|")));
+    }
+}

@@ -1,0 +1,265 @@
+//! Server-side Graphulo graph algorithms (Hutchison et al. 2016): BFS,
+//! Jaccard and k-truss executed *inside* the store via scans, server-side
+//! iterators and [`super::tablemult::table_mult`] — "without first
+//! transferring a partial set of results to local memory" (the paper).
+//!
+//! Each algorithm has a client-side counterpart in [`super::client`];
+//! tests assert they agree.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::assoc::io::fmt_num;
+use crate::error::Result;
+use crate::kvstore::{BatchWriter, IterConfig, KvStore, RowRange, Table, WriterConfig};
+
+use super::tablemult::{table_mult, TableMultOpts};
+
+/// Server-side BFS from `seeds`, `k` hops, over the edge table (rows are
+/// source vertices, cq are destinations). Only the frontier is resident
+/// client-side; neighbourhood expansion is row scans in the store.
+pub fn bfs_server(table: &Arc<Table>, seeds: &[String], k: usize) -> BTreeMap<String, usize> {
+    let cfg = IterConfig::default();
+    let mut dist: BTreeMap<String, usize> = BTreeMap::new();
+    let mut frontier: Vec<String> = Vec::new();
+    for s in seeds {
+        if dist.insert(s.clone(), 0).is_none() {
+            frontier.push(s.clone());
+        }
+    }
+    for hop in 1..=k {
+        if frontier.is_empty() {
+            break;
+        }
+        let mut next = Vec::new();
+        for v in &frontier {
+            for e in table.scan_row(v, &cfg) {
+                let dst = e.key.cq;
+                if !dist.contains_key(&dst) {
+                    dist.insert(dst.clone(), hop);
+                    next.push(dst);
+                }
+            }
+        }
+        frontier = next;
+    }
+    dist
+}
+
+/// Server-side Jaccard: `N = A^T A` by TableMult into a temp table, then
+/// a streaming pass over N combining with the degree table:
+/// `J(i,j) = N(i,j) / (deg(i) + deg(j) - N(i,j))`, `i < j`.
+///
+/// `edge` is the main table (rows = vertices, cq = neighbours); `deg` the
+/// D4M-schema degree table (row = vertex, cq = "deg"). The result is
+/// written into `out` and also returned as an assoc.
+pub fn jaccard_server(
+    store: &Arc<KvStore>,
+    edge: &Arc<Table>,
+    deg: &Arc<Table>,
+    out_name: &str,
+) -> Result<crate::assoc::Assoc> {
+    // N = A^T A  (contract over rows = shared neighbours... rows of the
+    // edge table are source vertices; A^T A counts, for each vertex pair
+    // (i, j), the sources pointing at both).
+    let n_table = store.ensure_table(&format!("{out_name}_N"), vec![]);
+    let opts = TableMultOpts { logical: true, ..Default::default() };
+    table_mult(edge, edge, &n_table, &opts)?;
+
+    // degree lookup (streamed once into a map; degree tables are O(|V|),
+    // the small side — Graphulo does the same with a scan-time cache)
+    let deg_cfg = IterConfig { summing: true, ..Default::default() };
+    let mut degree: BTreeMap<String, f64> = BTreeMap::new();
+    for e in deg.scan(&RowRange::all(), &deg_cfg) {
+        if e.key.cq == "deg" {
+            degree.insert(e.key.row, e.value.parse().unwrap_or(0.0));
+        }
+    }
+
+    // streaming combine pass over N
+    let out = store.ensure_table(out_name, vec![]);
+    let mut w = BatchWriter::new(out.clone(), WriterConfig::default());
+    let sum_cfg = IterConfig { summing: true, ..Default::default() };
+    for e in n_table.scan(&RowRange::all(), &sum_cfg) {
+        let (i, j) = (e.key.row.as_str(), e.key.cq.as_str());
+        if i >= j {
+            continue;
+        }
+        let nij: f64 = e.value.parse().unwrap_or(0.0);
+        let di = degree.get(i).copied().unwrap_or(0.0);
+        let dj = degree.get(j).copied().unwrap_or(0.0);
+        let denom = di + dj - nij;
+        if denom > 0.0 && nij > 0.0 {
+            w.put(i, j, &fmt_num(nij / denom));
+        }
+    }
+    w.flush();
+    let cfg = IterConfig::default();
+    crate::connectors::accumulo::entries_to_assoc(out.scan(&RowRange::all(), &cfg))
+}
+
+/// Server-side k-truss: iterate `support = (A*A) ∧ A`, drop edges with
+/// support < k-2, rewrite the surviving edges into a fresh generation
+/// table, until fixpoint. Tables named `{base}_gen{n}`.
+///
+/// Input table must hold a symmetric, loop-free adjacency (use
+/// [`symmetrise_table`] first if needed). Returns the surviving adjacency.
+pub fn ktruss_server(
+    store: &Arc<KvStore>,
+    adj: &Arc<Table>,
+    k: usize,
+    base: &str,
+) -> Result<crate::assoc::Assoc> {
+    let need = k.saturating_sub(2) as f64;
+    let cfg = IterConfig { summing: true, ..Default::default() };
+    let mut current = adj.clone();
+    let mut generation = 0usize;
+    loop {
+        // A^T A over a symmetric A equals A*A; TableMult contracts rows.
+        let a2 = store.ensure_table(&format!("{base}_gen{generation}_sq"), vec![]);
+        table_mult(&current, &current, &a2, &TableMultOpts::default())?;
+
+        // stream A merge-joined with A2 (both scans are key-sorted), keep
+        // edges whose support >= need. One pass, no per-edge row scans.
+        let next = store.ensure_table(&format!("{base}_gen{}", generation + 1), vec![]);
+        let mut w = BatchWriter::new(next.clone(), WriterConfig::default());
+        let mut kept = 0usize;
+        let mut total = 0usize;
+        let mut sq = a2.scan(&RowRange::all(), &cfg).into_iter().peekable();
+        for e in current.scan(&RowRange::all(), &cfg) {
+            total += 1;
+            let edge_cell = (&e.key.row, &e.key.cq);
+            // advance A2 to the first cell >= edge_cell
+            while sq
+                .peek()
+                .map(|x| (&x.key.row, &x.key.cq) < edge_cell)
+                .unwrap_or(false)
+            {
+                sq.next();
+            }
+            let support = match sq.peek() {
+                Some(x) if (&x.key.row, &x.key.cq) == edge_cell => {
+                    x.value.parse::<f64>().unwrap_or(0.0)
+                }
+                _ => 0.0,
+            };
+            if support >= need {
+                w.put(&e.key.row, &e.key.cq, "1");
+                kept += 1;
+            }
+        }
+        w.flush();
+        generation += 1;
+        if kept == total {
+            // fixpoint
+            return crate::connectors::accumulo::entries_to_assoc(
+                next.scan(&RowRange::all(), &cfg),
+            );
+        }
+        if kept == 0 {
+            return Ok(crate::assoc::Assoc::empty());
+        }
+        current = next;
+    }
+}
+
+/// Write the symmetric closure of an edge table (minus self-loops) into a
+/// new table — the preprocessing step for k-truss.
+pub fn symmetrise_table(store: &Arc<KvStore>, edge: &Arc<Table>, out_name: &str) -> Result<Arc<Table>> {
+    let out = store.ensure_table(out_name, vec![]);
+    let mut w = BatchWriter::new(out.clone(), WriterConfig::default());
+    let cfg = IterConfig::default();
+    for e in edge.scan(&RowRange::all(), &cfg) {
+        if e.key.row != e.key.cq {
+            w.put(&e.key.row, &e.key.cq, "1");
+            w.put(&e.key.cq, &e.key.row, "1");
+        }
+    }
+    w.flush();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assoc::Assoc;
+    use crate::connectors::{AccumuloConnector, D4mTableConfig};
+    use crate::graphulo::client;
+
+    fn store_with_graph(a: &Assoc) -> (Arc<KvStore>, Arc<Table>, Arc<Table>) {
+        let store = Arc::new(KvStore::new());
+        let acc = AccumuloConnector::with_store(store.clone());
+        let t = acc.bind("G", &D4mTableConfig::default()).unwrap();
+        t.put_assoc(a).unwrap();
+        (store, t.main(), t.degree_table().unwrap())
+    }
+
+    #[test]
+    fn bfs_server_matches_client() {
+        let g = Assoc::from_triples(&[
+            ("a", "b", 1.0),
+            ("b", "c", 1.0),
+            ("b", "d", 1.0),
+            ("d", "e", 1.0),
+        ]);
+        let (_s, t, _d) = store_with_graph(&g);
+        let server = bfs_server(&t, &["a".into()], 3);
+        let client = client::bfs_assoc(&g, &["a".into()], 3);
+        assert_eq!(server, client);
+        assert_eq!(server.get("e"), Some(&3));
+    }
+
+    #[test]
+    fn jaccard_server_matches_client() {
+        let g = Assoc::from_triples(&[
+            ("r1", "x", 1.0),
+            ("r1", "y", 1.0),
+            ("r2", "x", 1.0),
+            ("r2", "y", 1.0),
+            ("r3", "y", 1.0),
+            ("r3", "z", 1.0),
+        ]);
+        let (s, t, d) = store_with_graph(&g);
+        let server = jaccard_server(&s, &t, &d, "J").unwrap();
+        let client = client::jaccard_assoc(&g);
+        let (st, ct) = (server.triples(), client.triples());
+        assert_eq!(st.len(), ct.len());
+        for (a, b) in st.iter().zip(ct.iter()) {
+            assert_eq!((&a.0, &a.1), (&b.0, &b.1));
+            assert!((a.2 - b.2).abs() < 1e-9, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn ktruss_server_matches_client() {
+        // triangle + dangling edge, symmetrised in-store
+        let g = Assoc::from_triples(&[
+            ("a", "b", 1.0),
+            ("b", "c", 1.0),
+            ("a", "c", 1.0),
+            ("c", "d", 1.0),
+        ]);
+        let (s, t, _d) = store_with_graph(&g);
+        let sym = symmetrise_table(&s, &t, "G_sym").unwrap();
+        let server = ktruss_server(&s, &sym, 3, "KT").unwrap();
+        let client = client::ktruss_assoc(&g, 3);
+        assert_eq!(server.triples(), client.triples());
+    }
+
+    #[test]
+    fn ktruss_server_empty_when_no_truss() {
+        let g = Assoc::from_triples(&[("a", "b", 1.0), ("b", "c", 1.0)]); // path, no triangle
+        let (s, t, _d) = store_with_graph(&g);
+        let sym = symmetrise_table(&s, &t, "S").unwrap();
+        let out = ktruss_server(&s, &sym, 3, "K").unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn bfs_server_disconnected() {
+        let g = Assoc::from_triples(&[("a", "b", 1.0), ("x", "y", 1.0)]);
+        let (_s, t, _d) = store_with_graph(&g);
+        let d = bfs_server(&t, &["a".into()], 5);
+        assert!(!d.contains_key("x") && !d.contains_key("y"));
+    }
+}

@@ -1,0 +1,266 @@
+//! Client-side D4M reference implementations — the "D4M" series of
+//! Figure 2 and the baselines for every Graphulo algorithm.
+//!
+//! These pull tables into client memory as associative arrays and compute
+//! with the assoc algebra. A configurable **memory budget** models the
+//! client RAM wall the paper's figure shows: when materialised operands +
+//! product exceed the budget, the op fails with
+//! [`D4mError::MemoryLimit`] instead of completing.
+
+use std::sync::Arc;
+
+use crate::assoc::Assoc;
+use crate::error::{D4mError, Result};
+use crate::kvstore::{IterConfig, RowRange, Table};
+
+/// Client-side compute context with a RAM budget (bytes).
+#[derive(Debug, Clone)]
+pub struct ClientCtx {
+    pub memory_limit: usize,
+}
+
+impl Default for ClientCtx {
+    fn default() -> Self {
+        // effectively unlimited for tests; benches set real caps
+        ClientCtx { memory_limit: usize::MAX }
+    }
+}
+
+impl ClientCtx {
+    pub fn with_limit(memory_limit: usize) -> Self {
+        ClientCtx { memory_limit }
+    }
+
+    fn charge(&self, used: usize) -> Result<()> {
+        if used > self.memory_limit {
+            Err(D4mError::MemoryLimit { used, limit: self.memory_limit })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Pull a whole table into an assoc, charging its footprint.
+    pub fn read_table(&self, t: &Arc<Table>) -> Result<Assoc> {
+        let cfg = IterConfig { summing: true, ..Default::default() };
+        let a = crate::connectors::accumulo::entries_to_assoc(t.scan(&RowRange::all(), &cfg))?;
+        self.charge(a.mem_bytes())?;
+        Ok(a)
+    }
+
+    /// Client-side TableMult: read A and B fully, compute `A^T * B` in
+    /// RAM. Charges |A| + |B| + |C| against the budget — the Figure-2
+    /// memory wall.
+    pub fn table_mult(&self, a: &Arc<Table>, b: &Arc<Table>) -> Result<Assoc> {
+        let aa = self.read_table(a)?;
+        let bb = self.read_table(b)?;
+        self.charge(aa.mem_bytes() + bb.mem_bytes())?;
+        let c = aa.transpose().matmul(&bb);
+        self.charge(aa.mem_bytes() + bb.mem_bytes() + c.mem_bytes())?;
+        Ok(c)
+    }
+
+    /// Client-side TableMult over already-materialised assocs (used by the
+    /// assoc-level benches where the store is not involved).
+    pub fn assoc_mult(&self, a: &Assoc, b: &Assoc) -> Result<Assoc> {
+        self.charge(a.mem_bytes() + b.mem_bytes())?;
+        let c = a.transpose().matmul(b);
+        self.charge(a.mem_bytes() + b.mem_bytes() + c.mem_bytes())?;
+        Ok(c)
+    }
+}
+
+/// Client-side BFS over an adjacency assoc: returns `(vertex -> hop)` for
+/// all vertices reached within `k` hops of the seeds (hop 0 = seed).
+pub fn bfs_assoc(adj: &Assoc, seeds: &[String], k: usize) -> std::collections::BTreeMap<String, usize> {
+    let mut dist: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    let mut frontier: Vec<String> = Vec::new();
+    for s in seeds {
+        if dist.insert(s.clone(), 0).is_none() {
+            frontier.push(s.clone());
+        }
+    }
+    for hop in 1..=k {
+        // v_{t+1} = frontier * A, restricted to unvisited
+        if frontier.is_empty() {
+            break;
+        }
+        let sel = crate::assoc::KeySel::Keys(frontier.clone());
+        let rows = adj.select_rows(&sel);
+        let mut next = Vec::new();
+        for c in rows.col_keys() {
+            if !dist.contains_key(c) {
+                dist.insert(c.clone(), hop);
+                next.push(c.clone());
+            }
+        }
+        frontier = next;
+    }
+    dist
+}
+
+/// Client-side Jaccard coefficients between column vertices of an
+/// unweighted adjacency assoc: `J(i,j) = |N(i) ∩ N(j)| / |N(i) ∪ N(j)|`
+/// for i < j with nonzero intersection.
+pub fn jaccard_assoc(adj: &Assoc) -> Assoc {
+    let a = adj.logical();
+    let n = a.transpose().matmul(&a); // co-occurrence counts
+    let deg = a.sum(1); // column degrees, row key ""
+    let mut out = Vec::new();
+    for (i, j, nij) in n.triples() {
+        if i >= j {
+            continue; // upper triangle only
+        }
+        let di = deg.get("", &i);
+        let dj = deg.get("", &j);
+        let denom = di + dj - nij;
+        if denom > 0.0 {
+            out.push((i, j, nij / denom));
+        }
+    }
+    Assoc::from_triples(&out)
+}
+
+/// Client-side k-truss: iteratively remove edges supported by fewer than
+/// `k - 2` triangles until fixpoint. Input and output are undirected
+/// adjacency assocs (the input is symmetrised internally).
+pub fn ktruss_assoc(adj: &Assoc, k: usize) -> Assoc {
+    let mut a = adj.logical().elem_max(&adj.logical().transpose()); // symmetrise
+    // drop self loops: they inflate support counts
+    let t: Vec<(String, String, f64)> =
+        a.triples().into_iter().filter(|(r, c, _)| r != c).collect();
+    a = Assoc::from_triples(&t);
+    let need = (k.saturating_sub(2)) as f64;
+    loop {
+        if a.is_empty() {
+            return a;
+        }
+        // support(i,j) = number of common neighbours = (A*A)(i,j) on edges
+        let a2 = a.matmul(&a);
+        let support = a2.elem_mult(&a); // restrict to existing edges
+        let keep = support.filter_values(|v| v >= need);
+        // rebuild adjacency from surviving edges
+        let kept_edges: Vec<(String, String, f64)> =
+            keep.triples().into_iter().map(|(r, c, _)| (r, c, 1.0)).collect();
+        let next = Assoc::from_triples(&kept_edges);
+        if next.triples() == a.triples() {
+            return next;
+        }
+        a = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph() -> Assoc {
+        // a -> b -> c -> d
+        Assoc::from_triples(&[("a", "b", 1.0), ("b", "c", 1.0), ("c", "d", 1.0)])
+    }
+
+    #[test]
+    fn bfs_hops() {
+        let g = path_graph();
+        let d = bfs_assoc(&g, &["a".into()], 2);
+        assert_eq!(d.get("a"), Some(&0));
+        assert_eq!(d.get("b"), Some(&1));
+        assert_eq!(d.get("c"), Some(&2));
+        assert_eq!(d.get("d"), None); // beyond k
+    }
+
+    #[test]
+    fn bfs_multiple_seeds() {
+        let g = path_graph();
+        let d = bfs_assoc(&g, &["a".into(), "c".into()], 1);
+        assert_eq!(d.len(), 4); // a,c seeds + b,d at hop 1
+        assert_eq!(d.get("d"), Some(&1));
+    }
+
+    #[test]
+    fn bfs_early_exhaustion() {
+        let g = Assoc::from_triples(&[("a", "b", 1.0)]);
+        let d = bfs_assoc(&g, &["a".into()], 10);
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn jaccard_shared_neighbourhood() {
+        // r1 -> {x, y}; r2 -> {x, y}; r3 -> {y, z}
+        let g = Assoc::from_triples(&[
+            ("r1", "x", 1.0),
+            ("r1", "y", 1.0),
+            ("r2", "x", 1.0),
+            ("r2", "y", 1.0),
+            ("r3", "y", 1.0),
+            ("r3", "z", 1.0),
+        ]);
+        let j = jaccard_assoc(&g);
+        // x,y co-occur in r1,r2; deg x=2, deg y=3 -> 2/(2+3-2) = 2/3
+        assert!((j.get("x", "y") - 2.0 / 3.0).abs() < 1e-9);
+        // y,z co-occur in r3 only; deg y=3, deg z=1 -> 1/3
+        assert!((j.get("y", "z") - 1.0 / 3.0).abs() < 1e-9);
+        // x,z never co-occur
+        assert_eq!(j.get("x", "z"), 0.0);
+        // upper triangle only
+        assert_eq!(j.get("y", "x"), 0.0);
+    }
+
+    #[test]
+    fn ktruss_triangle_survives_k3() {
+        // triangle a-b-c plus dangling edge c-d
+        let g = Assoc::from_triples(&[
+            ("a", "b", 1.0),
+            ("b", "c", 1.0),
+            ("a", "c", 1.0),
+            ("c", "d", 1.0),
+        ]);
+        let t3 = ktruss_assoc(&g, 3);
+        // the triangle survives, the dangling edge does not
+        assert_eq!(t3.get("a", "b"), 1.0);
+        assert_eq!(t3.get("b", "a"), 1.0); // symmetrised
+        assert_eq!(t3.get("c", "d"), 0.0);
+        assert_eq!(t3.get("d", "c"), 0.0);
+    }
+
+    #[test]
+    fn ktruss_k4_kills_single_triangle() {
+        let g = Assoc::from_triples(&[("a", "b", 1.0), ("b", "c", 1.0), ("a", "c", 1.0)]);
+        let t4 = ktruss_assoc(&g, 4);
+        assert!(t4.is_empty());
+    }
+
+    #[test]
+    fn ktruss_k4_keeps_k4_clique() {
+        // complete graph on 4 vertices: every edge in 2 triangles
+        let vs = ["a", "b", "c", "d"];
+        let mut t = vec![];
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                t.push((vs[i], vs[j], 1.0));
+            }
+        }
+        let g = Assoc::from_triples(&t);
+        let t4 = ktruss_assoc(&g, 4);
+        assert_eq!(t4.nnz(), 12); // all 6 edges, symmetrised
+    }
+
+    #[test]
+    fn memory_limit_trips() {
+        let ctx = ClientCtx::with_limit(64);
+        let a = Assoc::from_triples(&[("r", "c", 1.0), ("r2", "c2", 2.0)]);
+        match ctx.assoc_mult(&a, &a) {
+            Err(D4mError::MemoryLimit { used, limit }) => {
+                assert!(used > limit);
+            }
+            other => panic!("expected MemoryLimit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn memory_unlimited_succeeds() {
+        let ctx = ClientCtx::default();
+        let a = Assoc::from_triples(&[("k", "i", 1.0), ("k", "j", 1.0)]);
+        let c = ctx.assoc_mult(&a, &a).unwrap();
+        assert_eq!(c.get("i", "j"), 1.0);
+    }
+}

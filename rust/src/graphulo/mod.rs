@@ -1,0 +1,20 @@
+//! Graphulo — in-database GraphBLAS analytics (the paper's §II second
+//! addition and Figure 2).
+//!
+//! * [`tablemult`] — server-side sparse matrix multiply (`C += A^T B`)
+//!   streamed through the store's iterator stack with bounded memory.
+//! * [`algorithms`] — BFS, Jaccard, k-truss built on TableMult + scans,
+//!   all executed inside the store.
+//! * [`client`] — the client-side D4M baselines (full-table pulls into
+//!   associative arrays) with the RAM budget that reproduces Figure 2's
+//!   memory wall.
+
+pub mod algorithms;
+pub mod pagerank;
+pub mod client;
+pub mod tablemult;
+
+pub use algorithms::{bfs_server, jaccard_server, ktruss_server, symmetrise_table};
+pub use pagerank::{pagerank_assoc, pagerank_server, PageRankOpts, PageRankResult};
+pub use client::{bfs_assoc, jaccard_assoc, ktruss_assoc, ClientCtx};
+pub use tablemult::{read_product, table_mult, TableMultOpts, TableMultStats};

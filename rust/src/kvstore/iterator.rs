@@ -1,0 +1,402 @@
+//! The server-side iterator framework — Accumulo's defining extension
+//! point and the substrate Graphulo builds on.
+//!
+//! Iterators are composable transforms over a *sorted* stream of entries,
+//! executed inside the tablet scan (server side), so downstream consumers
+//! only ever see the transformed stream. The stock stack mirrors
+//! Accumulo's: a k-way [`MergeIter`] over memtable + sorted runs, a
+//! [`VersioningIter`] keeping the newest version per cell, combiners
+//! ([`SummingCombiner`], [`MaxCombiner`]) that fold all versions of a cell
+//! into one entry, and value/column [`FilterIter`]s.
+
+use super::key::Entry;
+
+/// A sorted stream of entries. (Rust's `Iterator` with the invariant that
+/// items come out in key order.)
+pub trait SortedEntryIter: Iterator<Item = Entry> {}
+impl<T: Iterator<Item = Entry>> SortedEntryIter for T {}
+
+// ---------------------------------------------------------------- merge
+
+/// K-way merge of sorted entry streams (binary-heap based).
+pub struct MergeIter {
+    heap: std::collections::BinaryHeap<HeapItem>,
+    sources: Vec<Box<dyn Iterator<Item = Entry> + Send>>,
+}
+
+struct HeapItem {
+    entry: Entry,
+    src: usize,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.entry.key == other.entry.key
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap; invert for ascending key order.
+        // Tie-break on source index so newer layers (lower index) win
+        // deterministically for identical keys.
+        other
+            .entry
+            .key
+            .cmp(&self.entry.key)
+            .then_with(|| other.src.cmp(&self.src))
+    }
+}
+
+impl MergeIter {
+    pub fn new(mut sources: Vec<Box<dyn Iterator<Item = Entry> + Send>>) -> Self {
+        let mut heap = std::collections::BinaryHeap::new();
+        for (i, s) in sources.iter_mut().enumerate() {
+            if let Some(e) = s.next() {
+                heap.push(HeapItem { entry: e, src: i });
+            }
+        }
+        MergeIter { heap, sources }
+    }
+}
+
+impl Iterator for MergeIter {
+    type Item = Entry;
+
+    fn next(&mut self) -> Option<Entry> {
+        let top = self.heap.pop()?;
+        if let Some(e) = self.sources[top.src].next() {
+            self.heap.push(HeapItem { entry: e, src: top.src });
+        }
+        Some(top.entry)
+    }
+}
+
+// ----------------------------------------------------------- versioning
+
+/// Keeps only the newest version of each cell (Accumulo's default
+/// VersioningIterator with maxVersions = 1). Relies on ts-descending key
+/// order: the first entry seen for a cell is the newest.
+pub struct VersioningIter<I: Iterator<Item = Entry>> {
+    inner: std::iter::Peekable<I>,
+}
+
+impl<I: Iterator<Item = Entry>> VersioningIter<I> {
+    pub fn new(inner: I) -> Self {
+        VersioningIter { inner: inner.peekable() }
+    }
+}
+
+impl<I: Iterator<Item = Entry>> Iterator for VersioningIter<I> {
+    type Item = Entry;
+
+    fn next(&mut self) -> Option<Entry> {
+        loop {
+            let first = self.inner.next()?;
+            while let Some(nxt) = self.inner.peek() {
+                if nxt.key.same_cell(&first.key) {
+                    self.inner.next();
+                } else {
+                    break;
+                }
+            }
+            // a tombstone as the newest version deletes the cell
+            if !first.tombstone {
+                return Some(first);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ combiners
+
+/// Folds all versions of a cell into one entry by summing numeric values —
+/// Accumulo's SummingCombiner, the iterator Graphulo's TableMult writes
+/// through (partial products become sums).
+pub struct SummingCombiner<I: Iterator<Item = Entry>> {
+    inner: std::iter::Peekable<I>,
+}
+
+impl<I: Iterator<Item = Entry>> SummingCombiner<I> {
+    pub fn new(inner: I) -> Self {
+        SummingCombiner { inner: inner.peekable() }
+    }
+}
+
+impl<I: Iterator<Item = Entry>> Iterator for SummingCombiner<I> {
+    type Item = Entry;
+
+    fn next(&mut self) -> Option<Entry> {
+        loop {
+            let mut first = self.inner.next()?;
+            // a tombstone masks itself and all older versions of the cell
+            let mut masked = first.tombstone;
+            let mut sum: f64 =
+                if masked { 0.0 } else { first.value.parse().unwrap_or(0.0) };
+            let mut any = !masked;
+            while let Some(nxt) = self.inner.peek() {
+                if nxt.key.same_cell(&first.key) {
+                    if !masked && !nxt.tombstone {
+                        sum += nxt.value.parse::<f64>().unwrap_or(0.0);
+                        any = true;
+                    }
+                    if nxt.tombstone {
+                        masked = true;
+                    }
+                    self.inner.next();
+                } else {
+                    break;
+                }
+            }
+            if any {
+                first.tombstone = false;
+                first.value = crate::assoc::io::fmt_num(sum);
+                return Some(first);
+            }
+        }
+    }
+}
+
+/// Max-combiner across versions (used by string-valued D4M tables).
+pub struct MaxCombiner<I: Iterator<Item = Entry>> {
+    inner: std::iter::Peekable<I>,
+}
+
+impl<I: Iterator<Item = Entry>> MaxCombiner<I> {
+    pub fn new(inner: I) -> Self {
+        MaxCombiner { inner: inner.peekable() }
+    }
+}
+
+impl<I: Iterator<Item = Entry>> Iterator for MaxCombiner<I> {
+    type Item = Entry;
+
+    fn next(&mut self) -> Option<Entry> {
+        loop {
+            let mut first = self.inner.next()?;
+            let mut masked = first.tombstone;
+            let mut best: Option<String> =
+                if masked { None } else { Some(first.value.clone()) };
+            while let Some(nxt) = self.inner.peek() {
+                if nxt.key.same_cell(&first.key) {
+                    if !masked && !nxt.tombstone {
+                        match &best {
+                            Some(b) if &nxt.value <= b => {}
+                            _ => best = Some(nxt.value.clone()),
+                        }
+                    }
+                    if nxt.tombstone {
+                        masked = true;
+                    }
+                    self.inner.next();
+                } else {
+                    break;
+                }
+            }
+            if let Some(v) = best {
+                first.tombstone = false;
+                first.value = v;
+                return Some(first);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- filters
+
+/// Predicate filter over entries (column filters, value thresholds, ...).
+pub struct FilterIter<I: Iterator<Item = Entry>, F: FnMut(&Entry) -> bool> {
+    inner: I,
+    pred: F,
+}
+
+impl<I: Iterator<Item = Entry>, F: FnMut(&Entry) -> bool> FilterIter<I, F> {
+    pub fn new(inner: I, pred: F) -> Self {
+        FilterIter { inner, pred }
+    }
+}
+
+impl<I: Iterator<Item = Entry>, F: FnMut(&Entry) -> bool> Iterator for FilterIter<I, F> {
+    type Item = Entry;
+
+    fn next(&mut self) -> Option<Entry> {
+        loop {
+            let e = self.inner.next()?;
+            if (self.pred)(&e) {
+                return Some(e);
+            }
+        }
+    }
+}
+
+/// Declarative scan-time iterator configuration (what a client attaches to
+/// a scanner; mirrors Accumulo's `IteratorSetting` stack).
+#[derive(Debug, Clone, Default)]
+pub struct IterConfig {
+    /// Fold versions with a summing combiner instead of keeping newest.
+    pub summing: bool,
+    /// Fold versions with a max combiner.
+    pub max_combine: bool,
+    /// Keep only entries whose column qualifier starts with this prefix.
+    pub cq_prefix: Option<String>,
+    /// Keep only entries with numeric value >= threshold.
+    pub min_value: Option<f64>,
+}
+
+impl IterConfig {
+    /// Apply this stack to a merged sorted stream.
+    pub fn apply(
+        &self,
+        merged: Box<dyn Iterator<Item = Entry> + Send>,
+    ) -> Box<dyn Iterator<Item = Entry> + Send> {
+        let mut out: Box<dyn Iterator<Item = Entry> + Send> = if self.summing {
+            Box::new(SummingCombiner::new(merged))
+        } else if self.max_combine {
+            Box::new(MaxCombiner::new(merged))
+        } else {
+            Box::new(VersioningIter::new(merged))
+        };
+        if let Some(p) = self.cq_prefix.clone() {
+            out = Box::new(FilterIter::new(out, move |e| e.key.cq.starts_with(&p)));
+        }
+        if let Some(t) = self.min_value {
+            out = Box::new(FilterIter::new(out, move |e| {
+                e.value.parse::<f64>().map(|v| v >= t).unwrap_or(false)
+            }));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::key::Key;
+
+    fn e(row: &str, cq: &str, ts: u64, v: &str) -> Entry {
+        Entry::new(Key::cell(row, cq, ts), v)
+    }
+
+    #[test]
+    fn merge_interleaves_sorted() {
+        let a = vec![e("a", "x", 0, "1"), e("c", "x", 0, "3")];
+        let b = vec![e("b", "x", 0, "2"), e("d", "x", 0, "4")];
+        let m: Vec<Entry> = MergeIter::new(vec![
+            Box::new(a.into_iter()),
+            Box::new(b.into_iter()),
+        ])
+        .collect();
+        let rows: Vec<&str> = m.iter().map(|x| x.key.row.as_str()).collect();
+        assert_eq!(rows, vec!["a", "b", "c", "d"]);
+    }
+
+    #[test]
+    fn versioning_keeps_newest() {
+        let src = vec![e("r", "c", 9, "new"), e("r", "c", 1, "old"), e("r", "d", 1, "x")];
+        let out: Vec<Entry> = VersioningIter::new(src.into_iter()).collect();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].value, "new");
+    }
+
+    #[test]
+    fn summing_combiner_sums_versions() {
+        let src = vec![e("r", "c", 3, "2"), e("r", "c", 2, "3"), e("r", "c", 1, "5")];
+        let out: Vec<Entry> = SummingCombiner::new(src.into_iter()).collect();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].value, "10");
+    }
+
+    #[test]
+    fn max_combiner_takes_max() {
+        let src = vec![e("r", "c", 2, "apple"), e("r", "c", 1, "zebra")];
+        let out: Vec<Entry> = MaxCombiner::new(src.into_iter()).collect();
+        assert_eq!(out[0].value, "zebra");
+    }
+
+    #[test]
+    fn filter_drops() {
+        let src = vec![e("r", "deg|x", 0, "1"), e("r", "word|y", 0, "2")];
+        let out: Vec<Entry> =
+            FilterIter::new(src.into_iter(), |x| x.key.cq.starts_with("word|")).collect();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].value, "2");
+    }
+
+    #[test]
+    fn config_stack_compose() {
+        let src = vec![
+            e("r", "w|a", 3, "4"),
+            e("r", "w|a", 2, "6"),
+            e("r", "x|b", 1, "100"),
+        ];
+        let cfg = IterConfig {
+            summing: true,
+            cq_prefix: Some("w|".into()),
+            min_value: Some(5.0),
+            ..Default::default()
+        };
+        let out: Vec<Entry> = cfg.apply(Box::new(src.into_iter())).collect();
+        // versions of (r, w|a) sum to 10, passes min_value; x|b filtered by prefix
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].value, "10");
+    }
+}
+
+#[cfg(test)]
+mod tombstone_tests {
+    use super::*;
+    use crate::kvstore::key::Key;
+
+    fn e(row: &str, cq: &str, ts: u64, v: &str) -> Entry {
+        Entry::new(Key::cell(row, cq, ts), v)
+    }
+
+    fn del(row: &str, cq: &str, ts: u64) -> Entry {
+        Entry::delete(Key::cell(row, cq, ts))
+    }
+
+    #[test]
+    fn versioning_hides_deleted_cell() {
+        let src = vec![del("r", "c", 9), e("r", "c", 1, "old"), e("r", "d", 1, "x")];
+        let out: Vec<Entry> = VersioningIter::new(src.into_iter()).collect();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].key.cq, "d");
+    }
+
+    #[test]
+    fn write_after_delete_visible() {
+        let src = vec![e("r", "c", 10, "new"), del("r", "c", 5), e("r", "c", 1, "old")];
+        let out: Vec<Entry> = VersioningIter::new(src.into_iter()).collect();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].value, "new");
+    }
+
+    #[test]
+    fn summing_respects_tombstone_mask() {
+        // versions: 4 (newest), DELETE at ts 3, 100 at ts 1 -> sum = 4
+        let src = vec![e("r", "c", 4, "4"), del("r", "c", 3), e("r", "c", 1, "100")];
+        let out: Vec<Entry> = SummingCombiner::new(src.into_iter()).collect();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].value, "4");
+    }
+
+    #[test]
+    fn summing_skips_fully_deleted() {
+        let src = vec![del("r", "c", 9), e("r", "c", 1, "5"), e("r", "d", 1, "7")];
+        let out: Vec<Entry> = SummingCombiner::new(src.into_iter()).collect();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].value, "7");
+    }
+
+    #[test]
+    fn max_respects_tombstone() {
+        let src = vec![e("r", "c", 4, "b"), del("r", "c", 3), e("r", "c", 1, "z")];
+        let out: Vec<Entry> = MaxCombiner::new(src.into_iter()).collect();
+        assert_eq!(out[0].value, "b");
+    }
+}

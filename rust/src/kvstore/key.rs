@@ -1,0 +1,167 @@
+//! Accumulo-style keys and entries.
+//!
+//! A key is `(row, column family, column qualifier, timestamp)`; ordering
+//! is lexicographic on the columns with **timestamp descending** (newest
+//! version first), exactly as in Accumulo's sorted-key model.
+
+use std::cmp::Ordering;
+
+/// Sorted key of the key-value store.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Key {
+    pub row: String,
+    /// Column family (D4M schema usually leaves this empty).
+    pub cf: String,
+    /// Column qualifier (the D4M "column key").
+    pub cq: String,
+    /// Logical timestamp; larger = newer.
+    pub ts: u64,
+}
+
+impl Key {
+    pub fn new(row: impl Into<String>, cf: impl Into<String>, cq: impl Into<String>, ts: u64) -> Self {
+        Key { row: row.into(), cf: cf.into(), cq: cq.into(), ts }
+    }
+
+    /// Key with empty column family (the D4M common case).
+    pub fn cell(row: impl Into<String>, cq: impl Into<String>, ts: u64) -> Self {
+        Key::new(row, "", cq, ts)
+    }
+
+    /// True if two keys address the same logical cell (ignoring version).
+    pub fn same_cell(&self, other: &Key) -> bool {
+        self.row == other.row && self.cf == other.cf && self.cq == other.cq
+    }
+
+    /// Approximate size in bytes (for batch/memtable accounting).
+    pub fn bytes(&self) -> usize {
+        self.row.len() + self.cf.len() + self.cq.len() + 8
+    }
+}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.row
+            .cmp(&other.row)
+            .then_with(|| self.cf.cmp(&other.cf))
+            .then_with(|| self.cq.cmp(&other.cq))
+            // timestamp DESCENDING: newest version sorts first
+            .then_with(|| other.ts.cmp(&self.ts))
+    }
+}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A stored key-value pair. A `None`-like delete is encoded by
+/// `tombstone = true` (Accumulo's delete marker): it supersedes older
+/// versions of the cell and is elided from scan output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    pub key: Key,
+    pub value: String,
+    pub tombstone: bool,
+}
+
+impl Entry {
+    pub fn new(key: Key, value: impl Into<String>) -> Self {
+        Entry { key, value: value.into(), tombstone: false }
+    }
+
+    /// A delete marker for the cell.
+    pub fn delete(key: Key) -> Self {
+        Entry { key, value: String::new(), tombstone: true }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.key.bytes() + self.value.len() + 1
+    }
+}
+
+/// A half-open row range `[start, end)`; `None` end = unbounded.
+#[derive(Debug, Clone, Default)]
+pub struct RowRange {
+    pub start: Option<String>,
+    pub end: Option<String>,
+}
+
+impl RowRange {
+    pub fn all() -> Self {
+        RowRange::default()
+    }
+
+    pub fn from(start: impl Into<String>) -> Self {
+        RowRange { start: Some(start.into()), end: None }
+    }
+
+    pub fn span(start: impl Into<String>, end: impl Into<String>) -> Self {
+        RowRange { start: Some(start.into()), end: Some(end.into()) }
+    }
+
+    /// Exactly one row.
+    pub fn single(row: &str) -> Self {
+        // end = row + lowest following string
+        RowRange { start: Some(row.to_string()), end: Some(format!("{row}\0")) }
+    }
+
+    pub fn contains(&self, row: &str) -> bool {
+        if let Some(s) = &self.start {
+            if row < s.as_str() {
+                return false;
+            }
+        }
+        if let Some(e) = &self.end {
+            if row >= e.as_str() {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_order_row_then_col() {
+        let a = Key::cell("r1", "c1", 0);
+        let b = Key::cell("r1", "c2", 0);
+        let c = Key::cell("r2", "a", 0);
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn key_order_timestamp_descending() {
+        let newer = Key::cell("r", "c", 10);
+        let older = Key::cell("r", "c", 5);
+        assert!(newer < older, "newest version must sort first");
+    }
+
+    #[test]
+    fn same_cell_ignores_ts() {
+        assert!(Key::cell("r", "c", 1).same_cell(&Key::cell("r", "c", 9)));
+        assert!(!Key::cell("r", "c", 1).same_cell(&Key::cell("r", "d", 1)));
+    }
+
+    #[test]
+    fn range_contains() {
+        let r = RowRange::span("b", "d");
+        assert!(!r.contains("a"));
+        assert!(r.contains("b"));
+        assert!(r.contains("c"));
+        assert!(!r.contains("d"));
+        assert!(RowRange::all().contains("anything"));
+    }
+
+    #[test]
+    fn range_single() {
+        let r = RowRange::single("row7");
+        assert!(r.contains("row7"));
+        assert!(!r.contains("row70"));
+        assert!(!r.contains("row6"));
+    }
+}

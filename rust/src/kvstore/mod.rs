@@ -1,0 +1,21 @@
+//! Accumulo-class key-value store substrate (see DESIGN.md substitutions).
+//!
+//! An embedded, in-process reimplementation of the pieces of Apache
+//! Accumulo that D4M and Graphulo depend on: sorted keys
+//! (row/cf/cq/ts-descending), tables sharded into tablets by split
+//! points, an LSM write path (memtable → sorted runs → compaction),
+//! buffered [`writer::BatchWriter`]s, range scans, and — crucially for
+//! Graphulo — the composable **server-side iterator stack**
+//! ([`iterator`]) that lets analytics run inside the tablet scan.
+
+pub mod iterator;
+pub mod key;
+pub mod store;
+pub mod tablet;
+pub mod writer;
+
+pub use iterator::{IterConfig, MergeIter, SummingCombiner, VersioningIter};
+pub use key::{Entry, Key, RowRange};
+pub use store::{KvStore, Table};
+pub use tablet::{Tablet, TabletConfig};
+pub use writer::{BatchWriter, WriterConfig};

@@ -1,0 +1,332 @@
+//! The key-value store: a set of named tables, each sharded into tablets
+//! by split points (the Accumulo tablet-server model, one process).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use super::iterator::IterConfig;
+use super::key::{Entry, Key, RowRange};
+use super::tablet::{Tablet, TabletConfig};
+use crate::error::{D4mError, Result};
+
+/// A table: tablets partitioned by sorted split points. Tablet `i` serves
+/// rows in `[splits[i-1], splits[i])` (first/last unbounded).
+pub struct Table {
+    pub name: String,
+    splits: Vec<String>,
+    tablets: Vec<Mutex<Tablet>>,
+    /// Logical clock for auto-timestamps.
+    clock: AtomicU64,
+}
+
+impl Table {
+    fn new(name: &str, splits: Vec<String>, cfg: TabletConfig) -> Self {
+        debug_assert!(splits.windows(2).all(|w| w[0] < w[1]));
+        let tablets = (0..=splits.len()).map(|_| Mutex::new(Tablet::new(cfg.clone()))).collect();
+        Table { name: name.to_string(), splits, tablets, clock: AtomicU64::new(1) }
+    }
+
+    /// Index of the tablet serving `row`.
+    pub fn tablet_for(&self, row: &str) -> usize {
+        self.splits.partition_point(|s| s.as_str() <= row)
+    }
+
+    pub fn num_tablets(&self) -> usize {
+        self.tablets.len()
+    }
+
+    pub fn splits(&self) -> &[String] {
+        &self.splits
+    }
+
+    /// Next logical timestamp.
+    pub fn next_ts(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Write one cell with an auto-assigned timestamp.
+    pub fn put(&self, row: &str, cq: &str, value: &str) {
+        let ts = self.next_ts();
+        self.put_entry(Entry::new(Key::cell(row, cq, ts), value));
+    }
+
+    /// Write a fully-formed entry.
+    pub fn put_entry(&self, e: Entry) {
+        let t = self.tablet_for(&e.key.row);
+        self.tablets[t].lock().unwrap().put(e);
+    }
+
+    /// Write a batch, grouping by tablet to take each lock once.
+    pub fn put_batch(&self, entries: Vec<Entry>) {
+        let mut by_tablet: Vec<Vec<Entry>> = (0..self.tablets.len()).map(|_| Vec::new()).collect();
+        for e in entries {
+            by_tablet[self.tablet_for(&e.key.row)].push(e);
+        }
+        for (t, batch) in by_tablet.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let mut tablet = self.tablets[t].lock().unwrap();
+            for e in batch {
+                tablet.put(e);
+            }
+        }
+    }
+
+    /// Scan a row range across all covered tablets, applying the iterator
+    /// stack server-side. Results are in global key order.
+    pub fn scan(&self, range: &RowRange, cfg: &IterConfig) -> Vec<Entry> {
+        let mut out = Vec::new();
+        for (i, tl) in self.tablets.iter().enumerate() {
+            if !self.tablet_overlaps(i, range) {
+                continue;
+            }
+            let mut t = tl.lock().unwrap();
+            out.extend(t.scan(range, cfg));
+        }
+        out
+    }
+
+    /// Scan one row.
+    pub fn scan_row(&self, row: &str, cfg: &IterConfig) -> Vec<Entry> {
+        let range = RowRange::single(row);
+        let t = self.tablet_for(row);
+        self.tablets[t].lock().unwrap().scan(&range, cfg)
+    }
+
+    fn tablet_overlaps(&self, i: usize, range: &RowRange) -> bool {
+        // tablet i covers [lo_i, hi_i)
+        let lo = if i == 0 { None } else { Some(self.splits[i - 1].as_str()) };
+        let hi = if i == self.splits.len() { None } else { Some(self.splits[i].as_str()) };
+        if let (Some(end), Some(lo)) = (&range.end, lo) {
+            if end.as_str() <= lo {
+                return false;
+            }
+        }
+        if let (Some(start), Some(hi)) = (&range.start, hi) {
+            if start.as_str() >= hi {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Flush every tablet's memtable.
+    pub fn flush(&self) {
+        for t in &self.tablets {
+            t.lock().unwrap().flush();
+        }
+    }
+
+    /// Total raw entries (all versions) across tablets.
+    pub fn raw_len(&self) -> usize {
+        self.tablets.iter().map(|t| t.lock().unwrap().raw_len()).sum()
+    }
+
+    /// Approximate resident bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.tablets.iter().map(|t| t.lock().unwrap().mem_bytes()).sum()
+    }
+}
+
+/// The store: named tables behind an `Arc` so scanners/writers share it.
+#[derive(Default)]
+pub struct KvStore {
+    tables: RwLock<HashMap<String, Arc<Table>>>,
+    tablet_config: TabletConfig,
+}
+
+impl KvStore {
+    pub fn new() -> Self {
+        KvStore::default()
+    }
+
+    pub fn with_config(tablet_config: TabletConfig) -> Self {
+        KvStore { tables: RwLock::new(HashMap::new()), tablet_config }
+    }
+
+    /// Create a table with the given split points (empty = one tablet).
+    pub fn create_table(&self, name: &str, splits: Vec<String>) -> Result<Arc<Table>> {
+        let mut tables = self.tables.write().unwrap();
+        if tables.contains_key(name) {
+            return Err(D4mError::AlreadyExists(format!("table {name}")));
+        }
+        let t = Arc::new(Table::new(name, splits, self.tablet_config.clone()));
+        tables.insert(name.to_string(), t.clone());
+        Ok(t)
+    }
+
+    /// Create if missing, otherwise return the existing table.
+    pub fn ensure_table(&self, name: &str, splits: Vec<String>) -> Arc<Table> {
+        if let Some(t) = self.table(name) {
+            return t;
+        }
+        self.create_table(name, splits).unwrap_or_else(|_| self.table(name).unwrap())
+    }
+
+    pub fn table(&self, name: &str) -> Option<Arc<Table>> {
+        self.tables.read().unwrap().get(name).cloned()
+    }
+
+    pub fn table_or_err(&self, name: &str) -> Result<Arc<Table>> {
+        self.table(name).ok_or_else(|| D4mError::NotFound(format!("table {name}")))
+    }
+
+    pub fn drop_table(&self, name: &str) -> Result<()> {
+        self.tables
+            .write()
+            .unwrap()
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| D4mError::NotFound(format!("table {name}")))
+    }
+
+    pub fn list_tables(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.tables.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_scan_roundtrip() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec![]).unwrap();
+        t.put("r1", "c1", "a");
+        t.put("r2", "c2", "b");
+        let out = t.scan(&RowRange::all(), &IterConfig::default());
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_create_fails() {
+        let store = KvStore::new();
+        store.create_table("t", vec![]).unwrap();
+        assert!(store.create_table("t", vec![]).is_err());
+    }
+
+    #[test]
+    fn split_routing() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec!["m".into()]).unwrap();
+        assert_eq!(t.num_tablets(), 2);
+        assert_eq!(t.tablet_for("a"), 0);
+        assert_eq!(t.tablet_for("m"), 1);
+        assert_eq!(t.tablet_for("z"), 1);
+    }
+
+    #[test]
+    fn scan_across_tablets_in_order() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec!["h".into(), "p".into()]).unwrap();
+        for r in ["z", "a", "m", "q", "h"] {
+            t.put(r, "c", "v");
+        }
+        let out = t.scan(&RowRange::all(), &IterConfig::default());
+        let rows: Vec<&str> = out.iter().map(|e| e.key.row.as_str()).collect();
+        assert_eq!(rows, vec!["a", "h", "m", "q", "z"]);
+    }
+
+    #[test]
+    fn scan_range_skips_tablets() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec!["h".into()]).unwrap();
+        t.put("a", "c", "1");
+        t.put("z", "c", "2");
+        let out = t.scan(&RowRange::span("x", "zz"), &IterConfig::default());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].key.row, "z");
+    }
+
+    #[test]
+    fn overwrite_latest_wins() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec![]).unwrap();
+        t.put("r", "c", "first");
+        t.put("r", "c", "second");
+        let out = t.scan_row("r", &IterConfig::default());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].value, "second");
+    }
+
+    #[test]
+    fn summing_scan() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec![]).unwrap();
+        t.put("r", "c", "2");
+        t.put("r", "c", "3");
+        let cfg = IterConfig { summing: true, ..Default::default() };
+        assert_eq!(t.scan_row("r", &cfg)[0].value, "5");
+    }
+
+    #[test]
+    fn concurrent_writers() {
+        let store = Arc::new(KvStore::new());
+        let t = store.create_table("t", vec!["g".into(), "r".into()]).unwrap();
+        let hs: Vec<_> = (0..4)
+            .map(|w| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500 {
+                        t.put(&format!("{}{i:04}", (b'a' + w) as char), "c", "1");
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(t.scan(&RowRange::all(), &IterConfig::default()).len(), 2000);
+    }
+
+    #[test]
+    fn drop_table_works() {
+        let store = KvStore::new();
+        store.create_table("t", vec![]).unwrap();
+        store.drop_table("t").unwrap();
+        assert!(store.table("t").is_none());
+        assert!(store.drop_table("t").is_err());
+    }
+}
+
+impl Table {
+    /// Delete one cell (writes a tombstone; older versions become
+    /// invisible to scans and are dropped at major compaction).
+    pub fn delete(&self, row: &str, cq: &str) {
+        let ts = self.next_ts();
+        self.put_entry(Entry::delete(Key::cell(row, cq, ts)));
+    }
+}
+
+#[cfg(test)]
+mod delete_tests {
+    use super::*;
+
+    #[test]
+    fn delete_hides_and_rewrite_restores() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec![]).unwrap();
+        t.put("r", "c", "v1");
+        t.delete("r", "c");
+        assert!(t.scan_row("r", &IterConfig::default()).is_empty());
+        t.put("r", "c", "v2");
+        let out = t.scan_row("r", &IterConfig::default());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].value, "v2");
+    }
+
+    #[test]
+    fn delete_survives_flush_boundary() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec![]).unwrap();
+        t.put("r", "c", "v1");
+        t.flush();
+        t.delete("r", "c");
+        assert!(t.scan_row("r", &IterConfig::default()).is_empty());
+    }
+}

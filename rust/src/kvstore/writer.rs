@@ -1,0 +1,137 @@
+//! BatchWriter — the buffered ingest client of the key-value store,
+//! mirroring Accumulo's `BatchWriter`: mutations accumulate in a local
+//! buffer grouped by destination tablet and flush when size/count
+//! thresholds trip. This is the unit the ingest pipeline parallelises.
+
+use std::sync::Arc;
+
+use super::key::{Entry, Key};
+use super::store::Table;
+use crate::metrics::Counter;
+
+/// BatchWriter tuning.
+#[derive(Debug, Clone)]
+pub struct WriterConfig {
+    /// Flush when the buffer reaches this many entries.
+    pub max_batch: usize,
+    /// Flush when buffered bytes reach this threshold.
+    pub max_bytes: usize,
+}
+
+impl Default for WriterConfig {
+    fn default() -> Self {
+        WriterConfig { max_batch: 10_000, max_bytes: 4 << 20 }
+    }
+}
+
+/// Buffered writer bound to one table.
+pub struct BatchWriter {
+    table: Arc<Table>,
+    buf: Vec<Entry>,
+    buf_bytes: usize,
+    config: WriterConfig,
+    written: Counter,
+    flushes: Counter,
+}
+
+impl BatchWriter {
+    pub fn new(table: Arc<Table>, config: WriterConfig) -> Self {
+        BatchWriter {
+            table,
+            buf: Vec::with_capacity(config.max_batch),
+            buf_bytes: 0,
+            config,
+            written: Counter::new(),
+            flushes: Counter::new(),
+        }
+    }
+
+    /// Queue one mutation (auto-timestamped).
+    pub fn put(&mut self, row: &str, cq: &str, value: &str) {
+        let ts = self.table.next_ts();
+        self.put_entry(Entry::new(Key::cell(row, cq, ts), value));
+    }
+
+    /// Queue a fully-formed entry.
+    pub fn put_entry(&mut self, e: Entry) {
+        self.buf_bytes += e.bytes();
+        self.buf.push(e);
+        if self.buf.len() >= self.config.max_batch || self.buf_bytes >= self.config.max_bytes {
+            self.flush();
+        }
+    }
+
+    /// Push the buffer into the table (grouped by tablet inside
+    /// `put_batch` so each tablet lock is taken once per flush).
+    pub fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let batch = std::mem::take(&mut self.buf);
+        self.written.add(batch.len() as u64);
+        self.buf_bytes = 0;
+        self.table.put_batch(batch);
+        self.flushes.inc();
+    }
+
+    /// Total entries pushed to the table so far (excludes buffered).
+    pub fn written(&self) -> u64 {
+        self.written.get()
+    }
+
+    pub fn flushes(&self) -> u64 {
+        self.flushes.get()
+    }
+}
+
+impl Drop for BatchWriter {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::iterator::IterConfig;
+    use crate::kvstore::key::RowRange;
+    use crate::kvstore::store::KvStore;
+
+    #[test]
+    fn batches_by_count() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec![]).unwrap();
+        let mut w = BatchWriter::new(t.clone(), WriterConfig { max_batch: 10, max_bytes: 1 << 30 });
+        for i in 0..25 {
+            w.put(&format!("r{i:03}"), "c", "v");
+        }
+        assert_eq!(w.flushes(), 2); // two full batches, 5 still buffered
+        assert_eq!(w.written(), 20);
+        w.flush();
+        assert_eq!(w.written(), 25);
+        assert_eq!(t.scan(&RowRange::all(), &IterConfig::default()).len(), 25);
+    }
+
+    #[test]
+    fn batches_by_bytes() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec![]).unwrap();
+        let mut w =
+            BatchWriter::new(t.clone(), WriterConfig { max_batch: 1_000_000, max_bytes: 200 });
+        for i in 0..20 {
+            w.put(&format!("row_number_{i:06}"), "column", "value");
+        }
+        assert!(w.flushes() >= 2);
+    }
+
+    #[test]
+    fn drop_flushes() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec![]).unwrap();
+        {
+            let mut w = BatchWriter::new(t.clone(), WriterConfig::default());
+            w.put("r", "c", "v");
+        } // dropped here
+        assert_eq!(t.scan(&RowRange::all(), &IterConfig::default()).len(), 1);
+    }
+}

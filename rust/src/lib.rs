@@ -1,0 +1,44 @@
+//! # D4M 3.0 — Dynamic Distributed Dimensional Data Model
+//!
+//! A from-scratch reproduction of the D4M 3.0 system (Milechin et al.,
+//! 2017) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`assoc`] — associative arrays, the mathematical core: string-keyed
+//!   sparse arrays with an algebra of union-add, intersection-multiply and
+//!   key-aligned matrix multiply.
+//! * [`kvstore`] — an embedded Accumulo-class sorted key-value store with
+//!   tablets, LSM write path and the server-side iterator framework.
+//! * [`arraystore`] — a SciDB-class chunked array store with in-store ops.
+//! * [`relational`] — a PostGRES/MySQL-class typed-column engine.
+//! * [`connectors`] — D4M database bindings: the D4M 2.0 Accumulo schema,
+//!   SciDB and SQL connectors, assoc ⇄ engine translation.
+//! * [`graphulo`] — in-database GraphBLAS: server-side TableMult (SpGEMM),
+//!   BFS, Jaccard and k-truss, plus client-side reference versions.
+//! * [`pipeline`] — the streaming ingest orchestrator (sharding, bounded
+//!   queues with backpressure, parallel batch writers).
+//! * [`polystore`] — BigDAWG-style islands with CAST through assoc arrays.
+//! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) on the dense-block hot path.
+//! * [`coordinator`] — the D4M server: table registry, request routing,
+//!   op batching, metrics.
+//!
+//! See DESIGN.md for the paper-to-module inventory and EXPERIMENTS.md for
+//! reproduction results.
+
+pub mod arraystore;
+pub mod assoc;
+pub mod connectors;
+pub mod coordinator;
+pub mod error;
+pub mod gen;
+pub mod graphulo;
+pub mod kvstore;
+pub mod metrics;
+pub mod pipeline;
+pub mod polystore;
+pub mod relational;
+pub mod runtime;
+pub mod util;
+
+pub use assoc::{Assoc, KeySel};
+pub use error::{D4mError, Result};

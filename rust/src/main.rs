@@ -1,0 +1,243 @@
+//! D4M CLI — the leader entrypoint: drives the coordinator over the
+//! embedded engines. Hand-rolled argument parsing (no clap in the
+//! offline vendor set).
+//!
+//! ```text
+//! d4m demo                          quickstart associative-array tour
+//! d4m ingest  [--scale S] [--workers W] [--batch B]   pipeline ingest bench
+//! d4m tablemult [--scale S] [--mode server|client|dense]
+//! d4m bfs     [--scale S] [--hops H]
+//! d4m jaccard [--scale S]
+//! d4m ktruss  [--scale S] [--k K]
+//! d4m tables                        list tables after a demo ingest
+//! ```
+
+use std::collections::HashMap;
+
+use d4m::assoc::{io::display_full, Assoc};
+use d4m::coordinator::{D4mServer, Request, Response};
+use d4m::gen::{kronecker_triples, KroneckerParams};
+use d4m::pipeline::PipelineConfig;
+use d4m::util::fmt_rate;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            out.insert(name.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, name: &str, default: T) -> T {
+    flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn ingest_kronecker(server: &D4mServer, scale: u32, workers: usize, batch: usize) -> u64 {
+    let triples = kronecker_triples(&KroneckerParams::new(scale, 16, 20170710));
+    let n = triples.len() as u64;
+    let rep = server
+        .handle(Request::Ingest {
+            table: "G".into(),
+            triples,
+            pipeline: PipelineConfig {
+                num_workers: workers,
+                batch_size: batch,
+                ..Default::default()
+            },
+        })
+        .expect("ingest failed");
+    if let Response::Ingested(r) = rep {
+        println!("ingest: {r}");
+    }
+    n
+}
+
+fn cmd_demo() {
+    println!("== D4M 3.0 quickstart ==");
+    let a = Assoc::from_triples(&[
+        ("alice", "carol", 1.0),
+        ("alice", "bob", 1.0),
+        ("bob", "carol", 2.0),
+    ]);
+    println!("A =\n{}", display_full(&a));
+    println!("A' =\n{}", display_full(&a.transpose()));
+    println!("A' * A =\n{}", display_full(&a.transpose().matmul(&a)));
+    let deg = a.sum(1);
+    println!("column degrees =\n{}", display_full(&deg));
+}
+
+fn cmd_ingest(flags: HashMap<String, String>) {
+    let scale: u32 = flag(&flags, "scale", 12);
+    let workers: usize = flag(&flags, "workers", 4);
+    let batch: usize = flag(&flags, "batch", 2048);
+    let server = D4mServer::new();
+    println!("kronecker SCALE={scale} ef=16, {workers} workers, batch {batch}");
+    ingest_kronecker(&server, scale, workers, batch);
+    for s in server.snapshots() {
+        println!("{s}");
+    }
+}
+
+fn cmd_tablemult(flags: HashMap<String, String>) {
+    let scale: u32 = flag(&flags, "scale", 10);
+    let mode: String = flag(&flags, "mode", "server".to_string());
+    let server = D4mServer::new();
+    let edges = ingest_kronecker(&server, scale, 4, 4096);
+    let t0 = std::time::Instant::now();
+    match mode.as_str() {
+        "server" => {
+            let r = server
+                .handle(Request::TableMult { a: "G".into(), b: "G".into(), out: "C".into() })
+                .expect("tablemult failed");
+            if let Response::MultStats(s) = r {
+                println!(
+                    "server TableMult: {} rows contracted, {} partial products, peak {} row entries",
+                    s.rows_contracted, s.partial_products, s.peak_row_entries
+                );
+            }
+        }
+        "client" => {
+            let c = server
+                .handle(Request::TableMultClient {
+                    a: "G".into(),
+                    b: "G".into(),
+                    memory_limit: usize::MAX,
+                })
+                .expect("tablemult failed")
+                .into_assoc();
+            println!("client TableMult: {} output nnz", c.nnz());
+        }
+        "dense" => {
+            if !server.has_engine() {
+                eprintln!("no PJRT artifacts found — run `make artifacts` first");
+                std::process::exit(2);
+            }
+            let c = server
+                .handle(Request::TableMultDense { a: "G".into(), b: "G".into(), tile: 128 })
+                .expect("tablemult failed")
+                .into_assoc();
+            println!(
+                "dense TableMult via PJRT: {} output nnz, {} kernel calls",
+                c.nnz(),
+                server.engine().map(|e| e.calls.get()).unwrap_or(0)
+            );
+        }
+        other => {
+            eprintln!("unknown mode {other}; use server|client|dense");
+            std::process::exit(2);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("mode={mode} edges={edges} elapsed={dt:.3}s rate={}", fmt_rate(edges as f64 / dt));
+}
+
+fn cmd_bfs(flags: HashMap<String, String>) {
+    let scale: u32 = flag(&flags, "scale", 12);
+    let hops: usize = flag(&flags, "hops", 3);
+    let server = D4mServer::new();
+    ingest_kronecker(&server, scale, 4, 4096);
+    let seed = d4m::gen::vertex_key(1);
+    let t0 = std::time::Instant::now();
+    if let Response::Distances(d) = server
+        .handle(Request::Bfs { table: "G".into(), seeds: vec![seed.clone()], hops })
+        .expect("bfs failed")
+    {
+        println!(
+            "bfs from {seed}: reached {} vertices in {} hops ({:.3}s)",
+            d.len(),
+            hops,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}
+
+fn cmd_jaccard(flags: HashMap<String, String>) {
+    let scale: u32 = flag(&flags, "scale", 8);
+    let server = D4mServer::new();
+    ingest_kronecker(&server, scale, 4, 4096);
+    let t0 = std::time::Instant::now();
+    let j = server
+        .handle(Request::Jaccard { table: "G".into(), out: "J".into() })
+        .expect("jaccard failed")
+        .into_assoc();
+    println!("jaccard: {} coefficient pairs ({:.3}s)", j.nnz(), t0.elapsed().as_secs_f64());
+}
+
+fn cmd_ktruss(flags: HashMap<String, String>) {
+    let scale: u32 = flag(&flags, "scale", 8);
+    let k: usize = flag(&flags, "k", 3);
+    let server = D4mServer::new();
+    ingest_kronecker(&server, scale, 4, 4096);
+    let t0 = std::time::Instant::now();
+    let kt = server
+        .handle(Request::KTruss { table: "G".into(), k })
+        .expect("ktruss failed")
+        .into_assoc();
+    println!("{k}-truss: {} surviving edges ({:.3}s)", kt.nnz(), t0.elapsed().as_secs_f64());
+}
+
+fn cmd_pagerank(flags: HashMap<String, String>) {
+    let scale: u32 = flag(&flags, "scale", 10);
+    let server = D4mServer::new();
+    ingest_kronecker(&server, scale, 4, 4096);
+    let t0 = std::time::Instant::now();
+    if let Response::Ranks(r) = server
+        .handle(Request::PageRank {
+            table: "G".into(),
+            opts: d4m::graphulo::PageRankOpts::default(),
+        })
+        .expect("pagerank failed")
+    {
+        let mut top: Vec<_> = r.scores.iter().collect();
+        top.sort_by(|a, b| b.1.partial_cmp(a.1).unwrap());
+        println!(
+            "pagerank: {} vertices, {} iters, converged={} ({:.3}s)",
+            r.scores.len(),
+            r.iterations,
+            r.converged,
+            t0.elapsed().as_secs_f64()
+        );
+        for (v, s) in top.into_iter().take(5) {
+            println!("  {v}: {s:.5}");
+        }
+    }
+}
+
+fn cmd_tables() {
+    let server = D4mServer::new();
+    ingest_kronecker(&server, 8, 2, 1024);
+    if let Ok(Response::Tables(ts)) = server.handle(Request::ListTables) {
+        for t in ts {
+            println!("{t}");
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    match cmd {
+        "demo" => cmd_demo(),
+        "ingest" => cmd_ingest(flags),
+        "tablemult" => cmd_tablemult(flags),
+        "bfs" => cmd_bfs(flags),
+        "jaccard" => cmd_jaccard(flags),
+        "ktruss" => cmd_ktruss(flags),
+        "pagerank" => cmd_pagerank(flags),
+        "tables" => cmd_tables(),
+        _ => {
+            eprintln!(
+                "usage: d4m <demo|ingest|tablemult|bfs|jaccard|ktruss|pagerank|tables> [--flag value ...]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

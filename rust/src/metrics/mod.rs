@@ -1,0 +1,234 @@
+//! Lightweight metrics used by the pipeline, kvstore and coordinator:
+//! atomic counters, rate meters and log-scale latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Monotonic atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    n: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter { n: AtomicU64::new(0) }
+    }
+
+    pub fn add(&self, v: u64) {
+        self.n.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+}
+
+/// Events-per-second meter over a wall-clock window started at `start()`.
+#[derive(Debug)]
+pub struct RateMeter {
+    count: Counter,
+    start: Instant,
+}
+
+impl Default for RateMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RateMeter {
+    pub fn new() -> Self {
+        RateMeter { count: Counter::new(), start: Instant::now() }
+    }
+
+    pub fn add(&self, v: u64) {
+        self.count.add(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.get()
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Events per second since construction.
+    pub fn rate(&self) -> f64 {
+        let secs = self.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.count.get() as f64 / secs
+        }
+    }
+}
+
+/// Power-of-two bucketed histogram of nanosecond latencies.
+/// Lock-free recording; buckets `[2^i, 2^{i+1})` ns for i in 0..64.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let idx = (64 - ns.max(1).leading_zeros() as usize).saturating_sub(1);
+        self.buckets[idx.min(63)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Time a closure, recording its latency.
+    pub fn time<T>(&self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(t0.elapsed());
+        out
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-th sample).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1).min(63);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// A named snapshot of pipeline/coordinator metrics, for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub name: String,
+    pub count: u64,
+    pub rate_per_sec: f64,
+    pub mean_latency_ns: f64,
+    pub p99_latency_ns: u64,
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<24} n={:<12} rate={:<14} mean={:.1}us p99={:.1}us",
+            self.name,
+            self.count,
+            crate::util::fmt_rate(self.rate_per_sec),
+            self.mean_latency_ns / 1e3,
+            self.p99_latency_ns as f64 / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_adds() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn counter_concurrent() {
+        let c = std::sync::Arc::new(Counter::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn rate_meter_counts() {
+        let m = RateMeter::new();
+        m.add(100);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(m.count(), 100);
+        assert!(m.rate() > 0.0);
+    }
+
+    #[test]
+    fn histogram_mean_and_quantile() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(Duration::from_nanos(1000));
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean_ns() - 1000.0).abs() < 1.0);
+        // 1000ns lives in bucket [512, 1024) -> upper bound 1024
+        assert_eq!(h.quantile_ns(0.5), 1024);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.quantile_ns(0.99), 0);
+    }
+
+    #[test]
+    fn histogram_time_returns_value() {
+        let h = Histogram::new();
+        let x = h.time(|| 7);
+        assert_eq!(x, 7);
+        assert_eq!(h.count(), 1);
+    }
+}

@@ -1,0 +1,161 @@
+//! BigDAWG-style polystore (Elmore et al. 2015): multiple islands (one
+//! per data model) with CAST between them. In BigDAWG, D4M served as the
+//! **text island**; here all three islands are embedded engines and the
+//! associative array is the interchange representation for every CAST —
+//! exactly the paper's claim that "the D4M associative array model allows
+//! for translation of data between Accumulo, SciDB and PostGRES".
+
+use crate::assoc::Assoc;
+use crate::connectors::{AccumuloConnector, D4mTableConfig, SciDbConnector, SqlConnector};
+use crate::error::Result;
+
+/// The island a named object lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Island {
+    /// Key-value / text island (Accumulo engine; D4M's BigDAWG role).
+    Text,
+    /// Array island (SciDB engine).
+    Array,
+    /// Relational island (PostGRES/MySQL engine).
+    Relational,
+}
+
+/// Default chunk size used when casting into the array island.
+const DEFAULT_CHUNK: u64 = 256;
+
+/// The polystore: one engine per island.
+pub struct Polystore {
+    pub text: AccumuloConnector,
+    pub array: SciDbConnector,
+    pub relational: SqlConnector,
+}
+
+impl Default for Polystore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Polystore {
+    pub fn new() -> Self {
+        Polystore {
+            text: AccumuloConnector::new(),
+            array: SciDbConnector::new(),
+            relational: SqlConnector::new(),
+        }
+    }
+
+    /// Store an assoc into an island under `name`.
+    pub fn put(&self, island: Island, name: &str, a: &Assoc) -> Result<()> {
+        match island {
+            Island::Text => {
+                let t = self.text.bind(name, &D4mTableConfig::default())?;
+                t.put_assoc(a)
+            }
+            Island::Array => self.array.put_assoc(name, a, DEFAULT_CHUNK).map(|_| ()),
+            Island::Relational => self.relational.put_assoc(name, a).map(|_| ()),
+        }
+    }
+
+    /// Read an assoc from an island.
+    pub fn get(&self, island: Island, name: &str) -> Result<Assoc> {
+        match island {
+            Island::Text => {
+                let t = self.text.bind(name, &D4mTableConfig::default())?;
+                t.get_assoc()
+            }
+            Island::Array => self.array.get_assoc(name),
+            Island::Relational => self.relational.get_assoc(name),
+        }
+    }
+
+    /// CAST an object between islands through the associative-array
+    /// interchange form. Returns the casted assoc.
+    pub fn cast(&self, from: Island, src: &str, to: Island, dst: &str) -> Result<Assoc> {
+        let a = self.get(from, src)?;
+        self.put(to, dst, &a)?;
+        Ok(a)
+    }
+
+    /// A cross-island query plan: pull operands from (possibly different)
+    /// islands, combine with an assoc op, store the result in a target
+    /// island. The simplest BigDAWG-style scatter-gather.
+    pub fn cross_join(
+        &self,
+        left: (Island, &str),
+        right: (Island, &str),
+        op: CrossOp,
+        out: (Island, &str),
+    ) -> Result<Assoc> {
+        let a = self.get(left.0, left.1)?;
+        let b = self.get(right.0, right.1)?;
+        let c = match op {
+            CrossOp::Add => a.add(&b),
+            CrossOp::ElemMult => a.elem_mult(&b),
+            CrossOp::MatMul => a.matmul(&b),
+        };
+        self.put(out.0, out.1, &c)?;
+        Ok(c)
+    }
+}
+
+/// Combining op for [`Polystore::cross_join`].
+#[derive(Debug, Clone, Copy)]
+pub enum CrossOp {
+    Add,
+    ElemMult,
+    MatMul,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Assoc {
+        Assoc::from_triples(&[("r1", "c1", 1.0), ("r1", "c2", 2.0), ("r2", "c1", 3.0)])
+    }
+
+    #[test]
+    fn put_get_each_island() {
+        let p = Polystore::new();
+        let a = sample();
+        for island in [Island::Text, Island::Array, Island::Relational] {
+            p.put(island, "obj", &a).unwrap();
+            let b = p.get(island, "obj").unwrap();
+            assert_eq!(a.triples(), b.triples(), "{island:?}");
+        }
+    }
+
+    #[test]
+    fn cast_text_to_array_to_relational() {
+        let p = Polystore::new();
+        let a = sample();
+        p.put(Island::Text, "t", &a).unwrap();
+        p.cast(Island::Text, "t", Island::Array, "arr").unwrap();
+        p.cast(Island::Array, "arr", Island::Relational, "rel").unwrap();
+        let back = p.get(Island::Relational, "rel").unwrap();
+        assert_eq!(a.triples(), back.triples());
+    }
+
+    #[test]
+    fn cross_island_matmul() {
+        let p = Polystore::new();
+        let a = Assoc::from_triples(&[("r", "k", 2.0)]);
+        let b = Assoc::from_triples(&[("k", "c", 3.0)]);
+        p.put(Island::Array, "a", &a).unwrap();
+        p.put(Island::Relational, "b", &b).unwrap();
+        let c = p
+            .cross_join((Island::Array, "a"), (Island::Relational, "b"), CrossOp::MatMul, (Island::Text, "c"))
+            .unwrap();
+        assert_eq!(c.get("r", "c"), 6.0);
+        // and it landed in the text island
+        assert_eq!(p.get(Island::Text, "c").unwrap().get("r", "c"), 6.0);
+    }
+
+    #[test]
+    fn missing_object_errors() {
+        let p = Polystore::new();
+        assert!(p.get(Island::Array, "nope").is_err());
+        assert!(p.get(Island::Relational, "nope").is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! Relational substrate (PostGRES/MySQL stand-in, see DESIGN.md).
+//!
+//! A small typed-column relational engine: tables with named, typed
+//! columns, `INSERT`-style appends, and `SELECT` scans with predicates,
+//! projection and ORDER BY. Enough surface for the D4M SQL connector to
+//! round-trip associative arrays through a relational schema.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, RwLock};
+
+use crate::error::{D4mError, Result};
+
+/// Column types supported by the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColType {
+    Text,
+    Float,
+    Int,
+}
+
+/// A single value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SqlValue {
+    Text(String),
+    Float(f64),
+    Int(i64),
+    Null,
+}
+
+impl SqlValue {
+    pub fn type_of(&self) -> Option<ColType> {
+        match self {
+            SqlValue::Text(_) => Some(ColType::Text),
+            SqlValue::Float(_) => Some(ColType::Float),
+            SqlValue::Int(_) => Some(ColType::Int),
+            SqlValue::Null => None,
+        }
+    }
+
+    pub fn as_text(&self) -> Option<&str> {
+        match self {
+            SqlValue::Text(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            SqlValue::Float(f) => Some(*f),
+            SqlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SqlValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SqlValue::Text(s) => write!(f, "{s}"),
+            SqlValue::Float(x) => write!(f, "{}", crate::assoc::io::fmt_num(*x)),
+            SqlValue::Int(i) => write!(f, "{i}"),
+            SqlValue::Null => write!(f, "NULL"),
+        }
+    }
+}
+
+/// Table schema: ordered (name, type) pairs.
+#[derive(Debug, Clone)]
+pub struct TableSchema {
+    pub name: String,
+    pub columns: Vec<(String, ColType)>,
+}
+
+impl TableSchema {
+    pub fn new(name: &str, columns: &[(&str, ColType)]) -> Self {
+        TableSchema {
+            name: name.to_string(),
+            columns: columns.iter().map(|(n, t)| (n.to_string(), *t)).collect(),
+        }
+    }
+
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|(n, _)| n == name)
+    }
+}
+
+/// A row is a vector of values aligned with the schema columns.
+pub type Row = Vec<SqlValue>;
+
+/// Row predicate for SELECT ... WHERE.
+pub type Predicate = Box<dyn Fn(&Row) -> bool + Send + Sync>;
+
+/// A stored relational table.
+pub struct RelTable {
+    pub schema: TableSchema,
+    rows: Mutex<Vec<Row>>,
+}
+
+impl RelTable {
+    fn new(schema: TableSchema) -> Self {
+        RelTable { schema, rows: Mutex::new(Vec::new()) }
+    }
+
+    /// INSERT one row (type-checked against the schema; NULL always ok).
+    pub fn insert(&self, row: Row) -> Result<()> {
+        if row.len() != self.schema.columns.len() {
+            return Err(D4mError::InvalidArg(format!(
+                "insert arity {} != schema arity {}",
+                row.len(),
+                self.schema.columns.len()
+            )));
+        }
+        for (v, (name, ty)) in row.iter().zip(self.schema.columns.iter()) {
+            if let Some(vt) = v.type_of() {
+                if vt != *ty {
+                    return Err(D4mError::InvalidArg(format!(
+                        "column {name}: expected {ty:?}, got {vt:?}"
+                    )));
+                }
+            }
+        }
+        self.rows.lock().unwrap().push(row);
+        Ok(())
+    }
+
+    /// Bulk INSERT.
+    pub fn insert_batch(&self, rows: Vec<Row>) -> Result<()> {
+        for r in &rows {
+            if r.len() != self.schema.columns.len() {
+                return Err(D4mError::InvalidArg("insert arity mismatch".into()));
+            }
+        }
+        self.rows.lock().unwrap().extend(rows);
+        Ok(())
+    }
+
+    pub fn count(&self) -> usize {
+        self.rows.lock().unwrap().len()
+    }
+
+    /// SELECT `projection` FROM self WHERE `pred` ORDER BY `order_by`.
+    /// `projection = None` means `*`.
+    pub fn select(
+        &self,
+        projection: Option<&[&str]>,
+        pred: Option<&Predicate>,
+        order_by: Option<&str>,
+    ) -> Result<Vec<Row>> {
+        let proj_idx: Option<Vec<usize>> = match projection {
+            None => None,
+            Some(cols) => Some(
+                cols.iter()
+                    .map(|c| {
+                        self.schema
+                            .col_index(c)
+                            .ok_or_else(|| D4mError::NotFound(format!("column {c}")))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+        };
+        let order_idx = match order_by {
+            None => None,
+            Some(c) => Some(
+                self.schema
+                    .col_index(c)
+                    .ok_or_else(|| D4mError::NotFound(format!("column {c}")))?,
+            ),
+        };
+        let rows = self.rows.lock().unwrap();
+        let mut selected: Vec<Row> = rows
+            .iter()
+            .filter(|r| pred.map(|p| p(r)).unwrap_or(true))
+            .cloned()
+            .collect();
+        drop(rows);
+        if let Some(oi) = order_idx {
+            selected.sort_by(|a, b| cmp_sql(&a[oi], &b[oi]));
+        }
+        Ok(match proj_idx {
+            None => selected,
+            Some(idx) => selected
+                .into_iter()
+                .map(|r| idx.iter().map(|&i| r[i].clone()).collect())
+                .collect(),
+        })
+    }
+}
+
+fn cmp_sql(a: &SqlValue, b: &SqlValue) -> std::cmp::Ordering {
+    use std::cmp::Ordering::*;
+    match (a, b) {
+        (SqlValue::Text(x), SqlValue::Text(y)) => x.cmp(y),
+        (SqlValue::Int(x), SqlValue::Int(y)) => x.cmp(y),
+        (SqlValue::Float(x), SqlValue::Float(y)) => x.partial_cmp(y).unwrap_or(Equal),
+        (SqlValue::Null, SqlValue::Null) => Equal,
+        (SqlValue::Null, _) => Less,
+        (_, SqlValue::Null) => Greater,
+        // mixed numerics
+        _ => match (a.as_f64(), b.as_f64()) {
+            (Some(x), Some(y)) => x.partial_cmp(&y).unwrap_or(Equal),
+            _ => Equal,
+        },
+    }
+}
+
+/// The relational database: named tables.
+#[derive(Default)]
+pub struct RelDb {
+    tables: RwLock<HashMap<String, std::sync::Arc<RelTable>>>,
+}
+
+impl RelDb {
+    pub fn new() -> Self {
+        RelDb::default()
+    }
+
+    pub fn create_table(&self, schema: TableSchema) -> Result<std::sync::Arc<RelTable>> {
+        let mut tables = self.tables.write().unwrap();
+        if tables.contains_key(&schema.name) {
+            return Err(D4mError::AlreadyExists(format!("table {}", schema.name)));
+        }
+        let name = schema.name.clone();
+        let t = std::sync::Arc::new(RelTable::new(schema));
+        tables.insert(name, t.clone());
+        Ok(t)
+    }
+
+    pub fn table(&self, name: &str) -> Option<std::sync::Arc<RelTable>> {
+        self.tables.read().unwrap().get(name).cloned()
+    }
+
+    pub fn table_or_err(&self, name: &str) -> Result<std::sync::Arc<RelTable>> {
+        self.table(name).ok_or_else(|| D4mError::NotFound(format!("table {name}")))
+    }
+
+    pub fn drop_table(&self, name: &str) -> Result<()> {
+        self.tables
+            .write()
+            .unwrap()
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| D4mError::NotFound(format!("table {name}")))
+    }
+
+    pub fn list(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.tables.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tripled() -> (RelDb, std::sync::Arc<RelTable>) {
+        let db = RelDb::new();
+        let t = db
+            .create_table(TableSchema::new(
+                "edges",
+                &[("src", ColType::Text), ("dst", ColType::Text), ("w", ColType::Float)],
+            ))
+            .unwrap();
+        t.insert(vec![
+            SqlValue::Text("a".into()),
+            SqlValue::Text("b".into()),
+            SqlValue::Float(1.0),
+        ])
+        .unwrap();
+        t.insert(vec![
+            SqlValue::Text("b".into()),
+            SqlValue::Text("c".into()),
+            SqlValue::Float(2.0),
+        ])
+        .unwrap();
+        (db, t)
+    }
+
+    #[test]
+    fn insert_select_all() {
+        let (_db, t) = tripled();
+        let rows = t.select(None, None, None).unwrap();
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn type_checking() {
+        let (_db, t) = tripled();
+        assert!(t
+            .insert(vec![SqlValue::Float(1.0), SqlValue::Text("x".into()), SqlValue::Float(1.0)])
+            .is_err());
+        assert!(t.insert(vec![SqlValue::Text("x".into())]).is_err());
+    }
+
+    #[test]
+    fn null_passes_types() {
+        let (_db, t) = tripled();
+        t.insert(vec![SqlValue::Null, SqlValue::Text("y".into()), SqlValue::Null]).unwrap();
+        assert_eq!(t.count(), 3);
+    }
+
+    #[test]
+    fn where_and_projection() {
+        let (_db, t) = tripled();
+        let pred: Predicate = Box::new(|r| r[2].as_f64().unwrap_or(0.0) > 1.5);
+        let rows = t.select(Some(&["src"]), Some(&pred), None).unwrap();
+        assert_eq!(rows, vec![vec![SqlValue::Text("b".into())]]);
+    }
+
+    #[test]
+    fn order_by() {
+        let (_db, t) = tripled();
+        let rows = t.select(Some(&["w"]), None, Some("w")).unwrap();
+        let ws: Vec<f64> = rows.iter().map(|r| r[0].as_f64().unwrap()).collect();
+        assert_eq!(ws, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn unknown_column_errors() {
+        let (_db, t) = tripled();
+        assert!(t.select(Some(&["nope"]), None, None).is_err());
+        assert!(t.select(None, None, Some("nope")).is_err());
+    }
+
+    #[test]
+    fn db_registry() {
+        let (db, _t) = tripled();
+        assert_eq!(db.list(), vec!["edges".to_string()]);
+        assert!(db.create_table(TableSchema::new("edges", &[])).is_err());
+        db.drop_table("edges").unwrap();
+        assert!(db.table("edges").is_none());
+    }
+}

@@ -1,0 +1,230 @@
+//! Dense-block bridge: runs associative-array matrix multiplies through
+//! the AOT-compiled Pallas kernels by tiling the aligned numeric matrices
+//! into fixed-shape dense blocks (the artifact shapes), executing each
+//! tile product on the PJRT engine, and accumulating.
+//!
+//! This is the "numeric hot path" of client-side D4M: for dense-ish
+//! operands (e.g. co-occurrence matrices) it beats CSR SpGEMM; for very
+//! sparse operands the CSR path wins. [`assoc_matmul_auto`] picks by a
+//! density heuristic (tuned in the §Perf pass; see EXPERIMENTS.md).
+
+use super::PjrtEngine;
+use crate::assoc::spmat::SpMat;
+use crate::assoc::Assoc;
+use crate::error::Result;
+use crate::util::intersect_sorted_keys;
+
+/// Density above which the dense tile path is preferred (fraction of
+/// nonzeros in the aligned operands).
+pub const DENSE_THRESHOLD: f64 = 0.05;
+
+/// Pick the artifact tile for a given problem shape: large tiles
+/// amortise per-call PJRT overhead (literal copies, dispatch) once any
+/// dimension exceeds half the large tile (§Perf: 507 calls -> 12 calls
+/// on the e2e workload).
+pub fn best_tile(k: usize, m: usize, n: usize) -> usize {
+    if k.max(m).max(n) > super::TILE_LARGE / 2 {
+        super::TILE_LARGE
+    } else {
+        super::TILE_SMALL
+    }
+}
+
+/// Pad a CSR matrix into a row-major dense f32 buffer of shape
+/// (rows_padded, cols_padded).
+fn to_dense_padded(m: &SpMat, rows_padded: usize, cols_padded: usize) -> Vec<f32> {
+    let mut out = vec![0f32; rows_padded * cols_padded];
+    for r in 0..m.nr {
+        for (c, v) in m.row(r) {
+            out[r * cols_padded + c] = v as f32;
+        }
+    }
+    out
+}
+
+/// Extract one (tile x tile) block starting at (r0, c0) from a padded
+/// dense buffer with row stride `stride`.
+fn block(buf: &[f32], stride: usize, r0: usize, c0: usize, tile: usize) -> Vec<f32> {
+    let mut out = vec![0f32; tile * tile];
+    for r in 0..tile {
+        let src = (r0 + r) * stride + c0;
+        out[r * tile..(r + 1) * tile].copy_from_slice(&buf[src..src + tile]);
+    }
+    out
+}
+
+fn div_up(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// `C = A^T B` over aligned CSR operands via dense tiles of edge `tile`
+/// executed on the engine. a: (K, M), b: (K, N) -> (M, N) dense row-major
+/// (trimmed to the true shape).
+pub fn at_b_dense(
+    engine: &PjrtEngine,
+    a: &SpMat,
+    b: &SpMat,
+    tile: usize,
+) -> Result<Vec<f64>> {
+    assert_eq!(a.nr, b.nr, "contraction dim mismatch");
+    let (k, m, n) = (a.nr, a.nc, b.nc);
+    let (kp, mp, np) = (div_up(k, tile) * tile, div_up(m, tile) * tile, div_up(n, tile) * tile);
+    let da = to_dense_padded(a, kp, mp);
+    let db = to_dense_padded(b, kp, np);
+    let mut out = vec![0f64; m * n];
+    for bi in 0..mp / tile {
+        for bj in 0..np / tile {
+            // accumulate over the K tile axis
+            let mut acc = vec![0f64; tile * tile];
+            for bk in 0..kp / tile {
+                let ta = block(&da, mp, bk * tile, bi * tile, tile);
+                let tb = block(&db, np, bk * tile, bj * tile, tile);
+                let tc = engine.tablemult_tile(&ta, &tb, tile)?;
+                for (x, y) in acc.iter_mut().zip(tc.iter()) {
+                    *x += *y as f64;
+                }
+            }
+            // write back the valid region
+            for r in 0..tile {
+                let gr = bi * tile + r;
+                if gr >= m {
+                    break;
+                }
+                for c in 0..tile {
+                    let gc = bj * tile + c;
+                    if gc >= n {
+                        break;
+                    }
+                    out[gr * n + gc] = acc[r * tile + c];
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Key-aligned `A^T * B` over assocs routed through the dense tile path.
+/// Alignment contracts over the intersection of row keys (TableMult form:
+/// rows are the shared dimension).
+pub fn assoc_at_b_dense(engine: &PjrtEngine, a: &Assoc, b: &Assoc, tile: usize) -> Result<Assoc> {
+    let (_, ia, ib) = intersect_sorted_keys(a.row_keys(), b.row_keys());
+    let cols_a: Vec<usize> = (0..a.col_keys().len()).collect();
+    let cols_b: Vec<usize> = (0..b.col_keys().len()).collect();
+    let sa = a.matrix().select(&ia, &cols_a);
+    let sb = b.matrix().select(&ib, &cols_b);
+    let dense = at_b_dense(engine, &sa, &sb, tile)?;
+    let (m, n) = (sa.nc, sb.nc);
+    let mut triples = Vec::new();
+    for i in 0..m {
+        for j in 0..n {
+            let v = dense[i * n + j];
+            if v != 0.0 {
+                triples.push((a.col_keys()[i].clone(), b.col_keys()[j].clone(), v));
+            }
+        }
+    }
+    Ok(Assoc::from_triples(&triples))
+}
+
+/// Density of the aligned operands (used by the auto router).
+pub fn aligned_density(a: &Assoc, b: &Assoc) -> f64 {
+    let (inner, _, _) = intersect_sorted_keys(a.row_keys(), b.row_keys());
+    let k = inner.len().max(1);
+    let m = a.col_keys().len().max(1);
+    let n = b.col_keys().len().max(1);
+    let nnz = (a.nnz() + b.nnz()) as f64;
+    nnz / ((k * m + k * n) as f64)
+}
+
+/// Route `A^T * B` to the dense PJRT path or the CSR path by density.
+pub fn assoc_matmul_auto(
+    engine: Option<&PjrtEngine>,
+    a: &Assoc,
+    b: &Assoc,
+    tile: usize,
+) -> Result<Assoc> {
+    if let Some(e) = engine {
+        if aligned_density(a, b) >= DENSE_THRESHOLD {
+            let t = if tile == 0 {
+                best_tile(a.row_keys().len(), a.col_keys().len(), b.col_keys().len())
+            } else {
+                tile
+            };
+            return assoc_at_b_dense(e, a, b, t);
+        }
+    }
+    Ok(a.transpose().matmul(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<PjrtEngine> {
+        PjrtEngine::new(PjrtEngine::default_dir()).ok()
+    }
+
+    fn dense_assoc(nr: usize, nc: usize, seed: u64) -> Assoc {
+        let mut rng = crate::util::XorShift64::new(seed);
+        let mut t = Vec::new();
+        for r in 0..nr {
+            for c in 0..nc {
+                if rng.chance(0.5) {
+                    t.push((format!("k{r:03}"), format!("c{c:03}"), (rng.below(5) + 1) as f64));
+                }
+            }
+        }
+        Assoc::from_triples(&t)
+    }
+
+    #[test]
+    fn dense_path_matches_csr_small() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let a = dense_assoc(40, 30, 1);
+        let b = dense_assoc(40, 20, 2);
+        let want = a.transpose().matmul(&b);
+        let got = assoc_at_b_dense(&e, &a, &b, super::super::TILE_SMALL).unwrap();
+        assert_eq!(want.triples().len(), got.triples().len());
+        for (x, y) in want.triples().iter().zip(got.triples().iter()) {
+            assert_eq!((&x.0, &x.1), (&y.0, &y.1));
+            assert!((x.2 - y.2).abs() < 1e-3, "{x:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn dense_path_multi_tile() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        // spans >1 tile in every dimension (tile = 128)
+        let a = dense_assoc(150, 140, 3);
+        let b = dense_assoc(150, 135, 4);
+        let want = a.transpose().matmul(&b);
+        let got = assoc_at_b_dense(&e, &a, &b, super::super::TILE_SMALL).unwrap();
+        assert_eq!(want.nnz(), got.nnz());
+        // spot check
+        let wt = want.triples();
+        for t in wt.iter().step_by(97) {
+            assert!((got.get(&t.0, &t.1) - t.2).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn auto_router_falls_back_without_engine() {
+        let a = dense_assoc(10, 10, 5);
+        let b = dense_assoc(10, 10, 6);
+        let got = assoc_matmul_auto(None, &a, &b, 128).unwrap();
+        assert_eq!(got, a.transpose().matmul(&b));
+    }
+
+    #[test]
+    fn density_estimate_sane() {
+        let a = dense_assoc(20, 20, 7);
+        let d = aligned_density(&a, &a);
+        assert!(d > 0.2 && d <= 1.0, "density {d}");
+    }
+}

@@ -1,0 +1,218 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them from the L3 hot path. Python never runs here.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that the crate's XLA (0.5.1) rejects, while the
+//! text parser reassigns ids cleanly — see DESIGN.md and aot.py.
+
+pub mod blocks;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{D4mError, Result};
+
+/// Small tile edge (test/default config).
+pub const TILE_SMALL: usize = 128;
+/// Large tile edge (production config).
+pub const TILE_LARGE: usize = 512;
+
+fn rt_err<E: std::fmt::Display>(e: E) -> D4mError {
+    D4mError::Runtime(e.to_string())
+}
+
+/// A compiled-executable cache over a PJRT CPU client.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    execs: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Executions performed (for EXPERIMENTS.md §Perf accounting).
+    pub calls: crate::metrics::Counter,
+}
+
+impl PjrtEngine {
+    /// Create an engine over the artifacts directory. Fails fast if the
+    /// directory does not exist (run `make artifacts`).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(D4mError::Runtime(format!(
+                "artifacts directory {} missing — run `make artifacts`",
+                dir.display()
+            )));
+        }
+        let client = xla::PjRtClient::cpu().map_err(rt_err)?;
+        Ok(PjrtEngine {
+            client,
+            dir,
+            execs: Mutex::new(HashMap::new()),
+            calls: crate::metrics::Counter::new(),
+        })
+    }
+
+    /// Resolve the conventional artifacts dir (`$D4M_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("D4M_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    fn load(&self, name: &str) -> Result<()> {
+        let mut execs = self.execs.lock().unwrap();
+        if execs.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.is_file() {
+            return Err(D4mError::Runtime(format!("artifact {} missing", path.display())));
+        }
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().unwrap()).map_err(rt_err)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(rt_err)?;
+        execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a named artifact on f32 inputs with the given shapes;
+    /// returns the flattened f32 output (the lowered graphs return a
+    /// 1-tuple, unwrapped here).
+    pub fn run_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        self.load(name)?;
+        let execs = self.execs.lock().unwrap();
+        let exe = execs.get(name).unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| xla::Literal::vec1(data).reshape(shape).map_err(rt_err))
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(rt_err)?[0][0]
+            .to_literal_sync()
+            .map_err(rt_err)?;
+        self.calls.inc();
+        let out = result.to_tuple1().map_err(rt_err)?;
+        out.to_vec::<f32>().map_err(rt_err)
+    }
+
+    // -------------------------------------------------------- wrappers
+
+    /// `C = A^T B` on one dense tile: a is (k, m), b is (k, n) with
+    /// k = m = n = `tile` (128 or 512); returns (m, n) row-major.
+    pub fn tablemult_tile(&self, a: &[f32], b: &[f32], tile: usize) -> Result<Vec<f32>> {
+        let name = format!("tablemult_{tile}x{tile}x{tile}");
+        let t = tile as i64;
+        self.run_f32(&name, &[(a, &[t, t]), (b, &[t, t])])
+    }
+
+    /// `C = A B` on one dense tile (m, k) x (k, n), square `tile`.
+    pub fn matmul_tile(&self, a: &[f32], b: &[f32], tile: usize) -> Result<Vec<f32>> {
+        let name = format!("matmul_{tile}x{tile}x{tile}");
+        let t = tile as i64;
+        self.run_f32(&name, &[(a, &[t, t]), (b, &[t, t])])
+    }
+
+    /// Row sums of a (tile, tile) block -> (tile, 1).
+    pub fn degree_tile(&self, a: &[f32], tile: usize) -> Result<Vec<f32>> {
+        let name = format!("degree_{tile}x{tile}");
+        let t = tile as i64;
+        self.run_f32(&name, &[(a, &[t, t])])
+    }
+
+    /// Fused Jaccard over an incidence tile a (tile, tile): returns the
+    /// (tile, tile) coefficient matrix.
+    pub fn jaccard_tile(&self, a: &[f32], tile: usize) -> Result<Vec<f32>> {
+        let name = format!("jaccard_{tile}x{tile}");
+        let t = tile as i64;
+        self.run_f32(&name, &[(a, &[t, t])])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<PjrtEngine> {
+        PjrtEngine::new(PjrtEngine::default_dir()).ok()
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(PjrtEngine::new("/nonexistent/artifacts").is_err());
+    }
+
+    #[test]
+    fn tablemult_tile_identity() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let t = TILE_SMALL;
+        // a = I (so a^T b = b), b = counter pattern
+        let mut a = vec![0f32; t * t];
+        for i in 0..t {
+            a[i * t + i] = 1.0;
+        }
+        let b: Vec<f32> = (0..t * t).map(|i| (i % 7) as f32).collect();
+        let c = e.tablemult_tile(&a, &b, t).unwrap();
+        assert_eq!(c, b);
+        assert_eq!(e.calls.get(), 1);
+    }
+
+    #[test]
+    fn matmul_tile_matches_cpu() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let t = TILE_SMALL;
+        let a: Vec<f32> = (0..t * t).map(|i| ((i % 5) as f32) - 2.0).collect();
+        let b: Vec<f32> = (0..t * t).map(|i| ((i % 3) as f32) - 1.0).collect();
+        let c = e.matmul_tile(&a, &b, t).unwrap();
+        // spot-check a few cells against scalar compute
+        for &(i, j) in &[(0usize, 0usize), (17, 93), (127, 127)] {
+            let want: f32 = (0..t).map(|k| a[i * t + k] * b[k * t + j]).sum();
+            assert!((c[i * t + j] - want).abs() < 1e-2, "({i},{j})");
+        }
+    }
+
+    #[test]
+    fn degree_tile_rowsums() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let t = TILE_SMALL;
+        let a = vec![1f32; t * t];
+        let d = e.degree_tile(&a, t).unwrap();
+        assert_eq!(d.len(), t);
+        assert!(d.iter().all(|&x| (x - t as f32).abs() < 1e-3));
+    }
+
+    #[test]
+    fn jaccard_tile_diagonal_ones() {
+        let Some(e) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let t = TILE_SMALL;
+        // deterministic 0/1 incidence with every column nonempty
+        let mut a = vec![0f32; t * t];
+        for i in 0..t {
+            for j in 0..t {
+                if (i * 31 + j * 17) % 5 == 0 {
+                    a[i * t + j] = 1.0;
+                }
+            }
+            a[i * t + i] = 1.0;
+        }
+        let jm = e.jaccard_tile(&a, t).unwrap();
+        for j in 0..t {
+            assert!((jm[j * t + j] - 1.0).abs() < 1e-4, "diag {j} = {}", jm[j * t + j]);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Small shared utilities: deterministic RNG, sorted-vec helpers, a tiny
+//! property-testing harness (`forall`), and human-readable rate formatting.
+
+pub mod fasthash;
+pub mod rng;
+
+pub use fasthash::{FastHasher, FastMap};
+pub use rng::XorShift64;
+
+/// Merge two sorted, deduplicated string slices into a sorted, deduplicated
+/// union. Returns the union plus, for each input, a mapping from its local
+/// indices to union indices.
+pub fn merge_sorted_keys(a: &[String], b: &[String]) -> (Vec<String>, Vec<usize>, Vec<usize>) {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let mut map_a = Vec::with_capacity(a.len());
+    let mut map_b = Vec::with_capacity(b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() || j < b.len() {
+        let take_a = j >= b.len() || (i < a.len() && a[i] <= b[j]);
+        let take_b = i >= a.len() || (j < b.len() && b[j] <= a[i]);
+        let idx = out.len();
+        if take_a && take_b {
+            out.push(a[i].clone());
+            map_a.push(idx);
+            map_b.push(idx);
+            i += 1;
+            j += 1;
+        } else if take_a {
+            out.push(a[i].clone());
+            map_a.push(idx);
+            i += 1;
+        } else {
+            out.push(b[j].clone());
+            map_b.push(idx);
+            j += 1;
+        }
+    }
+    (out, map_a, map_b)
+}
+
+/// Intersect two sorted, deduplicated string slices. Returns the
+/// intersection plus index maps (intersection index -> local index) for
+/// each input.
+pub fn intersect_sorted_keys(
+    a: &[String],
+    b: &[String],
+) -> (Vec<String>, Vec<usize>, Vec<usize>) {
+    let mut out = Vec::new();
+    let mut map_a = Vec::new();
+    let mut map_b = Vec::new();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i].clone());
+                map_a.push(i);
+                map_b.push(j);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    (out, map_a, map_b)
+}
+
+/// Binary-search a sorted key slice; `Ok(i)` if present, `Err(insert)` if not.
+pub fn find_key(keys: &[String], k: &str) -> std::result::Result<usize, usize> {
+    keys.binary_search_by(|probe| probe.as_str().cmp(k))
+}
+
+/// Format a rate as a human string, e.g. `1.25 M/s`.
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} /s")
+    }
+}
+
+/// Format a byte count as a human string.
+pub fn fmt_bytes(n: usize) -> String {
+    const KB: f64 = 1024.0;
+    let n = n as f64;
+    if n >= KB * KB * KB {
+        format!("{:.2} GiB", n / (KB * KB * KB))
+    } else if n >= KB * KB {
+        format!("{:.2} MiB", n / (KB * KB))
+    } else if n >= KB {
+        format!("{:.2} KiB", n / KB)
+    } else {
+        format!("{n:.0} B")
+    }
+}
+
+/// Minimal deterministic property-test driver (stand-in for `proptest`,
+/// which is unavailable offline). Runs `f` on `n` cases generated from a
+/// seeded RNG; panics with the failing seed for reproduction.
+pub fn forall<F: FnMut(&mut XorShift64)>(n: usize, seed: u64, mut f: F) {
+    for case in 0..n {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = XorShift64::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed on case {case} (seed {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn merge_disjoint() {
+        let (u, ma, mb) = merge_sorted_keys(&v(&["a", "c"]), &v(&["b", "d"]));
+        assert_eq!(u, v(&["a", "b", "c", "d"]));
+        assert_eq!(ma, vec![0, 2]);
+        assert_eq!(mb, vec![1, 3]);
+    }
+
+    #[test]
+    fn merge_overlap() {
+        let (u, ma, mb) = merge_sorted_keys(&v(&["a", "b"]), &v(&["b", "c"]));
+        assert_eq!(u, v(&["a", "b", "c"]));
+        assert_eq!(ma, vec![0, 1]);
+        assert_eq!(mb, vec![1, 2]);
+    }
+
+    #[test]
+    fn merge_empty_sides() {
+        let (u, ma, mb) = merge_sorted_keys(&[], &v(&["x"]));
+        assert_eq!(u, v(&["x"]));
+        assert!(ma.is_empty());
+        assert_eq!(mb, vec![0]);
+        let (u2, ma2, mb2) = merge_sorted_keys(&v(&["x"]), &[]);
+        assert_eq!(u2, v(&["x"]));
+        assert_eq!(ma2, vec![0]);
+        assert!(mb2.is_empty());
+    }
+
+    #[test]
+    fn intersect_basic() {
+        let (x, ia, ib) = intersect_sorted_keys(&v(&["a", "b", "d"]), &v(&["b", "c", "d"]));
+        assert_eq!(x, v(&["b", "d"]));
+        assert_eq!(ia, vec![1, 2]);
+        assert_eq!(ib, vec![0, 2]);
+    }
+
+    #[test]
+    fn intersect_disjoint_is_empty() {
+        let (x, _, _) = intersect_sorted_keys(&v(&["a"]), &v(&["b"]));
+        assert!(x.is_empty());
+    }
+
+    #[test]
+    fn merge_is_union_property() {
+        forall(50, 0xD4D4, |rng| {
+            let mk = |rng: &mut XorShift64| {
+                let mut ks: Vec<String> =
+                    (0..rng.below(20)).map(|_| format!("k{:03}", rng.below(30))).collect();
+                ks.sort();
+                ks.dedup();
+                ks
+            };
+            let a = mk(rng);
+            let b = mk(rng);
+            let (u, ma, mb) = merge_sorted_keys(&a, &b);
+            // sorted + deduped
+            assert!(u.windows(2).all(|w| w[0] < w[1]));
+            // maps are consistent
+            for (i, &ui) in ma.iter().enumerate() {
+                assert_eq!(u[ui], a[i]);
+            }
+            for (j, &uj) in mb.iter().enumerate() {
+                assert_eq!(u[uj], b[j]);
+            }
+            // union contains exactly a ∪ b
+            let mut expect: Vec<String> = a.iter().chain(b.iter()).cloned().collect();
+            expect.sort();
+            expect.dedup();
+            assert_eq!(u, expect);
+        });
+    }
+
+    #[test]
+    fn fmt_rate_units() {
+        assert_eq!(fmt_rate(5.0), "5.00 /s");
+        assert_eq!(fmt_rate(5_000.0), "5.00 K/s");
+        assert_eq!(fmt_rate(5_000_000.0), "5.00 M/s");
+        assert_eq!(fmt_rate(5e9), "5.00 G/s");
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+    }
+}

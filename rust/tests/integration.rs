@@ -1,0 +1,190 @@
+//! Cross-module integration tests: every layer composed the way the
+//! examples and the e2e driver use them.
+
+use std::sync::Arc;
+
+use d4m::assoc::{Assoc, KeySel};
+use d4m::connectors::{AccumuloConnector, D4mTableConfig};
+use d4m::coordinator::{D4mServer, Request, Response};
+use d4m::gen::{kronecker_assoc, kronecker_triples, vertex_key, KroneckerParams};
+use d4m::graphulo::{self, ClientCtx, TableMultOpts};
+use d4m::kvstore::{KvStore, RowRange};
+use d4m::pipeline::{IngestPipeline, PipelineConfig};
+use d4m::polystore::{Island, Polystore};
+
+/// The full Figure-2 path on a small graph: pipeline ingest -> server
+/// TableMult -> client TableMult -> equality.
+#[test]
+fn fig2_path_small() {
+    let params = KroneckerParams::new(8, 8, 7);
+    let server = D4mServer::with_engine(None);
+    let rep = server
+        .handle(Request::Ingest {
+            table: "G".into(),
+            triples: kronecker_triples(&params),
+            pipeline: PipelineConfig { num_workers: 3, batch_size: 256, ..Default::default() },
+        })
+        .unwrap();
+    let Response::Ingested(r) = rep else { panic!() };
+    assert_eq!(r.triples, params.num_edges());
+
+    server.handle(Request::TableMult { a: "G".into(), b: "G".into(), out: "C".into() }).unwrap();
+    let server_c = graphulo::read_product(&server.store().table("C").unwrap()).unwrap();
+    let client_c = server
+        .handle(Request::TableMultClient { a: "G".into(), b: "G".into(), memory_limit: usize::MAX })
+        .unwrap()
+        .into_assoc();
+    assert_eq!(server_c.triples(), client_c.triples());
+}
+
+/// Ingested graph equals the generated assoc (via versioned overwrite of
+/// duplicate edges the store keeps the *count* written by put_assoc).
+#[test]
+fn pipeline_roundtrip_matches_generator() {
+    let params = KroneckerParams::new(8, 4, 3);
+    let g = kronecker_assoc(&params);
+    let acc = AccumuloConnector::new();
+    let t = Arc::new(acc.bind("G", &D4mTableConfig::default()).unwrap());
+    // route through the pipeline as string triples of the assoc
+    let triples: Vec<(String, String, String)> = g
+        .str_triples()
+        .into_iter()
+        .collect();
+    IngestPipeline::new(t.clone(), PipelineConfig { num_workers: 4, ..Default::default() })
+        .run(triples.into_iter())
+        .unwrap();
+    let back = t.get_assoc().unwrap();
+    assert_eq!(g.triples(), back.triples());
+}
+
+/// Graphulo algorithm stack vs client baselines on a non-trivial graph.
+#[test]
+fn graphulo_suite_agrees_with_client() {
+    let g = kronecker_assoc(&KroneckerParams::new(8, 6, 11));
+    let store = Arc::new(KvStore::new());
+    let acc = AccumuloConnector::with_store(store.clone());
+    let t = acc.bind("G", &D4mTableConfig::default()).unwrap();
+    t.put_assoc(&g).unwrap();
+
+    // BFS
+    let seeds = vec![vertex_key(0)];
+    assert_eq!(
+        graphulo::bfs_server(&t.main(), &seeds, 4),
+        graphulo::bfs_assoc(&g, &seeds, 4)
+    );
+
+    // Jaccard
+    let deg = t.degree_table().unwrap();
+    let sj = graphulo::jaccard_server(&store, &t.main(), &deg, "J").unwrap();
+    let cj = graphulo::jaccard_assoc(&g);
+    assert_eq!(sj.nnz(), cj.nnz());
+    for (a, b) in sj.triples().iter().zip(cj.triples().iter()) {
+        assert!((a.2 - b.2).abs() < 1e-9);
+    }
+
+    // k-truss
+    let sym = graphulo::symmetrise_table(&store, &t.main(), "S").unwrap();
+    let skt = graphulo::ktruss_server(&store, &sym, 3, "K").unwrap();
+    let ckt = graphulo::ktruss_assoc(&g, 3);
+    assert_eq!(skt.triples(), ckt.triples());
+}
+
+/// The memory wall: the same client op succeeds with a large budget and
+/// fails with a small one, while Graphulo completes under either.
+#[test]
+fn memory_wall_reproduction() {
+    let g = kronecker_assoc(&KroneckerParams::new(9, 8, 13));
+    let store = Arc::new(KvStore::new());
+    let acc = AccumuloConnector::with_store(store.clone());
+    let cfg = D4mTableConfig { transpose: false, degrees: false, ..Default::default() };
+    let t = acc.bind("G", &cfg).unwrap();
+    t.put_assoc(&g).unwrap();
+
+    // client succeeds unlimited
+    assert!(ClientCtx::default().table_mult(&t.main(), &t.main()).is_ok());
+    // client fails with a tiny budget
+    assert!(matches!(
+        ClientCtx::with_limit(1 << 10).table_mult(&t.main(), &t.main()),
+        Err(d4m::D4mError::MemoryLimit { .. })
+    ));
+    // graphulo completes regardless (bounded server memory)
+    let c = store.create_table("C", vec![]).unwrap();
+    let stats = graphulo::table_mult(&t.main(), &t.main(), &c, &TableMultOpts::default()).unwrap();
+    assert!(stats.partial_products > 0);
+}
+
+/// Polystore CAST chain preserves data across all three engines, and the
+/// D4M-schema column query works after the chain.
+#[test]
+fn polystore_chain() {
+    let p = Polystore::new();
+    let a = Assoc::from_triples(&[
+        ("d1", "w|x", 2.0),
+        ("d1", "w|y", 1.0),
+        ("d2", "w|x", 3.0),
+    ]);
+    p.put(Island::Relational, "t0", &a).unwrap();
+    p.cast(Island::Relational, "t0", Island::Text, "t1").unwrap();
+    p.cast(Island::Text, "t1", Island::Array, "t2").unwrap();
+    let back = p.get(Island::Array, "t2").unwrap();
+    assert_eq!(a.triples(), back.triples());
+
+    // column query through the text island's transpose table
+    let t = p.text.bind("t1", &D4mTableConfig::default()).unwrap();
+    let col = t.get_assoc_by_col(&RowRange::single("w|x")).unwrap();
+    assert_eq!(col.nnz(), 2);
+}
+
+/// The coordinator's dense path (when artifacts exist) agrees with CSR.
+#[test]
+fn dense_path_agrees_when_available() {
+    let server = D4mServer::new();
+    if !server.has_engine() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // a dense-ish operand: co-occurrence of a tiny graph
+    let g = kronecker_assoc(&KroneckerParams::new(7, 8, 17));
+    let c = g.transpose().matmul(&g);
+    let engine = server.engine().unwrap();
+    let dense = d4m::runtime::blocks::assoc_at_b_dense(engine, &c, &c, 128).unwrap();
+    let csr = c.transpose().matmul(&c);
+    assert_eq!(dense.nnz(), csr.nnz());
+    for t in csr.triples().iter().step_by(37) {
+        let got = dense.get(&t.0, &t.1);
+        assert!((got - t.2).abs() < 1e-2 * t.2.abs().max(1.0));
+    }
+}
+
+/// Degree tables stay exact under concurrent pipeline ingest with
+/// duplicate column keys (summing combiner across workers).
+#[test]
+fn degree_exactness_under_parallelism() {
+    let acc = AccumuloConnector::new();
+    let t = Arc::new(acc.bind("T", &D4mTableConfig::default()).unwrap());
+    let triples: Vec<(String, String, String)> = (0..2_000)
+        .map(|i| (format!("r{i:05}"), format!("c{:02}", i % 10), "1".to_string()))
+        .collect();
+    IngestPipeline::new(t.clone(), PipelineConfig { num_workers: 8, ..Default::default() })
+        .run(triples.into_iter())
+        .unwrap();
+    for c in 0..10 {
+        assert_eq!(t.degree(&format!("c{c:02}")).unwrap(), 200.0);
+    }
+}
+
+/// Subsref on the server (row-range scans) matches client subsref.
+#[test]
+fn range_queries_match_subsref() {
+    let g = kronecker_assoc(&KroneckerParams::new(8, 4, 23));
+    let acc = AccumuloConnector::new();
+    let t = acc.bind("G", &D4mTableConfig::default()).unwrap();
+    t.put_assoc(&g).unwrap();
+    let lo = vertex_key(20);
+    let hi = vertex_key(200);
+    let server = t
+        .get_assoc_range(&RowRange::span(lo.clone(), format!("{hi}\0")))
+        .unwrap();
+    let client = g.select_rows(&KeySel::Range(lo, hi));
+    assert_eq!(server.triples(), client.triples());
+}
