@@ -19,6 +19,8 @@
 
 use std::time::Instant;
 
+use d4m::assoc::KeySel;
+use d4m::connectors::TableQuery;
 use d4m::coordinator::{D4mServer, Request, Response};
 use d4m::gen::{kronecker_triples, vertex_key, KroneckerParams};
 use d4m::pipeline::PipelineConfig;
@@ -52,6 +54,25 @@ fn main() {
     let Response::Ingested(ingest) = rep else { unreachable!() };
     println!("[ingest]    {ingest}");
 
+    // ---- 2b: the unified T(r, c) surface — a row-range selector pushed
+    // down into the engine through the coordinator's DbTable registry
+    let sub = server
+        .handle(Request::Query {
+            table: "G".into(),
+            query: TableQuery::all()
+                .rows(KeySel::Range(vertex_key(0), vertex_key(63))),
+        })
+        .expect("range query")
+        .into_assoc()
+        .expect("assoc response");
+    println!(
+        "[query]     T('{}:{}', :) -> {} rows, {} nnz",
+        vertex_key(0),
+        vertex_key(63),
+        sub.row_keys().len(),
+        sub.nnz()
+    );
+
     // ---- 3: TableMult server vs client
     let t0 = Instant::now();
     let Response::MultStats(stats) = server
@@ -74,7 +95,8 @@ fn main() {
     let client_c = server
         .handle(Request::TableMultClient { a: "G".into(), b: "G".into(), memory_limit: usize::MAX })
         .expect("client tablemult")
-        .into_assoc();
+        .into_assoc()
+        .expect("assoc response");
     let dt_client = t1.elapsed().as_secs_f64();
     println!(
         "[d4m]       TableMult: {} nnz in {:.2}s = {}",
@@ -138,7 +160,8 @@ fn main() {
     let j = server
         .handle(Request::Jaccard { table: "G".into(), out: "J".into() })
         .expect("jaccard")
-        .into_assoc();
+        .into_assoc()
+        .expect("assoc response");
     println!("[jaccard]   {} coefficients ({:.2}s)", j.nnz(), t4.elapsed().as_secs_f64());
 
     // ---- 6: headline metrics

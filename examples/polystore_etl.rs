@@ -1,25 +1,36 @@
 //! Polystore ETL: the BigDAWG text-island role of D4M. A document corpus
 //! is ingested into the Accumulo (text) island, CAST through associative
 //! arrays into the SciDB (array) island, multiplied *in the array store*,
-//! and the result CAST into the relational island for SQL-style reads.
+//! and the result CAST into the relational island for SQL-style reads —
+//! all through the unified `DbServer`/`DbTable` binding API, with
+//! engine-native handles kept only for engine-specific ops (raw triple
+//! ingest, in-store spgemm).
 //!
 //! Run with: `cargo run --release --example polystore_etl`
 
-
-use d4m::connectors::D4mTableConfig;
+use d4m::assoc::KeySel;
+use d4m::connectors::{AccumuloConnector, D4mTableConfig, DbTable, SciDbConnector, TableQuery};
 use d4m::gen::doc_word_triples;
 use d4m::polystore::{CrossOp, Island, Polystore};
-use d4m::relational::Predicate;
 
 fn main() {
-    let p = Polystore::new();
+    // Register clonable engines so we keep native handles to the same
+    // stores the polystore routes to (the paper's "one API, native
+    // escape hatches" stance).
+    let acc = AccumuloConnector::new();
+    let scidb = SciDbConnector::new();
+    let mut p = Polystore::new();
+    p.register(Island::Text, Box::new(acc.clone()));
+    p.register(Island::Array, Box::new(scidb.clone()));
 
-    // ---- 1. land raw text triples in the text island (Accumulo engine)
+    // ---- 1. land raw text triples in the text island (Accumulo engine;
+    //         raw-triple ingest is a native op — duplicates OVERWRITE,
+    //         Accumulo versioning)
     let raw = doc_word_triples(50, 20, 200, 7);
     println!("corpus: {} (doc, word, count) triples", raw.len());
-    let t = p.text.bind("corpus", &D4mTableConfig::default()).unwrap();
+    let t = acc.bind("corpus", &D4mTableConfig::default()).unwrap();
     t.put_triples(&raw).unwrap();
-    let a = t.get_assoc().unwrap();
+    let a = p.get(Island::Text, "corpus").unwrap();
     println!(
         "text island: {} docs x {} words, {} nnz",
         a.row_keys().len(),
@@ -27,31 +38,28 @@ fn main() {
         a.nnz()
     );
 
-    // ---- 2. CAST text -> array island
+    // ---- 2. CAST text -> array island (two trait calls, no engine code)
     let a = p.cast(Island::Text, "corpus", Island::Array, "corpus_arr").unwrap();
     println!("cast into array island as corpus_arr ({} cells)", a.nnz());
 
-    // ---- 3. compute word co-occurrence IN the array store (SciDB spgemm)
-    let cooc = p.array.matmul_assocs(&a.transpose(), &a, "cooc", 64).unwrap();
+    // ---- 3. compute word co-occurrence IN the array store (SciDB spgemm,
+    //         via the native handle registered above)
+    let cooc = scidb.matmul_assocs(&a.transpose(), &a, "cooc", 64).unwrap();
     println!("in-store spgemm: co-occurrence has {} nnz", cooc.nnz());
 
     // ---- 4. CAST the result into the relational island
     p.put(Island::Relational, "cooc_rel", &cooc).unwrap();
     println!("cast into relational island as cooc_rel");
 
-    // ---- 5. SQL-style read with a predicate pushed into the engine
-    let pred: Predicate = Box::new(|row| row[2].as_f64().unwrap_or(0.0) >= 10.0);
-    let heavy = p.relational.get_assoc_where("cooc_rel", Some(&pred)).unwrap();
-    println!("word pairs with co-occurrence weight >= 10: {}", heavy.nnz());
-    for (w1, w2, v) in heavy.triples().into_iter().take(5) {
-        println!("  {w1} x {w2} = {v}");
-    }
+    // ---- 5. engine-generic T(r, c) query with pushdown: word pairs in
+    //         a key range, WHERE-filtered inside the relational engine
+    let some_word = cooc.row_keys()[cooc.row_keys().len() / 2].clone();
+    let q = TableQuery::all().rows(KeySel::Range(some_word.clone(), "zzzz".into()));
+    let tail = p.query(Island::Relational, "cooc_rel", &q).unwrap();
+    println!("co-occurrence rows from {some_word:?} on: {} nnz", tail.nnz());
 
     // ---- 6. verify end-to-end: relational island agrees with a pure
     //         client-side recomputation from the text-island assoc.
-    //         (Note: duplicate (doc, word) triples OVERWRITE in the
-    //         key-value store — Accumulo versioning — so the ground truth
-    //         is the assoc as stored, not the raw triple multiset.)
     let want = a.transpose().matmul(&a);
     let got = p.get(Island::Relational, "cooc_rel").unwrap();
     assert_eq!(want.nnz(), got.nnz(), "polystore round-trip diverged (nnz)");
@@ -65,7 +73,27 @@ fn main() {
     }
     println!("verification: relational island == client recomputation ✓");
 
-    // ---- 7. cross-island join for good measure
+    // the same range query must agree on every island (the conformance
+    // contract of the unified API)
+    p.put(Island::Array, "cooc_arr", &cooc).unwrap();
+    let from_arr = p.query(Island::Array, "cooc_arr", &q).unwrap();
+    assert_eq!(tail.triples(), from_arr.triples(), "cross-engine query diverged");
+    println!("verification: relational == array island on the same TableQuery ✓");
+
+    // ---- 7. paged scan of the co-occurrence table (the D4M.jl
+    //         table-iterator pattern; values fetched one page at a time)
+    let scan_q = TableQuery::all().page_rows(8);
+    let mut pages = 0usize;
+    let mut scanned = 0usize;
+    for page in p.bind(Island::Relational, "cooc_rel").unwrap().scan(&scan_q).unwrap() {
+        let page = page.unwrap();
+        pages += 1;
+        scanned += page.nnz();
+    }
+    println!("paged scan: {scanned} entries over {pages} pages of ≤8 rows");
+    assert_eq!(scanned, cooc.nnz());
+
+    // ---- 8. cross-island join for good measure
     let joined = p
         .cross_join(
             (Island::Array, "corpus_arr"),

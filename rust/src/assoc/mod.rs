@@ -183,6 +183,13 @@ impl Assoc {
         self.vals.is_some()
     }
 
+    /// The sorted value-key table of a string-valued array (entries in the
+    /// numeric core are 1-based indices into it); `None` when numeric.
+    /// Engines use this to ship the value dictionary alongside the data.
+    pub fn val_keys(&self) -> Option<&[String]> {
+        self.vals.as_deref()
+    }
+
     /// The underlying numeric matrix (string-valued arrays expose their
     /// value indices).
     pub fn matrix(&self) -> &SpMat {

@@ -13,11 +13,14 @@
 
 use std::sync::Arc;
 
-use crate::assoc::{io::fmt_num, Assoc};
-use crate::error::Result;
+use crate::assoc::{io::fmt_num, Assoc, KeySel};
+use crate::error::{D4mError, Result};
 use crate::kvstore::{
     BatchWriter, Entry, IterConfig, Key, KvStore, RowRange, Table, WriterConfig,
 };
+
+use super::api::{self, AssocPages, BindOpts, DbServer, DbTable, TableQuery};
+use super::DbKind;
 
 /// Options for binding a D4M table.
 #[derive(Debug, Clone)]
@@ -47,7 +50,10 @@ impl Default for D4mTableConfig {
     }
 }
 
-/// The Accumulo-engine connector (owns the embedded store).
+/// The Accumulo-engine connector (owns the embedded store). Cloning is
+/// cheap and shares the store — handy for registering the same engine in
+/// a [`crate::polystore::Polystore`] while keeping a native handle.
+#[derive(Clone)]
 pub struct AccumuloConnector {
     store: Arc<KvStore>,
 }
@@ -73,24 +79,74 @@ impl AccumuloConnector {
 
     /// Bind a logical D4M table, creating the physical tables if needed
     /// (the `T = DB('Tedge')` call of the MATLAB API).
+    ///
+    /// The `_T`/`_Deg` companion namespace is reserved (in both
+    /// directions — see the [`DbServer`] notes); every bind path,
+    /// native or trait, enforces it here. Companions created next to a
+    /// **pre-existing** main table (e.g. a Graphulo product being
+    /// promoted to a full D4M table) are backfilled from its contents,
+    /// so column queries and degrees stay correct.
     pub fn bind(&self, name: &str, cfg: &D4mTableConfig) -> Result<D4mTable> {
+        for suffix in ["_T", "_Deg"] {
+            if let Some(base) = name.strip_suffix(suffix) {
+                if !base.is_empty() && self.store.table(base).is_some() {
+                    return Err(D4mError::InvalidArg(format!(
+                        "table name {name} collides with the {suffix} companion \
+                         namespace of existing table {base}"
+                    )));
+                }
+            }
+        }
+        let pre_existing = self.store.table(name).is_some();
+        if !pre_existing {
+            for suffix in ["_T", "_Deg"] {
+                let companion = format!("{name}{suffix}");
+                if self.store.table(&companion).is_some() {
+                    return Err(D4mError::InvalidArg(format!(
+                        "binding {name} would adopt existing table {companion} \
+                         as a schema companion"
+                    )));
+                }
+            }
+        }
         let main = self.store.ensure_table(name, cfg.splits.clone());
+        let mut fresh_transpose = false;
+        let mut fresh_degree = false;
         let transpose = if cfg.transpose {
-            Some(self.store.ensure_table(&format!("{name}_T"), cfg.transpose_splits.clone()))
+            let full = format!("{name}_T");
+            fresh_transpose = self.store.table(&full).is_none();
+            Some(self.store.ensure_table(&full, cfg.transpose_splits.clone()))
         } else {
             None
         };
         let degree = if cfg.degrees {
-            Some(self.store.ensure_table(&format!("{name}_Deg"), cfg.transpose_splits.clone()))
+            let full = format!("{name}_Deg");
+            fresh_degree = self.store.table(&full).is_none();
+            Some(self.store.ensure_table(&full, cfg.transpose_splits.clone()))
         } else {
             None
         };
-        Ok(D4mTable { main, transpose, degree, cfg: cfg.clone() })
+        let table = D4mTable {
+            name: name.to_string(),
+            store: self.store.clone(),
+            main,
+            transpose,
+            degree,
+            cfg: cfg.clone(),
+        };
+        // a companion created next to a pre-existing main must reflect
+        // its contents, or column queries / degrees would read empty
+        if pre_existing && (fresh_transpose || fresh_degree) {
+            table.backfill_companions(fresh_transpose, fresh_degree);
+        }
+        Ok(table)
     }
 }
 
 /// A bound D4M table (the `T` in `T = DB('Tedge')`).
 pub struct D4mTable {
+    name: String,
+    store: Arc<KvStore>,
     main: Arc<Table>,
     transpose: Option<Arc<Table>>,
     degree: Option<Arc<Table>>,
@@ -197,6 +253,238 @@ impl D4mTable {
     /// Total entries in the main table.
     pub fn count(&self) -> usize {
         self.main.scan(&RowRange::all(), &IterConfig::default()).len()
+    }
+
+    /// Rebuild newly created companion tables from the main table's
+    /// current contents (binding schema tables onto a table that already
+    /// held data). Not synchronised with concurrent writers.
+    fn backfill_companions(&self, transpose: bool, degrees: bool) {
+        for e in self.main.scan(&RowRange::all(), &IterConfig::default()) {
+            if transpose {
+                if let Some(t) = &self.transpose {
+                    t.put(&e.key.cq, &e.key.row, &e.value);
+                }
+            }
+            if degrees {
+                if let Some(d) = &self.degree {
+                    d.put(&e.key.cq, "deg", "1");
+                }
+            }
+        }
+    }
+
+    /// Tombstone every live cell in the schema tables (the key-value
+    /// equivalent of dropping and recreating the table, without
+    /// invalidating held table handles). Clears the **physical**
+    /// `_T`/`_Deg` companions resolved from the store — not just the
+    /// ones this binding attached — so a binding created with
+    /// `transpose: false` cannot leave stale companion data behind.
+    pub fn clear(&self) {
+        let mut tables: Vec<Arc<Table>> = vec![self.main.clone()];
+        for suffix in ["_T", "_Deg"] {
+            if let Some(t) = self.store.table(&format!("{}{suffix}", self.name)) {
+                tables.push(t);
+            }
+        }
+        for t in &tables {
+            for e in t.scan(&RowRange::all(), &IterConfig::default()) {
+                t.delete(&e.key.row, &e.key.cq);
+            }
+        }
+    }
+
+    /// Unified `T(r, c)` query with engine-side pushdown: row selectors
+    /// become main-table range scans; a pure column query routes through
+    /// the transpose table; the residual subsref normalises exactly.
+    fn query_pushdown(&self, q: &TableQuery) -> Result<Assoc> {
+        let a = match keysel_row_ranges(&q.rows) {
+            Some(ranges) => {
+                let mut entries = Vec::new();
+                for r in &ranges {
+                    entries.extend(self.main.scan(r, &IterConfig::default()));
+                }
+                entries_to_assoc(entries)?
+            }
+            None => match (&self.transpose, keysel_row_ranges(&q.cols)) {
+                // rows unconstrained, cols constrained: scan the
+                // transpose by column key, then flip back
+                (Some(tt), Some(col_ranges)) => {
+                    let mut entries = Vec::new();
+                    for r in &col_ranges {
+                        entries.extend(tt.scan(r, &IterConfig::default()));
+                    }
+                    entries_to_assoc(entries)?.transpose()
+                }
+                _ => D4mTable::get_assoc(self)?,
+            },
+        };
+        Ok(api::finish(a, q))
+    }
+
+    /// Distinct row keys currently stored under the selector. Scans are
+    /// row-sorted, so consecutive dedup keeps the *retained* snapshot at
+    /// O(rows); the enumeration pass itself goes through the substrate's
+    /// materialising `Table::scan` (a streaming key-only scan in
+    /// `kvstore` would remove that setup cost — see ROADMAP).
+    fn matching_row_keys(&self, rows: &KeySel) -> Vec<String> {
+        let ranges =
+            keysel_row_ranges(rows).unwrap_or_else(|| vec![RowRange::all()]);
+        let mut keys: Vec<String> = Vec::new();
+        for r in &ranges {
+            for e in self.main.scan(r, &IterConfig::default()) {
+                if keys.last().map(|k| *k != e.key.row).unwrap_or(true) {
+                    keys.push(e.key.row);
+                }
+            }
+        }
+        keys
+    }
+}
+
+impl DbTable for D4mTable {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn put_assoc(&self, a: &Assoc) -> Result<()> {
+        // unified-API semantics: put replaces previous contents on every
+        // engine (the native D4mTable::put_assoc keeps merge semantics
+        // for the ingest pipeline). The write maintains every *physical*
+        // companion, not just the ones this binding attached, so a
+        // `transpose: false` binding can't desynchronise a transpose
+        // another binding relies on.
+        self.clear();
+        let transpose = self.store.table(&format!("{}_T", self.name));
+        let degree = self.store.table(&format!("{}_Deg", self.name));
+        let mut w = D4mWriter {
+            main: BatchWriter::new(self.main.clone(), self.cfg.writer.clone()),
+            transpose: transpose.map(|t| BatchWriter::new(t, self.cfg.writer.clone())),
+            degree: degree.map(|d| BatchWriter::new(d, self.cfg.writer.clone())),
+        };
+        for (r, c, v) in a.str_triples() {
+            w.put(&r, &c, &v);
+        }
+        w.flush();
+        Ok(())
+    }
+
+    fn get_assoc(&self) -> Result<Assoc> {
+        D4mTable::get_assoc(self)
+    }
+
+    fn nnz(&self) -> Result<usize> {
+        Ok(self.count())
+    }
+
+    fn query(&self, q: &TableQuery) -> Result<Assoc> {
+        self.query_pushdown(q)
+    }
+
+    fn scan(&self, q: &TableQuery) -> Result<AssocPages> {
+        // row snapshot: with rows unconstrained but cols constrained, the
+        // transpose table names the matching rows directly (its cq is the
+        // original row key) — no full main-table pass needed
+        let rows = match (keysel_row_ranges(&q.rows), &self.transpose, keysel_row_ranges(&q.cols))
+        {
+            (None, Some(tt), Some(col_ranges)) => {
+                let mut keys = Vec::new();
+                for r in &col_ranges {
+                    for e in tt.scan(r, &IterConfig::default()) {
+                        keys.push(e.key.cq);
+                    }
+                }
+                keys
+            }
+            _ => self.matching_row_keys(&q.rows),
+        };
+        let main = self.main.clone();
+        let row_sel = q.rows.clone();
+        let col_sel = q.cols.clone();
+        let fetch = Box::new(move |page: &[String]| {
+            // one range scan spanning the page (keys are sorted), with an
+            // exact membership filter for rows stored between page keys
+            let mut triples: Vec<(String, String, String)> = Vec::new();
+            if let (Some(first), Some(last)) = (page.first(), page.last()) {
+                let span = RowRange::inclusive(first.clone(), last.clone());
+                let keys: std::collections::HashSet<&str> =
+                    page.iter().map(String::as_str).collect();
+                for e in main.scan(&span, &IterConfig::default()) {
+                    if keys.contains(e.key.row.as_str()) {
+                        triples.push((e.key.row, e.key.cq, e.value));
+                    }
+                }
+            }
+            Ok(api::raw_page(triples, &row_sel, &col_sel))
+        });
+        Ok(AssocPages::over_rows(rows, q.page_rows, q.limit, fetch))
+    }
+}
+
+/// The D4M 2.0 physical schema reserves the `{name}_T` / `{name}_Deg`
+/// namespace for a logical table's companions (exactly as on a real
+/// Accumulo cluster, where all four tables share one namespace): `ls` /
+/// `exists` hide companions of listed tables, and `delete_table` drops
+/// them with the main table. Don't name an unrelated logical table with
+/// a `_T`/`_Deg` suffix of an existing one.
+impl DbServer for AccumuloConnector {
+    fn kind(&self) -> DbKind {
+        DbKind::Accumulo
+    }
+
+    fn ls(&self) -> Vec<String> {
+        // hide the _T/_Deg companions of listed tables: engine-generic
+        // callers enumerate *logical* tables, matching the other engines
+        let all = self.store.list_tables();
+        all.iter()
+            .filter(|n| {
+                let is_companion = |suffix: &str| {
+                    n.strip_suffix(suffix)
+                        .map(|base| all.iter().any(|t| t == base))
+                        .unwrap_or(false)
+                };
+                !is_companion("_T") && !is_companion("_Deg")
+            })
+            .cloned()
+            .collect()
+    }
+
+    fn delete_table(&self, name: &str) -> Result<()> {
+        self.store.drop_table(name)?;
+        // companion schema tables go with the main table
+        let _ = self.store.drop_table(&format!("{name}_T"));
+        let _ = self.store.drop_table(&format!("{name}_Deg"));
+        Ok(())
+    }
+
+    fn bind(&self, name: &str, opts: &BindOpts) -> Result<Box<dyn DbTable>> {
+        // the namespace reservation is enforced in the inherent bind, so
+        // every path (native, trait, coordinator) is covered
+        let cfg = D4mTableConfig {
+            transpose: opts.transpose,
+            degrees: opts.degrees,
+            splits: opts.splits.clone(),
+            transpose_splits: opts.transpose_splits.clone(),
+            writer: WriterConfig::default(),
+        };
+        Ok(Box::new(AccumuloConnector::bind(self, name, &cfg)?))
+    }
+}
+
+/// Lower a [`KeySel`] to key-value scan ranges (`None` = full scan). The
+/// ranges cover a superset of the matching keys; [`api::finish`] trims.
+fn keysel_row_ranges(sel: &KeySel) -> Option<Vec<RowRange>> {
+    match sel {
+        KeySel::All => None,
+        KeySel::Keys(ks) => {
+            let mut ks = ks.clone();
+            ks.sort();
+            ks.dedup();
+            Some(ks.iter().map(|k| RowRange::single(k)).collect())
+        }
+        KeySel::Range(lo, hi) => Some(vec![RowRange::inclusive(lo.clone(), hi.clone())]),
+        KeySel::Prefix(p) => {
+            Some(vec![RowRange { start: Some(p.clone()), end: api::prefix_upper_bound(p) }])
+        }
     }
 }
 
@@ -340,5 +628,36 @@ mod tests {
         let (acc, t) = graph_table();
         let t2 = acc.bind("Tedge", &D4mTableConfig::default()).unwrap();
         assert_eq!(t2.count(), t.count());
+    }
+
+    #[test]
+    fn bind_backfills_companions_for_out_of_band_table() {
+        let acc = AccumuloConnector::new();
+        // a main-only table populated directly in the store (the shape of
+        // a Graphulo product being promoted to a full D4M table)
+        let raw = acc.store().ensure_table("C", vec![]);
+        raw.put("r1", "c1", "2");
+        raw.put("r2", "c1", "3");
+        let t = acc.bind("C", &D4mTableConfig::default()).unwrap();
+        // the freshly created transpose answers column queries correctly
+        let col = t.get_assoc_by_col(&RowRange::single("c1")).unwrap();
+        assert_eq!(col.nnz(), 2);
+        assert_eq!(col.get("r2", "c1"), 3.0);
+        // and the degree table reflects the pre-existing cells
+        assert_eq!(t.degree("c1").unwrap(), 2.0);
+        // rebinding must not double the backfill
+        let t2 = acc.bind("C", &D4mTableConfig::default()).unwrap();
+        assert_eq!(t2.degree("c1").unwrap(), 2.0);
+    }
+
+    #[test]
+    fn bind_rejects_namespace_collisions_on_native_path() {
+        let acc = AccumuloConnector::new();
+        acc.bind("foo", &D4mTableConfig::default()).unwrap();
+        // the inherent bind (the coordinator's path) is guarded too
+        assert!(acc.bind("foo_T", &D4mTableConfig::default()).is_err());
+        let acc2 = AccumuloConnector::new();
+        acc2.bind("bar_T", &D4mTableConfig::default()).unwrap();
+        assert!(acc2.bind("bar", &D4mTableConfig::default()).is_err());
     }
 }

@@ -1,0 +1,419 @@
+//! The unified D4M binding surface — the paper's `DB()` / `T = DB('table')`
+//! / `T(r, c)` API as two object-safe traits every engine implements.
+//!
+//! * [`DbServer`] is the `DBserver`/`dbsetup` surface: list tables,
+//!   existence checks, deletion, and `bind(name, &BindOpts)` which hands
+//!   back a [`DbTable`] trait object.
+//! * [`DbTable`] is the `DBtable` surface: `put_assoc` / `get_assoc` /
+//!   `nnz`, plus [`DbTable::query`] — the `T(r, c)` form, carried by a
+//!   [`TableQuery`] builder whose row/col [`KeySel`] selectors are pushed
+//!   down into each engine (Accumulo row-range and transpose scans, SciDB
+//!   `subarray` windows, SQL `WHERE` predicates) — and [`DbTable::scan`],
+//!   a paged iterator ([`AssocPages`]) for larger-than-memory reads, the
+//!   D4M.jl table-iterator pattern.
+//!
+//! The contract that makes cross-engine code possible: for the same stored
+//! associative array and the same `TableQuery`, **every engine returns an
+//! identical [`Assoc`]** (`connectors::tests::conformance_*` enforce this).
+//! Engines push selectors down as a *superset* scan, then normalise with
+//! the exact client-side subsref, so pushdown is an optimisation, never a
+//! semantics change.
+//!
+//! Registering a fourth engine is one `impl DbServer` + one `impl
+//! DbTable`; `Polystore` and the coordinator only ever see the traits.
+//! See DESIGN.md §Connectors for the paper-to-module mapping.
+
+use crate::assoc::{Assoc, KeySel};
+use crate::error::Result;
+
+use super::DbKind;
+
+/// Engine-agnostic options for binding a table (the knobs of the MATLAB
+/// `DB('table')` call). Engines ignore what they cannot use: `splits`,
+/// `transpose` and `degrees` drive the Accumulo D4M-2.0 schema; `chunk`
+/// drives SciDB chunking; SQL needs none of them.
+#[derive(Debug, Clone)]
+pub struct BindOpts {
+    /// Maintain a transpose table (Accumulo; enables column pushdown).
+    pub transpose: bool,
+    /// Maintain a degree table (Accumulo).
+    pub degrees: bool,
+    /// Split points for the row keyspace (Accumulo).
+    pub splits: Vec<String>,
+    /// Split points for the column keyspace (Accumulo).
+    pub transpose_splits: Vec<String>,
+    /// Chunk size for array engines (SciDB).
+    pub chunk: u64,
+}
+
+impl Default for BindOpts {
+    fn default() -> Self {
+        BindOpts {
+            transpose: true,
+            degrees: true,
+            splits: vec![],
+            transpose_splits: vec![],
+            chunk: 256,
+        }
+    }
+}
+
+/// The `T(r, c)` query form as a builder: row/col key selectors, an
+/// optional result limit, and the page granularity used by
+/// [`DbTable::scan`].
+#[derive(Debug, Clone)]
+pub struct TableQuery {
+    /// Row selector (`T('a,:,b,', :)`).
+    pub rows: KeySel,
+    /// Column selector (`T(:, 'c,')`).
+    pub cols: KeySel,
+    /// Keep at most this many entries (row-major key order).
+    pub limit: Option<usize>,
+    /// Rows per page for [`DbTable::scan`].
+    pub page_rows: usize,
+}
+
+impl Default for TableQuery {
+    fn default() -> Self {
+        TableQuery { rows: KeySel::All, cols: KeySel::All, limit: None, page_rows: 1024 }
+    }
+}
+
+impl TableQuery {
+    /// `T(:, :)`.
+    pub fn all() -> Self {
+        TableQuery::default()
+    }
+
+    pub fn rows(mut self, sel: KeySel) -> Self {
+        self.rows = sel;
+        self
+    }
+
+    pub fn cols(mut self, sel: KeySel) -> Self {
+        self.cols = sel;
+        self
+    }
+
+    pub fn limit(mut self, n: usize) -> Self {
+        self.limit = Some(n);
+        self
+    }
+
+    pub fn page_rows(mut self, n: usize) -> Self {
+        self.page_rows = n.max(1);
+        self
+    }
+}
+
+/// The engine-side server binding (`DBserver`): table namespace ops plus
+/// `bind`, which produces the table surface as a trait object.
+pub trait DbServer: Send + Sync {
+    /// Which engine this server speaks.
+    fn kind(&self) -> DbKind;
+
+    /// List the tables/arrays the engine currently stores (sorted).
+    fn ls(&self) -> Vec<String>;
+
+    /// Does a table of this name exist?
+    fn exists(&self, name: &str) -> bool {
+        self.ls().iter().any(|t| t == name)
+    }
+
+    /// Drop a table (and any engine-side companion tables it maintains).
+    fn delete_table(&self, name: &str) -> Result<()>;
+
+    /// Bind a logical table (the `T = DB('table')` call). Engines that
+    /// materialise storage lazily (SciDB, SQL) create it at first
+    /// `put_assoc`; key-value engines create the schema tables eagerly.
+    fn bind(&self, name: &str, opts: &BindOpts) -> Result<Box<dyn DbTable>>;
+}
+
+/// A bound table (`DBtable`): every engine speaks [`Assoc`] in both
+/// directions, which is what makes cross-engine CAST a pair of trait
+/// calls.
+pub trait DbTable: Send + Sync {
+    /// The logical table name this binding points at.
+    fn name(&self) -> &str;
+
+    /// Store an associative array (string- or numeric-valued),
+    /// **replacing** any previous contents — on every engine (create-once
+    /// engines recreate storage; the key-value engine clears its schema
+    /// tables first). Engine-native handles keep merge/append semantics
+    /// for ingest.
+    fn put_assoc(&self, a: &Assoc) -> Result<()>;
+
+    /// Read the whole table back (`T(:, :)`). A bound table with no
+    /// stored contents reads as the empty assoc on every engine, whether
+    /// the engine materialised storage at bind time or not.
+    fn get_assoc(&self) -> Result<Assoc> {
+        self.query(&TableQuery::all())
+    }
+
+    /// Stored entry count (0 for a bound table with no contents).
+    fn nnz(&self) -> Result<usize>;
+
+    /// The `T(r, c)` query: selectors pushed down into the engine, result
+    /// normalised so all engines agree exactly.
+    fn query(&self, q: &TableQuery) -> Result<Assoc>;
+
+    /// Paged read: pages of at most `q.page_rows` result rows, fetched
+    /// engine-side page by page (the D4M.jl table-iterator pattern) so a
+    /// larger-than-memory result never materialises at once.
+    ///
+    /// Pages carry **raw stored values** (always string-valued assocs,
+    /// no numeric inference) so that nothing is rewritten mid-stream;
+    /// [`AssocPages::into_assoc`] runs the schema-less string-vs-numeric
+    /// inference once over the assembled set, matching what
+    /// [`DbTable::query`] infers on the same final result (when no
+    /// `limit` cuts the set short).
+    ///
+    /// Isolation against concurrent writers is engine-defined: engines
+    /// whose `put_assoc` swaps storage (SciDB, SQL) pin one table
+    /// generation at `scan` creation; the key-value engine scans the
+    /// live table (Accumulo semantics — no snapshot isolation in the
+    /// substrate), so a concurrent writer may be visible mid-scan.
+    fn scan(&self, q: &TableQuery) -> Result<AssocPages>;
+}
+
+/// Page-at-a-time iterator over a [`DbTable::scan`] result.
+///
+/// The row keys matching the query are snapshotted up front (the
+/// retained snapshot is one `String` per distinct row; the snapshot
+/// *pass* costs whatever the engine's key enumeration costs — see each
+/// engine's `scan`); cell values are then fetched lazily, one page of
+/// rows per `next()`, through an engine-provided fetch closure. Pages
+/// are disjoint in row keys and arrive in sorted row order.
+pub struct AssocPages {
+    pages: std::vec::IntoIter<Vec<String>>,
+    fetch: PageFetch,
+    remaining: Option<usize>,
+    done: bool,
+}
+
+/// Engine-provided closure fetching the query result for one page of
+/// row keys.
+pub type PageFetch = Box<dyn FnMut(&[String]) -> Result<Assoc> + Send>;
+
+impl AssocPages {
+    /// Build a paged iterator over `row_keys` (deduplicated + sorted),
+    /// `page_rows` rows per page, honouring an optional total entry
+    /// `limit`. `fetch` returns the query result restricted to one page
+    /// of row keys.
+    pub fn over_rows(
+        mut row_keys: Vec<String>,
+        page_rows: usize,
+        limit: Option<usize>,
+        fetch: PageFetch,
+    ) -> Self {
+        row_keys.sort();
+        row_keys.dedup();
+        let pages: Vec<Vec<String>> =
+            row_keys.chunks(page_rows.max(1)).map(|c| c.to_vec()).collect();
+        AssocPages { pages: pages.into_iter(), fetch, remaining: limit, done: false }
+    }
+
+    /// Drain every page into one associative array. Pages are
+    /// row-disjoint raw-value assocs, so concatenation is exact; the
+    /// string-vs-numeric inference runs once here, over the assembled
+    /// set (with a `limit`, over the truncated set).
+    pub fn into_assoc(self) -> Result<Assoc> {
+        let mut triples: Vec<(String, String, String)> = Vec::new();
+        for page in self {
+            triples.extend(page?.str_triples());
+        }
+        crate::assoc::io::parse_triples(triples)
+    }
+}
+
+impl Iterator for AssocPages {
+    type Item = Result<Assoc>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done || self.remaining == Some(0) {
+            self.done = true;
+            return None;
+        }
+        loop {
+            let page = self.pages.next()?;
+            let a = match (self.fetch)(&page) {
+                Ok(a) => a,
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e));
+                }
+            };
+            let a = match self.remaining {
+                Some(n) if a.nnz() >= n => {
+                    self.done = true;
+                    truncate_assoc(&a, n)
+                }
+                Some(n) => {
+                    self.remaining = Some(n - a.nnz());
+                    a
+                }
+                None => a,
+            };
+            if a.is_empty() {
+                if self.done {
+                    return None;
+                }
+                continue; // a page whose rows were fully filtered out
+            }
+            return Some(Ok(a));
+        }
+    }
+}
+
+/// Keep the first `n` entries in row-major key order (used for `limit`).
+pub(crate) fn truncate_assoc(a: &Assoc, n: usize) -> Assoc {
+    if a.nnz() <= n {
+        return a.clone();
+    }
+    if a.is_string_valued() {
+        let t = a.str_triples();
+        Assoc::from_str_triples(&t[..n])
+    } else {
+        let t = a.triples();
+        Assoc::from_triples(&t[..n])
+    }
+}
+
+/// Normalise a pushdown result: engines scan a *superset* of the selected
+/// keys, then this exact client-side subsref + limit — followed by value
+/// re-inference on the final set — makes every engine return the
+/// identical assoc.
+pub(crate) fn finish(a: Assoc, q: &TableQuery) -> Assoc {
+    let a = a.subsref(&q.rows, &q.cols);
+    let a = match q.limit {
+        Some(n) if a.nnz() > n => truncate_assoc(&a, n),
+        _ => a,
+    };
+    normalize_valuedness(a)
+}
+
+/// Re-run the schema-less string-vs-numeric inference on the **final**
+/// result set. Engines scan different supersets (a full row on Accumulo,
+/// a coordinate window on SciDB, an exact predicate on SQL), so inference
+/// on the scanned set would diverge — e.g. a string table whose selected
+/// cells all look numeric. Re-inferring after the trim also rebuilds the
+/// value dictionary from the final set, so string-valued results carry
+/// identical 1-based indices everywhere.
+pub(crate) fn normalize_valuedness(a: Assoc) -> Assoc {
+    if !a.is_string_valued() {
+        return a;
+    }
+    crate::assoc::io::parse_triples(a.str_triples()).unwrap_or(a)
+}
+
+/// Zero-page scan result (e.g. for a bound-but-unwritten table).
+pub(crate) fn empty_pages(q: &TableQuery) -> AssocPages {
+    AssocPages::over_rows(
+        vec![],
+        q.page_rows,
+        q.limit,
+        Box::new(|_: &[String]| Ok(Assoc::empty())),
+    )
+}
+
+/// Build one raw scan page: keep the stored `(row, col, value)` triples
+/// the selectors match, as a string-valued assoc with **no** numeric
+/// inference — pages must never rewrite stored values (`"007"` stays
+/// `"007"`, not `7`).
+pub(crate) fn raw_page(
+    triples: Vec<(String, String, String)>,
+    rows: &KeySel,
+    cols: &KeySel,
+) -> Assoc {
+    let kept: Vec<(String, String, String)> = triples
+        .into_iter()
+        .filter(|(r, c, _)| rows.matches(r) && cols.matches(c))
+        .collect();
+    Assoc::from_str_triples(&kept)
+}
+
+/// Inclusive index bounds `(lo, hi)` of the keys a selector matches in a
+/// sorted key list, or `None` when nothing matches. Array engines use
+/// this to turn a [`KeySel`] into a coordinate window (`subarray`).
+pub(crate) fn matched_bounds(keys: &[String], sel: &KeySel) -> Option<(usize, usize)> {
+    let mut lo = None;
+    let mut hi = 0usize;
+    for (i, k) in keys.iter().enumerate() {
+        if sel.matches(k) {
+            if lo.is_none() {
+                lo = Some(i);
+            }
+            hi = i;
+        }
+    }
+    lo.map(|l| (l, hi))
+}
+
+/// Smallest string strictly greater than every string with prefix `p`
+/// (`None` = unbounded). Key-value engines use this to turn
+/// [`KeySel::Prefix`] into a scan range.
+pub(crate) fn prefix_upper_bound(p: &str) -> Option<String> {
+    let mut chars: Vec<char> = p.chars().collect();
+    while let Some(&last) = chars.last() {
+        let mut next = last as u32 + 1;
+        if (0xD800..=0xDFFF).contains(&next) {
+            next = 0xE000; // skip the surrogate gap
+        }
+        match char::from_u32(next) {
+            Some(c) => {
+                *chars.last_mut().unwrap() = c;
+                return Some(chars.into_iter().collect());
+            }
+            None => {
+                chars.pop(); // last char was char::MAX — carry
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_bound_covers_prefixed_keys() {
+        let up = prefix_upper_bound("abc").unwrap();
+        assert!(up.as_str() > "abc");
+        assert!(up.as_str() > "abc\u{10FFFF}zzz");
+        assert_eq!(up, "abd");
+        assert_eq!(prefix_upper_bound(""), None);
+        let carried = prefix_upper_bound(&format!("a{}", char::MAX)).unwrap();
+        assert_eq!(carried, "b");
+        assert_eq!(prefix_upper_bound(&char::MAX.to_string()), None);
+    }
+
+    #[test]
+    fn matched_bounds_windows() {
+        let keys: Vec<String> = ["a", "b", "c", "d"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(matched_bounds(&keys, &KeySel::All), Some((0, 3)));
+        assert_eq!(
+            matched_bounds(&keys, &KeySel::Range("b".into(), "c".into())),
+            Some((1, 2))
+        );
+        assert_eq!(matched_bounds(&keys, &KeySel::Prefix("z".into())), None);
+        assert_eq!(matched_bounds(&keys, &KeySel::keys(&["d", "a"])), Some((0, 3)));
+    }
+
+    #[test]
+    fn truncate_keeps_row_major_prefix() {
+        let a = Assoc::from_triples(&[("r1", "c1", 1.0), ("r1", "c2", 2.0), ("r2", "c1", 3.0)]);
+        let t = truncate_assoc(&a, 2);
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.get("r1", "c2"), 2.0);
+        assert_eq!(t.get("r2", "c1"), 0.0);
+    }
+
+    #[test]
+    fn query_builder_defaults() {
+        let q = TableQuery::all().limit(7).page_rows(0);
+        assert!(matches!(q.rows, KeySel::All));
+        assert_eq!(q.limit, Some(7));
+        assert_eq!(q.page_rows, 1); // clamped
+    }
+}

@@ -2,23 +2,33 @@
 //! the paper (Figure 1: "D4M server bindings leverage various database
 //! connectors").
 //!
-//! One facade, three engines:
+//! One **unified binding API** ([`api`]), three engines behind it:
 //! * [`accumulo::AccumuloConnector`] — key-value tables in the D4M 2.0
 //!   schema (Tedge / TedgeT / TedgeDeg / TedgeTxt).
 //! * [`scidb::SciDbConnector`] — chunked arrays with in-store ops.
 //! * [`sql::SqlConnector`] — relational triple tables.
 //!
-//! Every connector speaks [`crate::assoc::Assoc`] in both directions,
-//! which is what makes cross-engine translation (the BigDAWG text-island
-//! role, [`crate::polystore`]) a pair of connector calls.
+//! Every engine implements the object-safe [`DbServer`] / [`DbTable`]
+//! traits: `bind(name, &BindOpts)` hands back a table that speaks
+//! [`crate::assoc::Assoc`] in both directions, answers the paper's
+//! `T(r, c)` form through [`TableQuery`] (selectors pushed down as
+//! Accumulo range/transpose scans, SciDB `subarray` windows, SQL WHERE
+//! predicates), and streams larger-than-memory reads through the paged
+//! [`AssocPages`] iterator. Cross-engine translation (the BigDAWG
+//! text-island role, [`crate::polystore`]) is a pair of trait calls, and
+//! a fourth engine is one `impl` away. The conformance tests below pin
+//! the contract: same data + same query = identical assoc on every
+//! engine. See DESIGN.md §Connectors for the paper-to-module mapping.
 
 pub mod accumulo;
+pub mod api;
 pub mod scidb;
 pub mod sql;
 
 pub use accumulo::{AccumuloConnector, D4mTable, D4mTableConfig};
-pub use scidb::SciDbConnector;
-pub use sql::SqlConnector;
+pub use api::{AssocPages, BindOpts, DbServer, DbTable, TableQuery};
+pub use scidb::{SciDbConnector, SciDbTable};
+pub use sql::{SqlConnector, SqlTable};
 
 /// Which engine a D4M binding points at (the `DBserver` type tag).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,12 +41,286 @@ pub enum DbKind {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::assoc::Assoc;
+    use crate::assoc::{Assoc, KeySel};
 
-    /// Cross-engine translation: Accumulo -> Assoc -> SciDB -> Assoc ->
-    /// SQL -> Assoc must preserve the numeric triples (the D4M claim that
-    /// "the associative array model allows translation of data between
-    /// Accumulo, SciDB and PostGRES").
+    /// One server per engine, fresh stores.
+    fn engines() -> Vec<Box<dyn DbServer>> {
+        vec![
+            Box::new(AccumuloConnector::new()),
+            Box::new(SciDbConnector::new()),
+            Box::new(SqlConnector::new()),
+        ]
+    }
+
+    fn sample() -> Assoc {
+        Assoc::from_triples(&[
+            ("apple", "x1", 1.0),
+            ("apple", "y2", 2.0),
+            ("banana", "x1", 3.0),
+            ("berry", "y2", 4.0),
+            ("cherry", "x2", 5.0),
+            ("date", "y1", 6.0),
+        ])
+    }
+
+    /// Run a query against every engine and demand identical results.
+    fn assert_conformance(a: &Assoc, q: &TableQuery) {
+        let want = {
+            let full = a.subsref(&q.rows, &q.cols);
+            match q.limit {
+                Some(n) if full.nnz() > n => {
+                    let t = full.triples();
+                    Assoc::from_triples(&t[..n])
+                }
+                _ => full,
+            }
+        };
+        for db in engines() {
+            let t = db.bind("t", &BindOpts::default()).unwrap();
+            t.put_assoc(a).unwrap();
+            let got = t.query(q).unwrap();
+            assert_eq!(want.triples(), got.triples(), "engine {:?}, query {q:?}", db.kind());
+        }
+    }
+
+    /// Acceptance gate: a `KeySel::Range` row selector returns identical
+    /// results on all three engines.
+    #[test]
+    fn conformance_row_range() {
+        assert_conformance(
+            &sample(),
+            &TableQuery::all().rows(KeySel::Range("banana".into(), "cherry".into())),
+        );
+    }
+
+    #[test]
+    fn conformance_row_prefix() {
+        assert_conformance(&sample(), &TableQuery::all().rows(KeySel::Prefix("b".into())));
+    }
+
+    #[test]
+    fn conformance_col_range() {
+        assert_conformance(
+            &sample(),
+            &TableQuery::all().cols(KeySel::Range("x1".into(), "x2".into())),
+        );
+    }
+
+    #[test]
+    fn conformance_col_prefix_with_row_keys() {
+        assert_conformance(
+            &sample(),
+            &TableQuery::all()
+                .rows(KeySel::keys(&["apple", "cherry", "nope"]))
+                .cols(KeySel::Prefix("x".into())),
+        );
+    }
+
+    #[test]
+    fn conformance_empty_match() {
+        assert_conformance(
+            &sample(),
+            &TableQuery::all().rows(KeySel::Range("zz".into(), "zzz".into())),
+        );
+    }
+
+    #[test]
+    fn conformance_limit() {
+        assert_conformance(&sample(), &TableQuery::all().limit(3));
+        assert_conformance(
+            &sample(),
+            &TableQuery::all().rows(KeySel::Prefix("b".into())).limit(1),
+        );
+    }
+
+    /// Paged scan: pages respect `page_rows`, are row-disjoint, and
+    /// concatenate to exactly the unpaged query result — on every engine.
+    #[test]
+    fn scan_pages_cover_query() {
+        let a = sample();
+        let q = TableQuery::all().page_rows(2);
+        for db in engines() {
+            let t = db.bind("t", &BindOpts::default()).unwrap();
+            t.put_assoc(&a).unwrap();
+            let mut seen_rows = Vec::new();
+            let mut nnz = 0usize;
+            for page in t.scan(&q).unwrap() {
+                let p = page.unwrap();
+                assert!(p.row_keys().len() <= 2, "{:?}: page too tall", db.kind());
+                seen_rows.extend(p.row_keys().to_vec());
+                nnz += p.nnz();
+            }
+            let mut sorted = seen_rows.clone();
+            sorted.sort();
+            sorted.dedup();
+            assert_eq!(seen_rows.len(), sorted.len(), "{:?}: rows overlap pages", db.kind());
+            assert_eq!(nnz, a.nnz(), "{:?}", db.kind());
+            let collected = t.scan(&q).unwrap().into_assoc().unwrap();
+            assert_eq!(collected.triples(), a.triples(), "{:?}", db.kind());
+        }
+    }
+
+    /// Scanning a string-valued table must not rewrite stored values:
+    /// pages carry raw strings, and assembling them matches `query()` on
+    /// every engine — even when a page's values all look numeric.
+    #[test]
+    fn scan_string_table_matches_query() {
+        let a = Assoc::from_str_triples(&[("r1", "c", "007"), ("r2", "c", "x")]);
+        let q = TableQuery::all().page_rows(1); // the "007" row gets its own page
+        for db in engines() {
+            let t = db.bind("t", &BindOpts::default()).unwrap();
+            t.put_assoc(&a).unwrap();
+            let scanned = t.scan(&q).unwrap().into_assoc().unwrap();
+            let queried = t.query(&q).unwrap();
+            assert!(scanned.is_string_valued(), "{:?}", db.kind());
+            assert_eq!(scanned.str_triples(), queried.str_triples(), "{:?}", db.kind());
+            assert_eq!(scanned.get_str("r1", "c"), Some("007"), "{:?}", db.kind());
+        }
+    }
+
+    #[test]
+    fn scan_respects_selector_and_limit() {
+        let a = sample();
+        let q = TableQuery::all().rows(KeySel::Prefix("b".into())).page_rows(1).limit(2);
+        for db in engines() {
+            let t = db.bind("t", &BindOpts::default()).unwrap();
+            t.put_assoc(&a).unwrap();
+            let got = t.scan(&q).unwrap().into_assoc().unwrap();
+            let want = {
+                let full = a.select_rows(&KeySel::Prefix("b".into()));
+                let tr = full.triples();
+                Assoc::from_triples(&tr[..2.min(tr.len())])
+            };
+            assert_eq!(want.triples(), got.triples(), "{:?}", db.kind());
+        }
+    }
+
+    /// String-valued tables with selectors that make each engine scan a
+    /// *different superset* (full row on Accumulo, coordinate window on
+    /// SciDB, exact predicate on SQL) must still decode identically:
+    /// value typing is inferred on the final result set, never on the
+    /// scanned superset.
+    #[test]
+    fn conformance_string_table_mixed_selectors() {
+        let a = Assoc::from_str_triples(&[
+            ("a", "c1", "7"),
+            ("a", "c2", "x"),
+            ("b", "c1", "y"),
+        ]);
+        let queries = vec![
+            // final set all-numeric-looking -> numeric everywhere
+            TableQuery::all().rows(KeySel::keys(&["a"])).cols(KeySel::keys(&["c1"])),
+            // final set mixed -> string-valued everywhere
+            TableQuery::all().rows(KeySel::keys(&["a"])),
+            // scattered rows skipping the numeric-looking cell
+            TableQuery::all().cols(KeySel::keys(&["c2"])),
+        ];
+        for q in &queries {
+            let mut results: Vec<(DbKind, bool, Vec<(String, String, String)>)> = Vec::new();
+            for db in engines() {
+                let t = db.bind("t", &BindOpts::default()).unwrap();
+                t.put_assoc(&a).unwrap();
+                let got = t.query(q).unwrap();
+                results.push((db.kind(), got.is_string_valued(), got.str_triples()));
+            }
+            let (k0, sv0, t0) = &results[0];
+            for (k, sv, t) in &results[1..] {
+                assert_eq!(sv0, sv, "{k0:?} vs {k:?} typing diverged on {q:?}");
+                assert_eq!(t0, t, "{k0:?} vs {k:?} values diverged on {q:?}");
+            }
+        }
+        // and the all-numeric-looking selection really decodes numeric
+        let q = TableQuery::all().rows(KeySel::keys(&["a"])).cols(KeySel::keys(&["c1"]));
+        for db in engines() {
+            let t = db.bind("t", &BindOpts::default()).unwrap();
+            t.put_assoc(&a).unwrap();
+            let got = t.query(&q).unwrap();
+            assert!(!got.is_string_valued(), "{:?}", db.kind());
+            assert_eq!(got.get("a", "c1"), 7.0, "{:?}", db.kind());
+        }
+    }
+
+    /// A bound-but-never-written table reads as empty on every engine,
+    /// regardless of whether bind materialised storage eagerly.
+    #[test]
+    fn conformance_bound_empty_table_reads() {
+        for db in engines() {
+            let t = db.bind("t", &BindOpts::default()).unwrap();
+            assert_eq!(t.nnz().unwrap(), 0, "{:?}", db.kind());
+            assert!(t.get_assoc().unwrap().is_empty(), "{:?}", db.kind());
+            assert!(t.query(&TableQuery::all()).unwrap().is_empty(), "{:?}", db.kind());
+            assert_eq!(t.scan(&TableQuery::all()).unwrap().count(), 0, "{:?}", db.kind());
+        }
+    }
+
+    /// `put_assoc` replaces previous contents identically on all engines.
+    #[test]
+    fn conformance_put_replaces() {
+        let a1 = Assoc::from_triples(&[("x", "y", 1.0), ("p", "q", 2.0)]);
+        let a2 = Assoc::from_triples(&[("p", "q", 9.0)]);
+        for db in engines() {
+            let t = db.bind("t", &BindOpts::default()).unwrap();
+            t.put_assoc(&a1).unwrap();
+            t.put_assoc(&a2).unwrap();
+            let got = t.get_assoc().unwrap();
+            assert_eq!(a2.triples(), got.triples(), "{:?}", db.kind());
+            assert_eq!(t.nnz().unwrap(), 1, "{:?}", db.kind());
+        }
+    }
+
+    /// `ls`/`exists` enumerate logical tables only — the key-value
+    /// engine's `_T`/`_Deg` companions stay hidden.
+    #[test]
+    fn ls_hides_companion_tables() {
+        let db = AccumuloConnector::new();
+        let t = DbServer::bind(&db, "t", &BindOpts::default()).unwrap();
+        t.put_assoc(&sample()).unwrap();
+        assert_eq!(DbServer::ls(&db), vec!["t".to_string()]);
+        assert!(!db.exists("t_T"));
+        // the physical schema tables are still there underneath
+        assert_eq!(db.store().list_tables().len(), 3);
+    }
+
+    /// The key-value engine's `_T`/`_Deg` schema reservation is enforced
+    /// at bind time, in both directions.
+    #[test]
+    fn bind_rejects_companion_namespace_collisions() {
+        let db = AccumuloConnector::new();
+        DbServer::bind(&db, "foo", &BindOpts::default()).unwrap();
+        assert!(DbServer::bind(&db, "foo_T", &BindOpts::default()).is_err());
+        assert!(DbServer::bind(&db, "foo_Deg", &BindOpts::default()).is_err());
+        // a suffix-shaped name with no base table is a legal logical table
+        let t = DbServer::bind(&db, "data_T", &BindOpts::default()).unwrap();
+        t.put_assoc(&sample()).unwrap();
+        assert!(db.exists("data_T"));
+        // reverse: binding must not adopt a pre-existing independent
+        // table as its schema companion
+        let db2 = AccumuloConnector::new();
+        DbServer::bind(&db2, "bar_T", &BindOpts::default()).unwrap();
+        assert!(DbServer::bind(&db2, "bar", &BindOpts::default()).is_err());
+    }
+
+    /// The `DBserver` namespace surface on all engines.
+    #[test]
+    fn server_namespace_ops() {
+        let a = sample();
+        for db in engines() {
+            let t = db.bind("obj", &BindOpts::default()).unwrap();
+            assert_eq!(t.name(), "obj");
+            t.put_assoc(&a).unwrap();
+            assert!(db.exists("obj"), "{:?}", db.kind());
+            assert_eq!(t.nnz().unwrap(), a.nnz(), "{:?}", db.kind());
+            db.delete_table("obj").unwrap();
+            assert!(!db.exists("obj"), "{:?}", db.kind());
+            assert!(db.delete_table("obj").is_err(), "{:?}", db.kind());
+        }
+    }
+
+    /// Cross-engine translation through the unified API: Accumulo ->
+    /// Assoc -> SciDB -> Assoc -> SQL -> Assoc preserves numeric triples
+    /// (the D4M claim that "the associative array model allows translation
+    /// of data between Accumulo, SciDB and PostGRES") — generically, with
+    /// no engine-specific calls.
     #[test]
     fn cross_engine_roundtrip() {
         let a = Assoc::from_triples(&[
@@ -44,24 +328,40 @@ mod tests {
             ("v001", "v003", 2.0),
             ("v002", "v003", 3.0),
         ]);
+        let mut carried = a.clone();
+        for db in engines() {
+            let t = db.bind("edges", &BindOpts::default()).unwrap();
+            t.put_assoc(&carried).unwrap();
+            carried = t.get_assoc().unwrap();
+            assert_eq!(a.triples(), carried.triples(), "{:?} leg diverged", db.kind());
+        }
+    }
 
-        // Accumulo leg
-        let acc = AccumuloConnector::new();
-        let t = acc.bind("edges", &D4mTableConfig::default()).unwrap();
-        t.put_assoc(&a).unwrap();
-        let a1 = t.get_assoc().unwrap();
-        assert_eq!(a.triples(), a1.triples());
-
-        // SciDB leg
-        let scidb = SciDbConnector::new();
-        scidb.put_assoc("edges_arr", &a1, 64).unwrap();
-        let a2 = scidb.get_assoc("edges_arr").unwrap();
-        assert_eq!(a.triples(), a2.triples());
-
-        // SQL leg
-        let sqldb = SqlConnector::new();
-        sqldb.put_assoc("edges_rel", &a2).unwrap();
-        let a3 = sqldb.get_assoc("edges_rel").unwrap();
-        assert_eq!(a.triples(), a3.triples());
+    /// Same chain for a string-valued (non-numeric) assoc: SciDB carries
+    /// the value dictionary, SQL a TEXT column, Accumulo raw values.
+    #[test]
+    fn cross_engine_roundtrip_strings() {
+        let a = Assoc::from_str_triples(&[
+            ("doc1", "word|cat", "3x"),
+            ("doc2", "word|dog", "1x"),
+            ("doc2", "word|cat", "7x"),
+        ]);
+        let mut carried = a.clone();
+        for db in engines() {
+            let t = db.bind("txt", &BindOpts::default()).unwrap();
+            t.put_assoc(&carried).unwrap();
+            carried = t.get_assoc().unwrap();
+            assert!(carried.is_string_valued(), "{:?} dropped string values", db.kind());
+            assert_eq!(a.str_triples(), carried.str_triples(), "{:?} leg diverged", db.kind());
+        }
+        // and a pushed-down prefix query on the string table agrees too
+        let q = TableQuery::all().cols(KeySel::Prefix("word|c".into()));
+        let want = a.select_cols(&KeySel::Prefix("word|c".into()));
+        for db in engines() {
+            let t = db.bind("txt", &BindOpts::default()).unwrap();
+            t.put_assoc(&a).unwrap();
+            let got = t.query(&q).unwrap();
+            assert_eq!(want.str_triples(), got.str_triples(), "{:?}", db.kind());
+        }
     }
 }

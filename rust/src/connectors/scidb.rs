@@ -2,25 +2,42 @@
 //! associative arrays" (the paper). The connector maps string keys to
 //! dense integer coordinates through per-array dimension dictionaries and
 //! pushes ops (spgemm, filter, subarray) into the store.
+//!
+//! Implements the unified [`DbServer`]/[`DbTable`] binding surface:
+//! [`TableQuery`] selectors are lowered to `subarray` coordinate windows
+//! through the dictionaries, so range/prefix queries only touch the
+//! chunks overlapping the window.
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
 use crate::arraystore::{ArraySchema, ArrayStore, StoredArray};
-use crate::assoc::Assoc;
+use crate::assoc::{Assoc, KeySel};
 use crate::error::{D4mError, Result};
 
+use super::api::{self, AssocPages, BindOpts, DbServer, DbTable, TableQuery};
+use super::DbKind;
+
 /// Per-array key dictionaries: sorted string keys <-> dense coordinates.
+/// `val_keys` carries the value dictionary of string-valued assocs (cells
+/// then store 1-based indices into it), so non-numeric arrays round-trip.
 #[derive(Debug, Clone, Default)]
 pub struct DimDict {
     pub row_keys: Vec<String>,
     pub col_keys: Vec<String>,
+    pub val_keys: Option<Vec<String>>,
+}
+
+struct SciDbInner {
+    store: ArrayStore,
+    dicts: RwLock<HashMap<String, DimDict>>,
 }
 
 /// The SciDB-engine connector (owns the embedded store + dictionaries).
+/// Cloning is cheap and shares the store.
+#[derive(Clone)]
 pub struct SciDbConnector {
-    store: ArrayStore,
-    dicts: RwLock<HashMap<String, DimDict>>,
+    inner: Arc<SciDbInner>,
 }
 
 impl Default for SciDbConnector {
@@ -31,20 +48,44 @@ impl Default for SciDbConnector {
 
 impl SciDbConnector {
     pub fn new() -> Self {
-        SciDbConnector { store: ArrayStore::new(), dicts: RwLock::new(HashMap::new()) }
+        SciDbConnector {
+            inner: Arc::new(SciDbInner {
+                store: ArrayStore::new(),
+                dicts: RwLock::new(HashMap::new()),
+            }),
+        }
     }
 
     pub fn store(&self) -> &ArrayStore {
-        &self.store
+        &self.inner.store
     }
 
     /// Ingest an assoc as a new array with the given chunk size. The
     /// array's dimensions are the assoc's key spaces; values come from
-    /// attribute `"val"`.
+    /// attribute `"val"` (string-valued assocs store value-dictionary
+    /// indices, with the dictionary kept in the [`DimDict`]).
     pub fn put_assoc(&self, name: &str, a: &Assoc, chunk: u64) -> Result<Arc<StoredArray>> {
-        let dict = DimDict { row_keys: a.row_keys().to_vec(), col_keys: a.col_keys().to_vec() };
+        let mut dicts = self.inner.dicts.write().unwrap();
+        self.put_assoc_locked(&mut dicts, name, a, chunk)
+    }
+
+    /// Create + fill the array while the caller holds the dictionary
+    /// write lock, so readers never pair an array with the wrong
+    /// dictionary generation.
+    fn put_assoc_locked(
+        &self,
+        dicts: &mut HashMap<String, DimDict>,
+        name: &str,
+        a: &Assoc,
+        chunk: u64,
+    ) -> Result<Arc<StoredArray>> {
+        let dict = DimDict {
+            row_keys: a.row_keys().to_vec(),
+            col_keys: a.col_keys().to_vec(),
+            val_keys: a.val_keys().map(|v| v.to_vec()),
+        };
         let shape = (dict.row_keys.len().max(1) as u64, dict.col_keys.len().max(1) as u64);
-        let arr = self.store.create(ArraySchema::new(name, shape, chunk, &["val"]))?;
+        let arr = self.inner.store.create(ArraySchema::new(name, shape, chunk, &["val"]))?;
         let cells: Vec<(u64, u64, Vec<f64>)> = a
             .matrix()
             .to_triples()
@@ -52,38 +93,36 @@ impl SciDbConnector {
             .map(|(r, c, v)| (r as u64, c as u64, vec![v]))
             .collect();
         arr.put_batch(cells)?;
-        self.dicts.write().unwrap().insert(name.to_string(), dict);
+        dicts.insert(name.to_string(), dict);
         Ok(arr)
     }
 
     /// Read an array back as an assoc through its dictionaries.
     pub fn get_assoc(&self, name: &str) -> Result<Assoc> {
-        let arr = self.store.array_or_err(name)?;
-        let dict = self
-            .dicts
-            .read()
-            .unwrap()
-            .get(name)
-            .cloned()
-            .ok_or_else(|| D4mError::NotFound(format!("dimension dictionary for {name}")))?;
-        let triples: Vec<(String, String, f64)> = arr
-            .scan_attr("val")?
-            .into_iter()
-            .map(|(i, j, v)| {
-                (dict.row_keys[i as usize].clone(), dict.col_keys[j as usize].clone(), v)
-            })
-            .collect();
-        Ok(Assoc::from_triples(&triples))
+        let (arr, dict) = {
+            // resolve (array, dict) under one read lock — a concurrent
+            // replace swaps both under the write lock, so the pair is
+            // always from one generation
+            let dicts = self.inner.dicts.read().unwrap();
+            let arr = self.inner.store.array_or_err(name)?;
+            let dict = dicts
+                .get(name)
+                .cloned()
+                .ok_or_else(|| D4mError::NotFound(format!("dimension dictionary for {name}")))?;
+            (arr, dict)
+        };
+        let cells = arr.scan_attr("val")?;
+        decode_cells(&dict, &cells)
     }
 
     /// Register a dictionary for an array produced in-store (e.g. by
     /// spgemm) so it can be read back as an assoc.
     pub fn set_dict(&self, name: &str, dict: DimDict) {
-        self.dicts.write().unwrap().insert(name.to_string(), dict);
+        self.inner.dicts.write().unwrap().insert(name.to_string(), dict);
     }
 
     pub fn dict(&self, name: &str) -> Option<DimDict> {
-        self.dicts.read().unwrap().get(name).cloned()
+        self.inner.dicts.read().unwrap().get(name).cloned()
     }
 
     /// In-database matrix multiply of two ingested assocs: runs
@@ -101,8 +140,11 @@ impl SciDbConnector {
                 "spgemm inner dictionaries differ; ingest aligned arrays first".into(),
             ));
         }
-        self.store.spgemm(a, b, out)?;
-        self.set_dict(out, DimDict { row_keys: da.row_keys, col_keys: db.col_keys });
+        self.inner.store.spgemm(a, b, out)?;
+        self.set_dict(
+            out,
+            DimDict { row_keys: da.row_keys, col_keys: db.col_keys, val_keys: None },
+        );
         self.get_assoc(out)
     }
 
@@ -113,19 +155,205 @@ impl SciDbConnector {
         // align: restrict A's cols and B's rows to the shared key set
         let (inner, _, _) =
             crate::util::intersect_sorted_keys(a.col_keys(), b.row_keys());
-        let a_aligned = a.select_cols(&crate::assoc::KeySel::Keys(inner.clone()));
-        let b_aligned = b.select_rows(&crate::assoc::KeySel::Keys(inner));
+        let a_aligned = a.select_cols(&KeySel::Keys(inner.clone()));
+        let b_aligned = b.select_rows(&KeySel::Keys(inner));
         // re-intersect after compaction (some keys may have emptied)
         let (inner2, _, _) =
             crate::util::intersect_sorted_keys(a_aligned.col_keys(), b_aligned.row_keys());
-        let a_aligned = a_aligned.select_cols(&crate::assoc::KeySel::Keys(inner2.clone()));
-        let b_aligned = b_aligned.select_rows(&crate::assoc::KeySel::Keys(inner2));
+        let a_aligned = a_aligned.select_cols(&KeySel::Keys(inner2.clone()));
+        let b_aligned = b_aligned.select_rows(&KeySel::Keys(inner2));
         if a_aligned.col_keys() != b_aligned.row_keys() {
             return Err(D4mError::Shape("alignment failed".into()));
         }
         self.put_assoc(&format!("{prefix}_a"), &a_aligned, chunk)?;
         self.put_assoc(&format!("{prefix}_b"), &b_aligned, chunk)?;
         self.spgemm(&format!("{prefix}_a"), &format!("{prefix}_b"), &format!("{prefix}_c"))
+    }
+}
+
+/// Decode `(i, j, cell)` coordinates into raw `(row, col, value)` string
+/// triples through a dictionary (string-valued arrays resolve their
+/// value dictionary; numeric arrays render the number).
+fn decode_cells_raw(
+    dict: &DimDict,
+    cells: &[(u64, u64, f64)],
+) -> Result<Vec<(String, String, String)>> {
+    let key = |ks: &[String], i: u64| -> Result<String> {
+        ks.get(i as usize)
+            .cloned()
+            .ok_or_else(|| D4mError::Parse(format!("coordinate {i} outside dictionary")))
+    };
+    let mut t: Vec<(String, String, String)> = Vec::with_capacity(cells.len());
+    for &(i, j, v) in cells {
+        let s = match &dict.val_keys {
+            Some(vals) => (v as usize)
+                .checked_sub(1)
+                .and_then(|k| vals.get(k))
+                .cloned()
+                .ok_or_else(|| {
+                    D4mError::Parse(format!("value index {v} outside value dictionary"))
+                })?,
+            None => crate::assoc::io::fmt_num(v),
+        };
+        t.push((key(&dict.row_keys, i)?, key(&dict.col_keys, j)?, s));
+    }
+    Ok(t)
+}
+
+/// Decode into an assoc, with the same string/numeric inference as the
+/// other engines (unified-API conformance).
+fn decode_cells(dict: &DimDict, cells: &[(u64, u64, f64)]) -> Result<Assoc> {
+    crate::assoc::io::parse_triples(decode_cells_raw(dict, cells)?)
+}
+
+/// `T(r, c)` query against one pinned array generation (handle +
+/// dictionary resolved together by the caller), so reads never mix table
+/// states when a concurrent `put_assoc` swaps the array.
+fn scidb_query_pinned(arr: &StoredArray, dict: &DimDict, q: &TableQuery) -> Result<Assoc> {
+    let rb = api::matched_bounds(&dict.row_keys, &q.rows);
+    let cb = api::matched_bounds(&dict.col_keys, &q.cols);
+    let ((r0, r1), (c0, c1)) = match (rb, cb) {
+        (Some(r), Some(c)) => (r, c),
+        _ => return Ok(Assoc::empty()),
+    };
+    let window = arr.subarray((r0 as u64, c0 as u64), (r1 as u64, c1 as u64))?;
+    let cells: Vec<(u64, u64, f64)> =
+        window.into_iter().map(|(i, j, cell)| (i, j, cell[0])).collect();
+    let a = decode_cells(dict, &cells)?;
+    Ok(api::finish(a, q))
+}
+
+/// A bound SciDB array (created lazily at first `put_assoc`, since the
+/// array schema depends on the assoc's key spaces).
+pub struct SciDbTable {
+    name: String,
+    chunk: u64,
+    conn: SciDbConnector,
+}
+
+impl SciDbTable {
+    /// Atomically resolve one `(array, dictionary)` generation under the
+    /// dictionary read lock (replaces hold the write lock across their
+    /// whole swap). `Ok(None)` = bound but never written.
+    fn pin(&self) -> Result<Option<(Arc<StoredArray>, DimDict)>> {
+        let dicts = self.conn.inner.dicts.read().unwrap();
+        let arr = match self.conn.inner.store.array(&self.name) {
+            Some(a) => a,
+            None => return Ok(None),
+        };
+        let dict = dicts.get(&self.name).cloned().ok_or_else(|| {
+            D4mError::NotFound(format!("dimension dictionary for {}", self.name))
+        })?;
+        Ok(Some((arr, dict)))
+    }
+}
+
+impl DbTable for SciDbTable {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn put_assoc(&self, a: &Assoc) -> Result<()> {
+        // create-once storage: replace previous contents. The whole
+        // remove/drop/create/fill swap happens under the dictionary
+        // write lock, so readers (which resolve under the read lock)
+        // always see one consistent generation.
+        let mut dicts = self.conn.inner.dicts.write().unwrap();
+        dicts.remove(&self.name);
+        let _ = self.conn.inner.store.drop_array(&self.name);
+        self.conn.put_assoc_locked(&mut dicts, &self.name, a, self.chunk).map(|_| ())
+    }
+
+    fn get_assoc(&self) -> Result<Assoc> {
+        match self.pin()? {
+            Some((arr, dict)) => {
+                let cells = arr.scan_attr("val")?;
+                decode_cells(&dict, &cells)
+            }
+            None => Ok(Assoc::empty()), // bound but never written
+        }
+    }
+
+    fn nnz(&self) -> Result<usize> {
+        // consistent with the read path: an array whose dictionary is
+        // missing is unreadable, so nnz errors the same way get_assoc does
+        match self.pin()? {
+            Some((arr, _)) => Ok(arr.count()),
+            None => Ok(0),
+        }
+    }
+
+    fn query(&self, q: &TableQuery) -> Result<Assoc> {
+        match self.pin()? {
+            Some((arr, dict)) => scidb_query_pinned(&arr, &dict, q),
+            None => Ok(Assoc::empty()),
+        }
+    }
+
+    fn scan(&self, q: &TableQuery) -> Result<AssocPages> {
+        // pin one table generation (array handle + dictionary): a
+        // concurrent put_assoc swaps the array, and re-resolving per
+        // page would silently mix the two states
+        let (arr, dict) = match self.pin()? {
+            Some(p) => p,
+            None => return Ok(api::empty_pages(q)), // bound but never written
+        };
+        let rows: Vec<String> =
+            dict.row_keys.iter().filter(|k| q.rows.matches(k)).cloned().collect();
+        let col_sel = q.cols.clone();
+        // the column window never changes across pages — compute it once
+        let cb = api::matched_bounds(&dict.col_keys, &q.cols);
+        let fetch = Box::new(move |page: &[String]| {
+            // raw page: window the store to the page rows (binary search —
+            // page keys come from this pinned dict, sorted), decode
+            // without numeric inference, filter rows by O(1) membership
+            let (c0, c1) = match cb {
+                Some(c) => c,
+                None => return Ok(Assoc::empty()),
+            };
+            let (r0, r1) = match (
+                dict.row_keys.binary_search(&page[0]),
+                dict.row_keys.binary_search(&page[page.len() - 1]),
+            ) {
+                (Ok(a), Ok(b)) => (a, b),
+                _ => return Ok(Assoc::empty()),
+            };
+            let window = arr.subarray((r0 as u64, c0 as u64), (r1 as u64, c1 as u64))?;
+            let cells: Vec<(u64, u64, f64)> =
+                window.into_iter().map(|(i, j, cell)| (i, j, cell[0])).collect();
+            let raw = decode_cells_raw(&dict, &cells)?;
+            let keys: std::collections::HashSet<&str> =
+                page.iter().map(String::as_str).collect();
+            let kept: Vec<(String, String, String)> = raw
+                .into_iter()
+                .filter(|(r, c, _)| keys.contains(r.as_str()) && col_sel.matches(c))
+                .collect();
+            Ok(Assoc::from_str_triples(&kept))
+        });
+        Ok(AssocPages::over_rows(rows, q.page_rows, q.limit, fetch))
+    }
+}
+
+impl DbServer for SciDbConnector {
+    fn kind(&self) -> DbKind {
+        DbKind::SciDb
+    }
+
+    fn ls(&self) -> Vec<String> {
+        self.inner.store.list()
+    }
+
+    fn delete_table(&self, name: &str) -> Result<()> {
+        self.inner.dicts.write().unwrap().remove(name);
+        self.inner.store.drop_array(name)
+    }
+
+    fn bind(&self, name: &str, opts: &BindOpts) -> Result<Box<dyn DbTable>> {
+        Ok(Box::new(SciDbTable {
+            name: name.to_string(),
+            chunk: opts.chunk.max(1),
+            conn: self.clone(),
+        }))
     }
 }
 
@@ -140,6 +368,17 @@ mod tests {
         c.put_assoc("arr", &a, 16).unwrap();
         let b = c.get_assoc("arr").unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn string_values_roundtrip_via_value_dictionary() {
+        let c = SciDbConnector::new();
+        let a = Assoc::from_str_triples(&[("r1", "c1", "red"), ("r2", "c2", "blue")]);
+        c.put_assoc("strs", &a, 8).unwrap();
+        let b = c.get_assoc("strs").unwrap();
+        assert!(b.is_string_valued());
+        assert_eq!(b.get_str("r1", "c1"), Some("red"));
+        assert_eq!(b.get_str("r2", "c2"), Some("blue"));
     }
 
     #[test]
@@ -185,5 +424,16 @@ mod tests {
             .create(crate::arraystore::ArraySchema::new("raw", (4, 4), 2, &["val"]))
             .unwrap();
         assert!(c.get_assoc("raw").is_err());
+    }
+
+    #[test]
+    fn rebind_put_replaces_contents() {
+        let c = SciDbConnector::new();
+        let t = DbServer::bind(&c, "arr", &BindOpts::default()).unwrap();
+        t.put_assoc(&Assoc::from_triples(&[("a", "b", 1.0)])).unwrap();
+        t.put_assoc(&Assoc::from_triples(&[("x", "y", 9.0)])).unwrap();
+        let back = t.get_assoc().unwrap();
+        assert_eq!(back.nnz(), 1);
+        assert_eq!(back.get("x", "y"), 9.0);
     }
 }

@@ -2,16 +2,25 @@
 //! `(row_key TEXT, col_key TEXT, val FLOAT | val_txt TEXT)` triple table —
 //! the natural relational projection of an associative array — and reads
 //! it back, optionally through WHERE predicates pushed into the engine.
+//!
+//! Implements the unified [`DbServer`]/[`DbTable`] binding surface:
+//! [`TableQuery`] selectors are lowered to WHERE predicates on the
+//! `row_key`/`col_key` columns, evaluated inside the engine.
 
 use std::sync::Arc;
 
 use crate::assoc::Assoc;
 use crate::error::Result;
-use crate::relational::{ColType, Predicate, RelDb, RelTable, SqlValue, TableSchema};
+use crate::relational::{ColType, Predicate, RelDb, RelTable, Row, SqlValue, TableSchema};
+
+use super::api::{self, AssocPages, BindOpts, DbServer, DbTable, TableQuery};
+use super::DbKind;
 
 /// The SQL-engine connector (owns the embedded relational database).
+/// Cloning is cheap and shares the database.
+#[derive(Clone)]
 pub struct SqlConnector {
-    db: RelDb,
+    db: Arc<RelDb>,
 }
 
 impl Default for SqlConnector {
@@ -22,7 +31,7 @@ impl Default for SqlConnector {
 
 impl SqlConnector {
     pub fn new() -> Self {
-        SqlConnector { db: RelDb::new() }
+        SqlConnector { db: Arc::new(RelDb::new()) }
     }
 
     pub fn db(&self) -> &RelDb {
@@ -68,23 +77,137 @@ impl SqlConnector {
 
     /// Read with a WHERE predicate evaluated inside the engine.
     pub fn get_assoc_where(&self, name: &str, pred: Option<&Predicate>) -> Result<Assoc> {
-        let t = self.db.table_or_err(name)?;
-        let is_text = t.schema.col_index("val_txt").is_some();
-        let rows = t.select(None, pred, None)?;
-        let triples: Vec<(String, String, String)> = rows
-            .into_iter()
-            .map(|r| {
-                let row = r[0].as_text().unwrap_or("").to_string();
-                let col = r[1].as_text().unwrap_or("").to_string();
-                let val = if is_text {
-                    r[2].as_text().unwrap_or("").to_string()
-                } else {
-                    crate::assoc::io::fmt_num(r[2].as_f64().unwrap_or(0.0))
-                };
-                (row, col, val)
-            })
+        select_to_assoc(&self.db.table_or_err(name)?, pred)
+    }
+}
+
+/// SELECT through `pred` on one pinned table handle, as raw string
+/// triples (TEXT tables keep stored values verbatim; FLOAT tables render
+/// the number).
+fn select_to_raw_triples(
+    t: &RelTable,
+    pred: Option<&Predicate>,
+) -> Result<Vec<(String, String, String)>> {
+    let is_text = t.schema.col_index("val_txt").is_some();
+    let rows = t.select(None, pred, None)?;
+    Ok(rows
+        .into_iter()
+        .map(|r| {
+            let row = r[0].as_text().unwrap_or("").to_string();
+            let col = r[1].as_text().unwrap_or("").to_string();
+            let val = if is_text {
+                r[2].as_text().unwrap_or("").to_string()
+            } else {
+                crate::assoc::io::fmt_num(r[2].as_f64().unwrap_or(0.0))
+            };
+            (row, col, val)
+        })
+        .collect())
+}
+
+/// SELECT + decode into an assoc (numeric when every value parses).
+fn select_to_assoc(t: &RelTable, pred: Option<&Predicate>) -> Result<Assoc> {
+    crate::assoc::io::parse_triples(select_to_raw_triples(t, pred)?)
+}
+
+/// `T(r, c)` against a triple table: selectors become a WHERE predicate
+/// on the key columns, evaluated inside the engine.
+fn sql_query(conn: &SqlConnector, name: &str, q: &TableQuery) -> Result<Assoc> {
+    let t = match conn.db.table(name) {
+        Some(t) => t,
+        None => return Ok(Assoc::empty()), // bound but never written
+    };
+    let row_sel = q.rows.clone();
+    let col_sel = q.cols.clone();
+    let pred: Predicate = Box::new(move |r: &Row| {
+        row_sel.matches(r[0].as_text().unwrap_or(""))
+            && col_sel.matches(r[1].as_text().unwrap_or(""))
+    });
+    let a = select_to_assoc(&t, Some(&pred))?;
+    Ok(api::finish(a, q))
+}
+
+/// A bound triple table (created lazily at first `put_assoc`, since the
+/// value column type depends on the assoc).
+pub struct SqlTable {
+    name: String,
+    conn: SqlConnector,
+}
+
+impl DbTable for SqlTable {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn put_assoc(&self, a: &Assoc) -> Result<()> {
+        // create-once storage: replace previous contents (unconditional
+        // drop — no exists-then-drop window for a racing writer to hit)
+        let _ = self.conn.db.drop_table(&self.name);
+        self.conn.put_assoc(&self.name, a).map(|_| ())
+    }
+
+    fn get_assoc(&self) -> Result<Assoc> {
+        match self.conn.db.table(&self.name) {
+            Some(t) => select_to_assoc(&t, None),
+            None => Ok(Assoc::empty()), // bound but never written
+        }
+    }
+
+    fn nnz(&self) -> Result<usize> {
+        Ok(self.conn.db.table(&self.name).map(|t| t.count()).unwrap_or(0))
+    }
+
+    fn query(&self, q: &TableQuery) -> Result<Assoc> {
+        sql_query(&self.conn, &self.name, q)
+    }
+
+    fn scan(&self, q: &TableQuery) -> Result<AssocPages> {
+        // pin one table generation (put_assoc swaps the table handle on
+        // replace) and snapshot matching row keys via a projected SELECT
+        let t = match self.conn.db.table(&self.name) {
+            Some(t) => t,
+            None => return Ok(api::empty_pages(q)), // bound but never written
+        };
+        let key_rows = t.select(Some(&["row_key"]), None, None)?;
+        let rows: Vec<String> = key_rows
+            .iter()
+            .filter_map(|r| r[0].as_text())
+            .filter(|k| q.rows.matches(k))
+            .map(str::to_string)
             .collect();
-        crate::assoc::io::parse_triples(triples)
+        let col_sel = q.cols.clone();
+        let fetch = Box::new(move |page: &[String]| {
+            // O(1) page-membership test per stored row (the engine has no
+            // key index, so each page costs one predicate scan)
+            let keys: std::collections::HashSet<String> = page.iter().cloned().collect();
+            let col_sel_pred = col_sel.clone();
+            let pred: Predicate = Box::new(move |r: &Row| {
+                r[0].as_text().map(|k| keys.contains(k)).unwrap_or(false)
+                    && col_sel_pred.matches(r[1].as_text().unwrap_or(""))
+            });
+            // the predicate already applied both selectors exactly; build
+            // a raw page — no numeric inference on stored values
+            Ok(Assoc::from_str_triples(&select_to_raw_triples(&t, Some(&pred))?))
+        });
+        Ok(AssocPages::over_rows(rows, q.page_rows, q.limit, fetch))
+    }
+}
+
+impl DbServer for SqlConnector {
+    fn kind(&self) -> DbKind {
+        DbKind::Sql
+    }
+
+    fn ls(&self) -> Vec<String> {
+        self.db.list()
+    }
+
+    fn delete_table(&self, name: &str) -> Result<()> {
+        self.db.drop_table(name)
+    }
+
+    fn bind(&self, name: &str, _opts: &BindOpts) -> Result<Box<dyn DbTable>> {
+        Ok(Box::new(SqlTable { name: name.to_string(), conn: self.clone() }))
     }
 }
 
@@ -124,5 +247,16 @@ mod tests {
     fn missing_table_errors() {
         let c = SqlConnector::new();
         assert!(c.get_assoc("nope").is_err());
+    }
+
+    #[test]
+    fn rebind_put_replaces_contents() {
+        let c = SqlConnector::new();
+        let t = c.bind("t", &BindOpts::default()).unwrap();
+        t.put_assoc(&Assoc::from_triples(&[("a", "b", 1.0)])).unwrap();
+        t.put_assoc(&Assoc::from_str_triples(&[("x", "y", "z")])).unwrap();
+        let back = t.get_assoc().unwrap();
+        assert!(back.is_string_valued());
+        assert_eq!(back.get_str("x", "y"), Some("z"));
     }
 }

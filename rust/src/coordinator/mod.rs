@@ -1,8 +1,16 @@
 //! The D4M coordinator — the L3 server tying everything together: a
-//! table registry over the three engines, a typed request/response API,
-//! an ingest batcher, and per-op metrics. `main.rs` exposes it as a CLI;
+//! table registry over the engines, a typed request/response API, an
+//! ingest batcher, and per-op metrics. `main.rs` exposes it as a CLI;
 //! [`D4mServer::handle`] is the single entry point a network front-end
 //! would call.
+//!
+//! The registry holds [`DbTable`] **trait objects**, so the query path is
+//! engine-generic: `Request::Query` carries a [`TableQuery`] whose
+//! selectors are pushed down by whichever engine owns the binding. The
+//! Graphulo requests (TableMult/BFS/Jaccard/k-truss/PageRank) are
+//! in-database algorithms of the key-value substrate and keep their
+//! native Accumulo handles — they are server-side iterators, not
+//! put/get/query dispatch.
 
 pub mod batcher;
 
@@ -11,10 +19,10 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::assoc::Assoc;
-use crate::connectors::{AccumuloConnector, D4mTable, D4mTableConfig};
+use crate::connectors::{AccumuloConnector, D4mTable, D4mTableConfig, DbTable, TableQuery};
 use crate::error::{D4mError, Result};
 use crate::graphulo::{self, ClientCtx, TableMultOpts};
-use crate::kvstore::{KvStore, RowRange};
+use crate::kvstore::{KvStore, Table};
 use crate::metrics::{Histogram, RateMeter, Snapshot};
 use crate::pipeline::{IngestPipeline, IngestReport, PipelineConfig, TripleMsg};
 use crate::runtime::PjrtEngine;
@@ -25,10 +33,10 @@ pub enum Request {
     CreateTable { name: String, splits: Vec<String> },
     /// Ingest triples through the parallel pipeline.
     Ingest { table: String, triples: Vec<TripleMsg>, pipeline: PipelineConfig },
-    /// Read a row range as an assoc.
-    Query { table: String, range: RowRange },
-    /// Column query (via the transpose table).
-    QueryByCol { table: String, range: RowRange },
+    /// The unified `T(r, c)` query: row/col selectors + limit, pushed
+    /// down through the table's [`DbTable`] binding (column selectors
+    /// route through the transpose table on the key-value engine).
+    Query { table: String, query: TableQuery },
     /// Server-side Graphulo TableMult: `out += A^T B`.
     TableMult { a: String, b: String, out: String },
     /// Client-side D4M TableMult with a RAM budget.
@@ -60,11 +68,28 @@ pub enum Response {
 }
 
 impl Response {
-    /// Unwrap an assoc response (panics on type mismatch — test helper).
-    pub fn into_assoc(self) -> Assoc {
+    /// Unwrap an assoc response; a typed error on variant mismatch.
+    pub fn into_assoc(self) -> Result<Assoc> {
         match self {
-            Response::Assoc(a) => a,
-            other => panic!("expected Assoc response, got {other:?}"),
+            Response::Assoc(a) => Ok(a),
+            other => Err(D4mError::InvalidArg(format!(
+                "expected Assoc response, got {}",
+                other.variant_name()
+            ))),
+        }
+    }
+
+    /// Short variant tag for error messages (the payloads can be huge —
+    /// never Debug-print them into an error string).
+    fn variant_name(&self) -> &'static str {
+        match self {
+            Response::Ok => "Ok",
+            Response::Tables(_) => "Tables",
+            Response::Ingested(_) => "Ingested",
+            Response::Assoc(_) => "Assoc",
+            Response::Distances(_) => "Distances",
+            Response::Ranks(_) => "Ranks",
+            Response::MultStats(_) => "MultStats",
         }
     }
 }
@@ -72,7 +97,8 @@ impl Response {
 /// The coordinator.
 pub struct D4mServer {
     acc: AccumuloConnector,
-    tables: Mutex<HashMap<String, Arc<D4mTable>>>,
+    /// Bound tables, as engine-generic trait objects.
+    tables: Mutex<HashMap<String, Arc<dyn DbTable>>>,
     engine: Option<PjrtEngine>,
     /// Per-op latency histograms, keyed by op name.
     op_stats: Mutex<HashMap<&'static str, Arc<Histogram>>>,
@@ -117,18 +143,24 @@ impl D4mServer {
             .clone()
     }
 
-    fn bind(&self, name: &str, splits: Vec<String>) -> Result<Arc<D4mTable>> {
-        let mut tables = self.tables.lock().unwrap();
-        if let Some(t) = tables.get(name) {
-            return Ok(t.clone());
-        }
+    /// Bind a table on the resident key-value engine, registering the
+    /// binding in the trait-object registry. Returns the concrete handle
+    /// for the ingest pipeline (which needs the schema-fanout writer).
+    fn bind_d4m(&self, name: &str, splits: Vec<String>) -> Result<Arc<D4mTable>> {
         let cfg = D4mTableConfig { splits, ..Default::default() };
         let t = Arc::new(self.acc.bind(name, &cfg)?);
-        tables.insert(name.to_string(), t.clone());
+        self.tables
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| {
+                let dt: Arc<dyn DbTable> = t.clone();
+                dt
+            });
         Ok(t)
     }
 
-    fn bound(&self, name: &str) -> Result<Arc<D4mTable>> {
+    fn bound(&self, name: &str) -> Result<Arc<dyn DbTable>> {
         self.tables
             .lock()
             .unwrap()
@@ -137,89 +169,96 @@ impl D4mServer {
             .ok_or_else(|| D4mError::NotFound(format!("table {name} not bound")))
     }
 
+    /// Native substrate table of a bound name (Graphulo operand).
+    fn main_table(&self, name: &str) -> Result<Arc<Table>> {
+        self.bound(name)?;
+        self.acc.store().table_or_err(name)
+    }
+
+    /// Native degree table of a bound name.
+    fn degree_table(&self, name: &str) -> Result<Arc<Table>> {
+        self.bound(name)?;
+        self.acc.store().table(&format!("{name}_Deg")).ok_or_else(|| {
+            D4mError::InvalidArg(format!("table {name} has no degree table"))
+        })
+    }
+
     /// Serve one request.
     pub fn handle(&self, req: Request) -> Result<Response> {
         self.requests.add(1);
         match req {
             Request::CreateTable { name, splits } => {
-                self.hist("create").time(|| self.bind(&name, splits))?;
+                self.hist("create").time(|| self.bind_d4m(&name, splits))?;
                 Ok(Response::Ok)
             }
             Request::Ingest { table, triples, pipeline } => {
-                let t = self.bind(&table, vec![])?;
+                let t = self.bind_d4m(&table, vec![])?;
                 let h = self.hist("ingest");
                 let report =
                     h.time(|| IngestPipeline::new(t, pipeline).run(triples.into_iter()))?;
                 Ok(Response::Ingested(report))
             }
-            Request::Query { table, range } => {
+            Request::Query { table, query } => {
                 let t = self.bound(&table)?;
-                let a = self.hist("query").time(|| t.get_assoc_range(&range))?;
-                Ok(Response::Assoc(a))
-            }
-            Request::QueryByCol { table, range } => {
-                let t = self.bound(&table)?;
-                let a = self.hist("query_col").time(|| t.get_assoc_by_col(&range))?;
+                let a = self.hist("query").time(|| t.query(&query))?;
                 Ok(Response::Assoc(a))
             }
             Request::TableMult { a, b, out } => {
-                let ta = self.bound(&a)?;
-                let tb = self.bound(&b)?;
+                let ta = self.main_table(&a)?;
+                let tb = self.main_table(&b)?;
                 let store = self.acc.store();
                 let tc = store.ensure_table(&out, vec![]);
                 let stats = self.hist("tablemult_server").time(|| {
-                    graphulo::table_mult(&ta.main(), &tb.main(), &tc, &TableMultOpts::default())
+                    graphulo::table_mult(&ta, &tb, &tc, &TableMultOpts::default())
                 })?;
                 Ok(Response::MultStats(stats))
             }
             Request::TableMultClient { a, b, memory_limit } => {
-                let ta = self.bound(&a)?;
-                let tb = self.bound(&b)?;
+                let ta = self.main_table(&a)?;
+                let tb = self.main_table(&b)?;
                 let ctx = ClientCtx::with_limit(memory_limit);
                 let c = self
                     .hist("tablemult_client")
-                    .time(|| ctx.table_mult(&ta.main(), &tb.main()))?;
+                    .time(|| ctx.table_mult(&ta, &tb))?;
                 Ok(Response::Assoc(c))
             }
             Request::TableMultDense { a, b, tile } => {
-                let ta = self.bound(&a)?;
-                let tb = self.bound(&b)?;
-                let aa = ClientCtx::default().read_table(&ta.main())?;
-                let bb = ClientCtx::default().read_table(&tb.main())?;
+                let ta = self.main_table(&a)?;
+                let tb = self.main_table(&b)?;
+                let aa = ClientCtx::default().read_table(&ta)?;
+                let bb = ClientCtx::default().read_table(&tb)?;
                 let c = self.hist("tablemult_dense").time(|| {
                     crate::runtime::blocks::assoc_matmul_auto(self.engine.as_ref(), &aa, &bb, tile)
                 })?;
                 Ok(Response::Assoc(c))
             }
             Request::Bfs { table, seeds, hops } => {
-                let t = self.bound(&table)?;
-                let d = self.hist("bfs").time(|| graphulo::bfs_server(&t.main(), &seeds, hops));
+                let t = self.main_table(&table)?;
+                let d = self.hist("bfs").time(|| graphulo::bfs_server(&t, &seeds, hops));
                 Ok(Response::Distances(d))
             }
             Request::Jaccard { table, out } => {
-                let t = self.bound(&table)?;
-                let deg = t.degree_table().ok_or_else(|| {
-                    D4mError::InvalidArg(format!("table {table} has no degree table"))
-                })?;
+                let t = self.main_table(&table)?;
+                let deg = self.degree_table(&table)?;
                 let store = self.acc.store();
                 let a = self
                     .hist("jaccard")
-                    .time(|| graphulo::jaccard_server(&store, &t.main(), &deg, &out))?;
+                    .time(|| graphulo::jaccard_server(&store, &t, &deg, &out))?;
                 Ok(Response::Assoc(a))
             }
             Request::KTruss { table, k } => {
-                let t = self.bound(&table)?;
+                let t = self.main_table(&table)?;
                 let store = self.acc.store();
                 let a = self.hist("ktruss").time(|| -> Result<Assoc> {
                     let sym =
-                        graphulo::symmetrise_table(&store, &t.main(), &format!("{table}_sym"))?;
+                        graphulo::symmetrise_table(&store, &t, &format!("{table}_sym"))?;
                     graphulo::ktruss_server(&store, &sym, k, &format!("{table}_kt"))
                 })?;
                 Ok(Response::Assoc(a))
             }
             Request::PageRank { table, opts } => {
-                let t = self.bound(&table)?;
-                let r = self.hist("pagerank").time(|| graphulo::pagerank_server(&t.main(), &opts));
+                let t = self.main_table(&table)?;
+                let r = self.hist("pagerank").time(|| graphulo::pagerank_server(&t, &opts));
                 Ok(Response::Ranks(r))
             }
             Request::ListTables => Ok(Response::Tables(self.acc.store().list_tables())),
@@ -253,6 +292,7 @@ impl Default for D4mServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assoc::KeySel;
 
     fn server_with_graph() -> D4mServer {
         let s = D4mServer::with_engine(None);
@@ -275,9 +315,10 @@ mod tests {
     fn ingest_then_query() {
         let s = server_with_graph();
         let a = s
-            .handle(Request::Query { table: "G".into(), range: RowRange::all() })
+            .handle(Request::Query { table: "G".into(), query: TableQuery::all() })
             .unwrap()
-            .into_assoc();
+            .into_assoc()
+            .unwrap();
         assert_eq!(a.nnz(), 4);
     }
 
@@ -285,10 +326,35 @@ mod tests {
     fn query_by_col_via_transpose() {
         let s = server_with_graph();
         let a = s
-            .handle(Request::QueryByCol { table: "G".into(), range: RowRange::single("c") })
+            .handle(Request::Query {
+                table: "G".into(),
+                query: TableQuery::all().cols(KeySel::keys(&["c"])),
+            })
             .unwrap()
-            .into_assoc();
+            .into_assoc()
+            .unwrap();
         assert_eq!(a.nnz(), 2); // b->c and a->c
+    }
+
+    #[test]
+    fn query_row_range_pushdown() {
+        let s = server_with_graph();
+        let a = s
+            .handle(Request::Query {
+                table: "G".into(),
+                query: TableQuery::all().rows(KeySel::Range("a".into(), "b".into())),
+            })
+            .unwrap()
+            .into_assoc()
+            .unwrap();
+        assert_eq!(a.nnz(), 3); // a->b, a->c, b->c
+    }
+
+    #[test]
+    fn into_assoc_mismatch_is_error_not_panic() {
+        let s = server_with_graph();
+        let r = s.handle(Request::ListTables).unwrap();
+        assert!(matches!(r.into_assoc(), Err(D4mError::InvalidArg(_))));
     }
 
     #[test]
@@ -308,7 +374,8 @@ mod tests {
                 memory_limit: usize::MAX,
             })
             .unwrap()
-            .into_assoc();
+            .into_assoc()
+            .unwrap();
         let server = graphulo::read_product(&s.store().table("C").unwrap()).unwrap();
         assert_eq!(client.triples(), server.triples());
     }
@@ -344,9 +411,14 @@ mod tests {
         let j = s
             .handle(Request::Jaccard { table: "G".into(), out: "J".into() })
             .unwrap()
-            .into_assoc();
+            .into_assoc()
+            .unwrap();
         assert!(!j.is_empty());
-        let kt = s.handle(Request::KTruss { table: "G".into(), k: 3 }).unwrap().into_assoc();
+        let kt = s
+            .handle(Request::KTruss { table: "G".into(), k: 3 })
+            .unwrap()
+            .into_assoc()
+            .unwrap();
         // the a-b-c triangle survives
         assert_eq!(kt.get("a", "b"), 1.0);
         assert_eq!(kt.get("c", "d"), 0.0);
@@ -356,14 +428,14 @@ mod tests {
     fn unknown_table_errors() {
         let s = D4mServer::with_engine(None);
         assert!(s
-            .handle(Request::Query { table: "nope".into(), range: RowRange::all() })
+            .handle(Request::Query { table: "nope".into(), query: TableQuery::all() })
             .is_err());
     }
 
     #[test]
     fn metrics_populate() {
         let s = server_with_graph();
-        s.handle(Request::Query { table: "G".into(), range: RowRange::all() }).unwrap();
+        s.handle(Request::Query { table: "G".into(), query: TableQuery::all() }).unwrap();
         let snaps = s.snapshots();
         assert!(snaps.iter().any(|x| x.name == "ingest"));
         assert!(snaps.iter().any(|x| x.name == "query"));

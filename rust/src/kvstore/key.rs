@@ -107,6 +107,13 @@ impl RowRange {
         RowRange { start: Some(row.to_string()), end: Some(format!("{row}\0")) }
     }
 
+    /// Inclusive range `[start, end]` (the half-open end is pushed just
+    /// past `end` by appending the lowest following string).
+    pub fn inclusive(start: impl Into<String>, end: impl Into<String>) -> Self {
+        let end = end.into();
+        RowRange { start: Some(start.into()), end: Some(format!("{end}\0")) }
+    }
+
     pub fn contains(&self, row: &str) -> bool {
         if let Some(s) = &self.start {
             if row < s.as_str() {

@@ -10,8 +10,10 @@
 //!   tablets, LSM write path and the server-side iterator framework.
 //! * [`arraystore`] — a SciDB-class chunked array store with in-store ops.
 //! * [`relational`] — a PostGRES/MySQL-class typed-column engine.
-//! * [`connectors`] — D4M database bindings: the D4M 2.0 Accumulo schema,
-//!   SciDB and SQL connectors, assoc ⇄ engine translation.
+//! * [`connectors`] — D4M database bindings behind one object-safe
+//!   [`DbServer`]/[`DbTable`] trait surface: the D4M 2.0 Accumulo schema,
+//!   SciDB and SQL connectors, assoc ⇄ engine translation, selector
+//!   pushdown ([`TableQuery`]) and paged scans.
 //! * [`graphulo`] — in-database GraphBLAS: server-side TableMult (SpGEMM),
 //!   BFS, Jaccard and k-truss, plus client-side reference versions.
 //! * [`pipeline`] — the streaming ingest orchestrator (sharding, bounded
@@ -41,4 +43,5 @@ pub mod runtime;
 pub mod util;
 
 pub use assoc::{Assoc, KeySel};
+pub use connectors::{BindOpts, DbServer, DbTable, TableQuery};
 pub use error::{D4mError, Result};

@@ -111,7 +111,8 @@ fn cmd_tablemult(flags: HashMap<String, String>) {
                     memory_limit: usize::MAX,
                 })
                 .expect("tablemult failed")
-                .into_assoc();
+                .into_assoc()
+                .expect("assoc response");
             println!("client TableMult: {} output nnz", c.nnz());
         }
         "dense" => {
@@ -122,7 +123,8 @@ fn cmd_tablemult(flags: HashMap<String, String>) {
             let c = server
                 .handle(Request::TableMultDense { a: "G".into(), b: "G".into(), tile: 128 })
                 .expect("tablemult failed")
-                .into_assoc();
+                .into_assoc()
+                .expect("assoc response");
             println!(
                 "dense TableMult via PJRT: {} output nnz, {} kernel calls",
                 c.nnz(),
@@ -166,7 +168,8 @@ fn cmd_jaccard(flags: HashMap<String, String>) {
     let j = server
         .handle(Request::Jaccard { table: "G".into(), out: "J".into() })
         .expect("jaccard failed")
-        .into_assoc();
+        .into_assoc()
+        .expect("assoc response");
     println!("jaccard: {} coefficient pairs ({:.3}s)", j.nnz(), t0.elapsed().as_secs_f64());
 }
 
@@ -179,7 +182,8 @@ fn cmd_ktruss(flags: HashMap<String, String>) {
     let kt = server
         .handle(Request::KTruss { table: "G".into(), k })
         .expect("ktruss failed")
-        .into_assoc();
+        .into_assoc()
+        .expect("assoc response");
     println!("{k}-truss: {} surviving edges ({:.3}s)", kt.nnz(), t0.elapsed().as_secs_f64());
 }
 

@@ -1,13 +1,21 @@
 //! BigDAWG-style polystore (Elmore et al. 2015): multiple islands (one
 //! per data model) with CAST between them. In BigDAWG, D4M served as the
-//! **text island**; here all three islands are embedded engines and the
-//! associative array is the interchange representation for every CAST —
-//! exactly the paper's claim that "the D4M associative array model allows
-//! for translation of data between Accumulo, SciDB and PostGRES".
+//! **text island**; here every island is any engine implementing the
+//! unified [`DbServer`]/[`DbTable`] binding API, and the associative
+//! array is the interchange representation for every CAST — exactly the
+//! paper's claim that "the D4M associative array model allows for
+//! translation of data between Accumulo, SciDB and PostGRES".
+//!
+//! The polystore itself is **engine-generic**: `put`/`get`/`query`/
+//! `cast`/`cross_join` are pure trait calls with no per-engine dispatch.
+//! Registering a fourth engine (or swapping an island's backend) is one
+//! [`Polystore::register`] call with any `Box<dyn DbServer>`.
 
 use crate::assoc::Assoc;
-use crate::connectors::{AccumuloConnector, D4mTableConfig, SciDbConnector, SqlConnector};
-use crate::error::Result;
+use crate::connectors::{
+    AccumuloConnector, BindOpts, DbServer, DbTable, SciDbConnector, SqlConnector, TableQuery,
+};
+use crate::error::{D4mError, Result};
 
 /// The island a named object lives in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -20,14 +28,9 @@ pub enum Island {
     Relational,
 }
 
-/// Default chunk size used when casting into the array island.
-const DEFAULT_CHUNK: u64 = 256;
-
-/// The polystore: one engine per island.
+/// The polystore: one [`DbServer`] per island.
 pub struct Polystore {
-    pub text: AccumuloConnector,
-    pub array: SciDbConnector,
-    pub relational: SqlConnector,
+    islands: Vec<(Island, Box<dyn DbServer>)>,
 }
 
 impl Default for Polystore {
@@ -37,36 +40,69 @@ impl Default for Polystore {
 }
 
 impl Polystore {
+    /// The default three-island configuration of the paper.
     pub fn new() -> Self {
-        Polystore {
-            text: AccumuloConnector::new(),
-            array: SciDbConnector::new(),
-            relational: SqlConnector::new(),
+        let mut p = Polystore { islands: Vec::new() };
+        p.register(Island::Text, Box::new(AccumuloConnector::new()));
+        p.register(Island::Array, Box::new(SciDbConnector::new()));
+        p.register(Island::Relational, Box::new(SqlConnector::new()));
+        p
+    }
+
+    /// An empty polystore; islands are added with [`Polystore::register`].
+    pub fn with_no_islands() -> Self {
+        Polystore { islands: Vec::new() }
+    }
+
+    /// Install (or replace) the engine behind an island. Connectors are
+    /// cheaply clonable, so callers can keep a native handle to the same
+    /// engine for engine-specific ops (e.g. SciDB in-store spgemm).
+    pub fn register(&mut self, island: Island, server: Box<dyn DbServer>) {
+        match self.islands.iter_mut().find(|(i, _)| *i == island) {
+            Some(slot) => slot.1 = server,
+            None => self.islands.push((island, server)),
         }
+    }
+
+    /// The engine behind an island.
+    pub fn server(&self, island: Island) -> Result<&dyn DbServer> {
+        self.islands
+            .iter()
+            .find(|(i, _)| *i == island)
+            .map(|(_, s)| s.as_ref())
+            .ok_or_else(|| D4mError::NotFound(format!("island {island:?} not registered")))
+    }
+
+    /// Bind a table in an island (the `T = DB('table')` call; eager
+    /// engines create storage here).
+    pub fn bind(&self, island: Island, name: &str) -> Result<Box<dyn DbTable>> {
+        self.server(island)?.bind(name, &BindOpts::default())
+    }
+
+    /// Bind for reading: errors on a missing object instead of letting an
+    /// eager engine create an empty table under a typo'd name.
+    fn bound(&self, island: Island, name: &str) -> Result<Box<dyn DbTable>> {
+        let server = self.server(island)?;
+        if !server.exists(name) {
+            return Err(D4mError::NotFound(format!("{name} in island {island:?}")));
+        }
+        server.bind(name, &BindOpts::default())
     }
 
     /// Store an assoc into an island under `name`.
     pub fn put(&self, island: Island, name: &str, a: &Assoc) -> Result<()> {
-        match island {
-            Island::Text => {
-                let t = self.text.bind(name, &D4mTableConfig::default())?;
-                t.put_assoc(a)
-            }
-            Island::Array => self.array.put_assoc(name, a, DEFAULT_CHUNK).map(|_| ()),
-            Island::Relational => self.relational.put_assoc(name, a).map(|_| ()),
-        }
+        self.bind(island, name)?.put_assoc(a)
     }
 
     /// Read an assoc from an island.
     pub fn get(&self, island: Island, name: &str) -> Result<Assoc> {
-        match island {
-            Island::Text => {
-                let t = self.text.bind(name, &D4mTableConfig::default())?;
-                t.get_assoc()
-            }
-            Island::Array => self.array.get_assoc(name),
-            Island::Relational => self.relational.get_assoc(name),
-        }
+        self.bound(island, name)?.get_assoc()
+    }
+
+    /// The `T(r, c)` form against any island, selectors pushed down into
+    /// whichever engine backs it.
+    pub fn query(&self, island: Island, name: &str, q: &TableQuery) -> Result<Assoc> {
+        self.bound(island, name)?.query(q)
     }
 
     /// CAST an object between islands through the associative-array
@@ -110,6 +146,7 @@ pub enum CrossOp {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assoc::KeySel;
 
     fn sample() -> Assoc {
         Assoc::from_triples(&[("r1", "c1", 1.0), ("r1", "c2", 2.0), ("r2", "c1", 3.0)])
@@ -153,9 +190,40 @@ mod tests {
     }
 
     #[test]
+    fn island_query_pushdown() {
+        let p = Polystore::new();
+        let a = sample();
+        let q = TableQuery::all().rows(KeySel::Range("r1".into(), "r1".into()));
+        for island in [Island::Text, Island::Array, Island::Relational] {
+            p.put(island, "q", &a).unwrap();
+            let got = p.query(island, "q", &q).unwrap();
+            assert_eq!(got.triples(), a.select_rows(&q.rows).triples(), "{island:?}");
+        }
+    }
+
+    #[test]
+    fn register_swaps_island_engine() {
+        let mut p = Polystore::new();
+        p.put(Island::Array, "obj", &sample()).unwrap();
+        // swapping the backend drops the island's previous contents
+        p.register(Island::Array, Box::new(SciDbConnector::new()));
+        assert!(p.get(Island::Array, "obj").is_err());
+        // ...and a shared-handle registration keeps native access
+        let native = SqlConnector::new();
+        p.register(Island::Array, Box::new(native.clone()));
+        p.put(Island::Array, "obj", &sample()).unwrap();
+        assert_eq!(native.get_assoc("obj").unwrap().triples(), sample().triples());
+    }
+
+    #[test]
     fn missing_object_errors() {
         let p = Polystore::new();
+        // every island, including the eager key-value engine: a read of a
+        // missing name errors and must not create the table
+        assert!(p.get(Island::Text, "nope").is_err());
         assert!(p.get(Island::Array, "nope").is_err());
         assert!(p.get(Island::Relational, "nope").is_err());
+        assert!(!p.server(Island::Text).unwrap().exists("nope"));
+        assert!(Polystore::with_no_islands().get(Island::Text, "x").is_err());
     }
 }

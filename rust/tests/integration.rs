@@ -4,7 +4,7 @@
 use std::sync::Arc;
 
 use d4m::assoc::{Assoc, KeySel};
-use d4m::connectors::{AccumuloConnector, D4mTableConfig};
+use d4m::connectors::{AccumuloConnector, D4mTableConfig, TableQuery};
 use d4m::coordinator::{D4mServer, Request, Response};
 use d4m::gen::{kronecker_assoc, kronecker_triples, vertex_key, KroneckerParams};
 use d4m::graphulo::{self, ClientCtx, TableMultOpts};
@@ -33,7 +33,8 @@ fn fig2_path_small() {
     let client_c = server
         .handle(Request::TableMultClient { a: "G".into(), b: "G".into(), memory_limit: usize::MAX })
         .unwrap()
-        .into_assoc();
+        .into_assoc()
+        .unwrap();
     assert_eq!(server_c.triples(), client_c.triples());
 }
 
@@ -129,10 +130,20 @@ fn polystore_chain() {
     let back = p.get(Island::Array, "t2").unwrap();
     assert_eq!(a.triples(), back.triples());
 
-    // column query through the text island's transpose table
-    let t = p.text.bind("t1", &D4mTableConfig::default()).unwrap();
-    let col = t.get_assoc_by_col(&RowRange::single("w|x")).unwrap();
+    // column query through the text island's transpose table, via the
+    // engine-generic T(:, c) surface
+    let col = p
+        .query(Island::Text, "t1", &TableQuery::all().cols(KeySel::keys(&["w|x"])))
+        .unwrap();
     assert_eq!(col.nnz(), 2);
+
+    // the same query answered by a different island must agree exactly
+    // (unified-API conformance across engines)
+    p.cast(Island::Text, "t1", Island::Relational, "t3").unwrap();
+    let col_rel = p
+        .query(Island::Relational, "t3", &TableQuery::all().cols(KeySel::keys(&["w|x"])))
+        .unwrap();
+    assert_eq!(col.triples(), col_rel.triples());
 }
 
 /// The coordinator's dense path (when artifacts exist) agrees with CSR.
@@ -183,7 +194,7 @@ fn range_queries_match_subsref() {
     let lo = vertex_key(20);
     let hi = vertex_key(200);
     let server = t
-        .get_assoc_range(&RowRange::span(lo.clone(), format!("{hi}\0")))
+        .get_assoc_range(&RowRange::inclusive(lo.clone(), hi.clone()))
         .unwrap();
     let client = g.select_rows(&KeySel::Range(lo, hi));
     assert_eq!(server.triples(), client.triples());
