@@ -16,11 +16,13 @@ use d4m::graphulo::{table_mult, TableMultOpts};
 use d4m::kvstore::{Entry, Key, KvStore, TabletConfig, WriterConfig};
 use d4m::util::fmt_rate;
 
-fn ablate_combiner_cap() {
-    println!("# A1: TableMult combiner cap (SCALE-11 Kronecker, ef=16)");
+fn ablate_combiner_cap(smoke: bool) {
+    let scale = if smoke { 9 } else { 11 };
+    println!("# A1: TableMult combiner cap (SCALE-{scale} Kronecker, ef=16)");
     println!("{:<12} {:>10} {:>12}", "cap", "seconds", "rate");
-    let g = kronecker_assoc(&KroneckerParams::new(11, 16, 20170710));
-    for cap in [0usize, 1 << 16, 1 << 18, 1 << 20, 1 << 22] {
+    let g = kronecker_assoc(&KroneckerParams::new(scale, 16, 20170710));
+    let caps: &[usize] = if smoke { &[0, 1 << 18] } else { &[0, 1 << 16, 1 << 18, 1 << 20, 1 << 22] };
+    for &cap in caps {
         let store = Arc::new(KvStore::new());
         let acc = AccumuloConnector::with_store(store.clone());
         let cfg = D4mTableConfig { transpose: false, degrees: false, ..Default::default() };
@@ -40,10 +42,11 @@ fn ablate_combiner_cap() {
     }
 }
 
-fn ablate_compaction() {
-    println!("\n# A2: compaction policy on a 600k-entry write burst");
+fn ablate_compaction(smoke: bool) {
+    let n: u64 = if smoke { 60_000 } else { 600_000 };
+    println!("\n# A2: compaction policy on a {n}-entry write burst");
     println!("{:<12} {:>10} {:>12} {:>12}", "policy", "seconds", "rate", "compactions");
-    let entries: Vec<Entry> = (0..600_000u64)
+    let entries: Vec<Entry> = (0..n)
         .map(|i| {
             Entry::new(
                 Key::cell(format!("r{:07}", i % 100_000), format!("c{:03}", i % 500), i),
@@ -74,10 +77,12 @@ fn ablate_compaction() {
     }
 }
 
-fn ablate_batch_size() {
-    println!("\n# A3: BatchWriter batch size, 300k writes through one writer");
+fn ablate_batch_size(smoke: bool) {
+    let n: u64 = if smoke { 30_000 } else { 300_000 };
+    println!("\n# A3: BatchWriter batch size, {n} writes through one writer");
     println!("{:<12} {:>10} {:>12}", "max_batch", "seconds", "rate");
-    for batch in [100usize, 1_000, 10_000, 100_000] {
+    let batches: &[usize] = if smoke { &[1_000, 10_000] } else { &[100, 1_000, 10_000, 100_000] };
+    for &batch in batches {
         let store = KvStore::new();
         let t = store.create_table("t", vec![]).unwrap();
         let mut w = d4m::kvstore::BatchWriter::new(
@@ -85,17 +90,18 @@ fn ablate_batch_size() {
             WriterConfig { max_batch: batch, max_bytes: usize::MAX },
         );
         let t0 = Instant::now();
-        for i in 0..300_000u64 {
+        for i in 0..n {
             w.put(&format!("r{:07}", i % 50_000), "c", "1");
         }
         w.flush();
         let dt = t0.elapsed().as_secs_f64();
-        println!("{:<12} {:>10.3} {:>12}", batch, dt, fmt_rate(300_000.0 / dt));
+        println!("{:<12} {:>10.3} {:>12}", batch, dt, fmt_rate(n as f64 / dt));
     }
 }
 
 fn main() {
-    ablate_combiner_cap();
-    ablate_compaction();
-    ablate_batch_size();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    ablate_combiner_cap(smoke);
+    ablate_compaction(smoke);
+    ablate_batch_size(smoke);
 }

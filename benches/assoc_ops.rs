@@ -8,11 +8,18 @@
 //!   csr   — sorted-key + CSR backend (the tuned implementation)
 //!
 //! Ops: construct, add, elem-mult, matmul, transpose, subsref-range.
+//!
+//! Besides the human-readable table, every run appends machine-readable
+//! records (op, n, backend, seconds, entries/sec) to `BENCH_assoc.json`
+//! so the trajectory is diffable across commits. `--smoke` runs the
+//! smallest size only (the CI regression probe).
 
+use std::path::Path;
 use std::time::Instant;
 
 use d4m::assoc::naive::NaiveAssoc;
 use d4m::assoc::{Assoc, KeySel};
+use d4m::util::bench::{append_records, BenchRecord};
 use d4m::util::XorShift64;
 
 fn rand_triples(n: usize, keyspace: u64, seed: u64) -> Vec<(String, String, f64)> {
@@ -35,12 +42,16 @@ fn time_op(f: impl FnOnce()) -> f64 {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let exps: &[u32] = if smoke { &[10] } else { &[10, 12, 14, 16] };
+    let mut records: Vec<BenchRecord> = Vec::new();
+
     println!("# T-jl: identical op suite on naive (MATLAB-class) vs csr (tuned) backends");
     println!(
         "{:<8} {:<12} {:>12} {:>12} {:>9}",
         "n", "op", "naive(s)", "csr(s)", "speedup"
     );
-    for &exp in &[10u32, 12, 14, 16] {
+    for &exp in exps {
         let n = 1usize << exp;
         let keyspace = (n as u64 / 2).max(16);
         let t1 = rand_triples(n, keyspace, 1);
@@ -53,7 +64,7 @@ fn main() {
         let dt_csr = time_op(|| {
             std::hint::black_box(Assoc::from_triples(&t1));
         });
-        report(n, "construct", dt_naive, dt_csr);
+        report(&mut records, n, "construct", dt_naive, dt_csr);
 
         let na = NaiveAssoc::from_triples(&t1);
         let nb = NaiveAssoc::from_triples(&t2);
@@ -66,7 +77,7 @@ fn main() {
         let dt_csr = time_op(|| {
             std::hint::black_box(ca.add(&cb));
         });
-        report(n, "add", dt_naive, dt_csr);
+        report(&mut records, n, "add", dt_naive, dt_csr);
 
         let dt_naive = time_op(|| {
             std::hint::black_box(na.elem_mult(&nb));
@@ -74,18 +85,15 @@ fn main() {
         let dt_csr = time_op(|| {
             std::hint::black_box(ca.elem_mult(&cb));
         });
-        report(n, "elem-mult", dt_naive, dt_csr);
+        report(&mut records, n, "elem-mult", dt_naive, dt_csr);
 
-        // matmul gets quadratic on naive quickly; cap the size
-        if exp <= 14 {
-            let dt_naive = time_op(|| {
-                std::hint::black_box(na.matmul(&nb));
-            });
-            let dt_csr = time_op(|| {
-                std::hint::black_box(ca.matmul(&cb));
-            });
-            report(n, "matmul", dt_naive, dt_csr);
-        }
+        let dt_naive = time_op(|| {
+            std::hint::black_box(na.matmul(&nb));
+        });
+        let dt_csr = time_op(|| {
+            std::hint::black_box(ca.matmul(&cb));
+        });
+        report(&mut records, n, "matmul", dt_naive, dt_csr);
 
         let dt_naive = time_op(|| {
             std::hint::black_box(na.transpose());
@@ -93,7 +101,7 @@ fn main() {
         let dt_csr = time_op(|| {
             std::hint::black_box(ca.transpose());
         });
-        report(n, "transpose", dt_naive, dt_csr);
+        report(&mut records, n, "transpose", dt_naive, dt_csr);
 
         let lo = format!("r{:06}", keyspace / 4);
         let hi = format!("r{:06}", keyspace / 2);
@@ -103,11 +111,17 @@ fn main() {
         let dt_csr = time_op(|| {
             std::hint::black_box(ca.select_rows(&KeySel::Range(lo.clone(), hi.clone())));
         });
-        report(n, "subsref", dt_naive, dt_csr);
+        report(&mut records, n, "subsref", dt_naive, dt_csr);
+    }
+
+    let out = Path::new("BENCH_assoc.json");
+    match append_records(out, &records) {
+        Ok(()) => println!("# appended {} records to {}", records.len(), out.display()),
+        Err(e) => eprintln!("# failed to write {}: {e}", out.display()),
     }
 }
 
-fn report(n: usize, op: &str, naive: f64, csr: f64) {
+fn report(records: &mut Vec<BenchRecord>, n: usize, op: &str, naive: f64, csr: f64) {
     println!(
         "{:<8} {:<12} {:>12.5} {:>12.5} {:>8.1}x",
         n,
@@ -116,4 +130,6 @@ fn report(n: usize, op: &str, naive: f64, csr: f64) {
         csr,
         naive / csr.max(1e-12)
     );
+    records.push(BenchRecord::new(op, n, "naive", naive, n));
+    records.push(BenchRecord::new(op, n, "csr", csr, n));
 }

@@ -36,9 +36,11 @@ fn bench(name: &str, scale: u32, nnz: usize, f: impl FnOnce()) {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let scales: &[u32] = if smoke { &[9] } else { &[9, 10, 11, 12] };
     println!("# T-algos: Graphulo server-side vs D4M client-side algorithms");
     println!("{:<8} {:<10} {:>10} {:>12}", "scale", "algo", "nnz", "seconds");
-    for &scale in &[9u32, 10, 11, 12] {
+    for &scale in scales {
         let s = setup(scale);
         let seeds = vec![vertex_key(0), vertex_key(1)];
 

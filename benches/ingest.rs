@@ -16,17 +16,20 @@ use d4m::gen::doc_word_triples;
 use d4m::pipeline::{IngestPipeline, PipelineConfig};
 use d4m::util::{fmt_rate, XorShift64};
 
-fn accumulo_group() {
+fn accumulo_group(smoke: bool) {
     println!("# T-ingest-acc: pipeline ingest rate vs workers / batch size");
     println!(
         "{:<9} {:<9} {:>10} {:>12} {:>14} {:>14} {:>8}",
         "workers", "batch", "triples", "seconds", "logical", "physical", "stalls"
     );
-    let triples: Vec<(String, String, String)> = doc_word_triples(2_000, 100, 5_000, 99)
+    let docs = if smoke { 200 } else { 2_000 };
+    let triples: Vec<(String, String, String)> = doc_word_triples(docs, 100, 5_000, 99)
         .into_iter()
         .collect();
-    for &workers in &[1usize, 2, 4, 8] {
-        for &batch in &[512usize, 4096, 16384] {
+    let workers_set: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let batch_set: &[usize] = if smoke { &[4096] } else { &[512, 4096, 16384] };
+    for &workers in workers_set {
+        for &batch in batch_set {
             let acc = AccumuloConnector::new();
             let t = Arc::new(acc.bind("T", &D4mTableConfig::default()).unwrap());
             let p = IngestPipeline::new(
@@ -53,12 +56,13 @@ fn accumulo_group() {
     }
 }
 
-fn scidb_group() {
+fn scidb_group(smoke: bool) {
     println!("\n# T-ingest-scidb: array import rate vs chunk size");
     println!("{:<9} {:>10} {:>12} {:>14} {:>8}", "chunk", "cells", "seconds", "rate", "chunks");
-    let n: u64 = 1 << 20; // 1M cells
+    let n: u64 = if smoke { 1 << 16 } else { 1 << 20 };
     let side: u64 = 4096;
-    for &chunk in &[64u64, 128, 256, 512, 1024] {
+    let chunk_set: &[u64] = if smoke { &[256] } else { &[64, 128, 256, 512, 1024] };
+    for &chunk in chunk_set {
         let store = ArrayStore::new();
         let arr = store.create(ArraySchema::new("ing", (side, side), chunk, &["val"])).unwrap();
         let mut rng = XorShift64::new(2016);
@@ -83,6 +87,7 @@ fn scidb_group() {
 }
 
 fn main() {
-    accumulo_group();
-    scidb_group();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    accumulo_group(smoke);
+    scidb_group(smoke);
 }

@@ -9,7 +9,12 @@
 //! Output: one row per (SCALE, mode) with rate in partial products/sec.
 //! The paper's shape to reproduce: graphulo ≈ d4m at small scale, d4m
 //! hits the memory wall (OOM) at large scale while graphulo continues.
+//!
+//! Machine-readable records (op = "tablemult", n = edges, backend = mode)
+//! are appended to `BENCH_assoc.json`; `--smoke` runs the two smallest
+//! scales only (the CI regression probe).
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -17,17 +22,20 @@ use d4m::connectors::{AccumuloConnector, D4mTableConfig};
 use d4m::gen::{kronecker_assoc, KroneckerParams};
 use d4m::graphulo::{self, ClientCtx, TableMultOpts};
 use d4m::kvstore::KvStore;
+use d4m::util::bench::{append_records, BenchRecord};
 use d4m::util::{fmt_bytes, fmt_rate};
 
 const CLIENT_MEM_LIMIT: usize = 24 << 20;
 
 fn main() {
-    let scales = [8u32, 9, 10, 11, 12, 13];
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let scales: &[u32] = if smoke { &[8, 9] } else { &[8, 9, 10, 11, 12, 13] };
+    let mut records: Vec<BenchRecord> = Vec::new();
     println!("# Figure 2: Graphulo vs D4M TableMult scaling");
     println!("# client memory budget = {}", fmt_bytes(CLIENT_MEM_LIMIT));
     println!("{:<7} {:<10} {:>10} {:>14} {:>14} {:>12}", "scale", "mode", "edges", "partials", "seconds", "rate");
 
-    for &scale in &scales {
+    for &scale in scales {
         let params = KroneckerParams::new(scale, 16, 0xF162);
         let g = kronecker_assoc(&params);
         let store = Arc::new(KvStore::new());
@@ -51,6 +59,13 @@ fn main() {
             dt,
             fmt_rate(stats.partial_products as f64 / dt)
         );
+        records.push(BenchRecord::new(
+            "tablemult",
+            g.nnz(),
+            "graphulo",
+            dt,
+            stats.partial_products as usize,
+        ));
 
         // d4m client-side with memory budget
         let ctx = ClientCtx::with_limit(CLIENT_MEM_LIMIT);
@@ -67,6 +82,13 @@ fn main() {
                     dt,
                     fmt_rate(stats.partial_products as f64 / dt)
                 );
+                records.push(BenchRecord::new(
+                    "tablemult",
+                    g.nnz(),
+                    "d4m",
+                    dt,
+                    stats.partial_products as usize,
+                ));
             }
             Err(e) => {
                 println!(
@@ -92,7 +114,20 @@ fn main() {
                     dt,
                     fmt_rate(stats.partial_products as f64 / dt)
                 );
+                records.push(BenchRecord::new(
+                    "tablemult",
+                    g.nnz(),
+                    "d4m-pjrt",
+                    dt,
+                    stats.partial_products as usize,
+                ));
             }
         }
+    }
+
+    let out = Path::new("BENCH_assoc.json");
+    match append_records(out, &records) {
+        Ok(()) => println!("# appended {} records to {}", records.len(), out.display()),
+        Err(e) => eprintln!("# failed to write {}: {e}", out.display()),
     }
 }

@@ -10,11 +10,21 @@
 //! intersection (numeric product), and matrix multiply contracts over the
 //! *intersection* of A's column keys and B's row keys. Key alignment is by
 //! string identity, never by position.
+//!
+//! §Hot paths (DESIGN.md §CSR hot paths): binary ops take a borrowed
+//! [`Assoc::numeric_view`] of each operand — a `Cow` that only clones when
+//! a string-valued array must be coerced to its logical numeric form, so
+//! numeric operands are **never** deep-copied. Construction sorts index
+//! permutations over borrowed `&str` keys (one `String` clone per unique
+//! key, no per-triple binary search), and key selection binary-searches
+//! the sorted key vectors instead of scanning them.
 
 pub mod io;
 pub mod text;
 pub mod naive;
 pub mod spmat;
+
+use std::borrow::Cow;
 
 use crate::error::{D4mError, Result};
 use crate::util::{find_key, intersect_sorted_keys, merge_sorted_keys};
@@ -37,6 +47,25 @@ pub struct Assoc {
 /// One triple of an associative array, as strings + numeric value.
 pub type Triple = (String, String, f64);
 
+/// Sort a permutation of `items` by a borrowed string key, then label each
+/// item with the id of its key in the sorted, deduplicated key table.
+/// Returns `(sorted unique keys, key id per item)`. One `String` clone per
+/// *unique* key — never one per item — and no per-item binary search.
+fn dedup_key_ids<T>(items: &[T], key: impl Fn(&T) -> &str) -> (Vec<String>, Vec<usize>) {
+    let mut perm: Vec<usize> = (0..items.len()).collect();
+    perm.sort_unstable_by(|&i, &j| key(&items[i]).cmp(key(&items[j])));
+    let mut keys: Vec<String> = Vec::new();
+    let mut ids = vec![0usize; items.len()];
+    for &i in &perm {
+        let k = key(&items[i]);
+        if keys.last().map(|last| last.as_str() != k).unwrap_or(true) {
+            keys.push(k.to_string());
+        }
+        ids[i] = keys.len() - 1;
+    }
+    (keys, ids)
+}
+
 impl Assoc {
     // ------------------------------------------------------------------
     // construction
@@ -50,24 +79,14 @@ impl Assoc {
     /// Duplicate `(row, col)` pairs are summed (D4M default collision op);
     /// entries summing to zero are dropped.
     pub fn from_triples<R: AsRef<str>, C: AsRef<str>>(triples: &[(R, C, f64)]) -> Self {
-        let mut rows: Vec<String> = triples.iter().map(|t| t.0.as_ref().to_string()).collect();
-        let mut cols: Vec<String> = triples.iter().map(|t| t.1.as_ref().to_string()).collect();
-        rows.sort();
-        rows.dedup();
-        cols.sort();
-        cols.dedup();
-        let idx_triples: Vec<(usize, usize, f64)> = triples
-            .iter()
-            .map(|(r, c, v)| {
-                (
-                    find_key(&rows, r.as_ref()).unwrap(),
-                    find_key(&cols, c.as_ref()).unwrap(),
-                    *v,
-                )
-            })
-            .collect();
-        let mat = SpMat::from_triples(rows.len(), cols.len(), &idx_triples);
-        Assoc { row_keys: rows, col_keys: cols, mat, vals: None }.compacted()
+        let (row_keys, row_of) = dedup_key_ids(triples, |t| t.0.as_ref());
+        let (col_keys, col_of) = dedup_key_ids(triples, |t| t.1.as_ref());
+        let mut perm: Vec<usize> = (0..triples.len()).collect();
+        perm.sort_unstable_by_key(|&i| (row_of[i], col_of[i]));
+        let sorted: Vec<(usize, usize, f64)> =
+            perm.iter().map(|&i| (row_of[i], col_of[i], triples[i].2)).collect();
+        let mat = SpMat::from_sorted_triples(row_keys.len(), col_keys.len(), &sorted);
+        Assoc { row_keys, col_keys, mat, vals: None }.compacted_owned()
     }
 
     /// Build a string-valued associative array. Duplicate `(row, col)`
@@ -75,29 +94,29 @@ impl Assoc {
     pub fn from_str_triples<R: AsRef<str>, C: AsRef<str>, V: AsRef<str>>(
         triples: &[(R, C, V)],
     ) -> Self {
-        let mut rows: Vec<String> = triples.iter().map(|t| t.0.as_ref().to_string()).collect();
-        let mut cols: Vec<String> = triples.iter().map(|t| t.1.as_ref().to_string()).collect();
-        let mut vals: Vec<String> = triples.iter().map(|t| t.2.as_ref().to_string()).collect();
-        rows.sort();
-        rows.dedup();
-        cols.sort();
-        cols.dedup();
-        vals.sort();
-        vals.dedup();
-        // keep max value index per cell
-        let mut cells: std::collections::BTreeMap<(usize, usize), usize> =
-            std::collections::BTreeMap::new();
-        for (r, c, v) in triples {
-            let ri = find_key(&rows, r.as_ref()).unwrap();
-            let ci = find_key(&cols, c.as_ref()).unwrap();
-            let vi = find_key(&vals, v.as_ref()).unwrap() + 1; // 1-based
-            let e = cells.entry((ri, ci)).or_insert(vi);
-            *e = (*e).max(vi);
+        let (row_keys, row_of) = dedup_key_ids(triples, |t| t.0.as_ref());
+        let (col_keys, col_of) = dedup_key_ids(triples, |t| t.1.as_ref());
+        let (val_keys, val_of) = dedup_key_ids(triples, |t| t.2.as_ref());
+        // keep the max 1-based value index per cell: sort cells, then walk
+        // runs (value keys are sorted, so max index = max value)
+        let mut cells: Vec<(usize, usize, usize)> =
+            (0..triples.len()).map(|i| (row_of[i], col_of[i], val_of[i] + 1)).collect();
+        cells.sort_unstable();
+        let mut idx: Vec<(usize, usize, f64)> = Vec::with_capacity(cells.len());
+        for &(r, c, v) in &cells {
+            let same_cell =
+                idx.last().map(|last| last.0 == r && last.1 == c).unwrap_or(false);
+            if same_cell {
+                let last = idx.last_mut().expect("just checked non-empty");
+                if (v as f64) > last.2 {
+                    last.2 = v as f64;
+                }
+            } else {
+                idx.push((r, c, v as f64));
+            }
         }
-        let idx_triples: Vec<(usize, usize, f64)> =
-            cells.into_iter().map(|((r, c), v)| (r, c, v as f64)).collect();
-        let mat = SpMat::from_triples(rows.len(), cols.len(), &idx_triples);
-        Assoc { row_keys: rows, col_keys: cols, mat, vals: Some(vals) }
+        let mat = SpMat::from_sorted_triples(row_keys.len(), col_keys.len(), &idx);
+        Assoc { row_keys, col_keys, mat, vals: Some(val_keys) }
     }
 
     /// Build from parallel key/value slices (the D4M `Assoc(r, c, v)` form).
@@ -133,25 +152,46 @@ impl Assoc {
         Assoc { row_keys, col_keys, mat, vals }
     }
 
-    /// Drop rows/cols that have become entirely empty (D4M `condense`).
-    pub fn compacted(&self) -> Self {
+    /// Row/col indices that still hold at least one entry, or `None` when
+    /// every row and column is live (the common case — no work to do).
+    fn dead_weight(&self) -> Option<(Vec<usize>, Vec<usize>)> {
         let live_rows: Vec<usize> =
             (0..self.mat.nr).filter(|&r| self.mat.indptr[r + 1] > self.mat.indptr[r]).collect();
         let mut live_col_mask = vec![false; self.mat.nc];
         for &c in &self.mat.indices {
             live_col_mask[c] = true;
         }
-        let live_cols: Vec<usize> =
-            (0..self.mat.nc).filter(|&c| live_col_mask[c]).collect();
+        let live_cols: Vec<usize> = (0..self.mat.nc).filter(|&c| live_col_mask[c]).collect();
         if live_rows.len() == self.mat.nr && live_cols.len() == self.mat.nc {
-            return self.clone();
+            None
+        } else {
+            Some((live_rows, live_cols))
         }
-        let mat = self.mat.select(&live_rows, &live_cols);
+    }
+
+    fn compact_to(&self, live_rows: &[usize], live_cols: &[usize]) -> Self {
         Assoc {
             row_keys: live_rows.iter().map(|&r| self.row_keys[r].clone()).collect(),
             col_keys: live_cols.iter().map(|&c| self.col_keys[c].clone()).collect(),
-            mat,
+            mat: self.mat.select(live_rows, live_cols),
             vals: self.vals.clone(),
+        }
+    }
+
+    /// Drop rows/cols that have become entirely empty (D4M `condense`).
+    pub fn compacted(&self) -> Self {
+        match self.dead_weight() {
+            None => self.clone(),
+            Some((lr, lc)) => self.compact_to(&lr, &lc),
+        }
+    }
+
+    /// Owned `compacted`: returns `self` unchanged (no clone) when nothing
+    /// needs dropping. Every freshly built op result funnels through here.
+    pub(crate) fn compacted_owned(self) -> Self {
+        match self.dead_weight() {
+            None => self,
+            Some((lr, lc)) => self.compact_to(&lr, &lc),
         }
     }
 
@@ -264,100 +304,111 @@ impl Assoc {
         }
     }
 
+    /// Borrowed numeric coercion: the operand itself when already numeric
+    /// (no clone of keys or matrix), an owned [`Assoc::logical`] only for
+    /// string-valued arrays. Every binary op starts here instead of the
+    /// old unconditional `self.clone()`.
+    pub(crate) fn numeric_view(&self) -> Cow<'_, Assoc> {
+        if self.is_string_valued() {
+            Cow::Owned(self.logical())
+        } else {
+            Cow::Borrowed(self)
+        }
+    }
+
     // ------------------------------------------------------------------
     // algebra
+
+    /// Union-pattern elementwise combine (shared by add/sub/max).
+    fn union_op(&self, other: &Assoc, f: impl Fn(f64, f64) -> f64) -> Assoc {
+        let a = self.numeric_view();
+        let b = other.numeric_view();
+        let (rows, ra, rb) = merge_sorted_keys(&a.row_keys, &b.row_keys);
+        let (cols, ca, cb) = merge_sorted_keys(&a.col_keys, &b.col_keys);
+        let ea = a.mat.embed(rows.len(), cols.len(), &ra, &ca);
+        let eb = b.mat.embed(rows.len(), cols.len(), &rb, &cb);
+        Assoc::from_parts(rows, cols, ea.union_combine(&eb, f), None).compacted_owned()
+    }
+
+    /// Intersection-pattern elementwise combine (shared by mult/min).
+    fn intersect_op(&self, other: &Assoc, f: impl Fn(f64, f64) -> f64) -> Assoc {
+        let a = self.numeric_view();
+        let b = other.numeric_view();
+        let (rows, ra, rb) = intersect_sorted_keys(&a.row_keys, &b.row_keys);
+        let (cols, ca, cb) = intersect_sorted_keys(&a.col_keys, &b.col_keys);
+        let sa = a.mat.select(&ra, &ca);
+        let sb = b.mat.select(&rb, &cb);
+        Assoc::from_parts(rows, cols, sa.intersect_combine(&sb, f), None).compacted_owned()
+    }
 
     /// `A + B`: union of patterns, numeric sum on collisions. String-valued
     /// inputs are first converted with [`Assoc::logical`].
     pub fn add(&self, other: &Assoc) -> Assoc {
-        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
-        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
-        let (rows, ra, rb) = merge_sorted_keys(&a.row_keys, &b.row_keys);
-        let (cols, ca, cb) = merge_sorted_keys(&a.col_keys, &b.col_keys);
-        let ea = a.mat.embed(rows.len(), cols.len(), &ra, &ca);
-        let eb = b.mat.embed(rows.len(), cols.len(), &rb, &cb);
-        Assoc::from_parts(rows, cols, ea.union_combine(&eb, |x, y| x + y), None).compacted()
+        self.union_op(other, |x, y| x + y)
     }
 
     /// Elementwise subtract: union pattern, `a - b`.
     pub fn sub(&self, other: &Assoc) -> Assoc {
-        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
-        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
-        let (rows, ra, rb) = merge_sorted_keys(&a.row_keys, &b.row_keys);
-        let (cols, ca, cb) = merge_sorted_keys(&a.col_keys, &b.col_keys);
-        let ea = a.mat.embed(rows.len(), cols.len(), &ra, &ca);
-        let eb = b.mat.embed(rows.len(), cols.len(), &rb, &cb);
-        Assoc::from_parts(rows, cols, ea.union_combine(&eb, |x, y| x - y), None).compacted()
+        self.union_op(other, |x, y| x - y)
     }
 
     /// Elementwise multiply (`A & B` / `A .* B`): intersection of patterns,
     /// numeric product.
     pub fn elem_mult(&self, other: &Assoc) -> Assoc {
-        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
-        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
-        let (rows, ra, rb) = intersect_sorted_keys(&a.row_keys, &b.row_keys);
-        let (cols, ca, cb) = intersect_sorted_keys(&a.col_keys, &b.col_keys);
-        let sa = a.mat.select(&ra, &ca);
-        let sb = b.mat.select(&rb, &cb);
-        Assoc::from_parts(rows, cols, sa.intersect_combine(&sb, |x, y| x * y), None).compacted()
+        self.intersect_op(other, |x, y| x * y)
     }
 
-    /// Elementwise min over the union (missing = 0, so min(x,0)=0 drops —
-    /// this matches set-intersection semantics for logical arrays).
+    /// Elementwise min over the **intersection** of patterns: cells
+    /// present on only one side are dropped, matching D4M's
+    /// set-intersection semantics for `min` (for the nonnegative values
+    /// of logical/count arrays, `min(x, missing=0) = 0` anyway; for
+    /// negative values the intersection is a deliberate choice, pinned by
+    /// `elem_min_intersection_semantics`).
     pub fn elem_min(&self, other: &Assoc) -> Assoc {
-        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
-        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
-        let (rows, ra, rb) = intersect_sorted_keys(&a.row_keys, &b.row_keys);
-        let (cols, ca, cb) = intersect_sorted_keys(&a.col_keys, &b.col_keys);
-        let sa = a.mat.select(&ra, &ca);
-        let sb = b.mat.select(&rb, &cb);
-        Assoc::from_parts(rows, cols, sa.intersect_combine(&sb, f64::min), None).compacted()
+        self.intersect_op(other, f64::min)
     }
 
     /// Elementwise max over the union of patterns.
     pub fn elem_max(&self, other: &Assoc) -> Assoc {
-        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
-        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
-        let (rows, ra, rb) = merge_sorted_keys(&a.row_keys, &b.row_keys);
-        let (cols, ca, cb) = merge_sorted_keys(&a.col_keys, &b.col_keys);
-        let ea = a.mat.embed(rows.len(), cols.len(), &ra, &ca);
-        let eb = b.mat.embed(rows.len(), cols.len(), &rb, &cb);
-        Assoc::from_parts(rows, cols, ea.union_combine(&eb, f64::max), None).compacted()
+        self.union_op(other, f64::max)
     }
 
     /// Matrix multiply `A * B`: contracts over the intersection of A's
     /// column keys and B's row keys (key-aligned, never positional).
+    /// The contraction runs through [`SpMat::matmul_inner`] — no
+    /// identity-selected submatrices are materialised.
     pub fn matmul(&self, other: &Assoc) -> Assoc {
-        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
-        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
+        let a = self.numeric_view();
+        let b = other.numeric_view();
         let (_, ia, ib) = intersect_sorted_keys(&a.col_keys, &b.row_keys);
-        // slice A's cols and B's rows down to the shared inner keys
-        let all_rows_a: Vec<usize> = (0..a.mat.nr).collect();
-        let all_cols_b: Vec<usize> = (0..b.mat.nc).collect();
-        let sa = a.mat.select(&all_rows_a, &ia);
-        let sb = b.mat.select(&ib, &all_cols_b);
-        Assoc::from_parts(a.row_keys.clone(), b.col_keys.clone(), sa.matmul(&sb), None)
-            .compacted()
+        let prod = a.mat.matmul_inner(&b.mat, &ia, &ib);
+        Assoc::from_parts(a.row_keys.clone(), b.col_keys.clone(), prod, None).compacted_owned()
     }
 
     /// D4M `CatKeyMul`: like [`Assoc::matmul`] but each output value is the
     /// `;`-joined list of inner keys that contributed (provenance-tracking
     /// multiply). Returns a string-valued array.
     pub fn catkeymul(&self, other: &Assoc) -> Assoc {
-        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
-        let b = if other.is_string_valued() { other.logical() } else { other.clone() };
+        let a = self.numeric_view();
+        let b = other.numeric_view();
         let (inner, ia, ib) = intersect_sorted_keys(&a.col_keys, &b.row_keys);
-        let all_rows_a: Vec<usize> = (0..a.mat.nr).collect();
-        let all_cols_b: Vec<usize> = (0..b.mat.nc).collect();
-        let sa = a.mat.select(&all_rows_a, &ia);
-        let sb = b.mat.select(&ib, &all_cols_b);
-        // accumulate contributing key lists per output cell
+        // inverse map: A-column index -> inner index (usize::MAX = not shared)
+        let mut inner_of = vec![usize::MAX; a.col_keys.len()];
+        for (t, &c) in ia.iter().enumerate() {
+            inner_of[c] = t;
+        }
+        // accumulate contributing key lists per output cell, walking A's
+        // rows directly (ia is increasing, so keys arrive in sorted order)
         let mut cells: std::collections::BTreeMap<(usize, usize), Vec<&str>> =
             std::collections::BTreeMap::new();
-        for r in 0..sa.nr {
-            for (k, _) in sa.row(r) {
-                for (c, _) in sb.row(k) {
-                    cells.entry((r, c)).or_default().push(&inner[k]);
+        for r in 0..a.mat.nr {
+            for (c, _) in a.mat.row(r) {
+                let t = inner_of[c];
+                if t == usize::MAX {
+                    continue;
+                }
+                for (bc, _) in b.mat.row(ib[t]) {
+                    cells.entry((r, bc)).or_default().push(&inner[t]);
                 }
             }
         }
@@ -383,7 +434,7 @@ impl Assoc {
     /// Sum along a dimension (D4M `sum(A, dim)`): `dim = 1` sums down
     /// columns (result has single row key `""`), `dim = 2` sums across rows.
     pub fn sum(&self, dim: usize) -> Assoc {
-        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
+        let a = self.numeric_view();
         match dim {
             1 => {
                 let sums = a.mat.col_sums();
@@ -413,8 +464,14 @@ impl Assoc {
 
     /// Scalar multiply.
     pub fn scale(&self, s: f64) -> Assoc {
-        let a = if self.is_string_valued() { self.logical() } else { self.clone() };
-        Assoc { mat: a.mat.map(|v| v * s), ..a }.compacted()
+        let a = self.numeric_view();
+        Assoc {
+            row_keys: a.row_keys.clone(),
+            col_keys: a.col_keys.clone(),
+            mat: a.mat.map(|v| v * s),
+            vals: None,
+        }
+        .compacted_owned()
     }
 
     /// Keep entries whose value satisfies `pred` (D4M `A > t` etc.).
@@ -425,7 +482,7 @@ impl Assoc {
             mat: self.mat.map(|v| if pred(v) { v } else { 0.0 }),
             vals: self.vals.clone(),
         }
-        .compacted()
+        .compacted_owned()
     }
 
     /// Global sum of all numeric values.
@@ -438,32 +495,26 @@ impl Assoc {
 
     /// Select rows by predicate on the key (D4M `A(rows, :)`).
     pub fn select_rows(&self, sel: &KeySel) -> Assoc {
-        let rows: Vec<usize> = (0..self.row_keys.len())
-            .filter(|&r| sel.matches(&self.row_keys[r]))
-            .collect();
-        let cols: Vec<usize> = (0..self.col_keys.len()).collect();
+        let rows = sel.matching_indices(&self.row_keys);
         Assoc {
             row_keys: rows.iter().map(|&r| self.row_keys[r].clone()).collect(),
             col_keys: self.col_keys.clone(),
-            mat: self.mat.select(&rows, &cols),
+            mat: self.mat.select_rows(&rows),
             vals: self.vals.clone(),
         }
-        .compacted()
+        .compacted_owned()
     }
 
     /// Select columns by predicate on the key (D4M `A(:, cols)`).
     pub fn select_cols(&self, sel: &KeySel) -> Assoc {
-        let rows: Vec<usize> = (0..self.row_keys.len()).collect();
-        let cols: Vec<usize> = (0..self.col_keys.len())
-            .filter(|&c| sel.matches(&self.col_keys[c]))
-            .collect();
+        let cols = sel.matching_indices(&self.col_keys);
         Assoc {
             row_keys: self.row_keys.clone(),
             col_keys: cols.iter().map(|&c| self.col_keys[c].clone()).collect(),
-            mat: self.mat.select(&rows, &cols),
+            mat: self.mat.select_cols(&cols),
             vals: self.vals.clone(),
         }
-        .compacted()
+        .compacted_owned()
     }
 
     /// `A(rowsel, colsel)`.
@@ -496,6 +547,43 @@ impl KeySel {
             KeySel::Keys(ks) => ks.iter().any(|k| k == key),
             KeySel::Range(lo, hi) => key >= lo.as_str() && key <= hi.as_str(),
             KeySel::Prefix(p) => key.starts_with(p.as_str()),
+        }
+    }
+
+    /// Ascending indices of the **sorted** `keys` this selector matches.
+    /// `Keys` binary-searches each requested key, `Range` and `Prefix`
+    /// binary-search their contiguous bounds — O(log n + matches), never
+    /// a full scan of the key vector (the old path tested every key, and
+    /// `Keys` paid O(|keys| · |sel|)).
+    pub fn matching_indices(&self, keys: &[String]) -> Vec<usize> {
+        match self {
+            KeySel::All => (0..keys.len()).collect(),
+            KeySel::Keys(ks) => {
+                let mut idx: Vec<usize> =
+                    ks.iter().filter_map(|k| find_key(keys, k).ok()).collect();
+                idx.sort_unstable();
+                idx.dedup();
+                idx
+            }
+            KeySel::Range(lo, hi) => {
+                let l = keys.partition_point(|k| k.as_str() < lo.as_str());
+                let h = keys.partition_point(|k| k.as_str() <= hi.as_str());
+                (l..h).collect()
+            }
+            KeySel::Prefix(p) => {
+                // keys sharing a prefix are contiguous in sorted order,
+                // starting at the first key >= the prefix itself
+                let l = keys.partition_point(|k| k.as_str() < p.as_str());
+                let mut out = Vec::new();
+                for (i, k) in keys[l..].iter().enumerate() {
+                    if k.starts_with(p.as_str()) {
+                        out.push(l + i);
+                    } else {
+                        break;
+                    }
+                }
+                out
+            }
         }
     }
 }

@@ -92,6 +92,37 @@ impl NaiveAssoc {
         }
     }
 
+    /// The logical (all values -> 1.0) form, the oracle counterpart of
+    /// [`crate::assoc::Assoc::logical`] for string-valued inputs.
+    pub fn logical(&self) -> NaiveAssoc {
+        NaiveAssoc { cells: self.cells.keys().map(|k| (k.clone(), 1.0)).collect() }
+    }
+
+    /// Row selection by arbitrary key predicate (oracle for `KeySel`
+    /// selection).
+    pub fn select_rows_by(&self, pred: impl Fn(&str) -> bool) -> NaiveAssoc {
+        NaiveAssoc {
+            cells: self
+                .cells
+                .iter()
+                .filter(|((r, _), _)| pred(r))
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+        }
+    }
+
+    /// Column selection by arbitrary key predicate.
+    pub fn select_cols_by(&self, pred: impl Fn(&str) -> bool) -> NaiveAssoc {
+        NaiveAssoc {
+            cells: self
+                .cells
+                .iter()
+                .filter(|((_, c), _)| pred(c))
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+        }
+    }
+
     /// Row selection by inclusive key range.
     pub fn select_row_range(&self, lo: &str, hi: &str) -> NaiveAssoc {
         NaiveAssoc {

@@ -3,6 +3,16 @@
 //! Pure index-space kernel layer: no string keys here. All f64 values;
 //! explicit zeros are dropped at construction (D4M semantics: zero means
 //! "absent").
+//!
+//! §Hot-path invariants (DESIGN.md §CSR hot paths): the algebra layer
+//! above only ever selects/embeds through **sorted, unique** index lists
+//! (they come from sorted-key merges and intersections), so [`SpMat::select`]
+//! and [`SpMat::embed`] build their result CSR directly in O(nnz) without
+//! re-sorting. Non-monotone index lists still work — they fall back to the
+//! sorting [`SpMat::from_triples`] path. SpGEMM uses a dense accumulator
+//! with a boolean marker array (never a `contains` scan), and
+//! [`SpMat::matmul_inner`] contracts over a column→row map so callers don't
+//! materialise identity-selected submatrices.
 
 /// Compressed sparse row matrix, `nr x nc`, f64 values.
 #[derive(Debug, Clone, PartialEq)]
@@ -28,6 +38,18 @@ impl SpMat {
     pub fn from_triples(nr: usize, nc: usize, triples: &[(usize, usize, f64)]) -> Self {
         let mut sorted: Vec<(usize, usize, f64)> = triples.to_vec();
         sorted.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        SpMat::from_sorted_triples(nr, nc, &sorted)
+    }
+
+    /// Build from triples **already sorted by (row, col)** — the O(nnz)
+    /// construction path used when the caller sorted an index permutation
+    /// upstream. Duplicates are summed, zeros (including zero-sums)
+    /// dropped, exactly as [`SpMat::from_triples`].
+    pub fn from_sorted_triples(nr: usize, nc: usize, sorted: &[(usize, usize, f64)]) -> Self {
+        debug_assert!(
+            sorted.windows(2).all(|w| (w[0].0, w[0].1) <= (w[1].0, w[1].1)),
+            "from_sorted_triples requires (row, col)-sorted input"
+        );
         let mut indptr = vec![0usize; nr + 1];
         let mut indices = Vec::with_capacity(sorted.len());
         let mut data: Vec<f64> = Vec::with_capacity(sorted.len());
@@ -185,20 +207,38 @@ impl SpMat {
         SpMat { nr: self.nr, nc: self.nc, indptr, indices, data }
     }
 
-    /// Sparse matrix product `self * other` (Gustavson's algorithm with a
-    /// dense accumulator row).
-    pub fn matmul(&self, other: &SpMat) -> SpMat {
-        assert_eq!(self.nc, other.nr, "inner dimension mismatch");
+    /// Gustavson SpGEMM core shared by [`SpMat::matmul`] and
+    /// [`SpMat::matmul_inner`]: dense accumulator + boolean marker array +
+    /// touched list. The marker makes "first touch of this output column"
+    /// an O(1) test — a `touched.contains` scan would be linear per FLOP
+    /// and quadratic on dense rows — and stays correct when partial
+    /// products cancel to zero mid-row.
+    ///
+    /// `col_to_row[k]` names the row of `other` that column `k` of `self`
+    /// contracts against (`usize::MAX` = column not in the contraction);
+    /// `None` is the identity map (plain matmul, `self.nc == other.nr`).
+    fn spgemm(&self, other: &SpMat, col_to_row: Option<&[usize]>) -> SpMat {
         let mut indptr = vec![0usize; self.nr + 1];
         let mut indices = Vec::new();
         let mut data = Vec::new();
-        // dense accumulator + touched-list (classic SpGEMM workspace)
         let mut acc = vec![0f64; other.nc];
+        let mut seen = vec![false; other.nc];
         let mut touched: Vec<usize> = Vec::new();
         for r in 0..self.nr {
             for (k, av) in self.row(r) {
-                for (c, bv) in other.row(k) {
-                    if acc[c] == 0.0 && !touched.contains(&c) {
+                let br = match col_to_row {
+                    Some(map) => {
+                        let t = map[k];
+                        if t == usize::MAX {
+                            continue;
+                        }
+                        t
+                    }
+                    None => k,
+                };
+                for (c, bv) in other.row(br) {
+                    if !seen[c] {
+                        seen[c] = true;
                         touched.push(c);
                     }
                     acc[c] += av * bv;
@@ -212,6 +252,7 @@ impl SpMat {
                     indptr[r + 1] += 1;
                 }
                 acc[c] = 0.0;
+                seen[c] = false;
             }
             touched.clear();
         }
@@ -219,6 +260,26 @@ impl SpMat {
             indptr[r + 1] += indptr[r];
         }
         SpMat { nr: self.nr, nc: other.nc, indptr, indices, data }
+    }
+
+    /// Sparse matrix product `self * other` (Gustavson's algorithm).
+    pub fn matmul(&self, other: &SpMat) -> SpMat {
+        assert_eq!(self.nc, other.nr, "inner dimension mismatch");
+        self.spgemm(other, None)
+    }
+
+    /// Column-restricted product: contract column `a_cols[t]` of `self`
+    /// against row `b_rows[t]` of `other` for each `t`, ignoring every
+    /// other column of `self` and row of `other`. Equivalent to
+    /// `self.select(all_rows, a_cols).matmul(other.select(b_rows, all_cols))`
+    /// without materialising either submatrix. `a_cols` must be unique.
+    pub fn matmul_inner(&self, other: &SpMat, a_cols: &[usize], b_rows: &[usize]) -> SpMat {
+        assert_eq!(a_cols.len(), b_rows.len(), "inner map length mismatch");
+        let mut map = vec![usize::MAX; self.nc];
+        for (t, &c) in a_cols.iter().enumerate() {
+            map[c] = b_rows[t];
+        }
+        self.spgemm(other, Some(&map))
     }
 
     /// Map all stored values through `f`; zeros in the result are dropped.
@@ -258,13 +319,35 @@ impl SpMat {
         out
     }
 
-    /// Select a subset of rows/cols by (sorted) index lists, producing the
-    /// submatrix in the order given.
+    /// Select a subset of rows/cols by index lists, producing the
+    /// submatrix in the order given. `cols` must be unique. When `cols`
+    /// is strictly increasing (the only shape the key-algebra layer
+    /// produces), the result CSR is built directly in O(nnz + |cols|);
+    /// otherwise it falls back to the sorting triple path.
     pub fn select(&self, rows: &[usize], cols: &[usize]) -> SpMat {
         // col index -> new position
         let mut colmap = vec![usize::MAX; self.nc];
         for (new, &c) in cols.iter().enumerate() {
             colmap[c] = new;
+        }
+        if cols.windows(2).all(|w| w[0] < w[1]) {
+            // within each source row indices ascend, and a monotone colmap
+            // preserves that — direct CSR build, no sort
+            let mut indptr = Vec::with_capacity(rows.len() + 1);
+            indptr.push(0);
+            let mut indices = Vec::new();
+            let mut data = Vec::new();
+            for &r in rows {
+                for (c, v) in self.row(r) {
+                    let nc2 = colmap[c];
+                    if nc2 != usize::MAX {
+                        indices.push(nc2);
+                        data.push(v);
+                    }
+                }
+                indptr.push(indices.len());
+            }
+            return SpMat { nr: rows.len(), nc: cols.len(), indptr, indices, data };
         }
         let mut triples = Vec::new();
         for (new_r, &r) in rows.iter().enumerate() {
@@ -277,11 +360,79 @@ impl SpMat {
         SpMat::from_triples(rows.len(), cols.len(), &triples)
     }
 
+    /// Row-only selection: keep the given rows (in the order given), all
+    /// columns. A pure per-row slice copy — O(output nnz), no column
+    /// remap, no sort.
+    pub fn select_rows(&self, rows: &[usize]) -> SpMat {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for &r in rows {
+            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+            indices.extend_from_slice(&self.indices[lo..hi]);
+            data.extend_from_slice(&self.data[lo..hi]);
+            indptr.push(indices.len());
+        }
+        SpMat { nr: rows.len(), nc: self.nc, indptr, indices, data }
+    }
+
+    /// Column-only selection over a strictly-increasing unique index
+    /// list: keep all rows, remap the kept columns to 0..cols.len().
+    /// O(nnz + |cols|).
+    pub fn select_cols(&self, cols: &[usize]) -> SpMat {
+        debug_assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        let mut colmap = vec![usize::MAX; self.nc];
+        for (new, &c) in cols.iter().enumerate() {
+            colmap[c] = new;
+        }
+        let mut indptr = Vec::with_capacity(self.nr + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for r in 0..self.nr {
+            for (c, v) in self.row(r) {
+                let nc2 = colmap[c];
+                if nc2 != usize::MAX {
+                    indices.push(nc2);
+                    data.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        SpMat { nr: self.nr, nc: cols.len(), indptr, indices, data }
+    }
+
     /// Re-embed this matrix into a larger index space: entry (r, c) moves
-    /// to (row_map[r], col_map[c]).
+    /// to (row_map[r], col_map[c]). The maps the key-merge layer produces
+    /// are strictly increasing, which keeps CSR order intact — that path
+    /// is a direct O(nnz + nr) build; non-monotone maps fall back to the
+    /// sorting triple path.
     pub fn embed(&self, nr: usize, nc: usize, row_map: &[usize], col_map: &[usize]) -> SpMat {
         assert_eq!(row_map.len(), self.nr);
         assert_eq!(col_map.len(), self.nc);
+        let monotone = row_map.windows(2).all(|w| w[0] < w[1])
+            && col_map.windows(2).all(|w| w[0] < w[1]);
+        if monotone {
+            let mut indptr = vec![0usize; nr + 1];
+            for r in 0..self.nr {
+                indptr[row_map[r] + 1] = self.indptr[r + 1] - self.indptr[r];
+            }
+            for i in 0..nr {
+                indptr[i + 1] += indptr[i];
+            }
+            let mut indices = Vec::with_capacity(self.nnz());
+            let mut data = Vec::with_capacity(self.nnz());
+            // rows land in increasing target order, so sequential pushes
+            // line up with the prefix-summed indptr
+            for r in 0..self.nr {
+                for (c, v) in self.row(r) {
+                    indices.push(col_map[c]);
+                    data.push(v);
+                }
+            }
+            return SpMat { nr, nc, indptr, indices, data };
+        }
         let mut triples = Vec::with_capacity(self.nnz());
         for r in 0..self.nr {
             for (c, v) in self.row(r) {
@@ -320,6 +471,24 @@ mod tests {
         SpMat::from_triples(nr, nc, &tr)
     }
 
+    /// Reference `select` via the sorting triple path (the pre-rewrite
+    /// implementation), used to pin the direct-CSR fast paths.
+    fn select_ref(m: &SpMat, rows: &[usize], cols: &[usize]) -> SpMat {
+        let mut colmap = vec![usize::MAX; m.nc];
+        for (new, &c) in cols.iter().enumerate() {
+            colmap[c] = new;
+        }
+        let mut triples = Vec::new();
+        for (new_r, &r) in rows.iter().enumerate() {
+            for (c, v) in m.row(r) {
+                if colmap[c] != usize::MAX {
+                    triples.push((new_r, colmap[c], v));
+                }
+            }
+        }
+        SpMat::from_triples(rows.len(), cols.len(), &triples)
+    }
+
     #[test]
     fn from_triples_sums_duplicates() {
         let m = SpMat::from_triples(2, 2, &[(0, 0, 1.0), (0, 0, 2.0), (1, 1, 5.0)]);
@@ -332,6 +501,23 @@ mod tests {
     fn from_triples_drops_zero_sum() {
         let m = SpMat::from_triples(1, 1, &[(0, 0, 1.0), (0, 0, -1.0)]);
         assert_eq!(m.nnz(), 0);
+    }
+
+    #[test]
+    fn from_sorted_triples_matches_from_triples() {
+        forall(30, 0x50A7, |rng| {
+            let mut tr = Vec::new();
+            for _ in 0..rng.below(40) {
+                tr.push((
+                    rng.below(6) as usize,
+                    rng.below(6) as usize,
+                    (rng.below(5) + 1) as f64,
+                ));
+            }
+            let want = SpMat::from_triples(6, 6, &tr);
+            tr.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+            assert_eq!(SpMat::from_sorted_triples(6, 6, &tr), want);
+        });
     }
 
     #[test]
@@ -394,12 +580,41 @@ mod tests {
     }
 
     #[test]
+    fn matmul_cancellation_mid_row() {
+        // partial products that cancel to zero mid-accumulation must not
+        // confuse the marker array (the old `acc == 0.0 && !contains`
+        // test re-pushed such columns)
+        let a = SpMat::from_triples(1, 2, &[(0, 0, 1.0), (0, 1, 1.0)]);
+        let b = SpMat::from_triples(2, 2, &[(0, 0, 1.0), (0, 1, 1.0), (1, 0, -1.0), (1, 1, 1.0)]);
+        let c = a.matmul(&b);
+        // row: col0 = 1 - 1 = 0 (dropped), col1 = 1 + 1 = 2
+        assert_eq!(c.to_triples(), vec![(0, 1, 2.0)]);
+    }
+
+    #[test]
     fn matmul_transpose_distributes() {
         // (A B)^T == B^T A^T
         forall(20, 0xF00D, |rng| {
             let a = rand_mat(rng, 4, 6, 0.4);
             let b = rand_mat(rng, 6, 5, 0.4);
             assert_eq!(a.matmul(&b).transpose(), b.transpose().matmul(&a.transpose()));
+        });
+    }
+
+    #[test]
+    fn matmul_inner_matches_select_then_matmul() {
+        forall(30, 0x1AB, |rng| {
+            let a = rand_mat(rng, 5, 8, 0.35);
+            let b = rand_mat(rng, 7, 4, 0.35);
+            // a strictly-increasing inner contraction map, as the key
+            // intersection produces
+            let mut a_cols: Vec<usize> = (0..8).filter(|_| rng.chance(0.5)).collect();
+            a_cols.truncate(7);
+            let b_rows: Vec<usize> = (0..a_cols.len()).collect();
+            let all_rows: Vec<usize> = (0..a.nr).collect();
+            let all_cols: Vec<usize> = (0..b.nc).collect();
+            let want = a.select(&all_rows, &a_cols).matmul(&b.select(&b_rows, &all_cols));
+            assert_eq!(a.matmul_inner(&b, &a_cols, &b_rows), want);
         });
     }
 
@@ -418,12 +633,90 @@ mod tests {
     }
 
     #[test]
+    fn select_fast_path_matches_reference() {
+        forall(40, 0x5E1EC7, |rng| {
+            let m = rand_mat(rng, 7, 9, 0.4);
+            let rows: Vec<usize> = (0..7).filter(|_| rng.chance(0.6)).collect();
+            let cols: Vec<usize> = (0..9).filter(|_| rng.chance(0.6)).collect();
+            assert_eq!(m.select(&rows, &cols), select_ref(&m, &rows, &cols));
+        });
+    }
+
+    #[test]
+    fn select_nonmonotone_cols_falls_back() {
+        let m = SpMat::from_triples(2, 3, &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)]);
+        // reversed column order still produces the reordered submatrix
+        let s = m.select(&[0, 1], &[2, 0]);
+        assert_eq!(s, select_ref(&m, &[0, 1], &[2, 0]));
+        assert_eq!(s.get(0, 0), 2.0);
+        assert_eq!(s.get(0, 1), 1.0);
+    }
+
+    #[test]
+    fn select_rows_matches_full_select() {
+        forall(30, 0x9085, |rng| {
+            let m = rand_mat(rng, 8, 5, 0.4);
+            let rows: Vec<usize> = (0..8).filter(|_| rng.chance(0.5)).collect();
+            let all_cols: Vec<usize> = (0..5).collect();
+            assert_eq!(m.select_rows(&rows), m.select(&rows, &all_cols));
+        });
+    }
+
+    #[test]
+    fn select_cols_matches_full_select() {
+        forall(30, 0xC01, |rng| {
+            let m = rand_mat(rng, 6, 8, 0.4);
+            let cols: Vec<usize> = (0..8).filter(|_| rng.chance(0.5)).collect();
+            let all_rows: Vec<usize> = (0..6).collect();
+            assert_eq!(m.select_cols(&cols), m.select(&all_rows, &cols));
+        });
+    }
+
+    #[test]
     fn embed_into_larger() {
         let m = SpMat::from_triples(2, 2, &[(0, 0, 1.0), (1, 1, 2.0)]);
         let e = m.embed(4, 4, &[1, 3], &[0, 2]);
         assert_eq!(e.get(1, 0), 1.0);
         assert_eq!(e.get(3, 2), 2.0);
         assert_eq!(e.nnz(), 2);
+    }
+
+    #[test]
+    fn embed_nonmonotone_falls_back() {
+        let m = SpMat::from_triples(2, 2, &[(0, 0, 1.0), (1, 1, 2.0)]);
+        let e = m.embed(4, 4, &[3, 1], &[2, 0]);
+        assert_eq!(e.get(3, 2), 1.0);
+        assert_eq!(e.get(1, 0), 2.0);
+        assert_eq!(e.nnz(), 2);
+    }
+
+    #[test]
+    fn embed_monotone_matches_triple_path() {
+        forall(30, 0xE4B, |rng| {
+            let m = rand_mat(rng, 5, 4, 0.5);
+            // strictly increasing maps into a larger space
+            let mut row_map: Vec<usize> = Vec::new();
+            let mut base = 0u64;
+            for _ in 0..5 {
+                base += rng.below(3) + 1;
+                row_map.push(base as usize);
+            }
+            let mut col_map: Vec<usize> = Vec::new();
+            base = 0;
+            for _ in 0..4 {
+                base += rng.below(3) + 1;
+                col_map.push(base as usize);
+            }
+            let (nr, nc) = (row_map[4] + 1, col_map[3] + 1);
+            let got = m.embed(nr, nc, &row_map, &col_map);
+            let mut triples = Vec::new();
+            for r in 0..m.nr {
+                for (c, v) in m.row(r) {
+                    triples.push((row_map[r], col_map[c], v));
+                }
+            }
+            assert_eq!(got, SpMat::from_triples(nr, nc, &triples));
+        });
     }
 
     #[test]

@@ -317,6 +317,196 @@ fn prop_distributive_matmul_over_add() {
     });
 }
 
+// ---------------------------------------------------- rewrite equivalence
+//
+// The clone-free rewrite must be *bit-identical* to the naive BTreeMap
+// backend: values here are small integers, so float sums are exact and we
+// compare with `==`, not a tolerance.
+
+fn rand_str_triples(rng: &mut XorShift64, n: usize, keyspace: u64) -> Vec<(String, String, String)> {
+    (0..n)
+        .map(|_| {
+            (
+                format!("r{:02}", rng.below(keyspace)),
+                format!("c{:02}", rng.below(keyspace)),
+                format!("v{:02}", rng.below(6)),
+            )
+        })
+        .collect()
+}
+
+/// A string-valued assoc plus its logical (1.0-per-cell) naive oracle —
+/// the coercion every binary op applies to string-valued operands.
+fn str_pair(rng: &mut XorShift64) -> (Assoc, NaiveAssoc) {
+    let n = rng.below(40) as usize;
+    let t = rand_str_triples(rng, n, 10);
+    let a = Assoc::from_str_triples(&t);
+    let cells: std::collections::BTreeSet<(String, String)> =
+        t.iter().map(|(r, c, _)| (r.clone(), c.clone())).collect();
+    let na = NaiveAssoc { cells: cells.into_iter().map(|k| (k, 1.0)).collect() };
+    (a, na)
+}
+
+fn same_exact(a: &Assoc, n: &NaiveAssoc) {
+    // both enumerate in (row, col) key order, so direct comparison pins
+    // pattern, order, and exact values at once
+    assert_eq!(a.triples(), n.triples());
+}
+
+#[test]
+fn numeric_view_borrows_numeric_operands() {
+    // the acceptance gate for the clone-free coercion: a numeric operand
+    // is handed to the algebra as a borrow, never a deep copy
+    let a = Assoc::from_triples(&[("r", "c", 1.0)]);
+    assert!(matches!(a.numeric_view(), std::borrow::Cow::Borrowed(_)));
+    let s = Assoc::from_str_triples(&[("r", "c", "x")]);
+    assert!(matches!(s.numeric_view(), std::borrow::Cow::Owned(_)));
+    // and the borrowed view is the operand itself, not a reallocation
+    match a.numeric_view() {
+        std::borrow::Cow::Borrowed(v) => assert!(std::ptr::eq(v, &a)),
+        std::borrow::Cow::Owned(_) => unreachable!(),
+    }
+}
+
+#[test]
+fn elem_min_intersection_semantics() {
+    // pinned story (doc + behaviour): elem_min keeps only cells present
+    // on BOTH sides — set-intersection, not union-min
+    let a = Assoc::from_triples(&[("r", "c1", 5.0), ("r", "c2", 2.0)]);
+    let b = Assoc::from_triples(&[("r", "c2", 3.0), ("r", "c3", 9.0)]);
+    let m = a.elem_min(&b);
+    assert_eq!(m.nnz(), 1);
+    assert_eq!(m.get("r", "c2"), 2.0);
+    // intersection even for negative values, where union-min would have
+    // kept the one-sided cell (min(-1, missing=0) = -1)
+    let n1 = Assoc::from_triples(&[("r", "c", -1.0)]);
+    let n2 = Assoc::from_triples(&[("r", "d", 1.0)]);
+    assert!(n1.elem_min(&n2).is_empty());
+    // and on the shared pattern the min of negatives is exact
+    let p = Assoc::from_triples(&[("r", "c", -4.0)]);
+    let q = Assoc::from_triples(&[("r", "c", -2.0)]);
+    assert_eq!(p.elem_min(&q).get("r", "c"), -4.0);
+}
+
+#[test]
+fn prop_add_exact_matches_oracle() {
+    forall(60, 0xADD1, |rng| {
+        let (a, na) = assoc_pair(rng);
+        let (b, nb) = assoc_pair(rng);
+        same_exact(&a.add(&b), &na.add(&nb));
+    });
+}
+
+#[test]
+fn prop_string_valued_add_matches_oracle() {
+    forall(50, 0x57A1, |rng| {
+        let (a, na) = str_pair(rng);
+        let (b, nb) = str_pair(rng);
+        same_exact(&a.add(&b), &na.add(&nb));
+        // mixed string/numeric operands coerce only the string side
+        let (c, nc) = assoc_pair(rng);
+        same_exact(&a.add(&c), &na.add(&nc));
+        same_exact(&c.add(&b), &nc.add(&nb));
+    });
+}
+
+#[test]
+fn prop_string_valued_elem_mult_matches_oracle() {
+    forall(50, 0x57A2, |rng| {
+        let (a, na) = str_pair(rng);
+        let (b, nb) = str_pair(rng);
+        same_exact(&a.elem_mult(&b), &na.elem_mult(&nb));
+        let (c, nc) = assoc_pair(rng);
+        same_exact(&a.elem_mult(&c), &na.elem_mult(&nc));
+    });
+}
+
+#[test]
+fn prop_string_valued_matmul_matches_oracle() {
+    forall(50, 0x57A3, |rng| {
+        let (a, na) = str_pair(rng);
+        let (b, nb) = str_pair(rng);
+        same_exact(&a.matmul(&b), &na.matmul(&nb));
+        let (c, nc) = assoc_pair(rng);
+        same_exact(&a.matmul(&c), &na.matmul(&nc));
+        same_exact(&c.matmul(&b), &nc.matmul(&nb));
+    });
+}
+
+#[test]
+fn prop_string_valued_transpose_keeps_values() {
+    forall(40, 0x57A4, |rng| {
+        let n = rng.below(30) as usize;
+        let t = rand_str_triples(rng, n, 8);
+        let a = Assoc::from_str_triples(&t);
+        let tr = a.transpose();
+        assert!(tr.is_string_valued() || a.is_empty());
+        let mut want: Vec<(String, String, String)> =
+            a.str_triples().into_iter().map(|(r, c, v)| (c, r, v)).collect();
+        want.sort();
+        let mut got = tr.str_triples();
+        got.sort();
+        assert_eq!(got, want);
+        assert_eq!(tr.transpose(), a);
+    });
+}
+
+#[test]
+fn prop_select_keys_matches_oracle() {
+    forall(50, 0x5E1EC7, |rng| {
+        let (a, na) = assoc_pair(rng);
+        let picks: Vec<String> =
+            (0..rng.below(6)).map(|_| format!("r{:02}", rng.below(12))).collect();
+        let got = a.select_rows(&KeySel::keys(&picks));
+        let want = na.select_rows_by(|r| picks.iter().any(|k| k == r));
+        same_exact(&got, &want);
+    });
+}
+
+#[test]
+fn prop_select_prefix_matches_oracle() {
+    forall(50, 0x9F1, |rng| {
+        let (a, na) = assoc_pair(rng);
+        let p = format!("r{}", rng.below(2));
+        let got = a.select_rows(&KeySel::Prefix(p.clone()));
+        let want = na.select_rows_by(|r| r.starts_with(&p));
+        same_exact(&got, &want);
+    });
+}
+
+#[test]
+fn prop_subsref_matches_oracle() {
+    forall(50, 0x5B5, |rng| {
+        let (a, na) = assoc_pair(rng);
+        let lo = format!("r{:02}", rng.below(12));
+        let hi = format!("r{:02}", rng.below(12));
+        let (lo, hi) = if lo <= hi { (lo, hi) } else { (hi, lo) };
+        let picks: Vec<String> =
+            (0..rng.below(6)).map(|_| format!("c{:02}", rng.below(12))).collect();
+        let got = a.subsref(
+            &KeySel::Range(lo.clone(), hi.clone()),
+            &KeySel::keys(&picks),
+        );
+        let want = na
+            .select_rows_by(|r| r >= lo.as_str() && r <= hi.as_str())
+            .select_cols_by(|c| picks.iter().any(|k| k == c));
+        same_exact(&got, &want);
+    });
+}
+
+#[test]
+fn string_valued_subsref_keeps_values() {
+    let a = Assoc::from_str_triples(&[
+        ("alice", "c1", "blue"),
+        ("bob", "c1", "green"),
+        ("bob", "c2", "red"),
+    ]);
+    let s = a.subsref(&KeySel::Prefix("b".into()), &KeySel::keys(&["c1"]));
+    assert!(s.is_string_valued());
+    assert_eq!(s.get_str("bob", "c1"), Some("green"));
+    assert_eq!(s.nnz(), 1);
+}
+
 fn same_assoc(a: &Assoc, b: &Assoc) {
     let mut at = a.triples();
     let mut bt = b.triples();

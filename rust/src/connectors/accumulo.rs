@@ -321,21 +321,17 @@ impl D4mTable {
         Ok(api::finish(a, q))
     }
 
-    /// Distinct row keys currently stored under the selector. Scans are
-    /// row-sorted, so consecutive dedup keeps the *retained* snapshot at
-    /// O(rows); the enumeration pass itself goes through the substrate's
-    /// materialising `Table::scan` (a streaming key-only scan in
-    /// `kvstore` would remove that setup cost — see ROADMAP).
+    /// Distinct row keys currently stored under the selector, via the
+    /// substrate's **key-only** scan ([`Table::scan_row_keys`]): no values
+    /// are materialised and no iterator stack runs before the first page.
+    /// Rows that turn out fully tombstoned yield empty pages downstream,
+    /// which the pager skips — the page fetch applies versioning exactly.
     fn matching_row_keys(&self, rows: &KeySel) -> Vec<String> {
         let ranges =
             keysel_row_ranges(rows).unwrap_or_else(|| vec![RowRange::all()]);
         let mut keys: Vec<String> = Vec::new();
         for r in &ranges {
-            for e in self.main.scan(r, &IterConfig::default()) {
-                if keys.last().map(|k| *k != e.key.row).unwrap_or(true) {
-                    keys.push(e.key.row);
-                }
-            }
+            keys.extend(self.main.scan_row_keys(r));
         }
         keys
     }

@@ -67,6 +67,10 @@ impl SqlConnector {
                 .collect()
         };
         t.insert_batch(rows)?;
+        // equality index over the row keys: paged scans answer each page
+        // through it instead of a full-table predicate pass (built after
+        // the bulk insert, one pass)
+        t.create_index("row_key")?;
         Ok(t)
     }
 
@@ -81,17 +85,10 @@ impl SqlConnector {
     }
 }
 
-/// SELECT through `pred` on one pinned table handle, as raw string
-/// triples (TEXT tables keep stored values verbatim; FLOAT tables render
-/// the number).
-fn select_to_raw_triples(
-    t: &RelTable,
-    pred: Option<&Predicate>,
-) -> Result<Vec<(String, String, String)>> {
-    let is_text = t.schema.col_index("val_txt").is_some();
-    let rows = t.select(None, pred, None)?;
-    Ok(rows
-        .into_iter()
+/// Render triple-table rows as raw string triples (TEXT tables keep
+/// stored values verbatim; FLOAT tables render the number).
+fn rows_to_raw_triples(is_text: bool, rows: Vec<Row>) -> Vec<(String, String, String)> {
+    rows.into_iter()
         .map(|r| {
             let row = r[0].as_text().unwrap_or("").to_string();
             let col = r[1].as_text().unwrap_or("").to_string();
@@ -102,7 +99,17 @@ fn select_to_raw_triples(
             };
             (row, col, val)
         })
-        .collect())
+        .collect()
+}
+
+/// SELECT through `pred` on one pinned table handle, as raw string
+/// triples.
+fn select_to_raw_triples(
+    t: &RelTable,
+    pred: Option<&Predicate>,
+) -> Result<Vec<(String, String, String)>> {
+    let is_text = t.schema.col_index("val_txt").is_some();
+    Ok(rows_to_raw_triples(is_text, t.select(None, pred, None)?))
 }
 
 /// SELECT + decode into an assoc (numeric when every value parses).
@@ -163,31 +170,43 @@ impl DbTable for SqlTable {
 
     fn scan(&self, q: &TableQuery) -> Result<AssocPages> {
         // pin one table generation (put_assoc swaps the table handle on
-        // replace) and snapshot matching row keys via a projected SELECT
+        // replace); the row-key snapshot reads the equality index's
+        // distinct keys — no projected full-table SELECT
         let t = match self.conn.db.table(&self.name) {
             Some(t) => t,
             None => return Ok(api::empty_pages(q)), // bound but never written
         };
-        let key_rows = t.select(Some(&["row_key"]), None, None)?;
-        let rows: Vec<String> = key_rows
-            .iter()
-            .filter_map(|r| r[0].as_text())
-            .filter(|k| q.rows.matches(k))
-            .map(str::to_string)
-            .collect();
+        let rows: Vec<String> = match t.index_keys("row_key") {
+            Some(keys) => keys.into_iter().filter(|k| q.rows.matches(k)).collect(),
+            None => t
+                .select(Some(&["row_key"]), None, None)?
+                .iter()
+                .filter_map(|r| r[0].as_text())
+                .filter(|k| q.rows.matches(k))
+                .map(str::to_string)
+                .collect(),
+        };
         let col_sel = q.cols.clone();
         let fetch = Box::new(move |page: &[String]| {
-            // O(1) page-membership test per stored row (the engine has no
-            // key index, so each page costs one predicate scan)
-            let keys: std::collections::HashSet<String> = page.iter().cloned().collect();
-            let col_sel_pred = col_sel.clone();
-            let pred: Predicate = Box::new(move |r: &Row| {
-                r[0].as_text().map(|k| keys.contains(k)).unwrap_or(false)
-                    && col_sel_pred.matches(r[1].as_text().unwrap_or(""))
-            });
-            // the predicate already applied both selectors exactly; build
-            // a raw page — no numeric inference on stored values
-            Ok(Assoc::from_str_triples(&select_to_raw_triples(&t, Some(&pred))?))
+            let is_text = t.schema.col_index("val_txt").is_some();
+            // each page is answered by index point lookups; the predicate
+            // full-scan only remains as a fallback for un-indexed tables
+            let page_rows: Vec<Row> = if t.has_index("row_key") {
+                t.select_by_key("row_key", page)?
+            } else {
+                let keys: std::collections::HashSet<String> = page.iter().cloned().collect();
+                let pred: Predicate = Box::new(move |r: &Row| {
+                    r[0].as_text().map(|k| keys.contains(k)).unwrap_or(false)
+                });
+                t.select(None, Some(&pred), None)?
+            };
+            let kept: Vec<Row> = page_rows
+                .into_iter()
+                .filter(|r| col_sel.matches(r[1].as_text().unwrap_or("")))
+                .collect();
+            // both selectors applied exactly; build a raw page — no
+            // numeric inference on stored values
+            Ok(Assoc::from_str_triples(&rows_to_raw_triples(is_text, kept)))
         });
         Ok(AssocPages::over_rows(rows, q.page_rows, q.limit, fetch))
     }
@@ -241,6 +260,19 @@ mod tests {
         let b = c.get_assoc_where("t", Some(&pred)).unwrap();
         assert_eq!(b.nnz(), 1);
         assert_eq!(b.get("r2", "c2"), 10.0);
+    }
+
+    #[test]
+    fn put_assoc_builds_row_key_index() {
+        let c = SqlConnector::new();
+        c.put_assoc("t", &Assoc::from_triples(&[("r1", "c1", 1.0), ("r2", "c1", 2.0)]))
+            .unwrap();
+        let t = c.db().table_or_err("t").unwrap();
+        assert!(t.has_index("row_key"));
+        assert_eq!(t.select_by_key("row_key", &["r2".to_string()]).unwrap().len(), 1);
+        let mut keys = t.index_keys("row_key").unwrap();
+        keys.sort();
+        assert_eq!(keys, vec!["r1".to_string(), "r2".to_string()]);
     }
 
     #[test]

@@ -88,6 +88,22 @@ impl Table {
         out
     }
 
+    /// Key-only scan: distinct row keys stored in `range`, sorted. Paged
+    /// readers snapshot rows through this instead of a materialising
+    /// [`Table::scan`] — no values are cloned and no iterator stack runs.
+    /// Tablets are range-disjoint and visited in row order, so per-tablet
+    /// results concatenate already sorted.
+    pub fn scan_row_keys(&self, range: &RowRange) -> Vec<String> {
+        let mut out = Vec::new();
+        for (i, tl) in self.tablets.iter().enumerate() {
+            if !self.tablet_overlaps(i, range) {
+                continue;
+            }
+            out.extend(tl.lock().unwrap().row_keys_in(range));
+        }
+        out
+    }
+
     /// Scan one row.
     pub fn scan_row(&self, row: &str, cfg: &IterConfig) -> Vec<Entry> {
         let range = RowRange::single(row);
@@ -241,6 +257,17 @@ mod tests {
         let out = t.scan(&RowRange::span("x", "zz"), &IterConfig::default());
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].key.row, "z");
+    }
+
+    #[test]
+    fn scan_row_keys_across_tablets() {
+        let store = KvStore::new();
+        let t = store.create_table("t", vec!["h".into(), "p".into()]).unwrap();
+        for r in ["z", "a", "m", "q", "h", "a"] {
+            t.put(r, "c", "v");
+        }
+        assert_eq!(t.scan_row_keys(&RowRange::all()), vec!["a", "h", "m", "q", "z"]);
+        assert_eq!(t.scan_row_keys(&RowRange::span("h", "r")), vec!["h", "m", "q"]);
     }
 
     #[test]

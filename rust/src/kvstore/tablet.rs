@@ -171,6 +171,37 @@ impl Tablet {
         }
         cfg.apply(Box::new(MergeIter::new(sources)))
     }
+
+    /// Key-only scan: distinct row keys stored in `range`, sorted
+    /// ascending. Walks the memtable and runs as slices — no `Entry`
+    /// cloning, no k-way merge, no value materialisation — so snapshotting
+    /// the rows of a paged scan costs one `String` clone per (source ×
+    /// distinct row) instead of a full materialising scan. Rows whose
+    /// cells are all tombstoned may still be reported (versioning is the
+    /// per-page fetch's job); downstream pagination skips their empty
+    /// pages.
+    pub fn row_keys_in(&mut self, range: &RowRange) -> Vec<String> {
+        self.ensure_sorted();
+        let mut out: Vec<String> = Vec::new();
+        let mut sources: Vec<&[Entry]> = Vec::with_capacity(1 + self.runs.len());
+        sources.push(slice_range(&self.memtable, range));
+        for run in &self.runs {
+            sources.push(slice_range(run, range));
+        }
+        for src in sources {
+            // each source is sorted, so consecutive dedup is exact per source
+            let mut last: Option<&str> = None;
+            for e in src {
+                if last != Some(e.key.row.as_str()) {
+                    out.push(e.key.row.clone());
+                    last = Some(e.key.row.as_str());
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
 }
 
 /// Binary-search the sub-slice of a sorted run covered by a row range.
@@ -287,6 +318,32 @@ mod tests {
         let out = t.scan(&RowRange::all(), &IterConfig::default());
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].value, "new");
+    }
+
+    #[test]
+    fn row_keys_in_distinct_sorted_across_layers() {
+        let mut t = Tablet::new(small_config());
+        // spread rows across a flushed run and the live memtable, with
+        // multiple cells and versions per row
+        t.put(Entry::new(Key::cell("b", "c1", 1), "x"));
+        t.put(Entry::new(Key::cell("d", "c1", 2), "x"));
+        t.flush();
+        t.put(Entry::new(Key::cell("a", "c1", 3), "x"));
+        t.put(Entry::new(Key::cell("b", "c2", 4), "x"));
+        t.put(Entry::new(Key::cell("b", "c1", 5), "newer"));
+        assert_eq!(t.row_keys_in(&RowRange::all()), vec!["a", "b", "d"]);
+        assert_eq!(t.row_keys_in(&RowRange::span("b", "d")), vec!["b"]);
+        // key-only scan agrees with the materialising scan's row set
+        let full: Vec<String> = {
+            let mut rows: Vec<String> = t
+                .scan(&RowRange::all(), &IterConfig::default())
+                .into_iter()
+                .map(|e| e.key.row)
+                .collect();
+            rows.dedup();
+            rows
+        };
+        assert_eq!(t.row_keys_in(&RowRange::all()), full);
     }
 
     #[test]

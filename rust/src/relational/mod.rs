@@ -94,11 +94,14 @@ pub type Predicate = Box<dyn Fn(&Row) -> bool + Send + Sync>;
 pub struct RelTable {
     pub schema: TableSchema,
     rows: Mutex<Vec<Row>>,
+    /// Secondary equality indexes: column position -> text value -> row
+    /// positions (rows are append-only, so positions never go stale).
+    indexes: Mutex<HashMap<usize, HashMap<String, Vec<usize>>>>,
 }
 
 impl RelTable {
     fn new(schema: TableSchema) -> Self {
-        RelTable { schema, rows: Mutex::new(Vec::new()) }
+        RelTable { schema, rows: Mutex::new(Vec::new()), indexes: Mutex::new(HashMap::new()) }
     }
 
     /// INSERT one row (type-checked against the schema; NULL always ok).
@@ -119,7 +122,12 @@ impl RelTable {
                 }
             }
         }
-        self.rows.lock().unwrap().push(row);
+        let pos = {
+            let mut rows = self.rows.lock().unwrap();
+            rows.push(row);
+            rows.len() - 1
+        };
+        self.index_rows(pos, pos + 1);
         Ok(())
     }
 
@@ -130,8 +138,112 @@ impl RelTable {
                 return Err(D4mError::InvalidArg("insert arity mismatch".into()));
             }
         }
-        self.rows.lock().unwrap().extend(rows);
+        let (start, end) = {
+            let mut stored = self.rows.lock().unwrap();
+            let start = stored.len();
+            stored.extend(rows);
+            (start, stored.len())
+        };
+        self.index_rows(start, end);
         Ok(())
+    }
+
+    /// Maintain every existing index for freshly appended rows
+    /// `[start, end)`. Never holds two locks at once, so it cannot
+    /// deadlock against `create_index` (which holds `rows` while
+    /// publishing); a row double-counted by both paths is deduplicated
+    /// at lookup.
+    fn index_rows(&self, start: usize, end: usize) {
+        let cols: Vec<usize> = {
+            let indexes = self.indexes.lock().unwrap();
+            if indexes.is_empty() {
+                return;
+            }
+            indexes.keys().copied().collect()
+        };
+        let texts: Vec<(usize, usize, String)> = {
+            let rows = self.rows.lock().unwrap();
+            let mut out = Vec::new();
+            for pos in start..end {
+                for &ci in &cols {
+                    if let Some(k) = rows[pos][ci].as_text() {
+                        out.push((ci, pos, k.to_string()));
+                    }
+                }
+            }
+            out
+        };
+        let mut indexes = self.indexes.lock().unwrap();
+        for (ci, pos, k) in texts {
+            if let Some(map) = indexes.get_mut(&ci) {
+                map.entry(k).or_default().push(pos);
+            }
+        }
+    }
+
+    /// Build (or rebuild) an equality index over a TEXT column. Inserts
+    /// maintain it from then on; [`RelTable::select_by_key`] answers
+    /// point lookups through it without a full-table predicate pass.
+    pub fn create_index(&self, col: &str) -> Result<()> {
+        let ci = self
+            .schema
+            .col_index(col)
+            .ok_or_else(|| D4mError::NotFound(format!("column {col}")))?;
+        // hold the rows lock across snapshot *and* publish: a concurrent
+        // insert either lands before the scan (and is in the snapshot) or
+        // blocks until the index is visible (and maintains it) — no row
+        // can slip between the two. `index_rows` never holds two locks,
+        // so taking `indexes` while holding `rows` cannot deadlock.
+        let rows = self.rows.lock().unwrap();
+        let mut map: HashMap<String, Vec<usize>> = HashMap::new();
+        for (i, r) in rows.iter().enumerate() {
+            if let Some(k) = r[ci].as_text() {
+                map.entry(k.to_string()).or_default().push(i);
+            }
+        }
+        self.indexes.lock().unwrap().insert(ci, map);
+        drop(rows);
+        Ok(())
+    }
+
+    /// Is there an index over `col`?
+    pub fn has_index(&self, col: &str) -> bool {
+        match self.schema.col_index(col) {
+            Some(ci) => self.indexes.lock().unwrap().contains_key(&ci),
+            None => false,
+        }
+    }
+
+    /// Distinct values stored in the index over `col` (unsorted), or
+    /// `None` when no such index exists. One clone per distinct key —
+    /// cheaper than projecting every row.
+    pub fn index_keys(&self, col: &str) -> Option<Vec<String>> {
+        let ci = self.schema.col_index(col)?;
+        let indexes = self.indexes.lock().unwrap();
+        indexes.get(&ci).map(|m| m.keys().cloned().collect())
+    }
+
+    /// Rows whose indexed `col` equals any of `keys`, via the equality
+    /// index (requires [`RelTable::create_index`]). Results come back in
+    /// insertion order, as a full-scan SELECT would return them.
+    pub fn select_by_key(&self, col: &str, keys: &[String]) -> Result<Vec<Row>> {
+        let ci = self
+            .schema
+            .col_index(col)
+            .ok_or_else(|| D4mError::NotFound(format!("column {col}")))?;
+        let mut pos: Vec<usize> = {
+            let indexes = self.indexes.lock().unwrap();
+            let idx = indexes
+                .get(&ci)
+                .ok_or_else(|| D4mError::NotFound(format!("no index on column {col}")))?;
+            keys.iter()
+                .flat_map(|k| idx.get(k.as_str()).into_iter().flatten().copied())
+                .collect()
+        };
+        pos.sort_unstable();
+        pos.dedup();
+        let rows = self.rows.lock().unwrap();
+        Ok(pos.into_iter().map(|i| rows[i].clone()).collect())
     }
 
     pub fn count(&self) -> usize {
@@ -320,6 +432,50 @@ mod tests {
         let (_db, t) = tripled();
         assert!(t.select(Some(&["nope"]), None, None).is_err());
         assert!(t.select(None, None, Some("nope")).is_err());
+    }
+
+    #[test]
+    fn index_point_lookup_matches_predicate_scan() {
+        let (_db, t) = tripled();
+        t.create_index("src").unwrap();
+        assert!(t.has_index("src"));
+        assert!(!t.has_index("dst"));
+        let got = t.select_by_key("src", &["b".to_string(), "nope".to_string()]).unwrap();
+        let pred: Predicate = Box::new(|r| r[0].as_text() == Some("b"));
+        let want = t.select(None, Some(&pred), None).unwrap();
+        assert_eq!(got, want);
+        let mut keys = t.index_keys("src").unwrap();
+        keys.sort();
+        assert_eq!(keys, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn index_maintained_by_inserts() {
+        let (_db, t) = tripled();
+        t.create_index("src").unwrap();
+        t.insert(vec![
+            SqlValue::Text("b".into()),
+            SqlValue::Text("d".into()),
+            SqlValue::Float(3.0),
+        ])
+        .unwrap();
+        t.insert_batch(vec![vec![
+            SqlValue::Text("e".into()),
+            SqlValue::Text("f".into()),
+            SqlValue::Float(4.0),
+        ]])
+        .unwrap();
+        assert_eq!(t.select_by_key("src", &["b".to_string()]).unwrap().len(), 2);
+        assert_eq!(t.select_by_key("src", &["e".to_string()]).unwrap().len(), 1);
+        assert_eq!(t.index_keys("src").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn index_errors_without_create() {
+        let (_db, t) = tripled();
+        assert!(t.select_by_key("src", &["a".to_string()]).is_err());
+        assert!(t.create_index("nope").is_err());
+        assert!(t.index_keys("src").is_none());
     }
 
     #[test]

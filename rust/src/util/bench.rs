@@ -1,0 +1,136 @@
+//! Machine-readable benchmark records.
+//!
+//! Every bench driver appends `{op, n, backend, seconds, entries_per_sec}`
+//! objects to a JSON-array file (`BENCH_assoc.json` for the assoc-algebra
+//! trajectory), so regressions show up as data instead of scrollback.
+//! No JSON dependency offline: records are emitted by hand and appended
+//! by splicing before the closing bracket, keeping the file a valid JSON
+//! array after every run.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One timing record from a bench driver.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Operation name, e.g. `construct`, `add`, `matmul`, `tablemult`.
+    pub op: String,
+    /// Problem size (input entries / edges).
+    pub n: usize,
+    /// Backend label, e.g. `naive`, `csr`, `graphulo`, `d4m`.
+    pub backend: String,
+    /// Wall-clock seconds for the op.
+    pub seconds: f64,
+    /// Throughput in processed entries per second.
+    pub entries_per_sec: f64,
+}
+
+impl BenchRecord {
+    /// Record an op that processed `entries` items in `seconds`.
+    pub fn new(op: &str, n: usize, backend: &str, seconds: f64, entries: usize) -> Self {
+        BenchRecord {
+            op: op.to_string(),
+            n,
+            backend: backend.to_string(),
+            seconds,
+            entries_per_sec: entries as f64 / seconds.max(1e-12),
+        }
+    }
+
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"op\":\"{}\",\"n\":{},\"backend\":\"{}\",\"seconds\":{:.6},\"entries_per_sec\":{:.1}}}",
+            json_escape(&self.op),
+            self.n,
+            json_escape(&self.backend),
+            self.seconds,
+            self.entries_per_sec
+        )
+    }
+}
+
+/// Escape the two characters that can break a JSON string (labels here
+/// are ASCII identifiers; control characters don't occur).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Append records to a JSON-array file, creating it if missing. The file
+/// is a valid JSON array after every append: existing contents are kept
+/// by splicing the new records in before the closing `]`.
+pub fn append_records(path: &Path, records: &[BenchRecord]) -> std::io::Result<()> {
+    if records.is_empty() {
+        return Ok(());
+    }
+    let body: Vec<String> = records.iter().map(|r| format!("  {}", r.to_json())).collect();
+    let body = body.join(",\n");
+    let existing = std::fs::read_to_string(path).ok();
+    let out = match existing {
+        Some(s) if !s.trim().is_empty() => {
+            let head = s.trim_end();
+            let head = head.strip_suffix(']').unwrap_or(head).trim_end();
+            let head = head.strip_suffix(',').unwrap_or(head);
+            if head.trim() == "[" {
+                format!("[\n{body}\n]\n")
+            } else {
+                format!("{head},\n{body}\n]\n")
+            }
+        }
+        _ => format!("[\n{body}\n]\n"),
+    };
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(out.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("d4m_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn record_json_shape() {
+        let r = BenchRecord::new("add", 1024, "csr", 0.5, 1024);
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"op\":\"add\""));
+        assert!(j.contains("\"n\":1024"));
+        assert!(j.contains("\"backend\":\"csr\""));
+        assert!(j.contains("\"entries_per_sec\":2048.0"));
+    }
+
+    #[test]
+    fn append_creates_then_splices() {
+        let p = tmp("append.json");
+        let _ = std::fs::remove_file(&p);
+        append_records(&p, &[BenchRecord::new("a", 1, "x", 1.0, 1)]).unwrap();
+        append_records(&p, &[BenchRecord::new("b", 2, "y", 1.0, 2)]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.trim_start().starts_with('['));
+        assert!(s.trim_end().ends_with(']'));
+        assert!(s.contains("\"op\":\"a\""));
+        assert!(s.contains("\"op\":\"b\""));
+        // exactly one array: one '[' and one ']'
+        assert_eq!(s.matches('[').count(), 1);
+        assert_eq!(s.matches(']').count(), 1);
+        // and the comma splice keeps it parseable by eye: 2 objects
+        assert_eq!(s.matches("{\"op\"").count(), 2);
+    }
+
+    #[test]
+    fn escape_quotes() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+    }
+}

@@ -1,6 +1,7 @@
 //! Small shared utilities: deterministic RNG, sorted-vec helpers, a tiny
 //! property-testing harness (`forall`), and human-readable rate formatting.
 
+pub mod bench;
 pub mod fasthash;
 pub mod rng;
 
@@ -9,31 +10,45 @@ pub use rng::XorShift64;
 
 /// Merge two sorted, deduplicated string slices into a sorted, deduplicated
 /// union. Returns the union plus, for each input, a mapping from its local
-/// indices to union indices.
+/// indices to union indices. The maps are strictly increasing — the CSR
+/// layer relies on that to embed without re-sorting. One key comparison
+/// per output element.
 pub fn merge_sorted_keys(a: &[String], b: &[String]) -> (Vec<String>, Vec<usize>, Vec<usize>) {
     let mut out = Vec::with_capacity(a.len() + b.len());
     let mut map_a = Vec::with_capacity(a.len());
     let mut map_b = Vec::with_capacity(b.len());
     let (mut i, mut j) = (0usize, 0usize);
-    while i < a.len() || j < b.len() {
-        let take_a = j >= b.len() || (i < a.len() && a[i] <= b[j]);
-        let take_b = i >= a.len() || (j < b.len() && b[j] <= a[i]);
+    while i < a.len() && j < b.len() {
         let idx = out.len();
-        if take_a && take_b {
-            out.push(a[i].clone());
-            map_a.push(idx);
-            map_b.push(idx);
-            i += 1;
-            j += 1;
-        } else if take_a {
-            out.push(a[i].clone());
-            map_a.push(idx);
-            i += 1;
-        } else {
-            out.push(b[j].clone());
-            map_b.push(idx);
-            j += 1;
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[i].clone());
+                map_a.push(idx);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[j].clone());
+                map_b.push(idx);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push(a[i].clone());
+                map_a.push(idx);
+                map_b.push(idx);
+                i += 1;
+                j += 1;
+            }
         }
+    }
+    while i < a.len() {
+        map_a.push(out.len());
+        out.push(a[i].clone());
+        i += 1;
+    }
+    while j < b.len() {
+        map_b.push(out.len());
+        out.push(b[j].clone());
+        j += 1;
     }
     (out, map_a, map_b)
 }
