@@ -1,0 +1,147 @@
+//! Bench: the snapshot/streaming scan path — sequential streaming vs.
+//! scoped-thread parallel materialisation vs. concurrent readers (with
+//! and without writer interference).
+//!
+//! Scenarios (op = "scan", n = stored entries):
+//!   stream      — one full-range lazy `scan_stream`, drained
+//!   parallel    — one full-range materialising `scan` (per-tablet
+//!                 scoped threads on the 8-way split table)
+//!   concurrent4 — 4 reader threads each draining full-range streams
+//!                 for a fixed number of passes; aggregate throughput
+//!   concurrent4+writer — same, with one writer thread mutating
+//!                 throughout (the snapshot path's whole point: readers
+//!                 shouldn't serialise against the write path)
+//!
+//! Machine-readable records are appended to `BENCH_scan.json`;
+//! `--smoke` runs the smallest size only (the CI regression probe).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use d4m::kvstore::{IterConfig, KvStore, RowRange, Table, TabletConfig};
+use d4m::util::bench::{append_records, BenchRecord};
+use d4m::util::fmt_rate;
+
+const READERS: usize = 4;
+const PASSES: usize = 8;
+
+/// An 8-way split table of `n` entries with flushed runs and a live
+/// memtable tail, so scans cross both layers.
+fn build_table(store: &KvStore, n: usize) -> Arc<Table> {
+    let splits: Vec<String> = (1..8).map(|i| format!("r{:07}", i * n / 8)).collect();
+    let t = store.create_table("scan_bench", splits).unwrap();
+    for i in 0..n {
+        t.put(&format!("r{i:07}"), &format!("c{:02}", i % 17), "1");
+    }
+    t.flush();
+    // a live unsorted memtable tail (~1/16 of the data) on top
+    for i in 0..n / 16 {
+        t.put(&format!("r{:07}", i * 16), "c99", "2");
+    }
+    t
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let sizes: &[usize] = if smoke { &[40_000] } else { &[100_000, 400_000, 1_000_000] };
+    let mut records: Vec<BenchRecord> = Vec::new();
+    println!("# scan path: streaming vs parallel vs concurrent readers");
+    println!(
+        "{:<10} {:<20} {:>10} {:>12} {:>14}",
+        "n", "mode", "entries", "seconds", "rate"
+    );
+
+    for &n in sizes {
+        let store = KvStore::with_config(TabletConfig::default());
+        let t = build_table(&store, n);
+        let cfg = IterConfig::default();
+
+        // -- sequential lazy stream
+        let t0 = Instant::now();
+        let drained = t.scan_stream(&RowRange::all(), &cfg).count();
+        let dt = t0.elapsed().as_secs_f64();
+        report(&mut records, n, "stream", dt, drained);
+
+        // -- parallel materialising scan (scoped threads per tablet)
+        let t1 = Instant::now();
+        let collected = t.scan(&RowRange::all(), &cfg).len();
+        let dt = t1.elapsed().as_secs_f64();
+        assert_eq!(collected, drained, "parallel and streaming scans disagree");
+        report(&mut records, n, "parallel", dt, collected);
+
+        // -- concurrent readers, idle write path
+        let (dt, total) = run_readers(&t, &cfg, None);
+        report(&mut records, n, "concurrent4", dt, total);
+
+        // -- concurrent readers against a live writer (the readers'
+        // own drained totals are used: the writer grows the table
+        // mid-run, so a pre-writer count would under-report)
+        let stop = Arc::new(AtomicBool::new(false));
+        let (dt, total) = run_readers(&t, &cfg, Some(stop));
+        report(&mut records, n, "concurrent4+writer", dt, total);
+    }
+
+    let out = Path::new("BENCH_scan.json");
+    match append_records(out, &records) {
+        Ok(()) => println!("# appended {} records to {}", records.len(), out.display()),
+        Err(e) => eprintln!("# failed to write {}: {e}", out.display()),
+    }
+}
+
+/// Drain `PASSES` full-range streams on each of `READERS` threads;
+/// optionally run a writer thread mutating a hot row set throughout.
+/// Returns wall-clock seconds and the aggregate entries drained.
+fn run_readers(
+    t: &Arc<Table>,
+    cfg: &IterConfig,
+    writer: Option<Arc<AtomicBool>>,
+) -> (f64, usize) {
+    let t0 = Instant::now();
+    let mut total = 0usize;
+    std::thread::scope(|s| {
+        if let Some(stop) = writer.clone() {
+            let t = t.clone();
+            s.spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    t.put(&format!("w{:05}", i % 1000), "c", &i.to_string());
+                    i += 1;
+                }
+            });
+        }
+        let readers: Vec<_> = (0..READERS)
+            .map(|_| {
+                let t = t.clone();
+                let cfg = cfg.clone();
+                s.spawn(move || {
+                    let mut drained = 0usize;
+                    for _ in 0..PASSES {
+                        drained += t.scan_stream(&RowRange::all(), &cfg).count();
+                    }
+                    drained
+                })
+            })
+            .collect();
+        for r in readers {
+            total += r.join().unwrap();
+        }
+        if let Some(stop) = writer {
+            stop.store(true, Ordering::Relaxed);
+        }
+    });
+    (t0.elapsed().as_secs_f64(), total)
+}
+
+fn report(records: &mut Vec<BenchRecord>, n: usize, mode: &str, dt: f64, entries: usize) {
+    println!(
+        "{:<10} {:<20} {:>10} {:>12.3} {:>14}",
+        n,
+        mode,
+        entries,
+        dt,
+        fmt_rate(entries as f64 / dt)
+    );
+    records.push(BenchRecord::new("scan", n, mode, dt, entries));
+}

@@ -207,9 +207,11 @@ impl D4mTable {
     }
 
     /// Read a row range as an associative array (`T('a,:,b,', :)`).
+    /// Entries stream out of a tablet snapshot straight into the assoc
+    /// builder — no intermediate `Vec<Entry>`, no lock held while
+    /// decoding.
     pub fn get_assoc_range(&self, range: &RowRange) -> Result<Assoc> {
-        let entries = self.main.scan(range, &IterConfig::default());
-        entries_to_assoc(entries)
+        entries_to_assoc(self.main.scan_stream(range, &IterConfig::default()))
     }
 
     /// Column query via the transpose table (`T(:, 'c,')`): scans
@@ -217,7 +219,7 @@ impl D4mTable {
     pub fn get_assoc_by_col(&self, col_range: &RowRange) -> Result<Assoc> {
         match &self.transpose {
             Some(tt) => {
-                let entries = tt.scan(col_range, &IterConfig::default());
+                let entries = tt.scan_stream(col_range, &IterConfig::default());
                 Ok(entries_to_assoc(entries)?.transpose())
             }
             None => {
@@ -250,16 +252,17 @@ impl D4mTable {
         }
     }
 
-    /// Total entries in the main table.
+    /// Total entries in the main table (streamed, never materialised).
     pub fn count(&self) -> usize {
-        self.main.scan(&RowRange::all(), &IterConfig::default()).len()
+        self.main.scan_stream(&RowRange::all(), &IterConfig::default()).count()
     }
 
     /// Rebuild newly created companion tables from the main table's
     /// current contents (binding schema tables onto a table that already
-    /// held data). Not synchronised with concurrent writers.
+    /// held data). Streams a main-table snapshot while writing the
+    /// companions. Not synchronised with concurrent writers.
     fn backfill_companions(&self, transpose: bool, degrees: bool) {
-        for e in self.main.scan(&RowRange::all(), &IterConfig::default()) {
+        for e in self.main.scan_stream(&RowRange::all(), &IterConfig::default()) {
             if transpose {
                 if let Some(t) = &self.transpose {
                     t.put(&e.key.cq, &e.key.row, &e.value);
@@ -287,7 +290,10 @@ impl D4mTable {
             }
         }
         for t in &tables {
-            for e in t.scan(&RowRange::all(), &IterConfig::default()) {
+            // streaming over the snapshot while writing tombstones into
+            // the same table is safe: the open stream reads frozen
+            // segments the deletes cannot touch
+            for e in t.scan_stream(&RowRange::all(), &IterConfig::default()) {
                 t.delete(&e.key.row, &e.key.cq);
             }
         }
@@ -297,23 +303,20 @@ impl D4mTable {
     /// become main-table range scans; a pure column query routes through
     /// the transpose table; the residual subsref normalises exactly.
     fn query_pushdown(&self, q: &TableQuery) -> Result<Assoc> {
+        let cfg = IterConfig::default();
         let a = match keysel_row_ranges(&q.rows) {
             Some(ranges) => {
-                let mut entries = Vec::new();
-                for r in &ranges {
-                    entries.extend(self.main.scan(r, &IterConfig::default()));
-                }
-                entries_to_assoc(entries)?
+                // per-range streams chained lazily: each range's
+                // snapshot is acquired only when the previous range is
+                // exhausted
+                entries_to_assoc(ranges.iter().flat_map(|r| self.main.scan_stream(r, &cfg)))?
             }
             None => match (&self.transpose, keysel_row_ranges(&q.cols)) {
                 // rows unconstrained, cols constrained: scan the
                 // transpose by column key, then flip back
                 (Some(tt), Some(col_ranges)) => {
-                    let mut entries = Vec::new();
-                    for r in &col_ranges {
-                        entries.extend(tt.scan(r, &IterConfig::default()));
-                    }
-                    entries_to_assoc(entries)?.transpose()
+                    entries_to_assoc(col_ranges.iter().flat_map(|r| tt.scan_stream(r, &cfg)))?
+                        .transpose()
                 }
                 _ => D4mTable::get_assoc(self)?,
             },
@@ -385,7 +388,7 @@ impl DbTable for D4mTable {
             (None, Some(tt), Some(col_ranges)) => {
                 let mut keys = Vec::new();
                 for r in &col_ranges {
-                    for e in tt.scan(r, &IterConfig::default()) {
+                    for e in tt.scan_stream(r, &IterConfig::default()) {
                         keys.push(e.key.cq);
                     }
                 }
@@ -397,14 +400,16 @@ impl DbTable for D4mTable {
         let row_sel = q.rows.clone();
         let col_sel = q.cols.clone();
         let fetch = Box::new(move |page: &[String]| {
-            // one range scan spanning the page (keys are sorted), with an
-            // exact membership filter for rows stored between page keys
+            // one streaming range scan spanning the page (keys are
+            // sorted), with an exact membership filter for rows stored
+            // between page keys — only the page's own triples ever
+            // materialise
             let mut triples: Vec<(String, String, String)> = Vec::new();
             if let (Some(first), Some(last)) = (page.first(), page.last()) {
                 let span = RowRange::inclusive(first.clone(), last.clone());
                 let keys: std::collections::HashSet<&str> =
                     page.iter().map(String::as_str).collect();
-                for e in main.scan(&span, &IterConfig::default()) {
+                for e in main.scan_stream(&span, &IterConfig::default()) {
                     if keys.contains(e.key.row.as_str()) {
                         triples.push((e.key.row, e.key.cq, e.value));
                     }
@@ -525,8 +530,10 @@ impl D4mWriter {
 }
 
 /// Decode a scan result into an [`Assoc`] (numeric when every value
-/// parses, string-valued otherwise).
-pub fn entries_to_assoc(entries: Vec<Entry>) -> Result<Assoc> {
+/// parses, string-valued otherwise). Accepts anything yielding entries —
+/// a materialised `Vec<Entry>` or a streaming scan cursor — so callers
+/// can pipe `scan_stream` output straight in.
+pub fn entries_to_assoc(entries: impl IntoIterator<Item = Entry>) -> Result<Assoc> {
     let triples: Vec<(String, String, String)> =
         entries.into_iter().map(|e| (e.key.row, e.key.cq, e.value)).collect();
     crate::assoc::io::parse_triples(triples)

@@ -265,7 +265,10 @@ impl D4mServer {
         }
     }
 
-    /// Metrics snapshots for every op seen so far.
+    /// Metrics snapshots for every op seen so far. Rates come from each
+    /// histogram's own first-to-last-sample span ([`Histogram::rate_per_sec`]),
+    /// not the server-lifetime clock — an op exercised once at startup
+    /// no longer reads as permanently slow.
     pub fn snapshots(&self) -> Vec<Snapshot> {
         let stats = self.op_stats.lock().unwrap();
         let mut out: Vec<Snapshot> = stats
@@ -273,13 +276,19 @@ impl D4mServer {
             .map(|(op, h)| Snapshot {
                 name: op.to_string(),
                 count: h.count(),
-                rate_per_sec: h.count() as f64 / self.requests.elapsed().as_secs_f64().max(1e-9),
+                rate_per_sec: h.rate_per_sec(),
                 mean_latency_ns: h.mean_ns(),
                 p99_latency_ns: h.quantile_ns(0.99),
             })
             .collect();
         out.sort_by(|a, b| a.name.cmp(&b.name));
         out
+    }
+
+    /// Requests per second over the server's lifetime (the global
+    /// throughput meter; per-op rates live in [`D4mServer::snapshots`]).
+    pub fn requests_per_sec(&self) -> f64 {
+        self.requests.rate()
     }
 }
 

@@ -33,7 +33,9 @@ pub fn bfs_server(table: &Arc<Table>, seeds: &[String], k: usize) -> BTreeMap<St
         }
         let mut next = Vec::new();
         for v in &frontier {
-            for e in table.scan_row(v, &cfg) {
+            // streaming row scan: neighbours are pulled one at a time
+            // out of a tablet snapshot, never into a per-row Vec
+            for e in table.scan_row_stream(v, &cfg) {
                 let dst = e.key.cq;
                 if !dist.contains_key(&dst) {
                     dist.insert(dst.clone(), hop);
@@ -70,17 +72,18 @@ pub fn jaccard_server(
     // the small side — Graphulo does the same with a scan-time cache)
     let deg_cfg = IterConfig { summing: true, ..Default::default() };
     let mut degree: BTreeMap<String, f64> = BTreeMap::new();
-    for e in deg.scan(&RowRange::all(), &deg_cfg) {
+    for e in deg.scan_stream(&RowRange::all(), &deg_cfg) {
         if e.key.cq == "deg" {
             degree.insert(e.key.row, e.value.parse().unwrap_or(0.0));
         }
     }
 
-    // streaming combine pass over N
+    // streaming combine pass over N: one entry of N resident at a time,
+    // writes into `out` while the scan cursor is open
     let out = store.ensure_table(out_name, vec![]);
     let mut w = BatchWriter::new(out.clone(), WriterConfig::default());
     let sum_cfg = IterConfig { summing: true, ..Default::default() };
-    for e in n_table.scan(&RowRange::all(), &sum_cfg) {
+    for e in n_table.scan_stream(&RowRange::all(), &sum_cfg) {
         let (i, j) = (e.key.row.as_str(), e.key.cq.as_str());
         if i >= j {
             continue;
@@ -95,7 +98,7 @@ pub fn jaccard_server(
     }
     w.flush();
     let cfg = IterConfig::default();
-    crate::connectors::accumulo::entries_to_assoc(out.scan(&RowRange::all(), &cfg))
+    crate::connectors::accumulo::entries_to_assoc(out.scan_stream(&RowRange::all(), &cfg))
 }
 
 /// Server-side k-truss: iterate `support = (A*A) ∧ A`, drop edges with
@@ -125,8 +128,8 @@ pub fn ktruss_server(
         let mut w = BatchWriter::new(next.clone(), WriterConfig::default());
         let mut kept = 0usize;
         let mut total = 0usize;
-        let mut sq = a2.scan(&RowRange::all(), &cfg).into_iter().peekable();
-        for e in current.scan(&RowRange::all(), &cfg) {
+        let mut sq = a2.scan_stream(&RowRange::all(), &cfg).peekable();
+        for e in current.scan_stream(&RowRange::all(), &cfg) {
             total += 1;
             let edge_cell = (&e.key.row, &e.key.cq);
             // advance A2 to the first cell >= edge_cell
@@ -153,7 +156,7 @@ pub fn ktruss_server(
         if kept == total {
             // fixpoint
             return crate::connectors::accumulo::entries_to_assoc(
-                next.scan(&RowRange::all(), &cfg),
+                next.scan_stream(&RowRange::all(), &cfg),
             );
         }
         if kept == 0 {
@@ -165,11 +168,15 @@ pub fn ktruss_server(
 
 /// Write the symmetric closure of an edge table (minus self-loops) into a
 /// new table — the preprocessing step for k-truss.
-pub fn symmetrise_table(store: &Arc<KvStore>, edge: &Arc<Table>, out_name: &str) -> Result<Arc<Table>> {
+pub fn symmetrise_table(
+    store: &Arc<KvStore>,
+    edge: &Arc<Table>,
+    out_name: &str,
+) -> Result<Arc<Table>> {
     let out = store.ensure_table(out_name, vec![]);
     let mut w = BatchWriter::new(out.clone(), WriterConfig::default());
     let cfg = IterConfig::default();
-    for e in edge.scan(&RowRange::all(), &cfg) {
+    for e in edge.scan_stream(&RowRange::all(), &cfg) {
         if e.key.row != e.key.cq {
             w.put(&e.key.row, &e.key.cq, "1");
             w.put(&e.key.cq, &e.key.row, "1");

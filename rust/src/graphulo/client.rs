@@ -42,7 +42,8 @@ impl ClientCtx {
     /// Pull a whole table into an assoc, charging its footprint.
     pub fn read_table(&self, t: &Arc<Table>) -> Result<Assoc> {
         let cfg = IterConfig { summing: true, ..Default::default() };
-        let a = crate::connectors::accumulo::entries_to_assoc(t.scan(&RowRange::all(), &cfg))?;
+        let a =
+            crate::connectors::accumulo::entries_to_assoc(t.scan_stream(&RowRange::all(), &cfg))?;
         self.charge(a.mem_bytes())?;
         Ok(a)
     }
@@ -71,7 +72,11 @@ impl ClientCtx {
 
 /// Client-side BFS over an adjacency assoc: returns `(vertex -> hop)` for
 /// all vertices reached within `k` hops of the seeds (hop 0 = seed).
-pub fn bfs_assoc(adj: &Assoc, seeds: &[String], k: usize) -> std::collections::BTreeMap<String, usize> {
+pub fn bfs_assoc(
+    adj: &Assoc,
+    seeds: &[String],
+    k: usize,
+) -> std::collections::BTreeMap<String, usize> {
     let mut dist: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
     let mut frontier: Vec<String> = Vec::new();
     for s in seeds {

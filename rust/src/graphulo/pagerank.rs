@@ -38,10 +38,15 @@ pub struct PageRankResult {
 /// contributions; only the rank vector (O(|V|)) is client-resident.
 pub fn pagerank_server(t: &Arc<Table>, opts: &PageRankOpts) -> PageRankResult {
     let cfg = IterConfig::default();
-    // vertex set + out-degrees from one scan
+    let all = RowRange::all();
+    // every pass streams the SAME table snapshot: the vertex set and
+    // degree maps built below stay exhaustive even if concurrent
+    // writers add edges (or whole vertices) while the solver iterates
+    let snap = t.snapshot_range(&all);
+    // vertex set + out-degrees from one streaming scan
     let mut out_deg: BTreeMap<String, f64> = BTreeMap::new();
     let mut vertices: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
-    for e in t.scan(&RowRange::all(), &cfg) {
+    for e in snap.stream(&all, &cfg) {
         *out_deg.entry(e.key.row.clone()).or_insert(0.0) += 1.0;
         vertices.insert(e.key.row);
         vertices.insert(e.key.cq);
@@ -60,7 +65,9 @@ pub fn pagerank_server(t: &Arc<Table>, opts: &PageRankOpts) -> PageRankResult {
             .map(|v| (v.clone(), (1.0 - opts.damping) / n as f64))
             .collect();
         let mut dangling = 0.0;
-        for e in t.scan(&RowRange::all(), &cfg) {
+        // one streaming edge scan of the pinned snapshot per iteration;
+        // only the rank vector (O(|V|)) is client-resident
+        for e in snap.stream(&all, &cfg) {
             let r = rank[&e.key.row];
             let d = out_deg[&e.key.row];
             *next.get_mut(&e.key.cq).unwrap() += opts.damping * r / d;

@@ -69,9 +69,12 @@ pub fn table_mult(
     opts: &TableMultOpts,
 ) -> Result<TableMultStats> {
     let cfg = IterConfig { summing: true, ..Default::default() };
-    // Streaming scans of both tables in key order.
-    let mut sa = a.scan(&opts.row_range, &cfg).into_iter().peekable();
-    let mut sb = b.scan(&opts.row_range, &cfg).into_iter().peekable();
+    // Streaming snapshot scans of both operands in key order: only one
+    // row of A and one row of B are ever resident — the operand tables
+    // are never materialised, and no tablet lock is held while the
+    // product loop runs, so concurrent writers proceed unimpeded.
+    let mut sa = a.scan_stream(&opts.row_range, &cfg).peekable();
+    let mut sb = b.scan_stream(&opts.row_range, &cfg).peekable();
     let mut writer = BatchWriter::new(c.clone(), opts.writer.clone());
     let products = Counter::new();
     let mut stats = TableMultStats::default();
@@ -172,7 +175,7 @@ fn flush_combiner(
 /// Read the product table as an assoc (summing partial products).
 pub fn read_product(c: &Arc<Table>) -> Result<crate::assoc::Assoc> {
     let cfg = IterConfig { summing: true, ..Default::default() };
-    crate::connectors::accumulo::entries_to_assoc(c.scan(&RowRange::all(), &cfg))
+    crate::connectors::accumulo::entries_to_assoc(c.scan_stream(&RowRange::all(), &cfg))
 }
 
 #[cfg(test)]

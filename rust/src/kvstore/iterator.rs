@@ -16,12 +16,18 @@ use super::key::Entry;
 pub trait SortedEntryIter: Iterator<Item = Entry> {}
 impl<T: Iterator<Item = Entry>> SortedEntryIter for T {}
 
+/// The streaming scan cursor: a boxed, owned (`'static`), `Send` entry
+/// iterator in key order. Scans hand these out so results are pulled
+/// through the iterator stack lazily — never materialised into a `Vec`,
+/// never borrowing a tablet (snapshots own their frozen segments).
+pub type EntryStream = Box<dyn Iterator<Item = Entry> + Send>;
+
 // ---------------------------------------------------------------- merge
 
 /// K-way merge of sorted entry streams (binary-heap based).
 pub struct MergeIter {
     heap: std::collections::BinaryHeap<HeapItem>,
-    sources: Vec<Box<dyn Iterator<Item = Entry> + Send>>,
+    sources: Vec<EntryStream>,
 }
 
 struct HeapItem {
@@ -54,7 +60,7 @@ impl Ord for HeapItem {
 }
 
 impl MergeIter {
-    pub fn new(mut sources: Vec<Box<dyn Iterator<Item = Entry> + Send>>) -> Self {
+    pub fn new(mut sources: Vec<EntryStream>) -> Self {
         let mut heap = std::collections::BinaryHeap::new();
         for (i, s) in sources.iter_mut().enumerate() {
             if let Some(e) = s.next() {
@@ -249,12 +255,11 @@ pub struct IterConfig {
 }
 
 impl IterConfig {
-    /// Apply this stack to a merged sorted stream.
-    pub fn apply(
-        &self,
-        merged: Box<dyn Iterator<Item = Entry> + Send>,
-    ) -> Box<dyn Iterator<Item = Entry> + Send> {
-        let mut out: Box<dyn Iterator<Item = Entry> + Send> = if self.summing {
+    /// Apply this stack to a merged sorted stream. The stack stays lazy:
+    /// each combinator wraps the stream and transforms entries as the
+    /// consumer pulls them.
+    pub fn apply(&self, merged: EntryStream) -> EntryStream {
+        let mut out: EntryStream = if self.summing {
             Box::new(SummingCombiner::new(merged))
         } else if self.max_combine {
             Box::new(MaxCombiner::new(merged))

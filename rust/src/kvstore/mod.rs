@@ -7,6 +7,11 @@
 //! buffered [`writer::BatchWriter`]s, range scans, and — crucially for
 //! Graphulo — the composable **server-side iterator stack**
 //! ([`iterator`]) that lets analytics run inside the tablet scan.
+//!
+//! Reads are snapshot-isolated and streaming: scans freeze `Arc`-shared
+//! tablet snapshots under a brief read lock, then pull entries through
+//! the iterator stack lazily with no lock held (see DESIGN.md
+//! §Snapshot/streaming read path).
 
 pub mod iterator;
 pub mod key;
@@ -14,8 +19,8 @@ pub mod store;
 pub mod tablet;
 pub mod writer;
 
-pub use iterator::{IterConfig, MergeIter, SummingCombiner, VersioningIter};
+pub use iterator::{EntryStream, IterConfig, MergeIter, SummingCombiner, VersioningIter};
 pub use key::{Entry, Key, RowRange};
-pub use store::{KvStore, Table};
-pub use tablet::{Tablet, TabletConfig};
+pub use store::{KvStore, Table, TableSnapshot};
+pub use tablet::{Tablet, TabletConfig, TabletSnapshot};
 pub use writer::{BatchWriter, WriterConfig};

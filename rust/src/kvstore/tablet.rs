@@ -10,8 +10,20 @@
 //! Compaction is size-tiered: only the smaller runs merge, so total
 //! compaction work stays O(n log n) instead of the quadratic re-merging
 //! of a naive merge-all policy.
+//!
+//! §Reads: scans are **snapshot-isolated and streaming**. The sorted
+//! runs are `Arc`-shared frozen segments and the memtable has a cached
+//! sorted view, so [`Tablet::snapshot`] is a handful of `Arc` clones
+//! from `&self` (plus one clone+sort of the memtable on the first read
+//! after a write — amortised across readers by the cache). Everything
+//! downstream of the snapshot — the k-way merge, versioning, combiners,
+//! filters — runs pull-based over the frozen segments with **no tablet
+//! lock held**, so long analytics scans never serialise against writers
+//! or other readers. See DESIGN.md §Snapshot/streaming read path.
 
-use super::iterator::{IterConfig, MergeIter};
+use std::sync::{Arc, Mutex};
+
+use super::iterator::{EntryStream, IterConfig, MergeIter};
 use super::key::{Entry, RowRange};
 
 /// Tuning knobs for tablets (defaults sized for tests; benches override).
@@ -33,12 +45,18 @@ impl Default for TabletConfig {
 #[derive(Debug)]
 pub struct Tablet {
     /// Append-only buffer; `sorted_upto` marks the prefix already in key
-    /// order (sorted lazily on scan/flush).
+    /// order (sorted lazily on flush).
     memtable: Vec<Entry>,
     sorted_upto: usize,
     memtable_bytes: usize,
-    /// Immutable sorted runs, newest first.
-    runs: Vec<Vec<Entry>>,
+    /// Immutable sorted runs, newest first; `Arc`-shared with snapshots.
+    runs: Vec<Arc<Vec<Entry>>>,
+    /// Cached sorted view of the memtable for `&self` snapshots.
+    /// Writers invalidate it (via `get_mut`, no lock traffic); the first
+    /// subsequent snapshot rebuilds it once and later snapshots share
+    /// the `Arc`. The interior mutex is held only while cloning an
+    /// `Arc` or building the view — never while a scan is consumed.
+    mem_view: Mutex<Option<Arc<Vec<Entry>>>>,
     config: TabletConfig,
     /// Counters for introspection/benchmarks.
     pub flushes: u64,
@@ -52,6 +70,7 @@ impl Tablet {
             sorted_upto: 0,
             memtable_bytes: 0,
             runs: Vec::new(),
+            mem_view: Mutex::new(None),
             config,
             flushes: 0,
             compactions: 0,
@@ -62,6 +81,7 @@ impl Tablet {
     pub fn put(&mut self, entry: Entry) {
         self.memtable_bytes += entry.bytes();
         self.memtable.push(entry);
+        *self.mem_view.get_mut().unwrap() = None;
         if self.memtable_bytes >= self.config.memtable_flush_bytes {
             self.flush();
         }
@@ -82,8 +102,20 @@ impl Tablet {
         if self.memtable.is_empty() {
             return;
         }
-        self.ensure_sorted();
-        let run = std::mem::take(&mut self.memtable);
+        let cached = self.mem_view.get_mut().unwrap().take();
+        let run = match cached {
+            // a snapshot since the last write already sorted exactly
+            // these entries — adopt its view as the frozen run instead
+            // of sorting the memtable a second time
+            Some(v) if v.len() == self.memtable.len() => {
+                self.memtable.clear();
+                v
+            }
+            _ => {
+                self.ensure_sorted();
+                Arc::new(std::mem::take(&mut self.memtable))
+            }
+        };
         self.sorted_upto = 0;
         self.memtable_bytes = 0;
         self.runs.insert(0, run);
@@ -95,7 +127,9 @@ impl Tablet {
 
     /// Size-tiered compaction: merge the smallest runs together until at
     /// most `max_runs / 2` remain, leaving large runs untouched (no
-    /// quadratic re-merging of the big ones).
+    /// quadratic re-merging of the big ones). Frozen runs an open
+    /// snapshot still holds stay alive through their `Arc`s — compaction
+    /// replaces the tablet's references, never the segments themselves.
     pub fn compact(&mut self) {
         let keep = (self.config.max_runs / 2).max(1);
         if self.runs.len() <= keep {
@@ -103,13 +137,10 @@ impl Tablet {
         }
         // sort runs by size; merge everything except the `keep` largest
         self.runs.sort_by_key(|r| std::cmp::Reverse(r.len()));
-        let small: Vec<Vec<Entry>> = self.runs.split_off(keep);
-        let sources: Vec<Box<dyn Iterator<Item = Entry> + Send>> = small
-            .into_iter()
-            .map(|r| Box::new(r.into_iter()) as Box<dyn Iterator<Item = Entry> + Send>)
-            .collect();
+        let small: Vec<Arc<Vec<Entry>>> = self.runs.split_off(keep);
+        let sources: Vec<EntryStream> = small.into_iter().map(into_entry_iter).collect();
         let merged: Vec<Entry> = MergeIter::new(sources).collect();
-        self.runs.push(merged);
+        self.runs.push(Arc::new(merged));
         // restore newest-first-ish ordering guarantee is not needed for
         // correctness (versioning is by timestamp, not layer), but keep
         // deterministic order for tests
@@ -121,19 +152,20 @@ impl Tablet {
     /// (major compaction; useful before scan-heavy phases).
     pub fn compact_major(&mut self) {
         self.ensure_sorted();
-        let mut sources: Vec<Box<dyn Iterator<Item = Entry> + Send>> = Vec::new();
+        let mut sources: Vec<EntryStream> = Vec::new();
         if !self.memtable.is_empty() {
             let mem = std::mem::take(&mut self.memtable);
             self.sorted_upto = 0;
             self.memtable_bytes = 0;
             sources.push(Box::new(mem.into_iter()));
         }
+        *self.mem_view.get_mut().unwrap() = None;
         for r in std::mem::take(&mut self.runs) {
-            sources.push(Box::new(r.into_iter()));
+            sources.push(into_entry_iter(r));
         }
         let merged: Vec<Entry> =
             super::iterator::VersioningIter::new(MergeIter::new(sources)).collect();
-        self.runs = vec![merged];
+        self.runs = vec![Arc::new(merged)];
         self.compactions += 1;
     }
 
@@ -152,46 +184,99 @@ impl Tablet {
                 .sum::<usize>()
     }
 
-    /// Scan a row range through the iterator stack.
-    pub fn scan(&mut self, range: &RowRange, cfg: &IterConfig) -> Vec<Entry> {
-        self.scan_iter(range, cfg).collect()
+    /// Freeze the tablet's current contents into an immutable,
+    /// cheaply-clonable snapshot. This is the only read-path operation
+    /// that needs the tablet lock; everything after it is lock-free.
+    pub fn snapshot(&self) -> TabletSnapshot {
+        let mut cache = self.mem_view.lock().unwrap();
+        let mem = cache
+            .get_or_insert_with(|| {
+                let mut v = self.memtable.clone();
+                // stable sort: first-written entries stay first among
+                // exact key ties, matching `ensure_sorted`
+                v.sort_by(|a, b| a.key.cmp(&b.key));
+                Arc::new(v)
+            })
+            .clone();
+        drop(cache);
+        TabletSnapshot { mem, runs: self.runs.clone() }
     }
 
-    /// Streaming scan (server-side iterator stack applied).
-    pub fn scan_iter(
-        &mut self,
-        range: &RowRange,
-        cfg: &IterConfig,
-    ) -> Box<dyn Iterator<Item = Entry> + Send + '_> {
-        self.ensure_sorted();
-        let mut sources: Vec<Box<dyn Iterator<Item = Entry> + Send>> = Vec::new();
-        sources.push(Box::new(slice_range(&self.memtable, range).to_vec().into_iter()));
+    /// Materialising scan — a thin `collect()` over [`Tablet::scan_stream`],
+    /// kept for tests and small point reads.
+    pub fn scan(&self, range: &RowRange, cfg: &IterConfig) -> Vec<Entry> {
+        self.scan_stream(range, cfg).collect()
+    }
+
+    /// Streaming scan: snapshot acquisition plus a lazy iterator stack.
+    /// The returned stream owns its segments (`'static`) — the caller
+    /// can drop the tablet lock before pulling a single entry.
+    pub fn scan_stream(&self, range: &RowRange, cfg: &IterConfig) -> EntryStream {
+        self.snapshot().scan(range, cfg)
+    }
+
+    /// Key-only scan: distinct row keys stored in `range`, sorted
+    /// ascending. Walks the snapshot's segments as sorted slices — no
+    /// k-way merge, no iterator stack — so enumerating the rows of a
+    /// paged scan costs one `String` clone per (segment × distinct row)
+    /// instead of a full materialising scan. Rows whose cells are all
+    /// tombstoned may still be reported (versioning is the per-page
+    /// fetch's job); downstream pagination skips their empty pages.
+    pub fn row_keys_in(&self, range: &RowRange) -> Vec<String> {
+        // the snapshot's cached sorted memtable view restores
+        // binary-searched range bounds on every source (the cache is
+        // warm after the first read since the last write)
+        self.snapshot().row_keys_in(range)
+    }
+}
+
+/// Immutable point-in-time view of one tablet: the frozen runs plus a
+/// sorted memtable view, all `Arc`-shared. Cloning is O(#runs) pointer
+/// copies; scans over it never touch the owning tablet again.
+#[derive(Debug, Clone)]
+pub struct TabletSnapshot {
+    mem: Arc<Vec<Entry>>,
+    runs: Vec<Arc<Vec<Entry>>>,
+}
+
+impl TabletSnapshot {
+    /// Scan a row range through the server-side iterator stack,
+    /// pull-based: entries are cloned out of the frozen segments one at
+    /// a time as the consumer advances, never into an owned `Vec`.
+    pub fn scan(&self, range: &RowRange, cfg: &IterConfig) -> EntryStream {
+        let mut sources: Vec<EntryStream> = Vec::with_capacity(1 + self.runs.len());
+        // memtable view first: lowest source index wins exact key ties
+        sources.push(Box::new(RunCursor::new(self.mem.clone(), range)));
         for run in &self.runs {
-            sources.push(Box::new(slice_range(run, range).to_vec().into_iter()));
+            sources.push(Box::new(RunCursor::new(run.clone(), range)));
         }
         cfg.apply(Box::new(MergeIter::new(sources)))
     }
 
-    /// Key-only scan: distinct row keys stored in `range`, sorted
-    /// ascending. Walks the memtable and runs as slices — no `Entry`
-    /// cloning, no k-way merge, no value materialisation — so snapshotting
-    /// the rows of a paged scan costs one `String` clone per (source ×
-    /// distinct row) instead of a full materialising scan. Rows whose
-    /// cells are all tombstoned may still be reported (versioning is the
-    /// per-page fetch's job); downstream pagination skips their empty
-    /// pages.
-    pub fn row_keys_in(&mut self, range: &RowRange) -> Vec<String> {
-        self.ensure_sorted();
+    /// Stored entries in the snapshot (all versions, before the stack).
+    pub fn raw_len(&self) -> usize {
+        self.mem.len() + self.runs.iter().map(|r| r.len()).sum::<usize>()
+    }
+
+    /// Stored entries falling inside `range` (all versions) — binary
+    /// searched per segment, so sizing a scan costs O(log n) per layer.
+    pub fn raw_len_in(&self, range: &RowRange) -> usize {
+        let span = |run: &[Entry]| {
+            let (lo, hi) = slice_bounds(run, range);
+            hi - lo
+        };
+        span(&self.mem) + self.runs.iter().map(|r| span(r)).sum::<usize>()
+    }
+
+    /// Distinct row keys stored in `range`, sorted ascending. Each
+    /// segment is sorted, so per-segment consecutive dedup is exact; no
+    /// values are cloned and no iterator stack runs. Rows whose cells
+    /// are all tombstoned may still be reported.
+    pub fn row_keys_in(&self, range: &RowRange) -> Vec<String> {
         let mut out: Vec<String> = Vec::new();
-        let mut sources: Vec<&[Entry]> = Vec::with_capacity(1 + self.runs.len());
-        sources.push(slice_range(&self.memtable, range));
-        for run in &self.runs {
-            sources.push(slice_range(run, range));
-        }
-        for src in sources {
-            // each source is sorted, so consecutive dedup is exact per source
+        for run in std::iter::once(&self.mem).chain(self.runs.iter()) {
             let mut last: Option<&str> = None;
-            for e in src {
+            for e in slice_range(run, range) {
                 if last != Some(e.key.row.as_str()) {
                     out.push(e.key.row.clone());
                     last = Some(e.key.row.as_str());
@@ -204,8 +289,55 @@ impl Tablet {
     }
 }
 
-/// Binary-search the sub-slice of a sorted run covered by a row range.
-fn slice_range<'a>(run: &'a [Entry], range: &RowRange) -> &'a [Entry] {
+/// Lazy cursor over the `[lo, hi)` row-range slice of one frozen
+/// segment; clones entries on demand as the merge pulls them.
+struct RunCursor {
+    run: Arc<Vec<Entry>>,
+    pos: usize,
+    end: usize,
+}
+
+impl RunCursor {
+    fn new(run: Arc<Vec<Entry>>, range: &RowRange) -> Self {
+        let (pos, end) = slice_bounds(&run, range);
+        RunCursor { run, pos, end }
+    }
+}
+
+impl Iterator for RunCursor {
+    type Item = Entry;
+
+    fn next(&mut self) -> Option<Entry> {
+        if self.pos >= self.end {
+            return None;
+        }
+        let e = self.run[self.pos].clone();
+        self.pos += 1;
+        Some(e)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.end - self.pos;
+        (n, Some(n))
+    }
+}
+
+/// Turn a frozen run into an owned entry iterator: moves the entries
+/// when this was the last reference, falls back to a cloning cursor when
+/// an open snapshot still shares the segment.
+fn into_entry_iter(run: Arc<Vec<Entry>>) -> EntryStream {
+    match Arc::try_unwrap(run) {
+        Ok(v) => Box::new(v.into_iter()),
+        Err(shared) => {
+            let end = shared.len();
+            Box::new(RunCursor { run: shared, pos: 0, end })
+        }
+    }
+}
+
+/// Binary-search the `[lo, hi)` index bounds of a sorted run covered by
+/// a row range.
+fn slice_bounds(run: &[Entry], range: &RowRange) -> (usize, usize) {
     let lo = match &range.start {
         Some(s) => run.partition_point(|e| e.key.row.as_str() < s.as_str()),
         None => 0,
@@ -214,6 +346,12 @@ fn slice_range<'a>(run: &'a [Entry], range: &RowRange) -> &'a [Entry] {
         Some(e) => run.partition_point(|x| x.key.row.as_str() < e.as_str()),
         None => run.len(),
     };
+    (lo, hi)
+}
+
+/// Binary-search the sub-slice of a sorted run covered by a row range.
+fn slice_range<'a>(run: &'a [Entry], range: &RowRange) -> &'a [Entry] {
+    let (lo, hi) = slice_bounds(run, range);
     &run[lo..hi]
 }
 
@@ -355,5 +493,62 @@ mod tests {
         let out = t.scan(&RowRange::all(), &IterConfig::default());
         assert_eq!(out[0].key.row, "a"); // resorted after the new write
         assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn snapshot_isolated_from_later_writes() {
+        let mut t = Tablet::new(small_config());
+        t.put(Entry::new(Key::cell("a", "c", 1), "1"));
+        t.flush();
+        t.put(Entry::new(Key::cell("b", "c", 2), "2"));
+        let snap = t.snapshot();
+        // mutate after the snapshot: new write, delete, flush, compact
+        t.put(Entry::new(Key::cell("c", "c", 3), "3"));
+        t.put(Entry::delete(Key::cell("a", "c", 4)));
+        t.flush();
+        t.compact_major();
+        // the snapshot still reads the frozen state
+        let out: Vec<Entry> = snap.scan(&RowRange::all(), &IterConfig::default()).collect();
+        let rows: Vec<&str> = out.iter().map(|e| e.key.row.as_str()).collect();
+        assert_eq!(rows, vec!["a", "b"]);
+        assert_eq!(out[0].value, "1");
+        // while a fresh scan sees the mutations
+        let now = t.scan(&RowRange::all(), &IterConfig::default());
+        let rows: Vec<&str> = now.iter().map(|e| e.key.row.as_str()).collect();
+        assert_eq!(rows, vec!["b", "c"]);
+    }
+
+    #[test]
+    fn snapshot_memview_cache_shared_until_write() {
+        let mut t = Tablet::new(TabletConfig::default());
+        t.put(Entry::new(Key::cell("a", "c", 1), "1"));
+        let s1 = t.snapshot();
+        let s2 = t.snapshot();
+        assert!(Arc::ptr_eq(&s1.mem, &s2.mem), "cache should share the sorted view");
+        t.put(Entry::new(Key::cell("b", "c", 2), "2"));
+        let s3 = t.snapshot();
+        assert!(!Arc::ptr_eq(&s1.mem, &s3.mem), "write must invalidate the view");
+        assert_eq!(s3.raw_len(), 2);
+        assert_eq!(s1.raw_len(), 1);
+    }
+
+    #[test]
+    fn stream_is_lazy_and_matches_collect() {
+        let mut t = Tablet::new(small_config());
+        for i in 0..50 {
+            t.put(Entry::new(Key::cell(format!("r{i:03}"), "c", i), "v"));
+        }
+        t.flush();
+        for i in 50..80 {
+            t.put(Entry::new(Key::cell(format!("r{i:03}"), "c", i), "v"));
+        }
+        let collected = t.scan(&RowRange::all(), &IterConfig::default());
+        let mut stream = t.scan_stream(&RowRange::all(), &IterConfig::default());
+        // pull a prefix, then write — the stream must be unaffected
+        let first = stream.next().unwrap();
+        t.put(Entry::new(Key::cell("aaa", "c", 999), "new"));
+        let rest: Vec<Entry> = stream.collect();
+        assert_eq!(first, collected[0]);
+        assert_eq!(rest, collected[1..]);
     }
 }

@@ -71,11 +71,23 @@ impl RateMeter {
 
 /// Power-of-two bucketed histogram of nanosecond latencies.
 /// Lock-free recording; buckets `[2^i, 2^{i+1})` ns for i in 0..64.
+///
+/// Besides latencies, the histogram tracks the instants of its first and
+/// last samples, so per-op rates are derived from the op's **own active
+/// span** — not from how long the process has been alive. (The old
+/// behaviour divided each op's count by the server-lifetime clock, which
+/// made any op exercised early read as permanently slow.)
 #[derive(Debug)]
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
     sum_ns: AtomicU64,
     count: AtomicU64,
+    /// Anchor for the sample-instant atomics below.
+    created: Instant,
+    /// Nanos since `created` of the first sample (`u64::MAX` = none yet).
+    first_ns: AtomicU64,
+    /// Nanos since `created` of the last sample.
+    last_ns: AtomicU64,
 }
 
 impl Default for Histogram {
@@ -90,6 +102,9 @@ impl Histogram {
             buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
             sum_ns: AtomicU64::new(0),
             count: AtomicU64::new(0),
+            created: Instant::now(),
+            first_ns: AtomicU64::new(u64::MAX),
+            last_ns: AtomicU64::new(0),
         }
     }
 
@@ -99,6 +114,34 @@ impl Histogram {
         self.buckets[idx.min(63)].fetch_add(1, Ordering::Relaxed);
         self.sum_ns.fetch_add(ns, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
+        // sample instant (completion time); min/max keep the true first
+        // and last under concurrent recording
+        let at = self.created.elapsed().as_nanos().min((u64::MAX - 1) as u128) as u64;
+        self.first_ns.fetch_min(at, Ordering::Relaxed);
+        self.last_ns.fetch_max(at, Ordering::Relaxed);
+    }
+
+    /// Wall-clock span between the first and last recorded samples
+    /// (zero until two samples exist).
+    pub fn span(&self) -> Duration {
+        let first = self.first_ns.load(Ordering::Relaxed);
+        if first == u64::MAX {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.last_ns.load(Ordering::Relaxed).saturating_sub(first))
+    }
+
+    /// Ops per second over this op's own active window: the
+    /// first-to-last-sample span widened by one mean latency (covering
+    /// the first sample's execution, and making the single-sample rate
+    /// `1 / latency` instead of undefined).
+    pub fn rate_per_sec(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        let window = self.span().as_secs_f64() + self.mean_ns() / 1e9;
+        c as f64 / window.max(1e-9)
     }
 
     /// Time a closure, recording its latency.
@@ -222,6 +265,37 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.mean_ns(), 0.0);
         assert_eq!(h.quantile_ns(0.99), 0);
+        assert_eq!(h.rate_per_sec(), 0.0);
+        assert_eq!(h.span(), Duration::ZERO);
+    }
+
+    #[test]
+    fn rate_uses_op_span_not_process_lifetime() {
+        let h = Histogram::new();
+        // idle "server lifetime" before the op is first exercised
+        std::thread::sleep(Duration::from_millis(50));
+        for _ in 0..10 {
+            h.record(Duration::from_micros(100));
+        }
+        // old behaviour: 10 ops / ≥50 ms lifetime ≈ ≤200/s forever.
+        // new behaviour: the burst's own window is its microsecond span
+        // plus one 100 µs mean latency, so the rate lands in the tens of
+        // thousands — the idle prefix no longer dilutes it.
+        // (threshold leaves headroom for scheduler jitter in the burst:
+        // the old computation cannot exceed 10 / 50 ms = 200/s here)
+        assert!(
+            h.rate_per_sec() > 400.0,
+            "rate {} diluted by process lifetime",
+            h.rate_per_sec()
+        );
+    }
+
+    #[test]
+    fn rate_single_sample_is_inverse_latency() {
+        let h = Histogram::new();
+        h.record(Duration::from_millis(10));
+        let r = h.rate_per_sec();
+        assert!((50.0..200.0).contains(&r), "rate {r} should be ~100/s");
     }
 
     #[test]

@@ -224,13 +224,16 @@ mod tests {
         assert_eq!(report.triples, 5_000);
         assert_eq!(report.per_worker.iter().sum::<u64>(), 5_000);
         let t = acc.store().table("T").unwrap();
-        assert_eq!(t.scan(&RowRange::all(), &IterConfig::default()).len(), 5_000);
+        // read-side verification streams — nothing materialises
+        assert_eq!(t.scan_stream(&RowRange::all(), &IterConfig::default()).count(), 5_000);
         // transpose table populated too (one mirrored entry per triple,
         // spread over the 97 distinct column keys)
         let tt = acc.store().table("T_T").unwrap();
-        let entries = tt.scan(&RowRange::all(), &IterConfig::default());
-        assert_eq!(entries.len(), 5_000);
-        let mut rows: Vec<&str> = entries.iter().map(|e| e.key.row.as_str()).collect();
+        let mut rows: Vec<String> = tt
+            .scan_stream(&RowRange::all(), &IterConfig::default())
+            .map(|e| e.key.row)
+            .collect();
+        assert_eq!(rows.len(), 5_000);
         rows.dedup();
         assert_eq!(rows.len(), 97);
     }
@@ -271,7 +274,7 @@ mod tests {
             .collect();
         p.run(t.into_iter()).unwrap();
         let table = acc.store().table("T").unwrap();
-        assert_eq!(table.scan(&RowRange::all(), &IterConfig::default()).len(), 300);
+        assert_eq!(table.scan_stream(&RowRange::all(), &IterConfig::default()).count(), 300);
     }
 
     #[test]
