@@ -1,0 +1,108 @@
+//! Bench: the network front-end — loopback round-trip latency and
+//! concurrent remote-scan throughput, the client↔server path the D4M
+//! papers measure ("Database Operations in D4M.jl").
+//!
+//! Scenarios (op = "net", n = stored edges):
+//!   roundtrip   — one client, single-row queries back-to-back; the
+//!                 entries_per_sec field is *requests* per second
+//!   concurrent4 — 4 clients on 4 connections, full-table queries;
+//!                 aggregate received entries per second (the remote
+//!                 twin of scan.rs's concurrent4)
+//!
+//! Records append to `BENCH_net.json`; `--smoke` runs the smallest size
+//! only (the CI regression probe checked by tools/bench_check.py).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use d4m::assoc::KeySel;
+use d4m::connectors::TableQuery;
+use d4m::coordinator::{D4mServer, Request};
+use d4m::gen::{kronecker_triples, vertex_key, KroneckerParams};
+use d4m::net::{serve, NetOpts, RemoteD4m};
+use d4m::pipeline::PipelineConfig;
+use d4m::util::bench::{append_records, BenchRecord};
+use d4m::util::fmt_rate;
+
+const CLIENTS: usize = 4;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let scales: &[u32] = if smoke { &[8] } else { &[10, 12] };
+    let (roundtrips, passes) = if smoke { (500, 2) } else { (2000, 4) };
+    let mut records: Vec<BenchRecord> = Vec::new();
+    println!("# net front-end: loopback round-trip + concurrent remote scans");
+    println!("{:<10} {:<14} {:>10} {:>12} {:>14}", "n", "mode", "entries", "seconds", "rate");
+
+    for &scale in scales {
+        let server = Arc::new(D4mServer::with_engine(None));
+        let triples = kronecker_triples(&KroneckerParams::new(scale, 16, 20170710));
+        let n = triples.len();
+        server
+            .handle(Request::Ingest {
+                table: "G".into(),
+                triples,
+                pipeline: PipelineConfig { num_workers: 4, ..Default::default() },
+            })
+            .expect("ingest");
+        let mut handle = serve(server, "127.0.0.1:0", NetOpts::default()).expect("bind loopback");
+        let addr = handle.addr().to_string();
+
+        // -- single-client round-trip latency (tiny frames)
+        let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).expect("connect");
+        let probe = vertex_key(1);
+        let q = TableQuery::all().rows(KeySel::keys(&[probe.as_str()]));
+        let t0 = Instant::now();
+        for _ in 0..roundtrips {
+            let _ = c.query("G", q.clone()).expect("query");
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        report(&mut records, n, "roundtrip", dt, roundtrips);
+
+        // -- 4 concurrent clients, full-table scans
+        let t1 = Instant::now();
+        let mut total = 0usize;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..CLIENTS)
+                .map(|_| {
+                    let addr = addr.clone();
+                    s.spawn(move || {
+                        let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100))
+                            .expect("connect");
+                        let mut got = 0usize;
+                        for _ in 0..passes {
+                            got += c.query("G", TableQuery::all()).expect("scan").nnz();
+                        }
+                        got
+                    })
+                })
+                .collect();
+            for h in handles {
+                total += h.join().expect("client thread");
+            }
+        });
+        let dt = t1.elapsed().as_secs_f64();
+        report(&mut records, n, "concurrent4", dt, total);
+
+        handle.shutdown();
+    }
+
+    let out = Path::new("BENCH_net.json");
+    match append_records(out, &records) {
+        Ok(()) => println!("# appended {} records to {}", records.len(), out.display()),
+        Err(e) => eprintln!("# failed to write {}: {e}", out.display()),
+    }
+}
+
+fn report(records: &mut Vec<BenchRecord>, n: usize, mode: &str, dt: f64, entries: usize) {
+    println!(
+        "{:<10} {:<14} {:>10} {:>12.3} {:>14}",
+        n,
+        mode,
+        entries,
+        dt,
+        fmt_rate(entries as f64 / dt)
+    );
+    records.push(BenchRecord::new("net", n, mode, dt, entries));
+}

@@ -524,7 +524,7 @@ impl Assoc {
 }
 
 /// Key selector for subsref: the D4M `A('a,:,b,', :)` patterns, Rust-shaped.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum KeySel {
     /// All keys (`:`).
     All,

@@ -61,7 +61,7 @@ impl Default for BindOpts {
 /// The `T(r, c)` query form as a builder: row/col key selectors, an
 /// optional result limit, and the page granularity used by
 /// [`DbTable::scan`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TableQuery {
     /// Row selector (`T('a,:,b,', :)`).
     pub rows: KeySel,

@@ -28,6 +28,11 @@ use crate::pipeline::{IngestPipeline, IngestReport, PipelineConfig, TripleMsg};
 use crate::runtime::PjrtEngine;
 
 /// Requests the coordinator serves.
+///
+/// `Request` and [`Response`] derive `Debug`/`Clone`/`PartialEq` so the
+/// network codec (`net::wire`) can be property-tested by round-trip
+/// equality, and so callers can replay a request verbatim.
+#[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Bind (create if needed) a D4M table.
     CreateTable { name: String, splits: Vec<String> },
@@ -56,7 +61,7 @@ pub enum Request {
 }
 
 /// Responses.
-#[derive(Debug)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Response {
     Ok,
     Tables(Vec<String>),
@@ -80,8 +85,9 @@ impl Response {
     }
 
     /// Short variant tag for error messages (the payloads can be huge —
-    /// never Debug-print them into an error string).
-    fn variant_name(&self) -> &'static str {
+    /// never Debug-print them into an error string). Also used by the
+    /// remote client's response-shape checks.
+    pub(crate) fn variant_name(&self) -> &'static str {
         match self {
             Response::Ok => "Ok",
             Response::Tables(_) => "Tables",

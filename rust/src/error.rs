@@ -25,6 +25,13 @@ pub enum D4mError {
     InvalidArg(String),
     /// I/O error wrapper.
     Io(std::io::Error),
+    /// Wire-codec failure (malformed/truncated frame) on the network
+    /// front-end — see [`crate::net::wire::WireError`].
+    Wire(crate::net::wire::WireError),
+    /// An error reported by a remote D4M server, carried across the
+    /// wire (remote variants that wrap process-local types — I/O, wire —
+    /// arrive as their message strings).
+    Remote(String),
 }
 
 impl fmt::Display for D4mError {
@@ -42,6 +49,8 @@ impl fmt::Display for D4mError {
             D4mError::Pipeline(s) => write!(f, "pipeline error: {s}"),
             D4mError::InvalidArg(s) => write!(f, "invalid argument: {s}"),
             D4mError::Io(e) => write!(f, "io error: {e}"),
+            D4mError::Wire(e) => write!(f, "wire error: {e}"),
+            D4mError::Remote(s) => write!(f, "remote error: {s}"),
         }
     }
 }
@@ -51,6 +60,12 @@ impl std::error::Error for D4mError {}
 impl From<std::io::Error> for D4mError {
     fn from(e: std::io::Error) -> Self {
         D4mError::Io(e)
+    }
+}
+
+impl From<crate::net::wire::WireError> for D4mError {
+    fn from(e: crate::net::wire::WireError) -> Self {
+        D4mError::Wire(e)
     }
 }
 

@@ -11,7 +11,7 @@ use crate::assoc::Assoc;
 use crate::kvstore::{IterConfig, RowRange, Table};
 
 /// Options for the power iteration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PageRankOpts {
     pub damping: f64,
     pub max_iters: usize,
@@ -26,7 +26,7 @@ impl Default for PageRankOpts {
 }
 
 /// Result of a PageRank run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PageRankResult {
     pub scores: BTreeMap<String, f64>,
     pub iterations: usize,

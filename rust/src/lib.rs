@@ -23,6 +23,9 @@
 //!   artifacts (`artifacts/*.hlo.txt`) on the dense-block hot path.
 //! * [`coordinator`] — the D4M server: table registry, request routing,
 //!   op batching, metrics.
+//! * [`net`] — the network front-end: length-prefixed wire codec, TCP
+//!   server over the coordinator, and the [`RemoteD4m`] client mirroring
+//!   `D4mServer::handle`.
 //!
 //! See DESIGN.md for the paper-to-module inventory and EXPERIMENTS.md for
 //! reproduction results.
@@ -36,6 +39,7 @@ pub mod gen;
 pub mod graphulo;
 pub mod kvstore;
 pub mod metrics;
+pub mod net;
 pub mod pipeline;
 pub mod polystore;
 pub mod relational;
@@ -45,3 +49,4 @@ pub mod util;
 pub use assoc::{Assoc, KeySel};
 pub use connectors::{BindOpts, DbServer, DbTable, TableQuery};
 pub use error::{D4mError, Result};
+pub use net::RemoteD4m;

@@ -10,13 +10,21 @@
 //! d4m jaccard [--scale S]
 //! d4m ktruss  [--scale S] [--k K]
 //! d4m tables                        list tables after a demo ingest
+//! d4m serve   [--addr H:P] [--max-conns N]   network front-end (runs
+//!                                   until a client sends shutdown)
+//! d4m client <ping|tables|quickstart|scan4|stats|shutdown> [--addr H:P]
+//!                                   drive a remote d4m serve
 //! ```
 
 use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
 
-use d4m::assoc::{io::display_full, Assoc};
+use d4m::assoc::{io::display_full, Assoc, KeySel};
+use d4m::connectors::TableQuery;
 use d4m::coordinator::{D4mServer, Request, Response};
 use d4m::gen::{kronecker_triples, KroneckerParams};
+use d4m::net::{NetOpts, RemoteD4m};
 use d4m::pipeline::PipelineConfig;
 use d4m::util::fmt_rate;
 
@@ -214,6 +222,192 @@ fn cmd_pagerank(flags: HashMap<String, String>) {
     }
 }
 
+fn cmd_serve(flags: HashMap<String, String>) {
+    let addr: String = flag(&flags, "addr", "127.0.0.1:4950".to_string());
+    let max_conns: usize = flag(&flags, "max-conns", 64);
+    let server = Arc::new(D4mServer::new());
+    let opts = NetOpts { max_conns, ..Default::default() };
+    let mut handle = match d4m::net::serve(server, &addr, opts) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("d4m serve: bind {addr} failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("d4m serve: listening on {} (max {} connections)", handle.addr(), max_conns);
+    handle.wait(); // until a client sends the shutdown frame
+    println!("d4m serve: shut down cleanly");
+    for s in handle.snapshots() {
+        println!("{s}");
+    }
+}
+
+/// `d4m client <sub> [--addr H:P] ...` — drive a remote coordinator.
+fn cmd_client(args: &[String]) {
+    let sub = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(args.get(1..).unwrap_or(&[]));
+    let addr: String = flag(&flags, "addr", "127.0.0.1:4950".to_string());
+    let retries: u32 = flag(&flags, "retries", 25);
+    let connect = || -> RemoteD4m {
+        match RemoteD4m::connect_retry(&addr, retries, Duration::from_millis(200)) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("d4m client: connect {addr} failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    };
+    let check = |what: &str, r: d4m::Result<()>| {
+        if let Err(e) = r {
+            eprintln!("d4m client: {what} failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    match sub {
+        "ping" => {
+            let c = connect();
+            check("ping", c.ping());
+            println!("pong from {addr}");
+        }
+        "tables" => {
+            let c = connect();
+            match c.list_tables() {
+                Ok(ts) => {
+                    for t in ts {
+                        println!("{t}");
+                    }
+                }
+                Err(e) => check("tables", Err(e)),
+            }
+        }
+        "quickstart" => client_quickstart(&connect()),
+        "scan4" => {
+            let clients: usize = flag(&flags, "clients", 4);
+            let passes: usize = flag(&flags, "passes", 8);
+            client_scan_concurrent(&addr, retries, clients, passes);
+        }
+        "stats" => {
+            let c = connect();
+            match c.stats() {
+                Ok(snaps) => {
+                    for s in snaps {
+                        println!("{s}");
+                    }
+                }
+                Err(e) => check("stats", Err(e)),
+            }
+        }
+        "shutdown" => {
+            let c = connect();
+            check("shutdown", c.shutdown_server());
+            println!("server at {addr} acknowledged shutdown");
+        }
+        other => {
+            eprintln!(
+                "usage: d4m client <ping|tables|quickstart|scan4|stats|shutdown> \
+                 [--addr H:P] [--retries N] [--clients N] [--passes N] (got {other:?})"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+/// The remote quickstart: the associative-array tour driven end-to-end
+/// over the wire, with the CI assertions inline — any divergence from
+/// the in-process semantics exits nonzero.
+fn client_quickstart(c: &RemoteD4m) {
+    println!("== D4M remote quickstart ==");
+    ok_or_die("create_table", c.create_table("G", vec![]));
+    let triples: Vec<(String, String, String)> = vec![
+        ("a".into(), "b".into(), "1".into()),
+        ("b".into(), "c".into(), "1".into()),
+        ("a".into(), "c".into(), "1".into()),
+        ("c".into(), "d".into(), "1".into()),
+    ];
+    let pipeline = PipelineConfig { num_workers: 2, ..Default::default() };
+    let rep = ok_or_die("ingest", c.ingest("G", triples, pipeline));
+    println!("ingest: {rep}");
+    let a = ok_or_die("query", c.query("G", TableQuery::all()));
+    println!("G =\n{}", display_full(&a));
+    assert_or_die(a.nnz() == 4, "full query should see 4 edges");
+    let by_col = TableQuery::all().cols(KeySel::keys(&["c"]));
+    let col = ok_or_die("column query", c.query("G", by_col));
+    assert_or_die(col.nnz() == 2, "column query for 'c' should see 2 edges");
+    let d = ok_or_die("bfs", c.bfs("G", &["a"], 2));
+    println!("bfs from a: {} vertices reached", d.len());
+    assert_or_die(d.get("d") == Some(&2), "bfs should reach d at hop 2");
+    let m = ok_or_die("tablemult", c.tablemult_client("G", "G", usize::MAX));
+    println!("G'*G has {} entries", m.nnz());
+    assert_or_die(!m.is_empty(), "tablemult product should be non-empty");
+    println!("remote quickstart: OK");
+}
+
+fn ok_or_die<T>(what: &str, r: d4m::Result<T>) -> T {
+    r.unwrap_or_else(|e| {
+        eprintln!("remote quickstart: {what} failed: {e}");
+        std::process::exit(1);
+    })
+}
+
+fn assert_or_die(cond: bool, what: &str) {
+    if !cond {
+        eprintln!("remote quickstart: FAILED: {what}");
+        std::process::exit(1);
+    }
+}
+
+/// N concurrent remote clients, each on its own connection, each issuing
+/// the same full-table query `passes` times; all answers must agree
+/// exactly (the concurrent-remote-reader leg of the CI e2e).
+fn client_scan_concurrent(addr: &str, retries: u32, clients: usize, passes: usize) {
+    let t0 = std::time::Instant::now();
+    let mut results: Vec<(usize, Vec<d4m::assoc::Triple>)> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients.max(1))
+            .map(|i| {
+                s.spawn(move || {
+                    let c = RemoteD4m::connect_retry(addr, retries, Duration::from_millis(200))
+                        .unwrap_or_else(|e| {
+                            eprintln!("scan4 client {i}: connect failed: {e}");
+                            std::process::exit(1);
+                        });
+                    let mut entries = 0usize;
+                    let mut last: Vec<d4m::assoc::Triple> = Vec::new();
+                    for _ in 0..passes.max(1) {
+                        let a = c.query("G", TableQuery::all()).unwrap_or_else(|e| {
+                            eprintln!("scan4 client {i}: query failed: {e}");
+                            std::process::exit(1);
+                        });
+                        entries += a.nnz();
+                        last = a.triples();
+                    }
+                    (entries, last)
+                })
+            })
+            .collect();
+        for h in handles {
+            results.push(h.join().expect("scan client panicked"));
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let first = &results[0].1;
+    for (i, (_, triples)) in results.iter().enumerate() {
+        if triples != first {
+            eprintln!("scan4: client {i} saw a different answer than client 0");
+            std::process::exit(2);
+        }
+    }
+    let total: usize = results.iter().map(|(n, _)| n).sum();
+    println!(
+        "scan4: {} clients x {} passes, {} entries in {:.3}s ({}), answers identical",
+        clients,
+        passes,
+        total,
+        dt,
+        fmt_rate(total as f64 / dt)
+    );
+}
+
 fn cmd_tables() {
     let server = D4mServer::new();
     ingest_kronecker(&server, 8, 2, 1024);
@@ -237,9 +431,11 @@ fn main() {
         "ktruss" => cmd_ktruss(flags),
         "pagerank" => cmd_pagerank(flags),
         "tables" => cmd_tables(),
+        "serve" => cmd_serve(flags),
+        "client" => cmd_client(&args[1..]),
         _ => {
             eprintln!(
-                "usage: d4m <demo|ingest|tablemult|bfs|jaccard|ktruss|pagerank|tables> [--flag value ...]"
+                "usage: d4m <demo|ingest|tablemult|bfs|jaccard|ktruss|pagerank|tables|serve|client> [--flag value ...]"
             );
             std::process::exit(2);
         }

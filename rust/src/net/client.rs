@@ -1,0 +1,187 @@
+//! `RemoteD4m` — a network client whose API mirrors
+//! [`D4mServer::handle`](crate::coordinator::D4mServer::handle), so any
+//! code written against the in-process coordinator runs remote by
+//! swapping the constructor:
+//!
+//! ```text
+//! let server = D4mServer::new();          // in-process
+//! let server = RemoteD4m::connect(addr)?; // remote — same .handle(req)
+//! ```
+//!
+//! One `RemoteD4m` owns one TCP connection and serialises its requests
+//! over it (the stream is behind a mutex, so a shared reference works
+//! from multiple threads — but concurrent *throughput* wants one client
+//! per thread, which is exactly what the e2e and bench harnesses do).
+
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::assoc::Assoc;
+use crate::connectors::TableQuery;
+use crate::coordinator::{Request, Response};
+use crate::error::{D4mError, Result};
+use crate::graphulo::{PageRankOpts, PageRankResult, TableMultStats};
+use crate::metrics::Snapshot;
+use crate::net::wire::{self, ClientMsg, ServerMsg};
+use crate::pipeline::{IngestReport, PipelineConfig, TripleMsg};
+
+/// A connection to a remote `d4m serve` coordinator.
+pub struct RemoteD4m {
+    stream: Mutex<TcpStream>,
+}
+
+impl RemoteD4m {
+    /// Connect to a serving coordinator (`"host:port"`).
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(RemoteD4m { stream: Mutex::new(stream) })
+    }
+
+    /// Connect with retries — the CI/e2e readiness probe for a server
+    /// process that is still binding its port.
+    pub fn connect_retry(addr: &str, attempts: u32, delay: Duration) -> Result<Self> {
+        let mut last: Option<D4mError> = None;
+        for _ in 0..attempts.max(1) {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(delay);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| D4mError::InvalidArg("connect_retry: 0 attempts".into())))
+    }
+
+    /// One framed round trip.
+    fn rpc(&self, msg: &ClientMsg) -> Result<ServerMsg> {
+        let payload = wire::encode_client_msg(msg);
+        let mut stream = self.stream.lock().unwrap();
+        wire::write_frame(&mut *stream, &payload)?;
+        let reply = wire::read_frame(&mut *stream)?;
+        Ok(wire::decode_server_msg(&reply)?)
+    }
+
+    /// Serve one request remotely — the mirror of `D4mServer::handle`.
+    pub fn handle(&self, req: Request) -> Result<Response> {
+        match self.rpc(&ClientMsg::Api(req))? {
+            ServerMsg::Reply(r) => r,
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&self) -> Result<()> {
+        match self.rpc(&ClientMsg::Ping)? {
+            ServerMsg::Pong => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Remote metrics: the coordinator's per-op snapshots plus the
+    /// server's net-layer counters.
+    pub fn stats(&self) -> Result<Vec<Snapshot>> {
+        match self.rpc(&ClientMsg::Stats)? {
+            ServerMsg::Stats(s) => Ok(s),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Ask the server to shut down gracefully; returns once acknowledged.
+    pub fn shutdown_server(&self) -> Result<()> {
+        match self.rpc(&ClientMsg::Shutdown)? {
+            ServerMsg::ShutdownAck => Ok(()),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // convenience mirrors of the coordinator API
+
+    pub fn create_table(&self, name: &str, splits: Vec<String>) -> Result<()> {
+        match self.handle(Request::CreateTable { name: name.into(), splits })? {
+            Response::Ok => Ok(()),
+            other => Err(mismatch("Ok", &other)),
+        }
+    }
+
+    pub fn ingest(
+        &self,
+        table: &str,
+        triples: Vec<TripleMsg>,
+        pipeline: PipelineConfig,
+    ) -> Result<IngestReport> {
+        match self.handle(Request::Ingest { table: table.into(), triples, pipeline })? {
+            Response::Ingested(r) => Ok(r),
+            other => Err(mismatch("Ingested", &other)),
+        }
+    }
+
+    pub fn query(&self, table: &str, query: TableQuery) -> Result<Assoc> {
+        self.handle(Request::Query { table: table.into(), query })?.into_assoc()
+    }
+
+    pub fn tablemult(&self, a: &str, b: &str, out: &str) -> Result<TableMultStats> {
+        match self.handle(Request::TableMult { a: a.into(), b: b.into(), out: out.into() })? {
+            Response::MultStats(s) => Ok(s),
+            other => Err(mismatch("MultStats", &other)),
+        }
+    }
+
+    pub fn tablemult_client(&self, a: &str, b: &str, memory_limit: usize) -> Result<Assoc> {
+        self.handle(Request::TableMultClient { a: a.into(), b: b.into(), memory_limit })?
+            .into_assoc()
+    }
+
+    pub fn bfs(&self, table: &str, seeds: &[&str], hops: usize) -> Result<BTreeMap<String, usize>> {
+        let seeds = seeds.iter().map(|s| s.to_string()).collect();
+        match self.handle(Request::Bfs { table: table.into(), seeds, hops })? {
+            Response::Distances(d) => Ok(d),
+            other => Err(mismatch("Distances", &other)),
+        }
+    }
+
+    pub fn jaccard(&self, table: &str, out: &str) -> Result<Assoc> {
+        self.handle(Request::Jaccard { table: table.into(), out: out.into() })?.into_assoc()
+    }
+
+    pub fn ktruss(&self, table: &str, k: usize) -> Result<Assoc> {
+        self.handle(Request::KTruss { table: table.into(), k })?.into_assoc()
+    }
+
+    pub fn pagerank(&self, table: &str, opts: PageRankOpts) -> Result<PageRankResult> {
+        match self.handle(Request::PageRank { table: table.into(), opts })? {
+            Response::Ranks(r) => Ok(r),
+            other => Err(mismatch("Ranks", &other)),
+        }
+    }
+
+    pub fn list_tables(&self) -> Result<Vec<String>> {
+        match self.handle(Request::ListTables)? {
+            Response::Tables(t) => Ok(t),
+            other => Err(mismatch("Tables", &other)),
+        }
+    }
+}
+
+fn unexpected(msg: &ServerMsg) -> D4mError {
+    D4mError::Remote(format!("unexpected reply frame: {}", frame_name(msg)))
+}
+
+fn mismatch(expected: &str, got: &Response) -> D4mError {
+    // mirror Response::into_assoc: never Debug-print a payload into an
+    // error string
+    D4mError::Remote(format!("expected {expected} response, got {}", got.variant_name()))
+}
+
+fn frame_name(msg: &ServerMsg) -> &'static str {
+    match msg {
+        ServerMsg::Reply(_) => "Reply",
+        ServerMsg::Pong => "Pong",
+        ServerMsg::Stats(_) => "Stats",
+        ServerMsg::ShutdownAck => "ShutdownAck",
+    }
+}

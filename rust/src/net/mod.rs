@@ -1,0 +1,24 @@
+//! Network front-end over the [`coordinator`](crate::coordinator) — the
+//! paper's client↔server split, realised as three std-only layers:
+//!
+//! * [`wire`] — length-prefixed binary frame codec (versioned magic
+//!   header, varint/length-prefixed encodings, typed decode errors).
+//! * [`server`] — a `TcpListener` accept loop sharing one
+//!   `Arc<D4mServer>` across a bounded thread-per-connection pool, with
+//!   graceful shutdown and per-connection error framing.
+//! * [`client`] — [`RemoteD4m`], whose API mirrors `D4mServer::handle`
+//!   so in-process call sites run remote by swapping the constructor.
+//!
+//! `d4m serve --addr HOST:PORT` exposes the server from the CLI and
+//! `d4m client --addr HOST:PORT <cmd>` drives it; `rust/tests/net_e2e.rs`
+//! pins that remote answers are bit-identical to in-process ones, and
+//! `benches/net.rs` records the loopback round-trip and concurrent
+//! remote-scan trajectory into `BENCH_net.json`.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::RemoteD4m;
+pub use server::{serve, NetHandle, NetOpts};
+pub use wire::{WireError, WireResult};

@@ -1,0 +1,384 @@
+//! TCP front-end over the coordinator: an accept loop sharing one
+//! `Arc<D4mServer>` across a bounded thread-per-connection pool.
+//!
+//! §Thread model (DESIGN.md §Network front-end): one accept thread, one
+//! thread per live connection, at most [`NetOpts::max_conns`] of them —
+//! the accept loop *blocks* on a condvar when the pool is full, so a
+//! connection flood backpressures at the TCP backlog instead of spawning
+//! unbounded threads. Every connection thread serves requests against
+//! the same shared [`D4mServer`], which is what finally drives the PR-3
+//! snapshot-isolated scan path from genuinely concurrent remote readers.
+//!
+//! §Error framing: a malformed frame poisons only its own connection —
+//! the server replies with a framed error (best effort) and closes that
+//! socket; the listener and every other connection keep serving.
+//!
+//! §Shutdown protocol: `NetHandle::shutdown()` (or a client
+//! [`ClientMsg::Shutdown`] frame) sets the shared flag, then pokes the
+//! listener with a loopback connect to unblock `accept`. Idle connection
+//! threads poll the flag every [`NetOpts::idle_poll`] while waiting for
+//! a frame's first byte; in-flight requests run to completion. The
+//! accept thread exits only after the last connection thread has
+//! drained, so `wait()` returning means the server is fully quiesced.
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::D4mServer;
+use crate::error::{D4mError, Result};
+use crate::metrics::{Counter, Histogram, Snapshot};
+use crate::net::wire::{self, ClientMsg, ServerMsg, WireError};
+
+/// Tuning for [`serve`].
+#[derive(Debug, Clone)]
+pub struct NetOpts {
+    /// Maximum simultaneously served connections (the thread-pool bound).
+    pub max_conns: usize,
+    /// How often an idle connection re-checks the shutdown flag.
+    pub idle_poll: Duration,
+    /// Whole-frame deadline once a frame is in flight (and the write
+    /// timeout): a peer that has not delivered a complete frame within
+    /// this budget is dropped — dribbling one byte per poll cannot hold
+    /// a pool slot forever.
+    pub io_timeout: Duration,
+}
+
+impl Default for NetOpts {
+    fn default() -> Self {
+        NetOpts {
+            max_conns: 64,
+            idle_poll: Duration::from_millis(200),
+            io_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// State shared between the accept loop, connection threads and the
+/// [`NetHandle`].
+struct Shared {
+    server: Arc<D4mServer>,
+    opts: NetOpts,
+    addr: SocketAddr,
+    shutdown: AtomicBool,
+    /// Live connection-thread count; guarded waits on `pool_cv` bound the
+    /// pool and let the accept loop drain on shutdown.
+    active: Mutex<usize>,
+    pool_cv: Condvar,
+    /// Net-layer counters, surfaced through [`NetHandle::snapshots`].
+    requests: Histogram,
+    bad_frames: Counter,
+    bytes_in: Counter,
+    bytes_out: Counter,
+}
+
+impl Shared {
+    /// The coordinator's per-op snapshots with the net-layer request
+    /// histogram and byte counters folded in.
+    fn snapshots(&self) -> Vec<Snapshot> {
+        let mut snaps = self.server.snapshots();
+        snaps.push(Snapshot {
+            name: "net.requests".into(),
+            count: self.requests.count(),
+            rate_per_sec: self.requests.rate_per_sec(),
+            mean_latency_ns: self.requests.mean_ns(),
+            p99_latency_ns: self.requests.quantile_ns(0.99),
+        });
+        for (name, counter) in [
+            ("net.bad_frames", &self.bad_frames),
+            ("net.bytes_in", &self.bytes_in),
+            ("net.bytes_out", &self.bytes_out),
+        ] {
+            snaps.push(Snapshot {
+                name: name.into(),
+                count: counter.get(),
+                rate_per_sec: 0.0,
+                mean_latency_ns: 0.0,
+                p99_latency_ns: 0,
+            });
+        }
+        snaps
+    }
+
+    fn initiate_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // unblock the accept loop (and re-check in any pool-full wait);
+        // a wildcard bind is poked via the matching loopback family, and
+        // the poke never hangs on a saturated backlog
+        let mut poke = self.addr;
+        if poke.ip().is_unspecified() {
+            poke.set_ip(match poke.ip() {
+                std::net::IpAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                std::net::IpAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&poke, Duration::from_secs(2));
+        self.pool_cv.notify_all();
+    }
+}
+
+/// Handle to a running network front-end.
+pub struct NetHandle {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetHandle {
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Coordinator + net-layer metrics snapshots.
+    pub fn snapshots(&self) -> Vec<Snapshot> {
+        self.shared.snapshots()
+    }
+
+    /// True once shutdown has been initiated (locally or by a client).
+    pub fn is_shutting_down(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Block until the server has fully quiesced (accept loop exited and
+    /// every connection drained). Returns immediately if already joined.
+    pub fn wait(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Initiate graceful shutdown and wait for full quiescence.
+    pub fn shutdown(&mut self) {
+        self.shared.initiate_shutdown();
+        self.wait();
+    }
+}
+
+impl Drop for NetHandle {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+/// Start serving `server` on `addr` (e.g. `"127.0.0.1:4950"`; port 0
+/// picks an ephemeral port, readable from [`NetHandle::addr`]).
+pub fn serve(server: Arc<D4mServer>, addr: &str, mut opts: NetOpts) -> Result<NetHandle> {
+    // a pool of zero would park the accept loop forever
+    opts.max_conns = opts.max_conns.max(1);
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let shared = Arc::new(Shared {
+        server,
+        opts,
+        addr: local,
+        shutdown: AtomicBool::new(false),
+        active: Mutex::new(0),
+        pool_cv: Condvar::new(),
+        requests: Histogram::new(),
+        bad_frames: Counter::new(),
+        bytes_in: Counter::new(),
+        bytes_out: Counter::new(),
+    });
+    let sh = shared.clone();
+    let accept = std::thread::Builder::new()
+        .name("d4m-net-accept".into())
+        .spawn(move || accept_loop(listener, sh))?;
+    Ok(NetHandle { shared, accept: Some(accept) })
+}
+
+fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
+    for conn in listener.incoming() {
+        if sh.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => {
+                // e.g. EMFILE under fd pressure: back off instead of
+                // spinning a core while the condition persists
+                std::thread::sleep(sh.opts.idle_poll);
+                continue;
+            }
+        };
+        // bounded pool: hold the accepted socket until a slot frees
+        {
+            let mut active = sh.active.lock().unwrap();
+            while *active >= sh.opts.max_conns && !sh.shutdown.load(Ordering::SeqCst) {
+                active = sh.pool_cv.wait(active).unwrap();
+            }
+            if sh.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            *active += 1;
+        }
+        let sh2 = sh.clone();
+        let builder = std::thread::Builder::new().name("d4m-net-conn".into());
+        let spawned = builder.spawn(move || {
+            let _ = serve_conn(stream, &sh2);
+            let mut active = sh2.active.lock().unwrap();
+            *active -= 1;
+            sh2.pool_cv.notify_all();
+        });
+        if spawned.is_err() {
+            // never happened in practice; release the reserved slot
+            let mut active = sh.active.lock().unwrap();
+            *active -= 1;
+            sh.pool_cv.notify_all();
+        }
+    }
+    // drain: connection threads notice the flag within one idle_poll;
+    // in-flight requests run to completion first
+    let mut active = sh.active.lock().unwrap();
+    while *active > 0 {
+        active = sh.pool_cv.wait(active).unwrap();
+    }
+}
+
+/// Serve one connection until the peer hangs up, a frame poisons it, or
+/// shutdown is initiated.
+fn serve_conn(mut stream: TcpStream, sh: &Shared) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_write_timeout(Some(sh.opts.io_timeout))?;
+    loop {
+        // poll for a frame's first byte so an idle connection notices
+        // shutdown without a dedicated waker
+        stream.set_read_timeout(Some(sh.opts.idle_poll))?;
+        let mut first = [0u8; 1];
+        match stream.read(&mut first) {
+            Ok(0) => return Ok(()), // peer closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        // a frame is in flight: the rest of it must arrive within one
+        // whole-frame deadline (the read timeout stays at idle_poll, so
+        // the deadline reader re-checks wall clock + shutdown per poll —
+        // a peer dribbling bytes cannot reset the budget)
+        let deadline = Instant::now() + sh.opts.io_timeout;
+        let mut reader = DeadlineReader { stream: &mut stream, sh, deadline };
+        let payload = match wire::read_frame_rest(first[0], &mut reader) {
+            Ok(p) => p,
+            // malformed frame: framed error back, close this connection
+            Err(e @ D4mError::Wire(_)) => return poison(&mut stream, sh, e),
+            // I/O failure (peer gone, frame deadline): nothing to reply to
+            Err(_) => return Ok(()),
+        };
+        sh.bytes_in.add((wire::HEADER_LEN + payload.len()) as u64);
+        let msg = match wire::decode_client_msg(&payload) {
+            Ok(m) => m,
+            Err(we) => return poison(&mut stream, sh, we.into()),
+        };
+        let (mut reply, shutdown_after) = match msg {
+            ClientMsg::Api(req) => {
+                let resp = sh.requests.time(|| sh.server.handle(req));
+                (ServerMsg::Reply(resp), false)
+            }
+            ClientMsg::Ping => (ServerMsg::Pong, false),
+            ClientMsg::Stats => (ServerMsg::Stats(sh.snapshots()), false),
+            ClientMsg::Shutdown => (ServerMsg::ShutdownAck, true),
+        };
+        // an assoc that cannot possibly fit the frame cap is rejected
+        // *before* encoding — the cap must bound server memory too, not
+        // just wire bytes (encode would otherwise materialise the whole
+        // oversized buffer just to have write_frame refuse it)
+        let oversize = match &reply {
+            ServerMsg::Reply(Ok(crate::coordinator::Response::Assoc(a)))
+                if a.mem_bytes() > wire::MAX_FRAME =>
+            {
+                Some(a.mem_bytes())
+            }
+            _ => None,
+        };
+        if let Some(n) = oversize {
+            reply = ServerMsg::Reply(Err(oversized(n)));
+        }
+        match send(&mut stream, sh, &reply) {
+            Ok(()) => {}
+            // a response bigger than the frame cap is detected *before*
+            // any bytes hit the socket, so the connection is still in a
+            // clean state: tell the client why instead of vanishing, and
+            // keep serving (the client can re-query with a limit)
+            Err(D4mError::Wire(WireError::FrameTooLarge(n))) => {
+                send(&mut stream, sh, &ServerMsg::Reply(Err(oversized(n))))?;
+            }
+            Err(e) => return Err(e),
+        }
+        if shutdown_after {
+            sh.initiate_shutdown();
+            return Ok(());
+        }
+    }
+}
+
+/// Reader over an in-flight frame: the underlying stream keeps the
+/// short `idle_poll` read timeout, and every timeout tick re-checks one
+/// wall-clock deadline for the *whole* frame plus the shutdown flag —
+/// so a peer dribbling one byte per tick cannot reset its budget or
+/// stall quiescence.
+struct DeadlineReader<'a> {
+    stream: &'a mut TcpStream,
+    sh: &'a Shared,
+    deadline: Instant,
+}
+
+impl Read for DeadlineReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            match self.stream.read(buf) {
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if self.sh.shutdown.load(Ordering::SeqCst)
+                        || Instant::now() >= self.deadline
+                    {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            "whole-frame deadline elapsed",
+                        ));
+                    }
+                }
+                other => return other,
+            }
+        }
+    }
+}
+
+/// A bad frame poisons the connection, never the server: best-effort
+/// framed error back to the peer, then close (by returning). Only
+/// protocol-level failures land here (`net.bad_frames` counts hostile
+/// or corrupt input, not routine disconnects).
+fn poison(stream: &mut TcpStream, sh: &Shared, e: D4mError) -> Result<()> {
+    sh.bad_frames.inc();
+    let _ = send(stream, sh, &ServerMsg::Reply(Err(e)));
+    Ok(())
+}
+
+/// The error a too-big-for-one-frame response turns into.
+fn oversized(bytes: usize) -> D4mError {
+    D4mError::InvalidArg(format!(
+        "response of ~{bytes} bytes exceeds the {} byte frame cap — \
+         narrow the query or use a limit",
+        wire::MAX_FRAME
+    ))
+}
+
+fn send(stream: &mut TcpStream, sh: &Shared, msg: &ServerMsg) -> Result<()> {
+    let buf = wire::encode_server_msg(msg);
+    wire::write_frame(stream, &buf)?;
+    sh.bytes_out.add((wire::HEADER_LEN + buf.len()) as u64);
+    Ok(())
+}

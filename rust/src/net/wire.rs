@@ -1,0 +1,1303 @@
+//! Length-prefixed binary frame codec for the network front-end.
+//!
+//! The crate has zero dependencies, so serialization is hand-rolled:
+//! explicit little-endian / LEB128-varint encodings with a versioned
+//! magic header per frame and typed decode errors ([`WireError`]) — a
+//! corrupt or truncated frame is always an `Err`, never a panic.
+//!
+//! §Frame layout (see DESIGN.md §Network front-end):
+//!
+//! ```text
+//! +-----------+---------+----------------+------------------+
+//! | "D4M" (3) | ver (1) | len u32 LE (4) | payload (len)    |
+//! +-----------+---------+----------------+------------------+
+//! ```
+//!
+//! The payload is one message: a [`ClientMsg`] (client→server) or a
+//! [`ServerMsg`] (server→client), each a tag byte followed by its body.
+//! Primitive encodings: `u64` as LEB128 varints (canonical-length not
+//! required, overflow rejected), `f64` as 8 bytes LE of `to_bits` (bit
+//! exact), strings as varint byte length + UTF-8, `Option` as a presence
+//! byte, vectors as varint count + elements.
+//!
+//! §Versioning rules: the header's version byte is bumped on **any**
+//! change to an existing message/tag encoding; adding a new trailing tag
+//! value is the only compatible evolution. A server/client seeing an
+//! unknown version refuses the frame with [`WireError::BadVersion`]
+//! before reading the payload.
+//!
+//! [`Assoc`] frames carry the array structurally — sorted key vectors,
+//! the optional value-key table and the raw CSR arrays — so a decoded
+//! assoc is **bit-identical** (`PartialEq`) to the encoded one. Decoding
+//! re-validates every CSR invariant (sorted unique keys, monotone
+//! `indptr`, in-bounds sorted column indices, value indices inside the
+//! dictionary), so a hostile frame cannot build an assoc that would
+//! panic downstream.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use crate::assoc::spmat::SpMat;
+use crate::assoc::{Assoc, KeySel};
+use crate::connectors::TableQuery;
+use crate::coordinator::{Request, Response};
+use crate::error::D4mError;
+use crate::graphulo::{PageRankOpts, PageRankResult, TableMultStats};
+use crate::metrics::Snapshot;
+use crate::pipeline::{IngestReport, PipelineConfig, TripleMsg};
+
+/// Frame magic (the version byte follows it).
+pub const MAGIC: [u8; 3] = *b"D4M";
+/// Wire-protocol version carried in every frame header.
+pub const VERSION: u8 = 1;
+/// Bytes of frame header preceding the payload.
+pub const HEADER_LEN: usize = 8;
+/// Upper bound on a frame payload; a declared length beyond this is
+/// rejected *before* allocating, so a corrupt header cannot OOM the peer.
+pub const MAX_FRAME: usize = 256 * 1024 * 1024;
+
+/// Cap on any single up-front `Vec::with_capacity` while decoding. The
+/// byte-level [`Cursor::count`] guard bounds element *counts* by wire
+/// bytes, but in-memory elements can be 8–24x larger than their wire
+/// form (a `String` header alone is 24 bytes), so a hostile max-size
+/// frame could otherwise force a multi-GiB reservation before the
+/// per-element reads start failing. Legitimate decodes just grow past
+/// this amortised.
+const PREALLOC_CAP: usize = 1 << 16;
+
+/// Typed decode failures. Every malformed input maps to one of these —
+/// the codec never panics on hostile bytes (`wire::tests` pin this).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Input ended before the structure it promised.
+    Truncated,
+    /// Frame header did not start with `b"D4M"`.
+    BadMagic([u8; 3]),
+    /// Frame header carried an unsupported protocol version.
+    BadVersion(u8),
+    /// Declared payload length exceeds [`MAX_FRAME`].
+    FrameTooLarge(usize),
+    /// A tag byte outside the known range for `what`.
+    UnknownTag { what: &'static str, tag: u8 },
+    /// A string field was not valid UTF-8.
+    BadUtf8,
+    /// A structural invariant failed (the message names it).
+    Malformed(&'static str),
+    /// Decode succeeded but `n` payload bytes were left over.
+    TrailingBytes(usize),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "truncated input"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            WireError::FrameTooLarge(n) => {
+                write!(f, "frame of {n} bytes exceeds the {MAX_FRAME}-byte cap")
+            }
+            WireError::UnknownTag { what, tag } => write!(f, "unknown {what} tag {tag}"),
+            WireError::BadUtf8 => write!(f, "string field is not valid UTF-8"),
+            WireError::Malformed(m) => write!(f, "malformed payload: {m}"),
+            WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after message"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Codec-level result.
+pub type WireResult<T> = std::result::Result<T, WireError>;
+
+// ---------------------------------------------------------------------
+// messages
+
+/// Client→server messages: the coordinator API plus the three admin
+/// verbs the CLI and CI harness need.
+#[derive(Debug)]
+pub enum ClientMsg {
+    /// A coordinator [`Request`], answered by [`ServerMsg::Reply`].
+    Api(Request),
+    /// Liveness probe, answered by [`ServerMsg::Pong`].
+    Ping,
+    /// Metrics snapshot request, answered by [`ServerMsg::Stats`].
+    Stats,
+    /// Graceful server shutdown, answered by [`ServerMsg::ShutdownAck`].
+    Shutdown,
+}
+
+/// Server→client messages.
+#[derive(Debug)]
+pub enum ServerMsg {
+    /// Outcome of [`ClientMsg::Api`]: the coordinator's response, or its
+    /// error carried across the wire.
+    Reply(crate::error::Result<Response>),
+    Pong,
+    /// Per-op metrics snapshots plus the net-layer counters.
+    Stats(Vec<Snapshot>),
+    ShutdownAck,
+}
+
+// ---------------------------------------------------------------------
+// framing
+
+/// Write one frame: header + payload.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> crate::error::Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(WireError::FrameTooLarge(payload.len()).into());
+    }
+    let mut head = [0u8; HEADER_LEN];
+    head[..3].copy_from_slice(&MAGIC);
+    head[3] = VERSION;
+    head[4..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, returning its payload.
+pub fn read_frame(r: &mut impl Read) -> crate::error::Result<Vec<u8>> {
+    let mut first = [0u8; 1];
+    r.read_exact(&mut first).map_err(eof_as_truncated)?;
+    read_frame_rest(first[0], r)
+}
+
+/// Read a frame whose first header byte was already consumed (the
+/// server reads that byte separately while polling an idle connection
+/// for shutdown — see `net::server`).
+pub fn read_frame_rest(first: u8, r: &mut impl Read) -> crate::error::Result<Vec<u8>> {
+    let mut rest = [0u8; HEADER_LEN - 1];
+    r.read_exact(&mut rest).map_err(eof_as_truncated)?;
+    let magic = [first, rest[0], rest[1]];
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic).into());
+    }
+    if rest[2] != VERSION {
+        return Err(WireError::BadVersion(rest[2]).into());
+    }
+    let len = u32::from_le_bytes([rest[3], rest[4], rest[5], rest[6]]) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::FrameTooLarge(len).into());
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(eof_as_truncated)?;
+    Ok(payload)
+}
+
+/// A peer hanging up mid-frame surfaces as `UnexpectedEof`; report it as
+/// the typed truncation error rather than a bare I/O error.
+fn eof_as_truncated(e: std::io::Error) -> D4mError {
+    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        WireError::Truncated.into()
+    } else {
+        D4mError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------
+// primitive encoders
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+
+fn put_varint(b: &mut Vec<u8>, mut v: u64) {
+    loop {
+        if v < 0x80 {
+            b.push(v as u8);
+            return;
+        }
+        b.push((v as u8 & 0x7f) | 0x80);
+        v >>= 7;
+    }
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_bool(b: &mut Vec<u8>, v: bool) {
+    b.push(v as u8);
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_varint(b, s.len() as u64);
+    b.extend_from_slice(s.as_bytes());
+}
+
+fn put_str_slice(b: &mut Vec<u8>, v: &[String]) {
+    put_varint(b, v.len() as u64);
+    for s in v {
+        put_str(b, s);
+    }
+}
+
+// ---------------------------------------------------------------------
+// primitive decoder
+
+/// Bounds-checked reader over one frame payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn u8(&mut self) -> WireResult<u8> {
+        let b = *self.buf.get(self.pos).ok_or(WireError::Truncated)?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn bytes(&mut self, n: usize) -> WireResult<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn varint(&mut self) -> WireResult<u64> {
+        let mut v: u64 = 0;
+        let mut shift: u32 = 0;
+        loop {
+            let b = self.u8()?;
+            if shift == 63 && b > 1 {
+                return Err(WireError::Malformed("varint overflows u64"));
+            }
+            v |= ((b & 0x7f) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(WireError::Malformed("varint overflows u64"));
+            }
+        }
+    }
+
+    /// A varint used as an element/byte count. Guarded against counts
+    /// that could not possibly fit in the remaining payload (every
+    /// element costs ≥ `min_elem_bytes`), so a corrupt count can never
+    /// drive a huge allocation.
+    fn count(&mut self, min_elem_bytes: usize) -> WireResult<usize> {
+        let n = usize::try_from(self.varint()?)
+            .map_err(|_| WireError::Malformed("count overflows usize"))?;
+        match n.checked_mul(min_elem_bytes) {
+            Some(bytes) if bytes <= self.remaining() => Ok(n),
+            _ => Err(WireError::Truncated),
+        }
+    }
+
+    fn f64(&mut self) -> WireResult<f64> {
+        let raw = self.bytes(8)?;
+        let mut le = [0u8; 8];
+        le.copy_from_slice(raw);
+        Ok(f64::from_bits(u64::from_le_bytes(le)))
+    }
+
+    fn bool(&mut self) -> WireResult<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(WireError::Malformed("bool byte not 0/1")),
+        }
+    }
+
+    fn str(&mut self) -> WireResult<String> {
+        let n = self.count(1)?;
+        let raw = self.bytes(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    fn str_vec(&mut self) -> WireResult<Vec<String>> {
+        let n = self.count(1)?;
+        let mut out = Vec::with_capacity(n.min(PREALLOC_CAP));
+        for _ in 0..n {
+            out.push(self.str()?);
+        }
+        Ok(out)
+    }
+
+    fn finish(self) -> WireResult<()> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::TrailingBytes(self.buf.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+fn to_usize(v: u64, what: &'static str) -> WireResult<usize> {
+    usize::try_from(v).map_err(|_| WireError::Malformed(what))
+}
+
+// ---------------------------------------------------------------------
+// KeySel / TableQuery
+
+fn put_keysel(b: &mut Vec<u8>, sel: &KeySel) {
+    match sel {
+        KeySel::All => put_u8(b, 0),
+        KeySel::Keys(ks) => {
+            put_u8(b, 1);
+            put_str_slice(b, ks);
+        }
+        KeySel::Range(lo, hi) => {
+            put_u8(b, 2);
+            put_str(b, lo);
+            put_str(b, hi);
+        }
+        KeySel::Prefix(p) => {
+            put_u8(b, 3);
+            put_str(b, p);
+        }
+    }
+}
+
+fn get_keysel(c: &mut Cursor) -> WireResult<KeySel> {
+    match c.u8()? {
+        0 => Ok(KeySel::All),
+        1 => Ok(KeySel::Keys(c.str_vec()?)),
+        2 => Ok(KeySel::Range(c.str()?, c.str()?)),
+        3 => Ok(KeySel::Prefix(c.str()?)),
+        tag => Err(WireError::UnknownTag { what: "KeySel", tag }),
+    }
+}
+
+fn put_query(b: &mut Vec<u8>, q: &TableQuery) {
+    put_keysel(b, &q.rows);
+    put_keysel(b, &q.cols);
+    match q.limit {
+        Some(n) => {
+            put_u8(b, 1);
+            put_varint(b, n as u64);
+        }
+        None => put_u8(b, 0),
+    }
+    put_varint(b, q.page_rows as u64);
+}
+
+fn get_query(c: &mut Cursor) -> WireResult<TableQuery> {
+    let rows = get_keysel(c)?;
+    let cols = get_keysel(c)?;
+    let limit = if c.bool()? {
+        Some(to_usize(c.varint()?, "limit overflows usize")?)
+    } else {
+        None
+    };
+    let page_rows = to_usize(c.varint()?, "page_rows overflows usize")?;
+    Ok(TableQuery { rows, cols, limit, page_rows })
+}
+
+// ---------------------------------------------------------------------
+// Assoc
+
+/// Encode an [`Assoc`] structurally (keys + optional value table + raw
+/// CSR), preserving it bit-for-bit.
+pub fn encode_assoc(b: &mut Vec<u8>, a: &Assoc) {
+    put_str_slice(b, a.row_keys());
+    put_str_slice(b, a.col_keys());
+    match a.val_keys() {
+        Some(v) => {
+            put_u8(b, 1);
+            put_str_slice(b, v);
+        }
+        None => put_u8(b, 0),
+    }
+    let m = a.matrix();
+    put_varint(b, m.nr as u64);
+    put_varint(b, m.nc as u64);
+    put_varint(b, m.indices.len() as u64);
+    for &p in &m.indptr {
+        put_varint(b, p as u64);
+    }
+    for &i in &m.indices {
+        put_varint(b, i as u64);
+    }
+    for &v in &m.data {
+        put_f64(b, v);
+    }
+}
+
+fn get_assoc(c: &mut Cursor) -> WireResult<Assoc> {
+    let row_keys = c.str_vec()?;
+    let col_keys = c.str_vec()?;
+    let vals = if c.bool()? { Some(c.str_vec()?) } else { None };
+    let nr = to_usize(c.varint()?, "nr overflows usize")?;
+    let nc = to_usize(c.varint()?, "nc overflows usize")?;
+    let nnz = to_usize(c.varint()?, "nnz overflows usize")?;
+    if nr != row_keys.len() || nc != col_keys.len() {
+        return Err(WireError::Malformed("matrix shape disagrees with key counts"));
+    }
+    for keys in [&row_keys, &col_keys].into_iter().chain(vals.iter()) {
+        if !keys.windows(2).all(|w| w[0] < w[1]) {
+            return Err(WireError::Malformed("key vector not sorted/unique"));
+        }
+    }
+    // indptr: nr + 1 varints, starting at 0, monotone, ending at nnz
+    if nnz > c.remaining() || nr >= c.remaining() {
+        return Err(WireError::Truncated);
+    }
+    let mut indptr = Vec::with_capacity((nr + 1).min(PREALLOC_CAP));
+    for _ in 0..nr + 1 {
+        indptr.push(to_usize(c.varint()?, "indptr overflows usize")?);
+    }
+    if indptr[0] != 0 || indptr[nr] != nnz || indptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(WireError::Malformed("indptr not a monotone 0..nnz row pointer"));
+    }
+    let mut indices = Vec::with_capacity(nnz.min(PREALLOC_CAP));
+    for _ in 0..nnz {
+        indices.push(to_usize(c.varint()?, "col index overflows usize")?);
+    }
+    // within each row: strictly increasing, in bounds (the CSR invariant
+    // every kernel relies on)
+    for r in 0..nr {
+        let row = &indices[indptr[r]..indptr[r + 1]];
+        if row.iter().any(|&i| i >= nc) || row.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(WireError::Malformed("row indices unsorted or out of bounds"));
+        }
+    }
+    if nnz.checked_mul(8).map(|b| b > c.remaining()).unwrap_or(true) {
+        return Err(WireError::Truncated);
+    }
+    let mut data = Vec::with_capacity(nnz.min(PREALLOC_CAP));
+    for _ in 0..nnz {
+        data.push(c.f64()?);
+    }
+    if let Some(vals) = &vals {
+        // string-valued entries are 1-based indices into the value table;
+        // anything else would panic in `str_triples`
+        let max = vals.len() as f64;
+        if data.iter().any(|&v| v.fract() != 0.0 || v < 1.0 || v > max) {
+            return Err(WireError::Malformed("string value index outside dictionary"));
+        }
+    }
+    let mat = SpMat { nr, nc, indptr, indices, data };
+    Ok(Assoc::from_parts(row_keys, col_keys, mat, vals))
+}
+
+/// Decode one [`Assoc`] occupying an entire payload (tests + tools).
+pub fn decode_assoc(buf: &[u8]) -> WireResult<Assoc> {
+    let mut c = Cursor::new(buf);
+    let a = get_assoc(&mut c)?;
+    c.finish()?;
+    Ok(a)
+}
+
+// ---------------------------------------------------------------------
+// Request
+
+/// Encode a coordinator [`Request`].
+pub fn encode_request(b: &mut Vec<u8>, req: &Request) {
+    match req {
+        Request::CreateTable { name, splits } => {
+            put_u8(b, 0);
+            put_str(b, name);
+            put_str_slice(b, splits);
+        }
+        Request::Ingest { table, triples, pipeline } => {
+            put_u8(b, 1);
+            put_str(b, table);
+            put_varint(b, triples.len() as u64);
+            for (r, c, v) in triples {
+                put_str(b, r);
+                put_str(b, c);
+                put_str(b, v);
+            }
+            put_varint(b, pipeline.num_workers as u64);
+            put_varint(b, pipeline.queue_depth as u64);
+            put_varint(b, pipeline.batch_size as u64);
+            put_bool(b, pipeline.shard_by_row);
+        }
+        Request::Query { table, query } => {
+            put_u8(b, 2);
+            put_str(b, table);
+            put_query(b, query);
+        }
+        Request::TableMult { a, b: rhs, out } => {
+            put_u8(b, 3);
+            put_str(b, a);
+            put_str(b, rhs);
+            put_str(b, out);
+        }
+        Request::TableMultClient { a, b: rhs, memory_limit } => {
+            put_u8(b, 4);
+            put_str(b, a);
+            put_str(b, rhs);
+            put_varint(b, *memory_limit as u64);
+        }
+        Request::TableMultDense { a, b: rhs, tile } => {
+            put_u8(b, 5);
+            put_str(b, a);
+            put_str(b, rhs);
+            put_varint(b, *tile as u64);
+        }
+        Request::Bfs { table, seeds, hops } => {
+            put_u8(b, 6);
+            put_str(b, table);
+            put_str_slice(b, seeds);
+            put_varint(b, *hops as u64);
+        }
+        Request::Jaccard { table, out } => {
+            put_u8(b, 7);
+            put_str(b, table);
+            put_str(b, out);
+        }
+        Request::KTruss { table, k } => {
+            put_u8(b, 8);
+            put_str(b, table);
+            put_varint(b, *k as u64);
+        }
+        Request::PageRank { table, opts } => {
+            put_u8(b, 9);
+            put_str(b, table);
+            put_f64(b, opts.damping);
+            put_varint(b, opts.max_iters as u64);
+            put_f64(b, opts.tol);
+        }
+        Request::ListTables => put_u8(b, 10),
+    }
+}
+
+fn get_request(c: &mut Cursor) -> WireResult<Request> {
+    match c.u8()? {
+        0 => Ok(Request::CreateTable { name: c.str()?, splits: c.str_vec()? }),
+        1 => {
+            let table = c.str()?;
+            let n = c.count(3)?; // each triple: 3 length bytes minimum
+            let mut triples: Vec<TripleMsg> = Vec::with_capacity(n.min(PREALLOC_CAP));
+            for _ in 0..n {
+                triples.push((c.str()?, c.str()?, c.str()?));
+            }
+            let pipeline = PipelineConfig {
+                num_workers: to_usize(c.varint()?, "num_workers overflows usize")?,
+                queue_depth: to_usize(c.varint()?, "queue_depth overflows usize")?,
+                batch_size: to_usize(c.varint()?, "batch_size overflows usize")?,
+                shard_by_row: c.bool()?,
+            };
+            Ok(Request::Ingest { table, triples, pipeline })
+        }
+        2 => Ok(Request::Query { table: c.str()?, query: get_query(c)? }),
+        3 => Ok(Request::TableMult { a: c.str()?, b: c.str()?, out: c.str()? }),
+        4 => Ok(Request::TableMultClient {
+            a: c.str()?,
+            b: c.str()?,
+            memory_limit: to_usize(c.varint()?, "memory_limit overflows usize")?,
+        }),
+        5 => Ok(Request::TableMultDense {
+            a: c.str()?,
+            b: c.str()?,
+            tile: to_usize(c.varint()?, "tile overflows usize")?,
+        }),
+        6 => Ok(Request::Bfs {
+            table: c.str()?,
+            seeds: c.str_vec()?,
+            hops: to_usize(c.varint()?, "hops overflows usize")?,
+        }),
+        7 => Ok(Request::Jaccard { table: c.str()?, out: c.str()? }),
+        8 => Ok(Request::KTruss {
+            table: c.str()?,
+            k: to_usize(c.varint()?, "k overflows usize")?,
+        }),
+        9 => {
+            let table = c.str()?;
+            let opts = PageRankOpts {
+                damping: c.f64()?,
+                max_iters: to_usize(c.varint()?, "max_iters overflows usize")?,
+                tol: c.f64()?,
+            };
+            Ok(Request::PageRank { table, opts })
+        }
+        10 => Ok(Request::ListTables),
+        tag => Err(WireError::UnknownTag { what: "Request", tag }),
+    }
+}
+
+/// Decode one [`Request`] occupying an entire payload.
+pub fn decode_request(buf: &[u8]) -> WireResult<Request> {
+    let mut c = Cursor::new(buf);
+    let r = get_request(&mut c)?;
+    c.finish()?;
+    Ok(r)
+}
+
+// ---------------------------------------------------------------------
+// Response
+
+/// Encode a coordinator [`Response`].
+pub fn encode_response(b: &mut Vec<u8>, resp: &Response) {
+    match resp {
+        Response::Ok => put_u8(b, 0),
+        Response::Tables(ts) => {
+            put_u8(b, 1);
+            put_str_slice(b, ts);
+        }
+        Response::Ingested(r) => {
+            put_u8(b, 2);
+            put_varint(b, r.triples);
+            put_varint(b, r.elapsed.as_nanos().min(u64::MAX as u128) as u64);
+            put_f64(b, r.rate);
+            put_f64(b, r.physical_rate);
+            put_varint(b, r.per_worker.len() as u64);
+            for &w in &r.per_worker {
+                put_varint(b, w);
+            }
+            put_varint(b, r.backpressure_stalls);
+            put_varint(b, r.num_workers as u64);
+        }
+        Response::Assoc(a) => {
+            put_u8(b, 3);
+            encode_assoc(b, a);
+        }
+        Response::Distances(d) => {
+            put_u8(b, 4);
+            put_varint(b, d.len() as u64);
+            for (k, &v) in d {
+                put_str(b, k);
+                put_varint(b, v as u64);
+            }
+        }
+        Response::Ranks(r) => {
+            put_u8(b, 5);
+            put_varint(b, r.scores.len() as u64);
+            for (k, &v) in &r.scores {
+                put_str(b, k);
+                put_f64(b, v);
+            }
+            put_varint(b, r.iterations as u64);
+            put_bool(b, r.converged);
+        }
+        Response::MultStats(s) => {
+            put_u8(b, 6);
+            put_varint(b, s.rows_contracted);
+            put_varint(b, s.partial_products);
+            put_varint(b, s.peak_row_entries as u64);
+        }
+    }
+}
+
+fn get_response(c: &mut Cursor) -> WireResult<Response> {
+    match c.u8()? {
+        0 => Ok(Response::Ok),
+        1 => Ok(Response::Tables(c.str_vec()?)),
+        2 => {
+            let triples = c.varint()?;
+            let elapsed = Duration::from_nanos(c.varint()?);
+            let rate = c.f64()?;
+            let physical_rate = c.f64()?;
+            let n = c.count(1)?;
+            let mut per_worker = Vec::with_capacity(n.min(PREALLOC_CAP));
+            for _ in 0..n {
+                per_worker.push(c.varint()?);
+            }
+            let backpressure_stalls = c.varint()?;
+            let num_workers = to_usize(c.varint()?, "num_workers overflows usize")?;
+            Ok(Response::Ingested(IngestReport {
+                triples,
+                elapsed,
+                rate,
+                physical_rate,
+                per_worker,
+                backpressure_stalls,
+                num_workers,
+            }))
+        }
+        3 => Ok(Response::Assoc(get_assoc(c)?)),
+        4 => {
+            let n = c.count(2)?;
+            let mut d = BTreeMap::new();
+            for _ in 0..n {
+                let k = c.str()?;
+                let v = to_usize(c.varint()?, "distance overflows usize")?;
+                d.insert(k, v);
+            }
+            Ok(Response::Distances(d))
+        }
+        5 => {
+            let n = c.count(9)?;
+            let mut scores = BTreeMap::new();
+            for _ in 0..n {
+                let k = c.str()?;
+                let v = c.f64()?;
+                scores.insert(k, v);
+            }
+            let iterations = to_usize(c.varint()?, "iterations overflows usize")?;
+            let converged = c.bool()?;
+            Ok(Response::Ranks(PageRankResult { scores, iterations, converged }))
+        }
+        6 => Ok(Response::MultStats(TableMultStats {
+            rows_contracted: c.varint()?,
+            partial_products: c.varint()?,
+            peak_row_entries: to_usize(c.varint()?, "peak_row_entries overflows usize")?,
+        })),
+        tag => Err(WireError::UnknownTag { what: "Response", tag }),
+    }
+}
+
+/// Decode one [`Response`] occupying an entire payload.
+pub fn decode_response(buf: &[u8]) -> WireResult<Response> {
+    let mut c = Cursor::new(buf);
+    let r = get_response(&mut c)?;
+    c.finish()?;
+    Ok(r)
+}
+
+// ---------------------------------------------------------------------
+// errors across the wire
+
+/// Encode a [`D4mError`] for transport. String-payload variants
+/// round-trip exactly; `Io` and `Wire` errors arrive as
+/// [`D4mError::Remote`] (they wrap process-local types).
+fn put_error(b: &mut Vec<u8>, e: &D4mError) {
+    match e {
+        D4mError::Shape(s) => {
+            put_u8(b, 0);
+            put_str(b, s);
+        }
+        D4mError::NotFound(s) => {
+            put_u8(b, 1);
+            put_str(b, s);
+        }
+        D4mError::AlreadyExists(s) => {
+            put_u8(b, 2);
+            put_str(b, s);
+        }
+        D4mError::MemoryLimit { used, limit } => {
+            put_u8(b, 3);
+            put_varint(b, *used as u64);
+            put_varint(b, *limit as u64);
+        }
+        D4mError::Parse(s) => {
+            put_u8(b, 4);
+            put_str(b, s);
+        }
+        D4mError::Runtime(s) => {
+            put_u8(b, 5);
+            put_str(b, s);
+        }
+        D4mError::Pipeline(s) => {
+            put_u8(b, 6);
+            put_str(b, s);
+        }
+        D4mError::InvalidArg(s) => {
+            put_u8(b, 7);
+            put_str(b, s);
+        }
+        D4mError::Io(e) => {
+            put_u8(b, 8);
+            put_str(b, &e.to_string());
+        }
+        D4mError::Wire(e) => {
+            put_u8(b, 9);
+            put_str(b, &e.to_string());
+        }
+        D4mError::Remote(s) => {
+            put_u8(b, 10);
+            put_str(b, s);
+        }
+    }
+}
+
+fn get_error(c: &mut Cursor) -> WireResult<D4mError> {
+    Ok(match c.u8()? {
+        0 => D4mError::Shape(c.str()?),
+        1 => D4mError::NotFound(c.str()?),
+        2 => D4mError::AlreadyExists(c.str()?),
+        3 => D4mError::MemoryLimit {
+            used: to_usize(c.varint()?, "used overflows usize")?,
+            limit: to_usize(c.varint()?, "limit overflows usize")?,
+        },
+        4 => D4mError::Parse(c.str()?),
+        5 => D4mError::Runtime(c.str()?),
+        6 => D4mError::Pipeline(c.str()?),
+        7 => D4mError::InvalidArg(c.str()?),
+        8 => D4mError::Remote(format!("io: {}", c.str()?)),
+        9 => D4mError::Remote(format!("wire: {}", c.str()?)),
+        10 => D4mError::Remote(c.str()?),
+        tag => return Err(WireError::UnknownTag { what: "error", tag }),
+    })
+}
+
+// ---------------------------------------------------------------------
+// top-level messages
+
+/// Encode a [`ClientMsg`] payload.
+pub fn encode_client_msg(m: &ClientMsg) -> Vec<u8> {
+    let mut b = Vec::new();
+    match m {
+        ClientMsg::Api(req) => {
+            put_u8(&mut b, 0);
+            encode_request(&mut b, req);
+        }
+        ClientMsg::Ping => put_u8(&mut b, 1),
+        ClientMsg::Stats => put_u8(&mut b, 2),
+        ClientMsg::Shutdown => put_u8(&mut b, 3),
+    }
+    b
+}
+
+/// Decode a [`ClientMsg`] payload (must consume every byte).
+pub fn decode_client_msg(buf: &[u8]) -> WireResult<ClientMsg> {
+    let mut c = Cursor::new(buf);
+    let m = match c.u8()? {
+        0 => ClientMsg::Api(get_request(&mut c)?),
+        1 => ClientMsg::Ping,
+        2 => ClientMsg::Stats,
+        3 => ClientMsg::Shutdown,
+        tag => return Err(WireError::UnknownTag { what: "ClientMsg", tag }),
+    };
+    c.finish()?;
+    Ok(m)
+}
+
+/// Encode a [`ServerMsg`] payload.
+pub fn encode_server_msg(m: &ServerMsg) -> Vec<u8> {
+    let mut b = Vec::new();
+    match m {
+        ServerMsg::Reply(Ok(resp)) => {
+            put_u8(&mut b, 0);
+            encode_response(&mut b, resp);
+        }
+        ServerMsg::Reply(Err(e)) => {
+            put_u8(&mut b, 1);
+            put_error(&mut b, e);
+        }
+        ServerMsg::Pong => put_u8(&mut b, 2),
+        ServerMsg::Stats(snaps) => {
+            put_u8(&mut b, 3);
+            put_varint(&mut b, snaps.len() as u64);
+            for s in snaps {
+                put_str(&mut b, &s.name);
+                put_varint(&mut b, s.count);
+                put_f64(&mut b, s.rate_per_sec);
+                put_f64(&mut b, s.mean_latency_ns);
+                put_varint(&mut b, s.p99_latency_ns);
+            }
+        }
+        ServerMsg::ShutdownAck => put_u8(&mut b, 4),
+    }
+    b
+}
+
+/// Decode a [`ServerMsg`] payload (must consume every byte).
+pub fn decode_server_msg(buf: &[u8]) -> WireResult<ServerMsg> {
+    let mut c = Cursor::new(buf);
+    let m = match c.u8()? {
+        0 => ServerMsg::Reply(Ok(get_response(&mut c)?)),
+        1 => ServerMsg::Reply(Err(get_error(&mut c)?)),
+        2 => ServerMsg::Pong,
+        3 => {
+            let n = c.count(18)?; // name len + count + 2 f64s + p99
+            let mut snaps = Vec::with_capacity(n.min(PREALLOC_CAP));
+            for _ in 0..n {
+                snaps.push(Snapshot {
+                    name: c.str()?,
+                    count: c.varint()?,
+                    rate_per_sec: c.f64()?,
+                    mean_latency_ns: c.f64()?,
+                    p99_latency_ns: c.varint()?,
+                });
+            }
+            ServerMsg::Stats(snaps)
+        }
+        4 => ServerMsg::ShutdownAck,
+        tag => return Err(WireError::UnknownTag { what: "ServerMsg", tag }),
+    };
+    c.finish()?;
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    // ---------------------------------------------------------------
+    // randomized value generators (xorshift-seeded, reproducible)
+
+    fn rand_str(rng: &mut XorShift64) -> String {
+        const ALPHABET: &[&str] =
+            &["a", "b", "z", "0", "9", "|", ",", " ", "é", "✓", "\u{10FFFF}", "\\", "\""];
+        let len = rng.below(8) as usize;
+        (0..len).map(|_| ALPHABET[rng.below(ALPHABET.len() as u64) as usize]).collect()
+    }
+
+    fn rand_keysel(rng: &mut XorShift64) -> KeySel {
+        match rng.below(4) {
+            0 => KeySel::All,
+            1 => {
+                let n = rng.below(4) as usize;
+                KeySel::Keys((0..n).map(|_| rand_str(rng)).collect())
+            }
+            2 => KeySel::Range(rand_str(rng), rand_str(rng)),
+            _ => KeySel::Prefix(rand_str(rng)),
+        }
+    }
+
+    fn rand_query(rng: &mut XorShift64) -> TableQuery {
+        TableQuery {
+            rows: rand_keysel(rng),
+            cols: rand_keysel(rng),
+            limit: if rng.below(2) == 0 { None } else { Some(rng.below(1 << 20) as usize) },
+            page_rows: 1 + rng.below(4096) as usize,
+        }
+    }
+
+    /// A random well-formed assoc: empty, numeric, or string-valued
+    /// (construction through the public builders guarantees every CSR
+    /// invariant the decoder re-checks).
+    fn rand_assoc(rng: &mut XorShift64) -> Assoc {
+        let n = rng.below(12) as usize; // 0 => empty
+        match rng.below(3) {
+            0 => Assoc::empty(),
+            1 => {
+                let triples: Vec<(String, String, f64)> = (0..n)
+                    .map(|_| {
+                        let v = (rng.below(1000) as f64 - 500.0) / 8.0;
+                        (rand_str(rng), rand_str(rng), v)
+                    })
+                    .collect();
+                Assoc::from_triples(&triples)
+            }
+            _ => {
+                let triples: Vec<(String, String, String)> = (0..n)
+                    .map(|_| (rand_str(rng), rand_str(rng), rand_str(rng)))
+                    .collect();
+                Assoc::from_str_triples(&triples)
+            }
+        }
+    }
+
+    fn rand_request(rng: &mut XorShift64) -> Request {
+        match rng.below(11) {
+            0 => Request::CreateTable {
+                name: rand_str(rng),
+                splits: (0..rng.below(4)).map(|_| rand_str(rng)).collect(),
+            },
+            1 => Request::Ingest {
+                table: rand_str(rng),
+                triples: (0..rng.below(8))
+                    .map(|_| (rand_str(rng), rand_str(rng), rand_str(rng)))
+                    .collect(),
+                pipeline: PipelineConfig {
+                    num_workers: 1 + rng.below(8) as usize,
+                    queue_depth: 1 + rng.below(16) as usize,
+                    batch_size: 1 + rng.below(4096) as usize,
+                    shard_by_row: rng.below(2) == 0,
+                },
+            },
+            2 => Request::Query { table: rand_str(rng), query: rand_query(rng) },
+            3 => Request::TableMult { a: rand_str(rng), b: rand_str(rng), out: rand_str(rng) },
+            4 => {
+                let unlimited = rng.below(2) == 0;
+                let cap = if unlimited { usize::MAX } else { rng.below(1 << 30) as usize };
+                Request::TableMultClient { a: rand_str(rng), b: rand_str(rng), memory_limit: cap }
+            }
+            5 => Request::TableMultDense {
+                a: rand_str(rng),
+                b: rand_str(rng),
+                tile: 1 + rng.below(512) as usize,
+            },
+            6 => Request::Bfs {
+                table: rand_str(rng),
+                seeds: (0..rng.below(5)).map(|_| rand_str(rng)).collect(),
+                hops: rng.below(10) as usize,
+            },
+            7 => Request::Jaccard { table: rand_str(rng), out: rand_str(rng) },
+            8 => Request::KTruss { table: rand_str(rng), k: rng.below(8) as usize },
+            9 => Request::PageRank {
+                table: rand_str(rng),
+                opts: PageRankOpts {
+                    damping: rng.f64(),
+                    max_iters: rng.below(500) as usize,
+                    tol: rng.f64() / 1e6,
+                },
+            },
+            _ => Request::ListTables,
+        }
+    }
+
+    fn rand_response(rng: &mut XorShift64) -> Response {
+        match rng.below(7) {
+            0 => Response::Ok,
+            1 => Response::Tables((0..rng.below(6)).map(|_| rand_str(rng)).collect()),
+            2 => Response::Ingested(IngestReport {
+                triples: rng.below(1 << 40),
+                elapsed: Duration::from_nanos(rng.below(1 << 50)),
+                rate: rng.f64() * 1e8,
+                physical_rate: rng.f64() * 3e8,
+                per_worker: (0..rng.below(8)).map(|_| rng.below(1 << 30)).collect(),
+                backpressure_stalls: rng.below(100),
+                num_workers: 1 + rng.below(8) as usize,
+            }),
+            3 => Response::Assoc(rand_assoc(rng)),
+            4 => Response::Distances(
+                (0..rng.below(8)).map(|_| (rand_str(rng), rng.below(30) as usize)).collect(),
+            ),
+            5 => Response::Ranks(PageRankResult {
+                scores: (0..rng.below(8)).map(|_| (rand_str(rng), rng.f64())).collect(),
+                iterations: rng.below(200) as usize,
+                converged: rng.below(2) == 0,
+            }),
+            _ => Response::MultStats(TableMultStats {
+                rows_contracted: rng.below(1 << 20),
+                partial_products: rng.below(1 << 30),
+                peak_row_entries: rng.below(1 << 16) as usize,
+            }),
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // round trips
+
+    #[test]
+    fn request_roundtrip_randomized() {
+        crate::util::forall(500, 0xD4A1, |rng| {
+            let req = rand_request(rng);
+            let mut b = Vec::new();
+            encode_request(&mut b, &req);
+            let back = decode_request(&b).expect("decode");
+            assert_eq!(req, back);
+        });
+    }
+
+    #[test]
+    fn response_roundtrip_randomized() {
+        crate::util::forall(500, 0xD4A2, |rng| {
+            let resp = rand_response(rng);
+            let b = encode_server_msg(&ServerMsg::Reply(Ok(resp.clone())));
+            match decode_server_msg(&b).expect("decode") {
+                ServerMsg::Reply(Ok(back)) => assert_eq!(resp, back),
+                other => panic!("wrong message shape: {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn assoc_roundtrip_bit_identical() {
+        crate::util::forall(300, 0xD4A3, |rng| {
+            let a = rand_assoc(rng);
+            let mut b = Vec::new();
+            encode_assoc(&mut b, &a);
+            let back = decode_assoc(&b).expect("decode");
+            assert_eq!(a, back, "assoc did not round-trip bit-identically");
+            assert_eq!(a.matrix(), back.matrix());
+        });
+    }
+
+    #[test]
+    fn string_and_empty_assocs_roundtrip() {
+        for a in [
+            Assoc::empty(),
+            Assoc::from_str_triples(&[("r", "c", "hello"), ("r", "d", "wörld")]),
+            Assoc::from_triples(&[("only", "one", -3.25)]),
+        ] {
+            let mut b = Vec::new();
+            encode_assoc(&mut b, &a);
+            assert_eq!(decode_assoc(&b).unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn error_roundtrip() {
+        let errs = vec![
+            D4mError::Shape("s".into()),
+            D4mError::NotFound("t".into()),
+            D4mError::AlreadyExists("u".into()),
+            D4mError::MemoryLimit { used: 10, limit: 7 },
+            D4mError::Parse("p".into()),
+            D4mError::Runtime("r".into()),
+            D4mError::Pipeline("l".into()),
+            D4mError::InvalidArg("i".into()),
+            D4mError::Remote("far away".into()),
+        ];
+        for e in errs {
+            let expect = e.to_string();
+            let b = encode_server_msg(&ServerMsg::Reply(Err(e)));
+            match decode_server_msg(&b).unwrap() {
+                ServerMsg::Reply(Err(back)) => assert_eq!(back.to_string(), expect),
+                other => panic!("wrong message shape: {other:?}"),
+            }
+        }
+        // Io / Wire arrive as Remote (process-local payloads)
+        let io = D4mError::Io(std::io::Error::other("disk gone"));
+        let b = encode_server_msg(&ServerMsg::Reply(Err(io)));
+        match decode_server_msg(&b).unwrap() {
+            ServerMsg::Reply(Err(D4mError::Remote(s))) => assert!(s.contains("disk gone")),
+            other => panic!("io error should decode as Remote, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admin_msgs_roundtrip() {
+        for m in [ClientMsg::Ping, ClientMsg::Stats, ClientMsg::Shutdown] {
+            let b = encode_client_msg(&m);
+            let back = decode_client_msg(&b).unwrap();
+            assert_eq!(std::mem::discriminant(&m), std::mem::discriminant(&back));
+        }
+        let snaps = vec![Snapshot {
+            name: "net.requests".into(),
+            count: 42,
+            rate_per_sec: 1000.5,
+            mean_latency_ns: 12.0,
+            p99_latency_ns: 99,
+        }];
+        let b = encode_server_msg(&ServerMsg::Stats(snaps.clone()));
+        match decode_server_msg(&b).unwrap() {
+            ServerMsg::Stats(back) => assert_eq!(back, snaps),
+            other => panic!("wrong message shape: {other:?}"),
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // framing
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = encode_client_msg(&ClientMsg::Api(Request::ListTables));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        assert_eq!(buf.len(), HEADER_LEN + payload.len());
+        let back = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(back, payload);
+    }
+
+    #[test]
+    fn truncated_frame_is_typed_error_at_every_cut() {
+        let mut rng = XorShift64::new(0xD4A4);
+        let req = rand_request(&mut rng);
+        let payload = encode_client_msg(&ClientMsg::Api(req));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        for cut in 0..buf.len() {
+            let r = read_frame(&mut &buf[..cut]);
+            match r {
+                Err(D4mError::Wire(_)) => {}
+                Err(other) => panic!("cut {cut}: non-wire error {other}"),
+                Ok(_) => panic!("cut {cut}: truncated frame decoded"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_payload_is_typed_error_at_every_cut() {
+        let mut rng = XorShift64::new(0xD4A5);
+        for _ in 0..20 {
+            let resp = rand_response(&mut rng);
+            let b = encode_server_msg(&ServerMsg::Reply(Ok(resp)));
+            for cut in 0..b.len() {
+                assert!(
+                    decode_server_msg(&b[..cut]).is_err(),
+                    "cut {cut} of {} decoded",
+                    b.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_bytes_never_panic() {
+        let mut rng = XorShift64::new(0xD4A6);
+        for _ in 0..20 {
+            let req = rand_request(&mut rng);
+            let mut b = encode_client_msg(&ClientMsg::Api(req));
+            for i in 0..b.len() {
+                let orig = b[i];
+                b[i] ^= 0xFF;
+                let _ = decode_client_msg(&b); // Ok or Err — never a panic
+                b[i] = orig;
+            }
+            let resp = rand_response(&mut rng);
+            let mut b = encode_server_msg(&ServerMsg::Reply(Ok(resp)));
+            for i in 0..b.len() {
+                let orig = b[i];
+                b[i] = b[i].wrapping_add(0x55);
+                let _ = decode_server_msg(&b);
+                b[i] = orig;
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_and_size() {
+        let payload = encode_client_msg(&ClientMsg::Ping);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut &bad[..]),
+            Err(D4mError::Wire(WireError::BadMagic(_)))
+        ));
+
+        let mut bad = buf.clone();
+        bad[3] = VERSION + 1;
+        assert!(matches!(
+            read_frame(&mut &bad[..]),
+            Err(D4mError::Wire(WireError::BadVersion(_)))
+        ));
+
+        // a header declaring an over-cap length is rejected before any
+        // allocation — no 4 GiB Vec for a 12-byte input
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&MAGIC);
+        huge.push(VERSION);
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut &huge[..]),
+            Err(D4mError::Wire(WireError::FrameTooLarge(_)))
+        ));
+        assert!(matches!(
+            write_frame(&mut Vec::new(), &vec![0u8; MAX_FRAME + 1]),
+            Err(D4mError::Wire(WireError::FrameTooLarge(_)))
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut b = encode_client_msg(&ClientMsg::Ping);
+        b.push(0);
+        assert!(matches!(decode_client_msg(&b), Err(WireError::TrailingBytes(1))));
+    }
+
+    #[test]
+    fn hostile_assoc_invariants_rejected() {
+        // out-of-dictionary string value index
+        let a = Assoc::from_str_triples(&[("r", "c", "v")]);
+        let mut b = Vec::new();
+        encode_assoc(&mut b, &a);
+        // the single data value is the f64 1.0 in the last 8 bytes; bump it
+        let n = b.len();
+        b[n - 8..].copy_from_slice(&2.0f64.to_bits().to_le_bytes());
+        assert!(matches!(decode_assoc(&b), Err(WireError::Malformed(_))));
+
+        // unsorted key vector
+        let mut b = Vec::new();
+        put_str_slice(&mut b, &["b".into(), "a".into()]);
+        put_str_slice(&mut b, &[]);
+        put_u8(&mut b, 0);
+        put_varint(&mut b, 2); // nr
+        put_varint(&mut b, 0); // nc
+        put_varint(&mut b, 0); // nnz
+        for _ in 0..3 {
+            put_varint(&mut b, 0); // indptr
+        }
+        assert!(matches!(decode_assoc(&b), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn varint_overflow_rejected() {
+        let mut c = Cursor::new(&[0xFF; 11]);
+        assert!(matches!(c.varint(), Err(WireError::Malformed(_))));
+    }
+}

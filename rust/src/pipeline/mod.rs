@@ -22,7 +22,7 @@ use crate::error::{D4mError, Result};
 pub type TripleMsg = (String, String, String);
 
 /// Pipeline tuning.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PipelineConfig {
     /// Parallel ingest workers.
     pub num_workers: usize,
@@ -42,7 +42,7 @@ impl Default for PipelineConfig {
 }
 
 /// Outcome of an ingest run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct IngestReport {
     pub triples: u64,
     pub elapsed: Duration,

@@ -1,0 +1,112 @@
+//! Offline stub for the `xla` PJRT bindings.
+//!
+//! The dense-tile hot path was written against the vendored `xla` crate
+//! (PJRT CPU client + AOT-compiled HLO artifacts). That crate is not
+//! available in the offline/CI build — and the crate's dependency list
+//! is intentionally empty — so this stub satisfies the same API surface
+//! and reports "unavailable" at client construction:
+//! [`PjRtClient::cpu`] always errors, [`PjrtEngine::new`] therefore
+//! fails cleanly, and every dense caller takes its documented
+//! degradation path (`with_engine(None)` → CSR kernels). Swapping the
+//! real bindings back in is deleting this file and restoring the
+//! dependency; no call site changes.
+//!
+//! Everything past `cpu()` is unreachable in stub builds but must
+//! type-check, so each method returns the same "unavailable" error
+//! rather than panicking.
+//!
+//! [`PjrtEngine::new`]: super::PjrtEngine::new
+//! [`PjRtClient::cpu`]: PjRtClient::cpu
+
+use std::fmt;
+
+/// Error type mirroring the binding crate's: anything `Display`able
+/// satisfies the `rt_err` wrapper in `runtime`.
+#[derive(Debug, Clone)]
+pub struct XlaError(&'static str);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError("PJRT runtime unavailable: built with the offline xla stub"))
+}
+
+/// Stub PJRT client; `cpu()` always fails so no engine is constructed.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, XlaError> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stub XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stub loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stub host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Self {
+        Literal
+    }
+
+    pub fn reshape(&self, _shape: &[i64]) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+}

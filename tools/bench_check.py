@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Bench-trajectory regression gate for the smoke benches.
+
+Each bench driver appends machine-readable records to a committed
+JSON-array file (BENCH_assoc.json / BENCH_scan.json / BENCH_net.json).
+CI runs the drivers with --smoke, then this script compares the records
+*appended during this run* (working tree) against the *committed*
+trajectory (``git show <ref>:<file>``): for every (op, backend, n) key
+present in both, the best fresh ``entries_per_sec`` must not fall more
+than ``--threshold`` (default 40%) below the last committed record.
+
+Keys with no committed baseline pass with a note — the trajectory
+accumulates from whatever CI commits next. A missing/empty committed
+file means "no baseline yet" and passes wholesale.
+
+Usage:
+    python3 tools/bench_check.py [--threshold 0.4] [--ref HEAD] FILE...
+
+Exit status: 0 = no regression, 1 = regression, 2 = usage/IO error.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+
+
+def committed_records(ref, path):
+    """Records of `path` at `ref`, or [] when absent there."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:{path}"],
+            capture_output=True,
+            text=True,
+            check=False,
+        )
+    except OSError as e:
+        print(f"bench_check: cannot run git ({e}); treating {path} as baseline-less")
+        return []
+    if out.returncode != 0:
+        return []
+    body = out.stdout.strip()
+    if not body:
+        return []
+    try:
+        return json.loads(body)
+    except json.JSONDecodeError as e:
+        print(f"bench_check: committed {path} is not valid JSON ({e}); ignoring baseline")
+        return []
+
+
+def key(rec):
+    return (rec["op"], rec["backend"], rec["n"])
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--threshold", type=float, default=0.4,
+                    help="maximum tolerated fractional drop (default 0.4 = 40%%)")
+    ap.add_argument("--ref", default="HEAD", help="git ref holding the baseline")
+    ap.add_argument("files", nargs="+")
+    args = ap.parse_args()
+
+    failures = 0
+    compared = 0
+    for path in args.files:
+        try:
+            with open(path, encoding="utf-8") as f:
+                current = json.load(f)
+        except FileNotFoundError:
+            print(f"bench_check: {path}: not produced by this run — skipping")
+            continue
+        except json.JSONDecodeError as e:
+            print(f"bench_check: {path}: invalid JSON ({e})")
+            return 2
+
+        baseline_recs = committed_records(args.ref, path)
+        fresh = current[len(baseline_recs):]
+        if not fresh:
+            print(f"bench_check: {path}: no new records appended this run")
+            continue
+        if not baseline_recs:
+            print(f"bench_check: {path}: no committed baseline yet — "
+                  f"{len(fresh)} fresh record(s) pass by default")
+            continue
+
+        # last committed record per key is the baseline; best fresh per
+        # key is the candidate (smoke runs can repeat a key)
+        baseline = {}
+        for rec in baseline_recs:
+            baseline[key(rec)] = rec["entries_per_sec"]
+        best = {}
+        for rec in fresh:
+            k = key(rec)
+            best[k] = max(best.get(k, 0.0), rec["entries_per_sec"])
+
+        for k, got in sorted(best.items()):
+            want = baseline.get(k)
+            tag = "/".join(str(p) for p in k)
+            if want is None:
+                print(f"  {path}: {tag}: {got:,.0f}/s (new key, no baseline)")
+                continue
+            compared += 1
+            floor = want * (1.0 - args.threshold)
+            verdict = "OK" if got >= floor else "REGRESSION"
+            print(f"  {path}: {tag}: {got:,.0f}/s vs baseline {want:,.0f}/s "
+                  f"(floor {floor:,.0f}/s) {verdict}")
+            if got < floor:
+                failures += 1
+
+        # A committed key the smoke run no longer produces loses its
+        # regression coverage silently (e.g. a renamed scenario label).
+        # Informational, not fatal: full-run records legitimately carry
+        # sizes the smoke probe never revisits.
+        for k in sorted(set(baseline) - set(best)):
+            tag = "/".join(str(p) for p in k)
+            print(f"  {path}: {tag}: baseline key not exercised by this run "
+                  f"(no regression coverage)")
+
+    print(f"bench_check: {compared} key(s) compared, {failures} regression(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
