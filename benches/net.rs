@@ -1,24 +1,32 @@
-//! Bench: the network front-end — loopback round-trip latency and
-//! concurrent remote-scan throughput, the client↔server path the D4M
+//! Bench: the network front-end — loopback round-trip latency,
+//! pipelined single-connection throughput, concurrent remote-scan
+//! throughput, and paged cursor scans: the client↔server paths the D4M
 //! papers measure ("Database Operations in D4M.jl").
 //!
 //! Scenarios (op = "net", n = stored edges):
-//!   roundtrip   — one client, single-row queries back-to-back; the
-//!                 entries_per_sec field is *requests* per second
+//!   roundtrip   — one client, single-row queries back-to-back (one in
+//!                 flight); entries_per_sec is *requests* per second
+//!   pipelined8  — same single-row queries on ONE connection with 8 in
+//!                 flight (submit/wait pipelining); entries_per_sec is
+//!                 requests per second — the multiplexing win over
+//!                 `roundtrip` is the headline of wire v2
 //!   concurrent4 — 4 clients on 4 connections, full-table queries;
 //!                 aggregate received entries per second (the remote
 //!                 twin of scan.rs's concurrent4)
+//!   paged       — one client draining the full table through a scan
+//!                 cursor (512-entry pages); received entries per second
 //!
 //! Records append to `BENCH_net.json`; `--smoke` runs the smallest size
 //! only (the CI regression probe checked by tools/bench_check.py).
 
+use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use d4m::assoc::KeySel;
 use d4m::connectors::TableQuery;
-use d4m::coordinator::{D4mServer, Request};
+use d4m::coordinator::{D4mApi, D4mServer, Request};
 use d4m::gen::{kronecker_triples, vertex_key, KroneckerParams};
 use d4m::net::{serve, NetOpts, RemoteD4m};
 use d4m::pipeline::PipelineConfig;
@@ -26,13 +34,15 @@ use d4m::util::bench::{append_records, BenchRecord};
 use d4m::util::fmt_rate;
 
 const CLIENTS: usize = 4;
+const INFLIGHT: usize = 8;
+const PAGE_ENTRIES: usize = 512;
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let scales: &[u32] = if smoke { &[8] } else { &[10, 12] };
     let (roundtrips, passes) = if smoke { (500, 2) } else { (2000, 4) };
     let mut records: Vec<BenchRecord> = Vec::new();
-    println!("# net front-end: loopback round-trip + concurrent remote scans");
+    println!("# net front-end: round-trip / pipelined / concurrent / paged remote scans");
     println!("{:<10} {:<14} {:>10} {:>12} {:>14}", "n", "mode", "entries", "seconds", "rate");
 
     for &scale in scales {
@@ -49,7 +59,7 @@ fn main() {
         let mut handle = serve(server, "127.0.0.1:0", NetOpts::default()).expect("bind loopback");
         let addr = handle.addr().to_string();
 
-        // -- single-client round-trip latency (tiny frames)
+        // -- single-client round-trip latency (tiny frames, 1 in flight)
         let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).expect("connect");
         let probe = vertex_key(1);
         let q = TableQuery::all().rows(KeySel::keys(&[probe.as_str()]));
@@ -60,8 +70,26 @@ fn main() {
         let dt = t0.elapsed().as_secs_f64();
         report(&mut records, n, "roundtrip", dt, roundtrips);
 
-        // -- 4 concurrent clients, full-table scans
+        // -- the same requests, pipelined 8-deep on the same connection
         let t1 = Instant::now();
+        let mut window: VecDeque<u64> = VecDeque::with_capacity(INFLIGHT);
+        let mut issued = 0usize;
+        while issued < roundtrips || !window.is_empty() {
+            while window.len() < INFLIGHT && issued < roundtrips {
+                let id = c
+                    .submit(Request::Query { table: "G".into(), query: q.clone() })
+                    .expect("submit");
+                window.push_back(id);
+                issued += 1;
+            }
+            let id = window.pop_front().expect("window non-empty");
+            let _ = c.wait(id).expect("wait").into_assoc().expect("assoc");
+        }
+        let dt = t1.elapsed().as_secs_f64();
+        report(&mut records, n, "pipelined8", dt, roundtrips);
+
+        // -- 4 concurrent clients, full-table scans
+        let t2 = Instant::now();
         let mut total = 0usize;
         std::thread::scope(|s| {
             let handles: Vec<_> = (0..CLIENTS)
@@ -82,8 +110,19 @@ fn main() {
                 total += h.join().expect("client thread");
             }
         });
-        let dt = t1.elapsed().as_secs_f64();
+        let dt = t2.elapsed().as_secs_f64();
         report(&mut records, n, "concurrent4", dt, total);
+
+        // -- paged cursor scan of the whole table, one client
+        let t3 = Instant::now();
+        let mut paged_total = 0usize;
+        for _ in 0..passes {
+            for page in c.scan_pages("G", TableQuery::all(), PAGE_ENTRIES) {
+                paged_total += page.expect("cursor page").len();
+            }
+        }
+        let dt = t3.elapsed().as_secs_f64();
+        report(&mut records, n, "paged", dt, paged_total);
 
         handle.shutdown();
     }

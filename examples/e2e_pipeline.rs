@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use d4m::assoc::KeySel;
 use d4m::connectors::TableQuery;
-use d4m::coordinator::{D4mServer, Request, Response};
+use d4m::coordinator::{D4mApi, D4mServer};
 use d4m::gen::{kronecker_triples, vertex_key, KroneckerParams};
 use d4m::pipeline::PipelineConfig;
 use d4m::util::fmt_rate;
@@ -42,29 +42,23 @@ fn main() {
         if server.has_engine() { "attached (artifacts loaded)" } else { "absent (run `make artifacts`)" }
     );
 
-    // ---- 1+2: generate + pipeline ingest
+    // ---- 1+2: generate + pipeline ingest (the example programs against
+    // the D4mApi trait, so everything below runs unchanged against a
+    // RemoteD4m — swap the constructor and the calls stay identical)
     let triples = kronecker_triples(&params);
-    let rep = server
-        .handle(Request::Ingest {
-            table: "G".into(),
+    let ingest = server
+        .ingest(
+            "G",
             triples,
-            pipeline: PipelineConfig { num_workers: 4, batch_size: 4096, ..Default::default() },
-        })
+            PipelineConfig { num_workers: 4, batch_size: 4096, ..Default::default() },
+        )
         .expect("ingest");
-    let Response::Ingested(ingest) = rep else { unreachable!() };
     println!("[ingest]    {ingest}");
 
     // ---- 2b: the unified T(r, c) surface — a row-range selector pushed
     // down into the engine through the coordinator's DbTable registry
-    let sub = server
-        .handle(Request::Query {
-            table: "G".into(),
-            query: TableQuery::all()
-                .rows(KeySel::Range(vertex_key(0), vertex_key(63))),
-        })
-        .expect("range query")
-        .into_assoc()
-        .expect("assoc response");
+    let range_q = TableQuery::all().rows(KeySel::Range(vertex_key(0), vertex_key(63)));
+    let sub = server.query("G", range_q.clone()).expect("range query");
     println!(
         "[query]     T('{}:{}', :) -> {} rows, {} nnz",
         vertex_key(0),
@@ -73,14 +67,21 @@ fn main() {
         sub.nnz()
     );
 
+    // ---- 2c: the same selection as a streaming cursor scan — bounded
+    // pages over a pinned snapshot, assembled bit-identically
+    let mut pages = 0usize;
+    let mut page_triples: Vec<(String, String, String)> = Vec::new();
+    for page in server.scan_pages("G", range_q, 256) {
+        page_triples.extend(page.expect("cursor page"));
+        pages += 1;
+    }
+    let paged = d4m::assoc::io::parse_triples(page_triples).expect("assemble pages");
+    assert_eq!(paged, sub, "paged scan diverged from one-shot query");
+    println!("[cursor]    same selection in {pages} pages of <= 256 entries ✓");
+
     // ---- 3: TableMult server vs client
     let t0 = Instant::now();
-    let Response::MultStats(stats) = server
-        .handle(Request::TableMult { a: "G".into(), b: "G".into(), out: "C".into() })
-        .expect("server tablemult")
-    else {
-        unreachable!()
-    };
+    let stats = server.tablemult("G", "G", "C").expect("server tablemult");
     let dt_server = t0.elapsed().as_secs_f64();
     let server_c = d4m::graphulo::read_product(&server.store().table("C").unwrap()).unwrap();
     println!(
@@ -92,11 +93,7 @@ fn main() {
     );
 
     let t1 = Instant::now();
-    let client_c = server
-        .handle(Request::TableMultClient { a: "G".into(), b: "G".into(), memory_limit: usize::MAX })
-        .expect("client tablemult")
-        .into_assoc()
-        .expect("assoc response");
+    let client_c = server.tablemult_client("G", "G", usize::MAX).expect("client tablemult");
     let dt_client = t1.elapsed().as_secs_f64();
     println!(
         "[d4m]       TableMult: {} nnz in {:.2}s = {}",
@@ -148,20 +145,11 @@ fn main() {
     // ---- 5: BFS + Jaccard
     let seed = vertex_key(1);
     let t3 = Instant::now();
-    let Response::Distances(d) = server
-        .handle(Request::Bfs { table: "G".into(), seeds: vec![seed.clone()], hops: 3 })
-        .expect("bfs")
-    else {
-        unreachable!()
-    };
+    let d = server.bfs("G", &[seed.as_str()], 3).expect("bfs");
     println!("[bfs]       {} vertices within 3 hops of {seed} ({:.2}s)", d.len(), t3.elapsed().as_secs_f64());
 
     let t4 = Instant::now();
-    let j = server
-        .handle(Request::Jaccard { table: "G".into(), out: "J".into() })
-        .expect("jaccard")
-        .into_assoc()
-        .expect("assoc response");
+    let j = server.jaccard("G", "J").expect("jaccard");
     println!("[jaccard]   {} coefficients ({:.2}s)", j.nnz(), t4.elapsed().as_secs_f64());
 
     // ---- 6: headline metrics

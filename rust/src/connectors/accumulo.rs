@@ -16,10 +16,10 @@ use std::sync::Arc;
 use crate::assoc::{io::fmt_num, Assoc, KeySel};
 use crate::error::{D4mError, Result};
 use crate::kvstore::{
-    BatchWriter, Entry, IterConfig, Key, KvStore, RowRange, Table, WriterConfig,
+    BatchWriter, Entry, EntryStream, IterConfig, Key, KvStore, RowRange, Table, WriterConfig,
 };
 
-use super::api::{self, AssocPages, BindOpts, DbServer, DbTable, TableQuery};
+use super::api::{self, AssocPages, BindOpts, DbServer, DbTable, TableQuery, TripleStream};
 use super::DbKind;
 
 /// Options for binding a D4M table.
@@ -418,6 +418,34 @@ impl DbTable for D4mTable {
             Ok(api::raw_page(triples, &row_sel, &col_sel))
         });
         Ok(AssocPages::over_rows(rows, q.page_rows, q.limit, fetch))
+    }
+
+    fn scan_triples(&self, q: &TableQuery) -> Result<TripleStream> {
+        // One point-in-time snapshot covering the whole selector span,
+        // pinned for the stream's entire life: a cursor holding this
+        // stream observes no concurrent writes, and the frozen segments
+        // are released the moment the stream (cursor) is dropped. The
+        // ranges come out of `keysel_row_ranges` sorted, so chaining
+        // their per-range streams keeps global row-major order.
+        let cfg = IterConfig::default();
+        let ranges = keysel_row_ranges(&q.rows).unwrap_or_else(|| vec![RowRange::all()]);
+        let span = RowRange {
+            start: ranges.first().and_then(|r| r.start.clone()),
+            end: ranges.last().and_then(|r| r.end.clone()),
+        };
+        let snap = self.main.snapshot_range(&span);
+        let streams: Vec<EntryStream> = ranges.iter().map(|r| snap.stream(r, &cfg)).collect();
+        let rows = q.rows.clone();
+        let cols = q.cols.clone();
+        let it = streams
+            .into_iter()
+            .flatten()
+            .filter(move |e| rows.matches(&e.key.row) && cols.matches(&e.key.cq))
+            .map(|e| Ok((e.key.row, e.key.cq, e.value)));
+        Ok(match q.limit {
+            Some(n) => Box::new(it.take(n)),
+            None => Box::new(it),
+        })
     }
 }
 

@@ -174,7 +174,38 @@ pub trait DbTable: Send + Sync {
     /// live table (Accumulo semantics — no snapshot isolation in the
     /// substrate), so a concurrent writer may be visible mid-scan.
     fn scan(&self, q: &TableQuery) -> Result<AssocPages>;
+
+    /// Entry-at-a-time read: a lazily-pulled stream of the **raw stored**
+    /// `(row, col, value)` triples the selectors match, in row-major
+    /// (row, then column) key order, honouring `q.limit`. This is the
+    /// streaming twin of [`DbTable::scan`] and the feed for the
+    /// coordinator's scan cursors (`coordinator::cursor`): the triple set
+    /// it yields is exactly the set [`DbTable::query`] would return for
+    /// the same `q`, before the one-shot string-vs-numeric inference
+    /// (`parse_triples` over the drained stream reproduces `query`
+    /// bit-for-bit when the two run against the same table state).
+    ///
+    /// The default drains [`DbTable::scan`] pages lazily. The key-value
+    /// engine overrides it with a genuine snapshot-pinned
+    /// [`EntryStream`](crate::kvstore::EntryStream), so an open stream
+    /// observes a point-in-time view and never blocks writers.
+    fn scan_triples(&self, q: &TableQuery) -> Result<TripleStream> {
+        let pages = self.scan(q)?;
+        Ok(Box::new(pages.flat_map(
+            |page| -> Vec<Result<(String, String, String)>> {
+                match page {
+                    Ok(a) => a.str_triples().into_iter().map(Ok).collect(),
+                    Err(e) => vec![Err(e)],
+                }
+            },
+        )))
+    }
 }
+
+/// Lazily-pulled stream of raw stored `(row, col, value)` triples in
+/// row-major key order — see [`DbTable::scan_triples`]. An `Err` item
+/// poisons the stream (no items follow it).
+pub type TripleStream = Box<dyn Iterator<Item = Result<(String, String, String)>> + Send>;
 
 /// Page-at-a-time iterator over a [`DbTable::scan`] result.
 ///

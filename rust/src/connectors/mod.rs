@@ -26,7 +26,7 @@ pub mod scidb;
 pub mod sql;
 
 pub use accumulo::{AccumuloConnector, D4mTable, D4mTableConfig};
-pub use api::{AssocPages, BindOpts, DbServer, DbTable, TableQuery};
+pub use api::{AssocPages, BindOpts, DbServer, DbTable, TableQuery, TripleStream};
 pub use scidb::{SciDbConnector, SciDbTable};
 pub use sql::{SqlConnector, SqlTable};
 

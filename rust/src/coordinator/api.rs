@@ -1,0 +1,255 @@
+//! The session-oriented coordinator API — one object-safe trait,
+//! [`D4mApi`], implemented by both the in-process
+//! [`D4mServer`](super::D4mServer) and the remote
+//! [`RemoteD4m`](crate::net::RemoteD4m), so every call site (CLI,
+//! examples, tests, benches) programs against the trait and goes remote
+//! by swapping a constructor:
+//!
+//! ```text
+//! let api: &dyn D4mApi = &D4mServer::new();           // in-process
+//! let api: &dyn D4mApi = &RemoteD4m::connect(addr)?;  // remote
+//! api.query("G", TableQuery::all())?;                  // identical code
+//! ```
+//!
+//! The trait has two required surfaces: [`D4mApi::handle`] (the one-shot
+//! request/response dispatch every [`Request`] variant routes through)
+//! and the three **cursor ops** ([`D4mApi::open_cursor`] /
+//! [`D4mApi::cursor_next`] / [`D4mApi::cursor_close`]) that stream scan
+//! results in bounded pages instead of materialising a whole [`Assoc`]
+//! in one response. Everything else — one typed wrapper per request
+//! variant, plus the [`D4mApi::scan_pages`] paged-scan iterator — is a
+//! default method over those two.
+//!
+//! Typed wrappers fail with [`D4mError::UnexpectedResponse`] when the
+//! response variant does not match the request — distinguishable from a
+//! server-side [`D4mError::InvalidArg`], so remote shape-checks can tell
+//! a protocol bug from a bad argument.
+
+use std::collections::BTreeMap;
+
+use crate::assoc::Assoc;
+use crate::connectors::TableQuery;
+use crate::error::{D4mError, Result};
+use crate::graphulo::{PageRankOpts, PageRankResult, TableMultStats};
+use crate::pipeline::{IngestReport, PipelineConfig, TripleMsg};
+
+use super::cursor::CursorPage;
+use super::{Request, Response};
+
+/// The coordinator surface, object-safe. See the module docs.
+pub trait D4mApi: Send + Sync {
+    /// Serve one coordinator request (the single dispatch point every
+    /// typed wrapper routes through).
+    fn handle(&self, req: Request) -> Result<Response>;
+
+    // ------------------------------------------------------------------
+    // cursor ops (streaming scans)
+
+    /// Open a scan cursor over `table` for `query`: the server pins a
+    /// snapshot stream and returns a cursor id whose pages carry at most
+    /// `page_entries` raw stored triples each. Drain with
+    /// [`D4mApi::cursor_next`] (or the [`D4mApi::scan_pages`] iterator);
+    /// an abandoned cursor is evicted after the server's idle TTL.
+    fn open_cursor(&self, table: &str, query: &TableQuery, page_entries: usize) -> Result<u64>;
+
+    /// Pull the next page of an open cursor. When [`CursorPage::done`]
+    /// is set the stream is exhausted and the cursor already freed.
+    fn cursor_next(&self, cursor: u64) -> Result<CursorPage>;
+
+    /// Close a cursor early, releasing its snapshot. Idempotent.
+    fn cursor_close(&self, cursor: u64) -> Result<()>;
+
+    // ------------------------------------------------------------------
+    // typed wrappers — one per request variant
+
+    /// Bind (create if needed) a D4M table.
+    fn create_table(&self, name: &str, splits: Vec<String>) -> Result<()> {
+        match self.handle(Request::CreateTable { name: name.into(), splits })? {
+            Response::Ok => Ok(()),
+            other => Err(unexpected("Ok", &other)),
+        }
+    }
+
+    /// Ingest triples through the parallel pipeline.
+    fn ingest(
+        &self,
+        table: &str,
+        triples: Vec<TripleMsg>,
+        pipeline: PipelineConfig,
+    ) -> Result<IngestReport> {
+        match self.handle(Request::Ingest { table: table.into(), triples, pipeline })? {
+            Response::Ingested(r) => Ok(r),
+            other => Err(unexpected("Ingested", &other)),
+        }
+    }
+
+    /// The unified `T(r, c)` query, materialised in one response.
+    fn query(&self, table: &str, query: TableQuery) -> Result<Assoc> {
+        self.handle(Request::Query { table: table.into(), query })?.into_assoc()
+    }
+
+    /// Server-side Graphulo TableMult: `out += A^T B`.
+    fn tablemult(&self, a: &str, b: &str, out: &str) -> Result<TableMultStats> {
+        match self.handle(Request::TableMult { a: a.into(), b: b.into(), out: out.into() })? {
+            Response::MultStats(s) => Ok(s),
+            other => Err(unexpected("MultStats", &other)),
+        }
+    }
+
+    /// Client-side D4M TableMult with a RAM budget.
+    fn tablemult_client(&self, a: &str, b: &str, memory_limit: usize) -> Result<Assoc> {
+        self.handle(Request::TableMultClient { a: a.into(), b: b.into(), memory_limit })?
+            .into_assoc()
+    }
+
+    /// Client-side TableMult routed through the PJRT dense path.
+    fn tablemult_dense(&self, a: &str, b: &str, tile: usize) -> Result<Assoc> {
+        self.handle(Request::TableMultDense { a: a.into(), b: b.into(), tile })?.into_assoc()
+    }
+
+    /// Server-side BFS.
+    fn bfs(&self, table: &str, seeds: &[&str], hops: usize) -> Result<BTreeMap<String, usize>> {
+        let seeds = seeds.iter().map(|s| s.to_string()).collect();
+        match self.handle(Request::Bfs { table: table.into(), seeds, hops })? {
+            Response::Distances(d) => Ok(d),
+            other => Err(unexpected("Distances", &other)),
+        }
+    }
+
+    /// Server-side Jaccard into table `out`.
+    fn jaccard(&self, table: &str, out: &str) -> Result<Assoc> {
+        self.handle(Request::Jaccard { table: table.into(), out: out.into() })?.into_assoc()
+    }
+
+    /// Server-side k-truss.
+    fn ktruss(&self, table: &str, k: usize) -> Result<Assoc> {
+        self.handle(Request::KTruss { table: table.into(), k })?.into_assoc()
+    }
+
+    /// Server-side PageRank.
+    fn pagerank(&self, table: &str, opts: PageRankOpts) -> Result<PageRankResult> {
+        match self.handle(Request::PageRank { table: table.into(), opts })? {
+            Response::Ranks(r) => Ok(r),
+            other => Err(unexpected("Ranks", &other)),
+        }
+    }
+
+    /// List tables.
+    fn list_tables(&self) -> Result<Vec<String>> {
+        match self.handle(Request::ListTables)? {
+            Response::Tables(t) => Ok(t),
+            other => Err(unexpected("Tables", &other)),
+        }
+    }
+
+    /// Lazily-paged scan: a [`ScanPages`] iterator that opens a cursor on
+    /// first pull and fetches one bounded page per step. (On `&dyn
+    /// D4mApi`, construct with [`ScanPages::new`].)
+    fn scan_pages(&self, table: &str, query: TableQuery, page_entries: usize) -> ScanPages<'_>
+    where
+        Self: Sized,
+    {
+        ScanPages::new(self, table, query, page_entries)
+    }
+}
+
+fn unexpected(expected: &str, got: &Response) -> D4mError {
+    D4mError::UnexpectedResponse {
+        expected: expected.into(),
+        got: got.variant_name().into(),
+    }
+}
+
+/// Iterator over cursor pages — the client end of a streaming scan.
+///
+/// Each `next()` is one `CursorNext` round trip yielding at most
+/// `page_entries` raw stored triples, so peak per-pull payload stays
+/// bounded regardless of table size. [`ScanPages::into_assoc`] drains
+/// the pages and runs the string-vs-numeric inference once over the
+/// assembled set, which makes the result **bit-identical** to the
+/// one-shot [`D4mApi::query`] for the same query against the same table
+/// state. Dropping an unfinished iterator closes its cursor
+/// (best-effort), releasing the server-side snapshot promptly.
+pub struct ScanPages<'a> {
+    api: &'a dyn D4mApi,
+    table: String,
+    query: TableQuery,
+    page_entries: usize,
+    cursor: Option<u64>,
+    finished: bool,
+}
+
+impl<'a> ScanPages<'a> {
+    /// Build a paged scan over `api` (cursor opened lazily on first pull).
+    pub fn new(api: &'a dyn D4mApi, table: &str, query: TableQuery, page_entries: usize) -> Self {
+        ScanPages {
+            api,
+            table: table.into(),
+            query,
+            page_entries: page_entries.max(1),
+            cursor: None,
+            finished: false,
+        }
+    }
+
+    /// Drain every page into one associative array (see the type docs
+    /// for the bit-identity contract with [`D4mApi::query`]).
+    pub fn into_assoc(mut self) -> Result<Assoc> {
+        let mut triples: Vec<TripleMsg> = Vec::new();
+        for page in &mut self {
+            triples.extend(page?);
+        }
+        crate::assoc::io::parse_triples(triples)
+    }
+}
+
+impl Iterator for ScanPages<'_> {
+    type Item = Result<Vec<TripleMsg>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.finished {
+            return None;
+        }
+        let id = match self.cursor {
+            Some(id) => id,
+            None => match self.api.open_cursor(&self.table, &self.query, self.page_entries) {
+                Ok(id) => {
+                    self.cursor = Some(id);
+                    id
+                }
+                Err(e) => {
+                    self.finished = true;
+                    return Some(Err(e));
+                }
+            },
+        };
+        match self.api.cursor_next(id) {
+            Ok(page) => {
+                if page.done {
+                    // the server freed the cursor with the final page
+                    self.finished = true;
+                    self.cursor = None;
+                    if page.triples.is_empty() {
+                        return None;
+                    }
+                }
+                Some(Ok(page.triples))
+            }
+            Err(e) => {
+                self.finished = true;
+                self.cursor = None;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+impl Drop for ScanPages<'_> {
+    fn drop(&mut self) {
+        if let Some(id) = self.cursor.take() {
+            // abandoned mid-scan: release the server-side snapshot now
+            // rather than waiting for the idle TTL
+            let _ = self.api.cursor_close(id);
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Server-side scan cursors: bounded, owned, evictable handles over live
+//! snapshot [`TripleStream`]s.
+//!
+//! A cursor is opened against a bound table's
+//! [`DbTable::scan_triples`](crate::connectors::DbTable::scan_triples)
+//! stream and drained page by page (at most `page_entries` triples per
+//! [`CursorPage`]). The table enforces three protections so an abandoned
+//! cursor can never pin a snapshot forever:
+//!
+//! * **ownership** — every cursor belongs to the owner id that opened it
+//!   (the network server assigns one per connection; in-process callers
+//!   use [`LOCAL_OWNER`]). Ops from any other owner see `NotFound`, and
+//!   `reap_owner` (surfaced as `D4mServer::reap_cursors`) drops every
+//!   cursor of a disconnected owner at once.
+//! * **cap** — at most `cap` cursors may be open server-wide; the N+1th
+//!   open is refused with a typed error instead of accumulating pinned
+//!   snapshots.
+//! * **idle TTL** — a cursor untouched for `idle_ttl` is evicted on the
+//!   next cursor op (open/next/close all sweep), releasing its snapshot.
+//!
+//! §Cursor state machine (DESIGN.md §Wire v2): `open → (next)* → done`,
+//! where `done` is reached by draining the stream (the server frees the
+//! cursor itself and sets [`CursorPage::done`]), an explicit close, a
+//! stream error (the cursor is poisoned and freed), TTL eviction, or
+//! owner reap. `next` is one-at-a-time per cursor: while a page is being
+//! pulled the cursor is checked out of the table, so a concurrent `next`
+//! on the same id reports `NotFound` rather than interleaving pages.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::connectors::TripleStream;
+use crate::error::{D4mError, Result};
+use crate::pipeline::TripleMsg;
+
+/// Default cap on simultaneously open cursors.
+pub const DEFAULT_CURSOR_CAP: usize = 64;
+/// Default idle TTL before an untouched cursor is evicted.
+pub const DEFAULT_CURSOR_TTL: Duration = Duration::from_secs(300);
+/// Byte budget per page: a pull stops early once the accumulated triple
+/// bytes reach this, whatever `page_entries` says — so a hostile or
+/// careless `page_entries` cannot make one `next` materialise the whole
+/// table (and a page always fits the 256 MiB wire frame cap with a wide
+/// margin).
+pub const PAGE_BYTE_BUDGET: usize = 64 << 20;
+/// Owner id used by in-process callers (the network server hands every
+/// connection a distinct nonzero owner).
+pub const LOCAL_OWNER: u64 = 0;
+
+/// One page of cursor results.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CursorPage {
+    /// Raw stored `(row, col, value)` triples, row-major order — at most
+    /// the cursor's `page_entries` of them (fewer when
+    /// [`PAGE_BYTE_BUDGET`] cuts a page of large values short).
+    pub triples: Vec<TripleMsg>,
+    /// True when the stream is exhausted. The server has already freed
+    /// the cursor; a trailing `CursorClose` is unnecessary but harmless.
+    pub done: bool,
+}
+
+struct CursorState {
+    owner: u64,
+    page_entries: usize,
+    stream: TripleStream,
+    last_used: Instant,
+}
+
+struct Inner {
+    next_id: u64,
+    cap: usize,
+    idle_ttl: Duration,
+    cursors: HashMap<u64, CursorState>,
+    /// Cursors checked out by an in-flight `next` (id → owner). A close
+    /// or reap that lands mid-pull cannot find the cursor in `cursors`;
+    /// recording the checkout here lets it leave a mark instead of
+    /// silently missing.
+    busy: HashMap<u64, u64>,
+    /// Checked-out cursors whose close/reap arrived mid-pull: dropped at
+    /// reinsert time instead of resurrected (a successful `close` must
+    /// release the snapshot even when it races a concurrent `next`).
+    closing: HashSet<u64>,
+}
+
+impl Inner {
+    /// Drop every cursor idle past the TTL (run on every cursor op — the
+    /// table needs no background thread to stay bounded).
+    fn evict_idle(&mut self, now: Instant) {
+        let ttl = self.idle_ttl;
+        self.cursors.retain(|_, c| now.duration_since(c.last_used) < ttl);
+    }
+}
+
+/// The registry of live cursors (one per [`D4mServer`](super::D4mServer)).
+pub(crate) struct CursorTable {
+    inner: Mutex<Inner>,
+}
+
+impl CursorTable {
+    pub(crate) fn new() -> Self {
+        CursorTable {
+            inner: Mutex::new(Inner {
+                next_id: 1,
+                cap: DEFAULT_CURSOR_CAP,
+                idle_ttl: DEFAULT_CURSOR_TTL,
+                cursors: HashMap::new(),
+                busy: HashMap::new(),
+                closing: HashSet::new(),
+            }),
+        }
+    }
+
+    pub(crate) fn configure(&self, cap: usize, idle_ttl: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.cap = cap.max(1);
+        g.idle_ttl = idle_ttl;
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.cursors.len() + g.busy.len()
+    }
+
+    pub(crate) fn open(
+        &self,
+        owner: u64,
+        page_entries: usize,
+        stream: TripleStream,
+    ) -> Result<u64> {
+        let mut g = self.inner.lock().unwrap();
+        g.evict_idle(Instant::now());
+        let open = g.cursors.len() + g.busy.len();
+        if open >= g.cap {
+            return Err(D4mError::InvalidArg(format!(
+                "cursor cap reached: {open} cursors open (cap {}) — drain or close \
+                 existing cursors before opening more",
+                g.cap
+            )));
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        g.cursors.insert(
+            id,
+            CursorState {
+                owner,
+                page_entries: page_entries.max(1),
+                stream,
+                last_used: Instant::now(),
+            },
+        );
+        Ok(id)
+    }
+
+    /// Pull the next page. The cursor is checked out of the table while
+    /// the stream is pulled, so the table lock is never held across the
+    /// (possibly slow) pull and other connections' cursor ops proceed; a
+    /// close/reap landing mid-pull marks the checkout and the cursor is
+    /// dropped instead of reinserted. The page stops at `page_entries`
+    /// triples or [`PAGE_BYTE_BUDGET`] bytes, whichever comes first.
+    pub(crate) fn next(&self, owner: u64, id: u64) -> Result<CursorPage> {
+        let mut st = {
+            let mut g = self.inner.lock().unwrap();
+            g.evict_idle(Instant::now());
+            match g.cursors.remove(&id) {
+                Some(c) if c.owner == owner => {
+                    g.busy.insert(id, owner);
+                    c
+                }
+                Some(c) => {
+                    // someone else's cursor: put it back, reveal nothing
+                    g.cursors.insert(id, c);
+                    return Err(not_found(id));
+                }
+                None => return Err(not_found(id)),
+            }
+        };
+        let mut triples = Vec::with_capacity(st.page_entries.min(4096));
+        let mut bytes = 0usize;
+        let mut done = false;
+        let mut err = None;
+        for _ in 0..st.page_entries {
+            match st.stream.next() {
+                Some(Ok(t)) => {
+                    bytes += t.0.len() + t.1.len() + t.2.len();
+                    triples.push(t);
+                    if bytes >= PAGE_BYTE_BUDGET {
+                        break;
+                    }
+                }
+                // a stream error poisons the cursor: report it once and
+                // leave the cursor freed
+                Some(Err(e)) => {
+                    err = Some(e);
+                    break;
+                }
+                None => {
+                    done = true;
+                    break;
+                }
+            }
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.busy.remove(&id);
+        let closed_mid_pull = g.closing.remove(&id);
+        match err {
+            Some(e) => Err(e),
+            None => {
+                if !done && !closed_mid_pull {
+                    st.last_used = Instant::now();
+                    g.cursors.insert(id, st);
+                }
+                Ok(CursorPage { triples, done })
+            }
+        }
+    }
+
+    /// Close a cursor, releasing its snapshot. Idempotent: closing an
+    /// unknown/already-freed id is `Ok` (a drained cursor frees itself,
+    /// and a pipelined close may race the final page). A close racing a
+    /// concurrent `next` on the same cursor marks the checkout so the
+    /// cursor is dropped when the pull finishes — never resurrected.
+    pub(crate) fn close(&self, owner: u64, id: u64) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        g.evict_idle(Instant::now());
+        if g.cursors.get(&id).map(|c| c.owner) == Some(owner) {
+            g.cursors.remove(&id);
+        } else if g.busy.get(&id) == Some(&owner) {
+            g.closing.insert(id);
+        }
+        Ok(())
+    }
+
+    /// Drop every cursor belonging to `owner` (connection teardown),
+    /// including checked-out ones (marked, dropped at reinsert time).
+    /// Returns how many were reaped.
+    pub(crate) fn reap_owner(&self, owner: u64) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        let before = inner.cursors.len();
+        inner.cursors.retain(|_, c| c.owner != owner);
+        let mut reaped = before - inner.cursors.len();
+        for (&id, &o) in inner.busy.iter() {
+            if o == owner && inner.closing.insert(id) {
+                reaped += 1;
+            }
+        }
+        reaped
+    }
+}
+
+fn not_found(id: u64) -> D4mError {
+    D4mError::NotFound(format!("cursor {id} (closed, expired, or not yours)"))
+}

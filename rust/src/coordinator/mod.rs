@@ -1,8 +1,10 @@
 //! The D4M coordinator — the L3 server tying everything together: a
 //! table registry over the engines, a typed request/response API, an
-//! ingest batcher, and per-op metrics. `main.rs` exposes it as a CLI;
-//! [`D4mServer::handle`] is the single entry point a network front-end
-//! would call.
+//! ingest batcher, scan cursors, and per-op metrics. `main.rs` exposes
+//! it as a CLI; the object-safe [`D4mApi`] trait ([`api`]) is the
+//! surface callers program against — [`D4mServer`] implements it
+//! in-process and [`crate::net::RemoteD4m`] implements it over TCP, so
+//! a call site goes remote by swapping a constructor.
 //!
 //! The registry holds [`DbTable`] **trait objects**, so the query path is
 //! engine-generic: `Request::Query` carries a [`TableQuery`] whose
@@ -12,11 +14,17 @@
 //! native Accumulo handles — they are server-side iterators, not
 //! put/get/query dispatch.
 
+pub mod api;
 pub mod batcher;
+pub mod cursor;
+
+pub use api::{D4mApi, ScanPages};
+pub use cursor::{CursorPage, LOCAL_OWNER};
 
 use std::collections::BTreeMap;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::assoc::Assoc;
 use crate::connectors::{AccumuloConnector, D4mTable, D4mTableConfig, DbTable, TableQuery};
@@ -73,14 +81,16 @@ pub enum Response {
 }
 
 impl Response {
-    /// Unwrap an assoc response; a typed error on variant mismatch.
+    /// Unwrap an assoc response; a typed
+    /// [`D4mError::UnexpectedResponse`] on variant mismatch — a protocol
+    /// bug, distinguishable from a server-reported bad argument.
     pub fn into_assoc(self) -> Result<Assoc> {
         match self {
             Response::Assoc(a) => Ok(a),
-            other => Err(D4mError::InvalidArg(format!(
-                "expected Assoc response, got {}",
-                other.variant_name()
-            ))),
+            other => Err(D4mError::UnexpectedResponse {
+                expected: "Assoc".into(),
+                got: other.variant_name().into(),
+            }),
         }
     }
 
@@ -109,6 +119,8 @@ pub struct D4mServer {
     /// Per-op latency histograms, keyed by op name.
     op_stats: Mutex<HashMap<&'static str, Arc<Histogram>>>,
     requests: RateMeter,
+    /// Live scan cursors (bounded, owned, TTL-evicted — see [`cursor`]).
+    cursors: cursor::CursorTable,
 }
 
 impl D4mServer {
@@ -125,6 +137,7 @@ impl D4mServer {
             engine,
             op_stats: Mutex::new(HashMap::new()),
             requests: RateMeter::new(),
+            cursors: cursor::CursorTable::new(),
         }
     }
 
@@ -271,6 +284,56 @@ impl D4mServer {
         }
     }
 
+    // ------------------------------------------------------------------
+    // scan cursors (the owned variants; the `D4mApi` impl below uses
+    // `LOCAL_OWNER`, the network server one owner id per connection)
+
+    /// Configure the cursor table: cap on simultaneously open cursors and
+    /// the idle TTL after which an untouched cursor is evicted.
+    pub fn set_cursor_limits(&self, cap: usize, idle_ttl: Duration) {
+        self.cursors.configure(cap, idle_ttl);
+    }
+
+    /// How many cursors are currently open (all owners).
+    pub fn open_cursor_count(&self) -> usize {
+        self.cursors.len()
+    }
+
+    /// Open a cursor owned by `owner` (see [`cursor`] for the ownership,
+    /// cap and TTL rules). Pins a snapshot stream over the bound table.
+    pub fn open_cursor_owned(
+        &self,
+        owner: u64,
+        table: &str,
+        query: &TableQuery,
+        page_entries: usize,
+    ) -> Result<u64> {
+        self.requests.add(1);
+        let t = self.bound(table)?;
+        self.hist("cursor_open").time(|| {
+            let stream = t.scan_triples(query)?;
+            self.cursors.open(owner, page_entries, stream)
+        })
+    }
+
+    /// Pull the next page of a cursor owned by `owner`.
+    pub fn cursor_next_owned(&self, owner: u64, id: u64) -> Result<cursor::CursorPage> {
+        self.requests.add(1);
+        self.hist("cursor_next").time(|| self.cursors.next(owner, id))
+    }
+
+    /// Close a cursor owned by `owner` (idempotent).
+    pub fn cursor_close_owned(&self, owner: u64, id: u64) -> Result<()> {
+        self.requests.add(1);
+        self.cursors.close(owner, id)
+    }
+
+    /// Drop every cursor belonging to `owner` (connection teardown);
+    /// returns how many were reaped.
+    pub fn reap_cursors(&self, owner: u64) -> usize {
+        self.cursors.reap_owner(owner)
+    }
+
     /// Metrics snapshots for every op seen so far. Rates come from each
     /// histogram's own first-to-last-sample span ([`Histogram::rate_per_sec`]),
     /// not the server-lifetime clock — an op exercised once at startup
@@ -301,6 +364,24 @@ impl D4mServer {
 impl Default for D4mServer {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+impl D4mApi for D4mServer {
+    fn handle(&self, req: Request) -> Result<Response> {
+        D4mServer::handle(self, req)
+    }
+
+    fn open_cursor(&self, table: &str, query: &TableQuery, page_entries: usize) -> Result<u64> {
+        self.open_cursor_owned(cursor::LOCAL_OWNER, table, query, page_entries)
+    }
+
+    fn cursor_next(&self, id: u64) -> Result<cursor::CursorPage> {
+        self.cursor_next_owned(cursor::LOCAL_OWNER, id)
+    }
+
+    fn cursor_close(&self, id: u64) -> Result<()> {
+        self.cursor_close_owned(cursor::LOCAL_OWNER, id)
     }
 }
 
@@ -366,10 +447,16 @@ mod tests {
     }
 
     #[test]
-    fn into_assoc_mismatch_is_error_not_panic() {
+    fn into_assoc_mismatch_is_typed_unexpected_response() {
         let s = server_with_graph();
         let r = s.handle(Request::ListTables).unwrap();
-        assert!(matches!(r.into_assoc(), Err(D4mError::InvalidArg(_))));
+        match r.into_assoc() {
+            Err(D4mError::UnexpectedResponse { expected, got }) => {
+                assert_eq!(expected, "Assoc");
+                assert_eq!(got, "Tables");
+            }
+            other => panic!("expected UnexpectedResponse, got {other:?}"),
+        }
     }
 
     #[test]
@@ -454,5 +541,143 @@ mod tests {
         let snaps = s.snapshots();
         assert!(snaps.iter().any(|x| x.name == "ingest"));
         assert!(snaps.iter().any(|x| x.name == "query"));
+    }
+
+    // ------------------------------------------------------------------
+    // cursor lifecycle (in-process; the remote twin lives in net_e2e)
+
+    /// A server with a graph big enough to span several cursor pages.
+    fn server_with_bigger_graph() -> D4mServer {
+        let s = D4mServer::with_engine(None);
+        let triples: Vec<TripleMsg> = (0..40)
+            .map(|i| (format!("r{:02}", i % 10), format!("c{:02}", i / 10 * 3 + i % 3), "1".into()))
+            .collect();
+        s.handle(Request::Ingest {
+            table: "G".into(),
+            triples,
+            pipeline: PipelineConfig { num_workers: 2, ..Default::default() },
+        })
+        .unwrap();
+        s
+    }
+
+    #[test]
+    fn scan_pages_bit_identical_to_query_across_page_boundaries() {
+        let s = server_with_bigger_graph();
+        let one_shot = D4mApi::query(&s, "G", TableQuery::all()).unwrap();
+        assert!(one_shot.nnz() > 3, "graph too small to page");
+        // page size 3 forces many page boundaries
+        let mut pages = 0usize;
+        let mut triples: Vec<TripleMsg> = Vec::new();
+        for page in s.scan_pages("G", TableQuery::all(), 3) {
+            let p = page.unwrap();
+            assert!(p.len() <= 3, "page exceeded page_entries");
+            pages += 1;
+            triples.extend(p);
+        }
+        assert!(pages > 1, "expected multiple pages");
+        let paged = crate::assoc::io::parse_triples(triples).unwrap();
+        assert_eq!(paged, one_shot, "paged scan diverged from one-shot query");
+        assert_eq!(paged.matrix(), one_shot.matrix());
+        // into_assoc takes the same path
+        let again = s.scan_pages("G", TableQuery::all(), 3).into_assoc().unwrap();
+        assert_eq!(again, one_shot);
+        // drained cursors freed themselves
+        assert_eq!(s.open_cursor_count(), 0);
+    }
+
+    #[test]
+    fn scan_pages_honours_selectors_and_limit() {
+        let s = server_with_bigger_graph();
+        let q = TableQuery::all().rows(KeySel::Prefix("r0".into())).limit(5);
+        let want = D4mApi::query(&s, "G", q.clone()).unwrap();
+        let got = s.scan_pages("G", q, 2).into_assoc().unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cursor_close_releases_snapshot_and_isolates_from_writes() {
+        let s = server_with_graph();
+        let id = s.open_cursor("G", &TableQuery::all(), 2).unwrap();
+        assert_eq!(s.open_cursor_count(), 1);
+        // writes after open are invisible to the pinned snapshot...
+        s.handle(Request::Ingest {
+            table: "G".into(),
+            triples: vec![("zz".into(), "zz".into(), "1".into())],
+            pipeline: PipelineConfig { num_workers: 1, ..Default::default() },
+        })
+        .unwrap();
+        let mut seen = 0usize;
+        loop {
+            let p = s.cursor_next(id).unwrap();
+            seen += p.triples.len();
+            assert!(!p.triples.iter().any(|(r, _, _)| r == "zz"), "snapshot leaked a new write");
+            if p.done {
+                break;
+            }
+        }
+        assert_eq!(seen, 4, "cursor should see exactly the snapshot's 4 edges");
+        // ...while a fresh cursor sees them
+        let id2 = s.open_cursor("G", &TableQuery::all(), 100).unwrap();
+        let p = s.cursor_next(id2).unwrap();
+        assert!(p.triples.iter().any(|(r, _, _)| r == "zz"));
+        assert!(p.done);
+        // explicit close releases; double close is idempotent
+        let id3 = s.open_cursor("G", &TableQuery::all(), 1).unwrap();
+        assert_eq!(s.open_cursor_count(), 1);
+        s.cursor_close(id3).unwrap();
+        assert_eq!(s.open_cursor_count(), 0);
+        s.cursor_close(id3).unwrap();
+        // a closed cursor is gone
+        assert!(matches!(s.cursor_next(id3), Err(D4mError::NotFound(_))));
+    }
+
+    #[test]
+    fn cursor_cap_rejects_excess_opens() {
+        let s = server_with_graph();
+        s.set_cursor_limits(2, Duration::from_secs(300));
+        let a = s.open_cursor("G", &TableQuery::all(), 1).unwrap();
+        let _b = s.open_cursor("G", &TableQuery::all(), 1).unwrap();
+        match s.open_cursor("G", &TableQuery::all(), 1) {
+            Err(D4mError::InvalidArg(msg)) => assert!(msg.contains("cursor cap")),
+            other => panic!("expected the cap to reject, got {other:?}"),
+        }
+        // closing one frees a slot
+        s.cursor_close(a).unwrap();
+        s.open_cursor("G", &TableQuery::all(), 1).unwrap();
+    }
+
+    #[test]
+    fn cursor_idle_ttl_evicts() {
+        let s = server_with_graph();
+        s.set_cursor_limits(8, Duration::from_millis(20));
+        let id = s.open_cursor("G", &TableQuery::all(), 1).unwrap();
+        assert_eq!(s.open_cursor_count(), 1);
+        std::thread::sleep(Duration::from_millis(60));
+        // any cursor op sweeps: the expired cursor is gone
+        assert!(matches!(s.cursor_next(id), Err(D4mError::NotFound(_))));
+        assert_eq!(s.open_cursor_count(), 0);
+    }
+
+    #[test]
+    fn cursor_ownership_is_enforced_and_reaped() {
+        let s = server_with_graph();
+        let id = s.open_cursor_owned(7, "G", &TableQuery::all(), 2).unwrap();
+        // another owner can neither read nor close it
+        assert!(matches!(s.cursor_next_owned(8, id), Err(D4mError::NotFound(_))));
+        s.cursor_close_owned(8, id).unwrap(); // idempotent no-op for non-owners
+        assert_eq!(s.open_cursor_count(), 1);
+        // the owner's teardown reaps it
+        assert_eq!(s.reap_cursors(7), 1);
+        assert_eq!(s.open_cursor_count(), 0);
+    }
+
+    #[test]
+    fn open_cursor_unknown_table_is_not_found() {
+        let s = D4mServer::with_engine(None);
+        assert!(matches!(
+            s.open_cursor("nope", &TableQuery::all(), 8),
+            Err(D4mError::NotFound(_))
+        ));
     }
 }

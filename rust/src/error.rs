@@ -23,6 +23,12 @@ pub enum D4mError {
     Pipeline(String),
     /// Invalid argument to a public API.
     InvalidArg(String),
+    /// A typed API wrapper received a
+    /// [`Response`](crate::coordinator::Response) variant other than the
+    /// one its request produces — a protocol bug or a client/server
+    /// skew, **not** a bad argument (which is what [`D4mError::InvalidArg`]
+    /// reports).
+    UnexpectedResponse { expected: String, got: String },
     /// I/O error wrapper.
     Io(std::io::Error),
     /// Wire-codec failure (malformed/truncated frame) on the network
@@ -48,6 +54,9 @@ impl fmt::Display for D4mError {
             D4mError::Runtime(s) => write!(f, "runtime error: {s}"),
             D4mError::Pipeline(s) => write!(f, "pipeline error: {s}"),
             D4mError::InvalidArg(s) => write!(f, "invalid argument: {s}"),
+            D4mError::UnexpectedResponse { expected, got } => {
+                write!(f, "unexpected response: expected {expected}, got {got}")
+            }
             D4mError::Io(e) => write!(f, "io error: {e}"),
             D4mError::Wire(e) => write!(f, "wire error: {e}"),
             D4mError::Remote(s) => write!(f, "remote error: {s}"),

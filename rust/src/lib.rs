@@ -22,10 +22,13 @@
 //! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) on the dense-block hot path.
 //! * [`coordinator`] — the D4M server: table registry, request routing,
-//!   op batching, metrics.
-//! * [`net`] — the network front-end: length-prefixed wire codec, TCP
-//!   server over the coordinator, and the [`RemoteD4m`] client mirroring
-//!   `D4mServer::handle`.
+//!   op batching, scan cursors, metrics — behind the object-safe
+//!   [`D4mApi`] trait both the in-process server and the remote client
+//!   implement.
+//! * [`net`] — the network front-end: request-id (v2) wire codec, a
+//!   per-connection demux TCP server over the coordinator, and the
+//!   pipelined [`RemoteD4m`] client (`submit`/`wait`, streaming
+//!   `scan_pages`).
 //!
 //! See DESIGN.md for the paper-to-module inventory and EXPERIMENTS.md for
 //! reproduction results.
@@ -48,5 +51,6 @@ pub mod util;
 
 pub use assoc::{Assoc, KeySel};
 pub use connectors::{BindOpts, DbServer, DbTable, TableQuery};
+pub use coordinator::{D4mApi, ScanPages};
 pub use error::{D4mError, Result};
 pub use net::RemoteD4m;

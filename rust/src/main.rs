@@ -10,19 +10,21 @@
 //! d4m jaccard [--scale S]
 //! d4m ktruss  [--scale S] [--k K]
 //! d4m tables                        list tables after a demo ingest
-//! d4m serve   [--addr H:P] [--max-conns N]   network front-end (runs
-//!                                   until a client sends shutdown)
-//! d4m client <ping|tables|quickstart|scan4|stats|shutdown> [--addr H:P]
+//! d4m serve   [--addr H:P] [--max-conns N] [--workers N]   network
+//!                                   front-end (runs until a client
+//!                                   sends shutdown)
+//! d4m client <ping|tables|quickstart|scan4|scan-pages|pipeline-bench|
+//!             stats|shutdown> [--addr H:P]
 //!                                   drive a remote d4m serve
 //! ```
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Duration;
 
 use d4m::assoc::{io::display_full, Assoc, KeySel};
 use d4m::connectors::TableQuery;
-use d4m::coordinator::{D4mServer, Request, Response};
+use d4m::coordinator::{D4mApi, D4mServer, Request, Response};
 use d4m::gen::{kronecker_triples, KroneckerParams};
 use d4m::net::{NetOpts, RemoteD4m};
 use d4m::pipeline::PipelineConfig;
@@ -225,8 +227,9 @@ fn cmd_pagerank(flags: HashMap<String, String>) {
 fn cmd_serve(flags: HashMap<String, String>) {
     let addr: String = flag(&flags, "addr", "127.0.0.1:4950".to_string());
     let max_conns: usize = flag(&flags, "max-conns", 64);
+    let workers: usize = flag(&flags, "workers", NetOpts::default().workers_per_conn);
     let server = Arc::new(D4mServer::new());
-    let opts = NetOpts { max_conns, ..Default::default() };
+    let opts = NetOpts { max_conns, workers_per_conn: workers, ..Default::default() };
     let mut handle = match d4m::net::serve(server, &addr, opts) {
         Ok(h) => h,
         Err(e) => {
@@ -286,6 +289,17 @@ fn cmd_client(args: &[String]) {
             let passes: usize = flag(&flags, "passes", 8);
             client_scan_concurrent(&addr, retries, clients, passes);
         }
+        "scan-pages" => {
+            let table: String = flag(&flags, "table", "G".to_string());
+            let page: usize = flag(&flags, "page", 2);
+            client_scan_pages(&connect(), &table, page);
+        }
+        "pipeline-bench" => {
+            let table: String = flag(&flags, "table", "G".to_string());
+            let inflight: usize = flag(&flags, "inflight", 8);
+            let requests: usize = flag(&flags, "requests", 200);
+            client_pipeline_bench(&connect(), &table, inflight, requests);
+        }
         "stats" => {
             let c = connect();
             match c.stats() {
@@ -304,12 +318,115 @@ fn cmd_client(args: &[String]) {
         }
         other => {
             eprintln!(
-                "usage: d4m client <ping|tables|quickstart|scan4|stats|shutdown> \
-                 [--addr H:P] [--retries N] [--clients N] [--passes N] (got {other:?})"
+                "usage: d4m client <ping|tables|quickstart|scan4|scan-pages|\
+                 pipeline-bench|stats|shutdown> [--addr H:P] [--retries N] \
+                 [--clients N] [--passes N] [--table T] [--page N] \
+                 [--inflight N] [--requests N] (got {other:?})"
             );
             std::process::exit(2);
         }
     }
+}
+
+/// Remote paged scan through a server-side cursor, checked against the
+/// one-shot query: every page must respect the `page_entries` bound and
+/// the assembled result must be bit-identical (the CI paged-scan leg —
+/// any divergence exits nonzero).
+fn client_scan_pages(c: &RemoteD4m, table: &str, page: usize) {
+    let t0 = std::time::Instant::now();
+    let reference = ok_or_die("one-shot query", c.query(table, TableQuery::all()));
+    let mut pages = 0usize;
+    let mut triples: Vec<(String, String, String)> = Vec::new();
+    for p in c.scan_pages(table, TableQuery::all(), page) {
+        let p = ok_or_die("cursor page", p);
+        assert_or_die(p.len() <= page, "a page exceeded the page_entries bound");
+        pages += 1;
+        triples.extend(p);
+    }
+    let total = triples.len();
+    let paged = ok_or_die("assemble pages", d4m::assoc::io::parse_triples(triples));
+    assert_or_die(paged == reference, "paged scan diverged from one-shot query");
+    assert_or_die(
+        paged.matrix() == reference.matrix(),
+        "paged scan CSR diverged from one-shot query",
+    );
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "scan-pages: table {table}: {total} entries in {pages} pages of <= {page} \
+         ({:.3}s, {}), bit-identical to one-shot query",
+        dt,
+        fmt_rate(total as f64 / dt)
+    );
+}
+
+/// Pipelined round-trips on ONE connection: keep `inflight` requests in
+/// flight, and claim responses newest-first so correlation is exercised
+/// against genuinely out-of-order completion. Requests alternate two
+/// shapes (ListTables / Query) and every response must match its
+/// request's shape — a misrouted id exits nonzero (the CI pipelining
+/// leg).
+fn client_pipeline_bench(c: &RemoteD4m, table: &str, inflight: usize, requests: usize) {
+    let inflight = inflight.max(1);
+    let requests = requests.max(1);
+    // warm reference so response shapes are predictable
+    let reference = ok_or_die("reference query", c.query(table, TableQuery::all()));
+    let t0 = std::time::Instant::now();
+    let mut window: VecDeque<(u64, bool)> = VecDeque::with_capacity(inflight);
+    let mut issued = 0usize;
+    let mut completed = 0usize;
+    let mut out_of_submission_order = 0usize;
+    let mut last_claimed_id = 0u64;
+    while completed < requests {
+        while window.len() < inflight && issued < requests {
+            let expect_tables = issued % 2 == 0;
+            let req = if expect_tables {
+                Request::ListTables
+            } else {
+                Request::Query { table: table.into(), query: TableQuery::all() }
+            };
+            let id = ok_or_die("submit", c.submit(req));
+            window.push_back((id, expect_tables));
+            issued += 1;
+        }
+        // LIFO claim: the newest-submitted id is waited on first, so
+        // earlier ids' frames arrive while we wait and must be parked
+        // and re-correlated
+        let (id, expect_tables) = window.pop_back().expect("window non-empty");
+        if id < last_claimed_id {
+            out_of_submission_order += 1;
+        }
+        last_claimed_id = id;
+        match ok_or_die("wait", c.wait(id)) {
+            Response::Tables(ts) => {
+                assert_or_die(expect_tables, "Tables response correlated to a Query id");
+                assert_or_die(
+                    ts.iter().any(|t| t.as_str() == table),
+                    "pipelined ListTables lost the table",
+                );
+            }
+            Response::Assoc(a) => {
+                assert_or_die(!expect_tables, "Assoc response correlated to a ListTables id");
+                assert_or_die(a == reference, "pipelined query answer diverged");
+            }
+            other => {
+                eprintln!("pipeline-bench: unexpected response variant {other:?}");
+                std::process::exit(1);
+            }
+        }
+        completed += 1;
+    }
+    assert_or_die(
+        out_of_submission_order > 0 || requests <= inflight,
+        "no out-of-submission-order claims — pipelining not exercised",
+    );
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "pipeline-bench: {requests} requests, {inflight} in flight on one connection, \
+         {:.3}s ({}), {} claimed out of submission order, correlation OK",
+        dt,
+        fmt_rate(requests as f64 / dt),
+        out_of_submission_order
+    );
 }
 
 /// The remote quickstart: the associative-array tour driven end-to-end

@@ -1,35 +1,69 @@
-//! `RemoteD4m` — a network client whose API mirrors
-//! [`D4mServer::handle`](crate::coordinator::D4mServer::handle), so any
-//! code written against the in-process coordinator runs remote by
-//! swapping the constructor:
+//! `RemoteD4m` — a pipelined network client implementing the
+//! [`D4mApi`] trait, so any code written against the in-process
+//! coordinator runs remote by swapping a constructor:
 //!
 //! ```text
-//! let server = D4mServer::new();          // in-process
-//! let server = RemoteD4m::connect(addr)?; // remote — same .handle(req)
+//! let api: &dyn D4mApi = &D4mServer::new();           // in-process
+//! let api: &dyn D4mApi = &RemoteD4m::connect(addr)?;  // remote
 //! ```
 //!
-//! One `RemoteD4m` owns one TCP connection and serialises its requests
-//! over it (the stream is behind a mutex, so a shared reference works
-//! from multiple threads — but concurrent *throughput* wants one client
-//! per thread, which is exactly what the e2e and bench harnesses do).
+//! One `RemoteD4m` owns one TCP connection, **multiplexed**: any thread
+//! may [`RemoteD4m::submit`] a request (assigned a fresh request id and
+//! written immediately) and later [`RemoteD4m::wait`] for that id's
+//! response. Responses arrive in whatever order the server completes
+//! them; a correlation map parks early arrivals until their waiter shows
+//! up. There is no dedicated reader thread — whichever waiting thread
+//! gets there first reads frames off the socket (parking frames that
+//! answer other ids and waking their waiters), so a single-threaded
+//! caller pays no thread overhead and a multi-threaded caller shares
+//! one connection safely.
+//!
+//! Streaming scans ride the same session: [`D4mApi::scan_pages`]
+//! (via the trait) opens a server-side cursor and lazily pulls bounded
+//! pages — see `coordinator::api`.
 
-use std::collections::BTreeMap;
+use std::collections::{HashMap, HashSet};
 use std::net::TcpStream;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
-use crate::assoc::Assoc;
 use crate::connectors::TableQuery;
-use crate::coordinator::{Request, Response};
+use crate::coordinator::{CursorPage, D4mApi, Request, Response};
 use crate::error::{D4mError, Result};
-use crate::graphulo::{PageRankOpts, PageRankResult, TableMultStats};
 use crate::metrics::Snapshot;
-use crate::net::wire::{self, ClientMsg, ServerMsg};
-use crate::pipeline::{IngestReport, PipelineConfig, TripleMsg};
+use crate::net::wire::{self, ClientMsg, ServerMsg, WireError};
 
-/// A connection to a remote `d4m serve` coordinator.
+/// Correlation state shared by every waiter on one connection.
+struct Pending {
+    /// Ids submitted but not yet answered. A frame for an id outside
+    /// this set is dropped (stale reply to a forgotten id), and a wait
+    /// on an id outside it fails typed instead of hanging — so the map
+    /// below cannot grow unboundedly and a double-wait cannot deadlock.
+    outstanding: HashSet<u64>,
+    /// Frames that arrived before their waiter: id → message.
+    ready: HashMap<u64, ServerMsg>,
+    /// True while some thread is blocked reading the socket on behalf of
+    /// everyone (at most one reader at a time).
+    reader_active: bool,
+    /// First fatal transport error; once set, every current and future
+    /// wait fails with it (the connection is unusable).
+    dead: Option<String>,
+}
+
+/// A pipelined connection to a remote `d4m serve` coordinator.
 pub struct RemoteD4m {
-    stream: Mutex<TcpStream>,
+    /// Write half (a `try_clone` of the socket) — frames are written
+    /// whole under this lock, so submissions from many threads interleave
+    /// at frame granularity only.
+    writer: Mutex<TcpStream>,
+    /// Read half — held only by the thread currently playing reader.
+    reader: Mutex<TcpStream>,
+    /// Next request id (ids start at 1; 0 is the server's
+    /// connection-error id).
+    next_id: AtomicU64,
+    pending: Mutex<Pending>,
+    wakeup: Condvar,
 }
 
 impl RemoteD4m {
@@ -37,7 +71,19 @@ impl RemoteD4m {
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
-        Ok(RemoteD4m { stream: Mutex::new(stream) })
+        let reader = stream.try_clone()?;
+        Ok(RemoteD4m {
+            writer: Mutex::new(stream),
+            reader: Mutex::new(reader),
+            next_id: AtomicU64::new(1),
+            pending: Mutex::new(Pending {
+                outstanding: HashSet::new(),
+                ready: HashMap::new(),
+                reader_active: false,
+                dead: None,
+            }),
+            wakeup: Condvar::new(),
+        })
     }
 
     /// Connect with retries — the CI/e2e readiness probe for a server
@@ -56,28 +102,143 @@ impl RemoteD4m {
         Err(last.unwrap_or_else(|| D4mError::InvalidArg("connect_retry: 0 attempts".into())))
     }
 
-    /// One framed round trip.
-    fn rpc(&self, msg: &ClientMsg) -> Result<ServerMsg> {
-        let payload = wire::encode_client_msg(msg);
-        let mut stream = self.stream.lock().unwrap();
-        wire::write_frame(&mut *stream, &payload)?;
-        let reply = wire::read_frame(&mut *stream)?;
-        Ok(wire::decode_server_msg(&reply)?)
+    // ------------------------------------------------------------------
+    // pipelining: submit / wait
+
+    /// Submit a coordinator request without waiting: the frame is written
+    /// now and the returned id claims its response later via
+    /// [`RemoteD4m::wait`]. Any number of requests may be in flight on
+    /// the connection; the server answers them in completion order.
+    /// Every submitted id should eventually be [`RemoteD4m::wait`]ed or
+    /// [`RemoteD4m::forget`]ten — an id that is neither keeps its parked
+    /// response buffered until the connection drops.
+    pub fn submit(&self, req: Request) -> Result<u64> {
+        self.submit_msg(&ClientMsg::Api(req))
     }
 
-    /// Serve one request remotely — the mirror of `D4mServer::handle`.
-    pub fn handle(&self, req: Request) -> Result<Response> {
-        match self.rpc(&ClientMsg::Api(req))? {
+    /// Claim the response to a previously [`RemoteD4m::submit`]ted id
+    /// (block until its frame arrives). Each id is claimable exactly
+    /// once; a wait on an id that is not in flight (never submitted,
+    /// already claimed, or forgotten) fails with a typed error instead
+    /// of hanging. Waiting threads cooperate — whoever waits first reads
+    /// the socket for everyone.
+    pub fn wait(&self, id: u64) -> Result<Response> {
+        match self.wait_msg(id)? {
             ServerMsg::Reply(r) => r,
-            other => Err(unexpected(&other)),
+            other => Err(unexpected_frame("Reply", &other)),
         }
     }
 
-    /// Liveness probe.
+    /// Abandon a submitted id: its response, whether already parked or
+    /// still to arrive, is discarded instead of buffered forever. Use on
+    /// error paths that bail out of a pipelined window without claiming
+    /// every id.
+    pub fn forget(&self, id: u64) {
+        let mut g = self.pending.lock().unwrap();
+        g.outstanding.remove(&id);
+        g.ready.remove(&id);
+        // wake any thread currently waiting on this id so it errors out
+        // instead of sleeping until the next frame happens to land
+        self.wakeup.notify_all();
+    }
+
+    fn submit_msg(&self, msg: &ClientMsg) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut g = self.pending.lock().unwrap();
+            if let Some(e) = &g.dead {
+                return Err(D4mError::Remote(format!("connection failed: {e}")));
+            }
+            g.outstanding.insert(id);
+        }
+        let payload = wire::encode_client_frame(id, msg);
+        let mut w = self.writer.lock().unwrap();
+        if let Err(e) = wire::write_frame(&mut *w, &payload) {
+            self.pending.lock().unwrap().outstanding.remove(&id);
+            return Err(e);
+        }
+        Ok(id)
+    }
+
+    /// Block until the frame answering `id` arrives (or the connection
+    /// dies, or the id turns out not to be in flight). See the module
+    /// docs for the cooperative-reader protocol.
+    fn wait_msg(&self, id: u64) -> Result<ServerMsg> {
+        let mut g = self.pending.lock().unwrap();
+        loop {
+            if let Some(m) = g.ready.remove(&id) {
+                return Ok(m);
+            }
+            if let Some(e) = &g.dead {
+                return Err(D4mError::Remote(format!("connection failed: {e}")));
+            }
+            if !g.outstanding.contains(&id) {
+                return Err(D4mError::InvalidArg(format!(
+                    "request id {id} is not in flight \
+                     (never submitted, already claimed, or forgotten)"
+                )));
+            }
+            if g.reader_active {
+                // someone else is reading; they'll wake us when a frame
+                // lands (maybe ours)
+                g = self.wakeup.wait(g).unwrap();
+                continue;
+            }
+            // become the reader for everyone
+            g.reader_active = true;
+            drop(g);
+            let read = self.read_one();
+            g = self.pending.lock().unwrap();
+            g.reader_active = false;
+            match read {
+                Ok((rid, msg)) if rid == wire::CONN_ERR_ID => {
+                    // connection-level server error: fatal for all waits
+                    let detail = match msg {
+                        ServerMsg::Reply(Err(e)) => e.to_string(),
+                        other => format!("unattributed {} frame", frame_name(&other)),
+                    };
+                    g.dead = Some(detail);
+                }
+                Ok((rid, msg)) => {
+                    // park only frames someone can still claim; a reply
+                    // to a forgotten id is dropped here
+                    if g.outstanding.remove(&rid) {
+                        g.ready.insert(rid, msg);
+                    }
+                }
+                Err(e) => {
+                    g.dead = Some(e.to_string());
+                }
+            }
+            self.wakeup.notify_all();
+        }
+    }
+
+    fn read_one(&self) -> Result<(u64, ServerMsg)> {
+        let mut r = self.reader.lock().unwrap();
+        let payload = wire::read_frame(&mut *r)?;
+        Ok(wire::decode_server_frame(&payload)?)
+    }
+
+    fn rpc(&self, msg: &ClientMsg) -> Result<ServerMsg> {
+        let id = self.submit_msg(msg)?;
+        self.wait_msg(id)
+    }
+
+    // ------------------------------------------------------------------
+    // admin verbs (not part of the coordinator API surface)
+
+    /// Liveness + version probe: checks the server's `Pong` carries the
+    /// wire version this client speaks, failing with a typed
+    /// [`WireError::Version`] on skew.
     pub fn ping(&self) -> Result<()> {
-        match self.rpc(&ClientMsg::Ping)? {
-            ServerMsg::Pong => Ok(()),
-            other => Err(unexpected(&other)),
+        match self.rpc(&ClientMsg::Ping { version: wire::VERSION })? {
+            ServerMsg::Pong { version } if version == wire::VERSION => Ok(()),
+            ServerMsg::Pong { version } => {
+                Err(WireError::Version { got: version, want: wire::VERSION }.into())
+            }
+            ServerMsg::Reply(Err(e)) => Err(e),
+            other => Err(unexpected_frame("Pong", &other)),
         }
     }
 
@@ -86,7 +247,8 @@ impl RemoteD4m {
     pub fn stats(&self) -> Result<Vec<Snapshot>> {
         match self.rpc(&ClientMsg::Stats)? {
             ServerMsg::Stats(s) => Ok(s),
-            other => Err(unexpected(&other)),
+            ServerMsg::Reply(Err(e)) => Err(e),
+            other => Err(unexpected_frame("Stats", &other)),
         }
     }
 
@@ -94,94 +256,62 @@ impl RemoteD4m {
     pub fn shutdown_server(&self) -> Result<()> {
         match self.rpc(&ClientMsg::Shutdown)? {
             ServerMsg::ShutdownAck => Ok(()),
-            other => Err(unexpected(&other)),
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // convenience mirrors of the coordinator API
-
-    pub fn create_table(&self, name: &str, splits: Vec<String>) -> Result<()> {
-        match self.handle(Request::CreateTable { name: name.into(), splits })? {
-            Response::Ok => Ok(()),
-            other => Err(mismatch("Ok", &other)),
-        }
-    }
-
-    pub fn ingest(
-        &self,
-        table: &str,
-        triples: Vec<TripleMsg>,
-        pipeline: PipelineConfig,
-    ) -> Result<IngestReport> {
-        match self.handle(Request::Ingest { table: table.into(), triples, pipeline })? {
-            Response::Ingested(r) => Ok(r),
-            other => Err(mismatch("Ingested", &other)),
-        }
-    }
-
-    pub fn query(&self, table: &str, query: TableQuery) -> Result<Assoc> {
-        self.handle(Request::Query { table: table.into(), query })?.into_assoc()
-    }
-
-    pub fn tablemult(&self, a: &str, b: &str, out: &str) -> Result<TableMultStats> {
-        match self.handle(Request::TableMult { a: a.into(), b: b.into(), out: out.into() })? {
-            Response::MultStats(s) => Ok(s),
-            other => Err(mismatch("MultStats", &other)),
-        }
-    }
-
-    pub fn tablemult_client(&self, a: &str, b: &str, memory_limit: usize) -> Result<Assoc> {
-        self.handle(Request::TableMultClient { a: a.into(), b: b.into(), memory_limit })?
-            .into_assoc()
-    }
-
-    pub fn bfs(&self, table: &str, seeds: &[&str], hops: usize) -> Result<BTreeMap<String, usize>> {
-        let seeds = seeds.iter().map(|s| s.to_string()).collect();
-        match self.handle(Request::Bfs { table: table.into(), seeds, hops })? {
-            Response::Distances(d) => Ok(d),
-            other => Err(mismatch("Distances", &other)),
-        }
-    }
-
-    pub fn jaccard(&self, table: &str, out: &str) -> Result<Assoc> {
-        self.handle(Request::Jaccard { table: table.into(), out: out.into() })?.into_assoc()
-    }
-
-    pub fn ktruss(&self, table: &str, k: usize) -> Result<Assoc> {
-        self.handle(Request::KTruss { table: table.into(), k })?.into_assoc()
-    }
-
-    pub fn pagerank(&self, table: &str, opts: PageRankOpts) -> Result<PageRankResult> {
-        match self.handle(Request::PageRank { table: table.into(), opts })? {
-            Response::Ranks(r) => Ok(r),
-            other => Err(mismatch("Ranks", &other)),
-        }
-    }
-
-    pub fn list_tables(&self) -> Result<Vec<String>> {
-        match self.handle(Request::ListTables)? {
-            Response::Tables(t) => Ok(t),
-            other => Err(mismatch("Tables", &other)),
+            ServerMsg::Reply(Err(e)) => Err(e),
+            other => Err(unexpected_frame("ShutdownAck", &other)),
         }
     }
 }
 
-fn unexpected(msg: &ServerMsg) -> D4mError {
-    D4mError::Remote(format!("unexpected reply frame: {}", frame_name(msg)))
+impl D4mApi for RemoteD4m {
+    /// One request, one response — `submit` + `wait` back to back. For
+    /// overlap, use those two directly.
+    fn handle(&self, req: Request) -> Result<Response> {
+        let id = self.submit(req)?;
+        self.wait(id)
+    }
+
+    fn open_cursor(&self, table: &str, query: &TableQuery, page_entries: usize) -> Result<u64> {
+        let msg = ClientMsg::OpenCursor {
+            table: table.into(),
+            query: query.clone(),
+            page_entries: page_entries as u64,
+        };
+        match self.rpc(&msg)? {
+            ServerMsg::CursorOpened { cursor } => Ok(cursor),
+            ServerMsg::Reply(Err(e)) => Err(e),
+            other => Err(unexpected_frame("CursorOpened", &other)),
+        }
+    }
+
+    fn cursor_next(&self, cursor: u64) -> Result<CursorPage> {
+        match self.rpc(&ClientMsg::CursorNext { cursor })? {
+            ServerMsg::CursorPage(page) => Ok(page),
+            ServerMsg::Reply(Err(e)) => Err(e),
+            other => Err(unexpected_frame("CursorPage", &other)),
+        }
+    }
+
+    fn cursor_close(&self, cursor: u64) -> Result<()> {
+        match self.rpc(&ClientMsg::CursorClose { cursor })? {
+            ServerMsg::CursorClosed => Ok(()),
+            ServerMsg::Reply(Err(e)) => Err(e),
+            other => Err(unexpected_frame("CursorClosed", &other)),
+        }
+    }
 }
 
-fn mismatch(expected: &str, got: &Response) -> D4mError {
-    // mirror Response::into_assoc: never Debug-print a payload into an
-    // error string
-    D4mError::Remote(format!("expected {expected} response, got {}", got.variant_name()))
+fn unexpected_frame(expected: &str, msg: &ServerMsg) -> D4mError {
+    D4mError::UnexpectedResponse { expected: expected.into(), got: frame_name(msg).into() }
 }
 
 fn frame_name(msg: &ServerMsg) -> &'static str {
     match msg {
         ServerMsg::Reply(_) => "Reply",
-        ServerMsg::Pong => "Pong",
+        ServerMsg::Pong { .. } => "Pong",
         ServerMsg::Stats(_) => "Stats",
         ServerMsg::ShutdownAck => "ShutdownAck",
+        ServerMsg::CursorOpened { .. } => "CursorOpened",
+        ServerMsg::CursorPage(_) => "CursorPage",
+        ServerMsg::CursorClosed => "CursorClosed",
     }
 }

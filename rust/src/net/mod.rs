@@ -1,19 +1,28 @@
 //! Network front-end over the [`coordinator`](crate::coordinator) — the
 //! paper's client↔server split, realised as three std-only layers:
 //!
-//! * [`wire`] — length-prefixed binary frame codec (versioned magic
-//!   header, varint/length-prefixed encodings, typed decode errors).
+//! * [`wire`] — length-prefixed binary frame codec, **v2**: every frame
+//!   carries a client-assigned request id (responses may complete out of
+//!   order), cursor messages stream scan results in bounded pages, and
+//!   version skew surfaces as a typed [`WireError::Version`] before any
+//!   payload is read.
 //! * [`server`] — a `TcpListener` accept loop sharing one
-//!   `Arc<D4mServer>` across a bounded thread-per-connection pool, with
-//!   graceful shutdown and per-connection error framing.
-//! * [`client`] — [`RemoteD4m`], whose API mirrors `D4mServer::handle`
-//!   so in-process call sites run remote by swapping the constructor.
+//!   `Arc<D4mServer>` across a bounded thread-per-connection pool; each
+//!   connection is a demux (one reader + bounded workers) so N pipelined
+//!   requests from one connection execute concurrently, with
+//!   per-connection cursor ownership and reap-on-disconnect.
+//! * [`client`] — [`RemoteD4m`], a pipelined client implementing the
+//!   [`D4mApi`](crate::coordinator::D4mApi) trait, so call sites written
+//!   against the in-process coordinator go remote by swapping the
+//!   constructor; `submit()`/`wait(id)` expose the pipelining directly
+//!   and `scan_pages` lazily pulls cursor pages.
 //!
 //! `d4m serve --addr HOST:PORT` exposes the server from the CLI and
-//! `d4m client --addr HOST:PORT <cmd>` drives it; `rust/tests/net_e2e.rs`
-//! pins that remote answers are bit-identical to in-process ones, and
-//! `benches/net.rs` records the loopback round-trip and concurrent
-//! remote-scan trajectory into `BENCH_net.json`.
+//! `d4m client --addr HOST:PORT <cmd>` drives it (including
+//! `pipeline-bench` and `scan-pages`); `rust/tests/net_e2e.rs` pins that
+//! remote answers are bit-identical to in-process ones, and
+//! `benches/net.rs` records the round-trip, pipelined and paged-scan
+//! trajectories into `BENCH_net.json`.
 
 pub mod client;
 pub mod server;

@@ -1,43 +1,82 @@
 //! TCP front-end over the coordinator: an accept loop sharing one
-//! `Arc<D4mServer>` across a bounded thread-per-connection pool.
+//! `Arc<D4mServer>` across a bounded thread-per-connection pool, with a
+//! **per-connection demux** so one connection can have many requests in
+//! flight at once (wire v2 request-id framing).
 //!
-//! §Thread model (DESIGN.md §Network front-end): one accept thread, one
-//! thread per live connection, at most [`NetOpts::max_conns`] of them —
-//! the accept loop *blocks* on a condvar when the pool is full, so a
-//! connection flood backpressures at the TCP backlog instead of spawning
-//! unbounded threads. Every connection thread serves requests against
-//! the same shared [`D4mServer`], which is what finally drives the PR-3
-//! snapshot-isolated scan path from genuinely concurrent remote readers.
+//! §Thread model (DESIGN.md §Wire v2): one accept thread; per live
+//! connection one *reader* thread plus [`NetOpts::workers_per_conn`]
+//! *worker* threads (scoped to the connection). The reader decodes
+//! frames and dispatches `(id, msg)` work items over a bounded channel —
+//! when every worker is busy and the queue is full the reader blocks,
+//! backpressuring the socket instead of buffering unboundedly. Workers
+//! execute against the shared [`D4mServer`] concurrently and write each
+//! reply frame under a shared writer lock **as it completes**, so
+//! responses legitimately overtake each other; the client correlates by
+//! request id. At most [`NetOpts::max_conns`] connections are served —
+//! the accept loop blocks on a condvar when the pool is full, so a
+//! connection flood backpressures at the TCP backlog.
+//!
+//! §Cursor ownership: every connection gets a distinct owner id;
+//! `OpenCursor`/`CursorNext`/`CursorClose` act only on that owner's
+//! cursors, and connection teardown (clean or poisoned) reaps whatever
+//! the connection left open — a dropped client can't pin a snapshot
+//! beyond its connection's life (plus the server-side idle TTL as the
+//! last resort for live-but-idle connections).
 //!
 //! §Error framing: a malformed frame poisons only its own connection —
-//! the server replies with a framed error (best effort) and closes that
-//! socket; the listener and every other connection keep serving.
+//! the server replies with a framed error carrying the reserved id 0
+//! ([`wire::CONN_ERR_ID`], best effort) and closes that socket; the
+//! listener and every other connection keep serving. A per-request
+//! failure (unknown table, cursor cap, oversized response) is an
+//! ordinary error `Reply` under the request's own id and the connection
+//! keeps serving.
 //!
 //! §Shutdown protocol: `NetHandle::shutdown()` (or a client
 //! [`ClientMsg::Shutdown`] frame) sets the shared flag, then pokes the
-//! listener with a loopback connect to unblock `accept`. Idle connection
-//! threads poll the flag every [`NetOpts::idle_poll`] while waiting for
-//! a frame's first byte; in-flight requests run to completion. The
-//! accept thread exits only after the last connection thread has
-//! drained, so `wait()` returning means the server is fully quiesced.
+//! listener with a loopback connect to unblock `accept`. Idle readers
+//! poll the flag every [`NetOpts::idle_poll`] while waiting for a
+//! frame's first byte; in-flight requests run to completion and their
+//! replies are written before the connection drains. The accept thread
+//! exits only after the last connection thread has drained, so `wait()`
+//! returning means the server is fully quiesced.
 
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::D4mServer;
+use crate::coordinator::{CursorPage, D4mServer};
 use crate::error::{D4mError, Result};
 use crate::metrics::{Counter, Histogram, Snapshot};
 use crate::net::wire::{self, ClientMsg, ServerMsg, WireError};
+
+/// Cap on the `page_entries` a remote `OpenCursor` may request. The
+/// per-page byte budget ([`crate::coordinator::cursor::PAGE_BYTE_BUDGET`])
+/// is what actually bounds server memory; this keeps a hostile ask from
+/// reserving absurd page buffers up front.
+const MAX_PAGE_ENTRIES: usize = 1 << 20;
+
+/// Approximate wire bytes of a cursor page (string bytes plus a bounded
+/// per-triple varint/length overhead).
+fn page_wire_bytes(page: &CursorPage) -> usize {
+    let triples: usize =
+        page.triples.iter().map(|(r, c, v)| r.len() + c.len() + v.len() + 15).sum();
+    triples + 16
+}
 
 /// Tuning for [`serve`].
 #[derive(Debug, Clone)]
 pub struct NetOpts {
     /// Maximum simultaneously served connections (the thread-pool bound).
     pub max_conns: usize,
+    /// Worker threads per connection — the per-connection concurrency of
+    /// pipelined requests. The dispatch queue holds the same number
+    /// again, so at most `2 * workers_per_conn` requests are in flight
+    /// per connection before the reader backpressures the socket.
+    pub workers_per_conn: usize,
     /// How often an idle connection re-checks the shutdown flag.
     pub idle_poll: Duration,
     /// Whole-frame deadline once a frame is in flight (and the write
@@ -51,6 +90,7 @@ impl Default for NetOpts {
     fn default() -> Self {
         NetOpts {
             max_conns: 64,
+            workers_per_conn: 8,
             idle_poll: Duration::from_millis(200),
             io_timeout: Duration::from_secs(30),
         }
@@ -68,16 +108,19 @@ struct Shared {
     /// pool and let the accept loop drain on shutdown.
     active: Mutex<usize>,
     pool_cv: Condvar,
+    /// Next per-connection cursor owner id (0 is the in-process owner).
+    next_owner: AtomicU64,
     /// Net-layer counters, surfaced through [`NetHandle::snapshots`].
     requests: Histogram,
     bad_frames: Counter,
     bytes_in: Counter,
     bytes_out: Counter,
+    cursors_reaped: Counter,
 }
 
 impl Shared {
     /// The coordinator's per-op snapshots with the net-layer request
-    /// histogram and byte counters folded in.
+    /// histogram, byte counters and cursor gauges folded in.
     fn snapshots(&self) -> Vec<Snapshot> {
         let mut snaps = self.server.snapshots();
         snaps.push(Snapshot {
@@ -87,14 +130,16 @@ impl Shared {
             mean_latency_ns: self.requests.mean_ns(),
             p99_latency_ns: self.requests.quantile_ns(0.99),
         });
-        for (name, counter) in [
-            ("net.bad_frames", &self.bad_frames),
-            ("net.bytes_in", &self.bytes_in),
-            ("net.bytes_out", &self.bytes_out),
+        for (name, count) in [
+            ("net.bad_frames", self.bad_frames.get()),
+            ("net.bytes_in", self.bytes_in.get()),
+            ("net.bytes_out", self.bytes_out.get()),
+            ("net.cursors_open", self.server.open_cursor_count() as u64),
+            ("net.cursors_reaped", self.cursors_reaped.get()),
         ] {
             snaps.push(Snapshot {
                 name: name.into(),
-                count: counter.get(),
+                count,
                 rate_per_sec: 0.0,
                 mean_latency_ns: 0.0,
                 p99_latency_ns: 0,
@@ -168,8 +213,10 @@ impl Drop for NetHandle {
 /// Start serving `server` on `addr` (e.g. `"127.0.0.1:4950"`; port 0
 /// picks an ephemeral port, readable from [`NetHandle::addr`]).
 pub fn serve(server: Arc<D4mServer>, addr: &str, mut opts: NetOpts) -> Result<NetHandle> {
-    // a pool of zero would park the accept loop forever
+    // a pool of zero would park the accept loop forever; zero workers
+    // would park every connection
     opts.max_conns = opts.max_conns.max(1);
+    opts.workers_per_conn = opts.workers_per_conn.max(1);
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     let shared = Arc::new(Shared {
@@ -179,10 +226,12 @@ pub fn serve(server: Arc<D4mServer>, addr: &str, mut opts: NetOpts) -> Result<Ne
         shutdown: AtomicBool::new(false),
         active: Mutex::new(0),
         pool_cv: Condvar::new(),
+        next_owner: AtomicU64::new(1),
         requests: Histogram::new(),
         bad_frames: Counter::new(),
         bytes_in: Counter::new(),
         bytes_out: Counter::new(),
+        cursors_reaped: Counter::new(),
     });
     let sh = shared.clone();
     let accept = std::thread::Builder::new()
@@ -219,10 +268,13 @@ fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
         let sh2 = sh.clone();
         let builder = std::thread::Builder::new().name("d4m-net-conn".into());
         let spawned = builder.spawn(move || {
-            let _ = serve_conn(stream, &sh2);
-            let mut active = sh2.active.lock().unwrap();
-            *active -= 1;
-            sh2.pool_cv.notify_all();
+            // the guard's Drop releases the pool slot and reaps the
+            // connection's cursors even if the demux panics (a worker
+            // panic propagates through thread::scope and would otherwise
+            // leak the slot forever and wedge the shutdown drain)
+            let owner = sh2.next_owner.fetch_add(1, Ordering::SeqCst);
+            let _guard = ConnGuard { sh: &sh2, owner };
+            let _ = conn_demux(stream, &sh2, owner);
         });
         if spawned.is_err() {
             // never happened in practice; release the reserved slot
@@ -231,7 +283,8 @@ fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
             sh.pool_cv.notify_all();
         }
     }
-    // drain: connection threads notice the flag within one idle_poll;
+    // drain: connection readers notice the flag within one idle_poll,
+    // hang up their dispatch queues, and join their workers —
     // in-flight requests run to completion first
     let mut active = sh.active.lock().unwrap();
     while *active > 0 {
@@ -239,14 +292,79 @@ fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
     }
 }
 
-/// Serve one connection until the peer hangs up, a frame poisons it, or
-/// shutdown is initiated.
-fn serve_conn(mut stream: TcpStream, sh: &Shared) -> Result<()> {
+/// End-of-connection cleanup that must run no matter how the connection
+/// thread exits — clean return, error, or panic: reap the connection's
+/// cursors, release its pool slot, and wake the accept loop. Runs in
+/// `Drop` so an unwinding demux cannot leak a `max_conns` slot or pin a
+/// cursor snapshot.
+struct ConnGuard<'a> {
+    sh: &'a Shared,
+    owner: u64,
+}
+
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        let reaped = self.sh.server.reap_cursors(self.owner);
+        if reaped > 0 {
+            self.sh.cursors_reaped.add(reaped as u64);
+        }
+        // recover a poisoned lock rather than double-panicking in drop:
+        // the counter itself is always coherent (only ever touched under
+        // the lock, never across a panic point)
+        let mut active = match self.sh.active.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *active -= 1;
+        self.sh.pool_cv.notify_all();
+    }
+}
+
+/// The per-connection demux: reader decodes and dispatches, scoped
+/// workers execute and reply out of order (see the module docs).
+fn conn_demux(mut stream: TcpStream, sh: &Shared, owner: u64) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_write_timeout(Some(sh.opts.io_timeout))?;
+    // the write half shares the socket fd, so the write timeout set
+    // above covers frames written through the clone too
+    let writer = Mutex::new(stream.try_clone()?);
+    let workers = sh.opts.workers_per_conn;
+    let (tx, rx) = std::sync::mpsc::sync_channel::<(u64, ClientMsg)>(workers);
+    let rx = Mutex::new(rx);
+    // a worker whose reply write failed flags the connection dead; the
+    // reader notices on its next poll tick and hangs up (workers keep
+    // draining the queue meanwhile so the reader can never deadlock on a
+    // full dispatch queue)
+    let dead = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| worker_loop(&rx, &writer, sh, owner, &dead));
+        }
+        let r = reader_loop(&mut stream, sh, &tx, &writer, &dead);
+        drop(tx); // hang up: workers finish in-flight work and exit
+        r
+    })
+}
+
+/// Decode frames and dispatch work items until the peer hangs up, a
+/// frame poisons the connection, or shutdown/death is flagged.
+fn reader_loop(
+    stream: &mut TcpStream,
+    sh: &Shared,
+    tx: &SyncSender<(u64, ClientMsg)>,
+    writer: &Mutex<TcpStream>,
+    dead: &AtomicBool,
+) -> Result<()> {
     loop {
+        // check shutdown/death before every frame, not just on idle
+        // timeouts — a peer that streams requests back-to-back never
+        // goes idle, and must not keep a dead connection (or a shutting-
+        // down server) dispatching work
+        if sh.shutdown.load(Ordering::SeqCst) || dead.load(Ordering::SeqCst) {
+            return Ok(());
+        }
         // poll for a frame's first byte so an idle connection notices
-        // shutdown without a dedicated waker
+        // shutdown (or a dead writer) without a dedicated waker
         stream.set_read_timeout(Some(sh.opts.idle_poll))?;
         let mut first = [0u8; 1];
         match stream.read(&mut first) {
@@ -256,7 +374,7 @@ fn serve_conn(mut stream: TcpStream, sh: &Shared) -> Result<()> {
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                if sh.shutdown.load(Ordering::SeqCst) {
+                if sh.shutdown.load(Ordering::SeqCst) || dead.load(Ordering::SeqCst) {
                     return Ok(());
                 }
                 continue;
@@ -268,58 +386,137 @@ fn serve_conn(mut stream: TcpStream, sh: &Shared) -> Result<()> {
         // the deadline reader re-checks wall clock + shutdown per poll —
         // a peer dribbling bytes cannot reset the budget)
         let deadline = Instant::now() + sh.opts.io_timeout;
-        let mut reader = DeadlineReader { stream: &mut stream, sh, deadline };
+        let mut reader = DeadlineReader { stream: &mut *stream, sh, deadline };
         let payload = match wire::read_frame_rest(first[0], &mut reader) {
             Ok(p) => p,
             // malformed frame: framed error back, close this connection
-            Err(e @ D4mError::Wire(_)) => return poison(&mut stream, sh, e),
+            Err(e @ D4mError::Wire(_)) => return poison(writer, sh, e),
             // I/O failure (peer gone, frame deadline): nothing to reply to
             Err(_) => return Ok(()),
         };
         sh.bytes_in.add((wire::HEADER_LEN + payload.len()) as u64);
-        let msg = match wire::decode_client_msg(&payload) {
+        let (id, msg) = match wire::decode_client_frame(&payload) {
             Ok(m) => m,
-            Err(we) => return poison(&mut stream, sh, we.into()),
+            Err(we) => return poison(writer, sh, we.into()),
         };
-        let (mut reply, shutdown_after) = match msg {
-            ClientMsg::Api(req) => {
-                let resp = sh.requests.time(|| sh.server.handle(req));
-                (ServerMsg::Reply(resp), false)
-            }
-            ClientMsg::Ping => (ServerMsg::Pong, false),
-            ClientMsg::Stats => (ServerMsg::Stats(sh.snapshots()), false),
-            ClientMsg::Shutdown => (ServerMsg::ShutdownAck, true),
-        };
-        // an assoc that cannot possibly fit the frame cap is rejected
-        // *before* encoding — the cap must bound server memory too, not
-        // just wire bytes (encode would otherwise materialise the whole
-        // oversized buffer just to have write_frame refuse it)
-        let oversize = match &reply {
-            ServerMsg::Reply(Ok(crate::coordinator::Response::Assoc(a)))
-                if a.mem_bytes() > wire::MAX_FRAME =>
-            {
-                Some(a.mem_bytes())
-            }
-            _ => None,
-        };
-        if let Some(n) = oversize {
-            reply = ServerMsg::Reply(Err(oversized(n)));
+        if tx.send((id, msg)).is_err() {
+            return Ok(()); // workers gone (only happens on teardown)
         }
-        match send(&mut stream, sh, &reply) {
-            Ok(()) => {}
-            // a response bigger than the frame cap is detected *before*
-            // any bytes hit the socket, so the connection is still in a
-            // clean state: tell the client why instead of vanishing, and
-            // keep serving (the client can re-query with a limit)
-            Err(D4mError::Wire(WireError::FrameTooLarge(n))) => {
-                send(&mut stream, sh, &ServerMsg::Reply(Err(oversized(n))))?;
-            }
-            Err(e) => return Err(e),
+    }
+}
+
+/// Pull work items until the reader hangs up the channel; execute each
+/// against the shared coordinator and write the reply as it completes.
+fn worker_loop(
+    rx: &Mutex<Receiver<(u64, ClientMsg)>>,
+    writer: &Mutex<TcpStream>,
+    sh: &Shared,
+    owner: u64,
+    dead: &AtomicBool,
+) {
+    loop {
+        // the lock is held only across the blocking recv — the classic
+        // shared-receiver pattern: one worker waits, the rest park on
+        // the mutex, and execution happens after the lock is released
+        let item = rx.lock().unwrap().recv();
+        let (id, msg) = match item {
+            Ok(it) => it,
+            Err(_) => return, // reader hung up and the queue is drained
+        };
+        let (reply, shutdown_after) = execute(sh, owner, msg);
+        if !dead.load(Ordering::SeqCst) && send_reply(writer, sh, id, reply).is_err() {
+            dead.store(true, Ordering::SeqCst);
         }
         if shutdown_after {
             sh.initiate_shutdown();
-            return Ok(());
         }
+    }
+}
+
+/// Run one decoded message against the coordinator. Returns the reply
+/// and whether the server should shut down after it is sent.
+fn execute(sh: &Shared, owner: u64, msg: ClientMsg) -> (ServerMsg, bool) {
+    match msg {
+        ClientMsg::Api(req) => {
+            let resp = sh.requests.time(|| sh.server.handle(req));
+            (ServerMsg::Reply(resp), false)
+        }
+        // the frame-level header already enforces version equality; the
+        // in-payload version lets a future vN+1 probe a vN server
+        // explicitly (the client checks the Pong's version)
+        ClientMsg::Ping { version: _ } => (ServerMsg::Pong { version: wire::VERSION }, false),
+        ClientMsg::Stats => (ServerMsg::Stats(sh.snapshots()), false),
+        ClientMsg::Shutdown => (ServerMsg::ShutdownAck, true),
+        ClientMsg::OpenCursor { table, query, page_entries } => {
+            // clamp what a remote peer may ask for: the per-page byte
+            // budget (cursor::PAGE_BYTE_BUDGET) bounds memory anyway,
+            // but a sane entry cap keeps a hostile ask from reserving
+            // absurd page buffers
+            let pe = usize::try_from(page_entries)
+                .unwrap_or(MAX_PAGE_ENTRIES)
+                .clamp(1, MAX_PAGE_ENTRIES);
+            let r = sh
+                .requests
+                .time(|| sh.server.open_cursor_owned(owner, &table, &query, pe));
+            (
+                match r {
+                    Ok(cursor) => ServerMsg::CursorOpened { cursor },
+                    Err(e) => ServerMsg::Reply(Err(e)),
+                },
+                false,
+            )
+        }
+        ClientMsg::CursorNext { cursor } => {
+            let r = sh.requests.time(|| sh.server.cursor_next_owned(owner, cursor));
+            let msg = match r {
+                // a pathological page (single triples beyond the byte
+                // budget) that cannot fit one frame: a retry after a
+                // downgraded send would silently skip the dropped page,
+                // so close the cursor and say why
+                Ok(page) if page_wire_bytes(&page) > wire::MAX_FRAME - 1024 => {
+                    let bytes = page_wire_bytes(&page);
+                    let _ = sh.server.cursor_close_owned(owner, cursor);
+                    ServerMsg::Reply(Err(oversized(bytes)))
+                }
+                Ok(page) => ServerMsg::CursorPage(page),
+                Err(e) => ServerMsg::Reply(Err(e)),
+            };
+            (msg, false)
+        }
+        ClientMsg::CursorClose { cursor } => (
+            match sh.server.cursor_close_owned(owner, cursor) {
+                Ok(()) => ServerMsg::CursorClosed,
+                Err(e) => ServerMsg::Reply(Err(e)),
+            },
+            false,
+        ),
+    }
+}
+
+/// Write one reply frame, downgrading a too-big-for-one-frame response
+/// to a framed error under the same id (detected before any bytes hit
+/// the socket, so the connection stays clean and keeps serving).
+fn send_reply(writer: &Mutex<TcpStream>, sh: &Shared, id: u64, mut reply: ServerMsg) -> Result<()> {
+    // an assoc that cannot possibly fit the frame cap is rejected
+    // *before* encoding — the cap must bound server memory too, not
+    // just wire bytes (encode would otherwise materialise the whole
+    // oversized buffer just to have write_frame refuse it)
+    let oversize = match &reply {
+        ServerMsg::Reply(Ok(crate::coordinator::Response::Assoc(a)))
+            if a.mem_bytes() > wire::MAX_FRAME =>
+        {
+            Some(a.mem_bytes())
+        }
+        _ => None,
+    };
+    if let Some(n) = oversize {
+        reply = ServerMsg::Reply(Err(oversized(n)));
+    }
+    match send(writer, sh, id, &reply) {
+        Err(D4mError::Wire(WireError::FrameTooLarge(n))) => {
+            send(writer, sh, id, &ServerMsg::Reply(Err(oversized(n))))
+        }
+        other => other,
     }
 }
 
@@ -358,12 +555,13 @@ impl Read for DeadlineReader<'_> {
 }
 
 /// A bad frame poisons the connection, never the server: best-effort
-/// framed error back to the peer, then close (by returning). Only
-/// protocol-level failures land here (`net.bad_frames` counts hostile
-/// or corrupt input, not routine disconnects).
-fn poison(stream: &mut TcpStream, sh: &Shared, e: D4mError) -> Result<()> {
+/// framed error (reserved id 0 — it answers no specific request) back
+/// to the peer, then close (by returning). Only protocol-level failures
+/// land here (`net.bad_frames` counts hostile or corrupt input, not
+/// routine disconnects).
+fn poison(writer: &Mutex<TcpStream>, sh: &Shared, e: D4mError) -> Result<()> {
     sh.bad_frames.inc();
-    let _ = send(stream, sh, &ServerMsg::Reply(Err(e)));
+    let _ = send(writer, sh, wire::CONN_ERR_ID, &ServerMsg::Reply(Err(e)));
     Ok(())
 }
 
@@ -371,14 +569,21 @@ fn poison(stream: &mut TcpStream, sh: &Shared, e: D4mError) -> Result<()> {
 fn oversized(bytes: usize) -> D4mError {
     D4mError::InvalidArg(format!(
         "response of ~{bytes} bytes exceeds the {} byte frame cap — \
-         narrow the query or use a limit",
+         narrow the query, use a limit, or stream it with a cursor \
+         (scan_pages)",
         wire::MAX_FRAME
     ))
 }
 
-fn send(stream: &mut TcpStream, sh: &Shared, msg: &ServerMsg) -> Result<()> {
-    let buf = wire::encode_server_msg(msg);
-    wire::write_frame(stream, &buf)?;
+fn send(writer: &Mutex<TcpStream>, sh: &Shared, id: u64, msg: &ServerMsg) -> Result<()> {
+    let buf = wire::encode_server_frame(id, msg);
+    if buf.len() > wire::MAX_FRAME {
+        // check before taking the lock so an oversized encode can never
+        // interleave a partial frame
+        return Err(WireError::FrameTooLarge(buf.len()).into());
+    }
+    let mut stream = writer.lock().unwrap();
+    wire::write_frame(&mut *stream, &buf)?;
     sh.bytes_out.add((wire::HEADER_LEN + buf.len()) as u64);
     Ok(())
 }

@@ -5,16 +5,23 @@
 //! magic header per frame and typed decode errors ([`WireError`]) — a
 //! corrupt or truncated frame is always an `Err`, never a panic.
 //!
-//! §Frame layout (see DESIGN.md §Network front-end):
+//! §Frame layout (see DESIGN.md §Wire v2):
 //!
 //! ```text
-//! +-----------+---------+----------------+------------------+
-//! | "D4M" (3) | ver (1) | len u32 LE (4) | payload (len)    |
-//! +-----------+---------+----------------+------------------+
+//! +-----------+---------+----------------+--------------------------+
+//! | "D4M" (3) | ver (1) | len u32 LE (4) | id varint | msg (rest)   |
+//! +-----------+---------+----------------+--------------------------+
 //! ```
 //!
-//! The payload is one message: a [`ClientMsg`] (client→server) or a
-//! [`ServerMsg`] (server→client), each a tag byte followed by its body.
+//! **v2 is session-oriented**: every payload starts with a
+//! client-assigned *request id* (LEB128 varint), followed by one message
+//! — a [`ClientMsg`] (client→server) or a [`ServerMsg`] (server→client),
+//! each a tag byte plus its body. A connection may have many requests in
+//! flight; the server answers each with a frame carrying the same id,
+//! **in any order**. Id `0` is reserved for connection-level server
+//! errors (a frame the server could not attribute to a request); clients
+//! assign ids from 1.
+//!
 //! Primitive encodings: `u64` as LEB128 varints (canonical-length not
 //! required, overflow rejected), `f64` as 8 bytes LE of `to_bits` (bit
 //! exact), strings as varint byte length + UTF-8, `Option` as a presence
@@ -22,9 +29,15 @@
 //!
 //! §Versioning rules: the header's version byte is bumped on **any**
 //! change to an existing message/tag encoding; adding a new trailing tag
-//! value is the only compatible evolution. A server/client seeing an
-//! unknown version refuses the frame with [`WireError::BadVersion`]
-//! before reading the payload.
+//! value is the only compatible evolution. A peer seeing any other
+//! version refuses the frame with [`WireError::Version`] *before*
+//! reading the payload — so a v1 peer talking to a v2 peer gets one
+//! typed version error instead of a decode failure mid-stream — and
+//! `Ping`/`Pong` carry the sender's version in-payload so a client can
+//! probe compatibility explicitly. v1 → v2: request-id prefix added to
+//! every payload, `Ping`/`Pong` gained the version byte, cursor
+//! messages (`OpenCursor`/`CursorNext`/`CursorClose` and
+//! `CursorOpened`/`CursorPage`/`CursorClosed`) added.
 //!
 //! [`Assoc`] frames carry the array structurally — sorted key vectors,
 //! the optional value-key table and the raw CSR arrays — so a decoded
@@ -41,7 +54,7 @@ use std::time::Duration;
 use crate::assoc::spmat::SpMat;
 use crate::assoc::{Assoc, KeySel};
 use crate::connectors::TableQuery;
-use crate::coordinator::{Request, Response};
+use crate::coordinator::{CursorPage, Request, Response};
 use crate::error::D4mError;
 use crate::graphulo::{PageRankOpts, PageRankResult, TableMultStats};
 use crate::metrics::Snapshot;
@@ -49,8 +62,12 @@ use crate::pipeline::{IngestReport, PipelineConfig, TripleMsg};
 
 /// Frame magic (the version byte follows it).
 pub const MAGIC: [u8; 3] = *b"D4M";
-/// Wire-protocol version carried in every frame header.
-pub const VERSION: u8 = 1;
+/// Wire-protocol version carried in every frame header (v2: request-id
+/// framing + cursor messages).
+pub const VERSION: u8 = 2;
+/// Request id reserved for connection-level server errors (a reply the
+/// server could not attribute to any request). Clients assign from 1.
+pub const CONN_ERR_ID: u64 = 0;
 /// Bytes of frame header preceding the payload.
 pub const HEADER_LEN: usize = 8;
 /// Upper bound on a frame payload; a declared length beyond this is
@@ -74,8 +91,10 @@ pub enum WireError {
     Truncated,
     /// Frame header did not start with `b"D4M"`.
     BadMagic([u8; 3]),
-    /// Frame header carried an unsupported protocol version.
-    BadVersion(u8),
+    /// Frame (or `Pong`) carried a protocol version this peer does not
+    /// speak — the typed outcome of a v1↔v2 pairing, surfaced before any
+    /// payload is read.
+    Version { got: u8, want: u8 },
     /// Declared payload length exceeds [`MAX_FRAME`].
     FrameTooLarge(usize),
     /// A tag byte outside the known range for `what`.
@@ -93,7 +112,9 @@ impl std::fmt::Display for WireError {
         match self {
             WireError::Truncated => write!(f, "truncated input"),
             WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
-            WireError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            WireError::Version { got, want } => {
+                write!(f, "unsupported wire version {got} (this peer speaks v{want})")
+            }
             WireError::FrameTooLarge(n) => {
                 write!(f, "frame of {n} bytes exceeds the {MAX_FRAME}-byte cap")
             }
@@ -113,30 +134,51 @@ pub type WireResult<T> = std::result::Result<T, WireError>;
 // ---------------------------------------------------------------------
 // messages
 
-/// Client→server messages: the coordinator API plus the three admin
-/// verbs the CLI and CI harness need.
+/// Client→server messages: the coordinator API, the cursor ops, and the
+/// three admin verbs the CLI and CI harness need. On the wire each is
+/// prefixed by its client-assigned request id (see the module docs).
 #[derive(Debug)]
 pub enum ClientMsg {
     /// A coordinator [`Request`], answered by [`ServerMsg::Reply`].
     Api(Request),
-    /// Liveness probe, answered by [`ServerMsg::Pong`].
-    Ping,
+    /// Liveness + version probe (carries the client's wire version),
+    /// answered by [`ServerMsg::Pong`].
+    Ping { version: u8 },
     /// Metrics snapshot request, answered by [`ServerMsg::Stats`].
     Stats,
     /// Graceful server shutdown, answered by [`ServerMsg::ShutdownAck`].
     Shutdown,
+    /// Open a streaming scan cursor, answered by
+    /// [`ServerMsg::CursorOpened`] (or an error [`ServerMsg::Reply`]).
+    OpenCursor { table: String, query: TableQuery, page_entries: u64 },
+    /// Pull the next page of an open cursor, answered by
+    /// [`ServerMsg::CursorPage`].
+    CursorNext { cursor: u64 },
+    /// Close a cursor early (idempotent), answered by
+    /// [`ServerMsg::CursorClosed`].
+    CursorClose { cursor: u64 },
 }
 
-/// Server→client messages.
+/// Server→client messages (each carries the request id it answers).
 #[derive(Debug)]
 pub enum ServerMsg {
     /// Outcome of [`ClientMsg::Api`]: the coordinator's response, or its
-    /// error carried across the wire.
+    /// error carried across the wire. Also the error shape for failed
+    /// cursor/admin ops and (with id [`CONN_ERR_ID`]) connection-level
+    /// failures.
     Reply(crate::error::Result<Response>),
-    Pong,
+    /// Answer to [`ClientMsg::Ping`], carrying the server's wire version.
+    Pong { version: u8 },
     /// Per-op metrics snapshots plus the net-layer counters.
     Stats(Vec<Snapshot>),
     ShutdownAck,
+    /// A cursor was opened; `cursor` keys the follow-up ops.
+    CursorOpened { cursor: u64 },
+    /// One page of cursor results (at most the cursor's `page_entries`
+    /// triples; `done` means the server already freed the cursor).
+    CursorPage(CursorPage),
+    /// Acknowledges [`ClientMsg::CursorClose`].
+    CursorClosed,
 }
 
 // ---------------------------------------------------------------------
@@ -175,7 +217,7 @@ pub fn read_frame_rest(first: u8, r: &mut impl Read) -> crate::error::Result<Vec
         return Err(WireError::BadMagic(magic).into());
     }
     if rest[2] != VERSION {
-        return Err(WireError::BadVersion(rest[2]).into());
+        return Err(WireError::Version { got: rest[2], want: VERSION }.into());
     }
     let len = u32::from_le_bytes([rest[3], rest[4], rest[5], rest[6]]) as usize;
     if len > MAX_FRAME {
@@ -792,6 +834,11 @@ fn put_error(b: &mut Vec<u8>, e: &D4mError) {
             put_u8(b, 7);
             put_str(b, s);
         }
+        D4mError::UnexpectedResponse { expected, got } => {
+            put_u8(b, 11);
+            put_str(b, expected);
+            put_str(b, got);
+        }
         D4mError::Io(e) => {
             put_u8(b, 8);
             put_str(b, &e.to_string());
@@ -823,45 +870,75 @@ fn get_error(c: &mut Cursor) -> WireResult<D4mError> {
         8 => D4mError::Remote(format!("io: {}", c.str()?)),
         9 => D4mError::Remote(format!("wire: {}", c.str()?)),
         10 => D4mError::Remote(c.str()?),
+        11 => D4mError::UnexpectedResponse { expected: c.str()?, got: c.str()? },
         tag => return Err(WireError::UnknownTag { what: "error", tag }),
     })
 }
 
 // ---------------------------------------------------------------------
-// top-level messages
+// top-level frames (request id + message)
 
-/// Encode a [`ClientMsg`] payload.
-pub fn encode_client_msg(m: &ClientMsg) -> Vec<u8> {
+/// Encode a client frame payload: request `id` varint, then the message.
+pub fn encode_client_frame(id: u64, m: &ClientMsg) -> Vec<u8> {
     let mut b = Vec::new();
+    put_varint(&mut b, id);
     match m {
         ClientMsg::Api(req) => {
             put_u8(&mut b, 0);
             encode_request(&mut b, req);
         }
-        ClientMsg::Ping => put_u8(&mut b, 1),
+        ClientMsg::Ping { version } => {
+            put_u8(&mut b, 1);
+            put_u8(&mut b, *version);
+        }
         ClientMsg::Stats => put_u8(&mut b, 2),
         ClientMsg::Shutdown => put_u8(&mut b, 3),
+        ClientMsg::OpenCursor { table, query, page_entries } => {
+            put_u8(&mut b, 4);
+            put_str(&mut b, table);
+            put_query(&mut b, query);
+            put_varint(&mut b, *page_entries);
+        }
+        ClientMsg::CursorNext { cursor } => {
+            put_u8(&mut b, 5);
+            put_varint(&mut b, *cursor);
+        }
+        ClientMsg::CursorClose { cursor } => {
+            put_u8(&mut b, 6);
+            put_varint(&mut b, *cursor);
+        }
     }
     b
 }
 
-/// Decode a [`ClientMsg`] payload (must consume every byte).
-pub fn decode_client_msg(buf: &[u8]) -> WireResult<ClientMsg> {
+/// Decode a client frame payload into `(request id, message)` (must
+/// consume every byte).
+pub fn decode_client_frame(buf: &[u8]) -> WireResult<(u64, ClientMsg)> {
     let mut c = Cursor::new(buf);
+    let id = c.varint()?;
     let m = match c.u8()? {
         0 => ClientMsg::Api(get_request(&mut c)?),
-        1 => ClientMsg::Ping,
+        1 => ClientMsg::Ping { version: c.u8()? },
         2 => ClientMsg::Stats,
         3 => ClientMsg::Shutdown,
+        4 => ClientMsg::OpenCursor {
+            table: c.str()?,
+            query: get_query(&mut c)?,
+            page_entries: c.varint()?,
+        },
+        5 => ClientMsg::CursorNext { cursor: c.varint()? },
+        6 => ClientMsg::CursorClose { cursor: c.varint()? },
         tag => return Err(WireError::UnknownTag { what: "ClientMsg", tag }),
     };
     c.finish()?;
-    Ok(m)
+    Ok((id, m))
 }
 
-/// Encode a [`ServerMsg`] payload.
-pub fn encode_server_msg(m: &ServerMsg) -> Vec<u8> {
+/// Encode a server frame payload: the answered request `id`, then the
+/// message.
+pub fn encode_server_frame(id: u64, m: &ServerMsg) -> Vec<u8> {
     let mut b = Vec::new();
+    put_varint(&mut b, id);
     match m {
         ServerMsg::Reply(Ok(resp)) => {
             put_u8(&mut b, 0);
@@ -871,7 +948,10 @@ pub fn encode_server_msg(m: &ServerMsg) -> Vec<u8> {
             put_u8(&mut b, 1);
             put_error(&mut b, e);
         }
-        ServerMsg::Pong => put_u8(&mut b, 2),
+        ServerMsg::Pong { version } => {
+            put_u8(&mut b, 2);
+            put_u8(&mut b, *version);
+        }
         ServerMsg::Stats(snaps) => {
             put_u8(&mut b, 3);
             put_varint(&mut b, snaps.len() as u64);
@@ -884,17 +964,34 @@ pub fn encode_server_msg(m: &ServerMsg) -> Vec<u8> {
             }
         }
         ServerMsg::ShutdownAck => put_u8(&mut b, 4),
+        ServerMsg::CursorOpened { cursor } => {
+            put_u8(&mut b, 5);
+            put_varint(&mut b, *cursor);
+        }
+        ServerMsg::CursorPage(page) => {
+            put_u8(&mut b, 6);
+            put_varint(&mut b, page.triples.len() as u64);
+            for (r, col, v) in &page.triples {
+                put_str(&mut b, r);
+                put_str(&mut b, col);
+                put_str(&mut b, v);
+            }
+            put_bool(&mut b, page.done);
+        }
+        ServerMsg::CursorClosed => put_u8(&mut b, 7),
     }
     b
 }
 
-/// Decode a [`ServerMsg`] payload (must consume every byte).
-pub fn decode_server_msg(buf: &[u8]) -> WireResult<ServerMsg> {
+/// Decode a server frame payload into `(request id, message)` (must
+/// consume every byte).
+pub fn decode_server_frame(buf: &[u8]) -> WireResult<(u64, ServerMsg)> {
     let mut c = Cursor::new(buf);
+    let id = c.varint()?;
     let m = match c.u8()? {
         0 => ServerMsg::Reply(Ok(get_response(&mut c)?)),
         1 => ServerMsg::Reply(Err(get_error(&mut c)?)),
-        2 => ServerMsg::Pong,
+        2 => ServerMsg::Pong { version: c.u8()? },
         3 => {
             let n = c.count(18)?; // name len + count + 2 f64s + p99
             let mut snaps = Vec::with_capacity(n.min(PREALLOC_CAP));
@@ -910,10 +1007,20 @@ pub fn decode_server_msg(buf: &[u8]) -> WireResult<ServerMsg> {
             ServerMsg::Stats(snaps)
         }
         4 => ServerMsg::ShutdownAck,
+        5 => ServerMsg::CursorOpened { cursor: c.varint()? },
+        6 => {
+            let n = c.count(3)?; // each triple: 3 length bytes minimum
+            let mut triples: Vec<TripleMsg> = Vec::with_capacity(n.min(PREALLOC_CAP));
+            for _ in 0..n {
+                triples.push((c.str()?, c.str()?, c.str()?));
+            }
+            ServerMsg::CursorPage(CursorPage { triples, done: c.bool()? })
+        }
+        7 => ServerMsg::CursorClosed,
         tag => return Err(WireError::UnknownTag { what: "ServerMsg", tag }),
     };
     c.finish()?;
-    Ok(m)
+    Ok((id, m))
 }
 
 #[cfg(test)]
@@ -1071,15 +1178,101 @@ mod tests {
     }
 
     #[test]
-    fn response_roundtrip_randomized() {
+    fn response_roundtrip_randomized_with_ids() {
         crate::util::forall(500, 0xD4A2, |rng| {
             let resp = rand_response(rng);
-            let b = encode_server_msg(&ServerMsg::Reply(Ok(resp.clone())));
-            match decode_server_msg(&b).expect("decode") {
-                ServerMsg::Reply(Ok(back)) => assert_eq!(resp, back),
+            let id = rng.below(1 << 40);
+            let b = encode_server_frame(id, &ServerMsg::Reply(Ok(resp.clone())));
+            match decode_server_frame(&b).expect("decode") {
+                (back_id, ServerMsg::Reply(Ok(back))) => {
+                    assert_eq!(id, back_id, "request id did not round-trip");
+                    assert_eq!(resp, back);
+                }
                 other => panic!("wrong message shape: {other:?}"),
             }
         });
+    }
+
+    #[test]
+    fn client_frame_roundtrip_randomized_with_ids() {
+        crate::util::forall(300, 0xD4A7, |rng| {
+            let req = rand_request(rng);
+            let id = 1 + rng.below(1 << 40);
+            let b = encode_client_frame(id, &ClientMsg::Api(req.clone()));
+            match decode_client_frame(&b).expect("decode") {
+                (back_id, ClientMsg::Api(back)) => {
+                    assert_eq!(id, back_id);
+                    assert_eq!(req, back);
+                }
+                other => panic!("wrong message shape: {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn cursor_msgs_roundtrip() {
+        let mut rng = XorShift64::new(0xD4C0);
+        for _ in 0..50 {
+            let id = rng.below(1 << 30);
+            let open = ClientMsg::OpenCursor {
+                table: rand_str(&mut rng),
+                query: rand_query(&mut rng),
+                page_entries: 1 + rng.below(1 << 20),
+            };
+            let b = encode_client_frame(id, &open);
+            match (decode_client_frame(&b).unwrap(), &open) {
+                (
+                    (bid, ClientMsg::OpenCursor { table, query, page_entries }),
+                    ClientMsg::OpenCursor { table: t0, query: q0, page_entries: p0 },
+                ) => {
+                    assert_eq!(bid, id);
+                    assert_eq!(&table, t0);
+                    assert_eq!(&query, q0);
+                    assert_eq!(&page_entries, p0);
+                }
+                other => panic!("wrong shape: {other:?}"),
+            }
+            for m in [
+                ClientMsg::CursorNext { cursor: rng.below(1 << 30) },
+                ClientMsg::CursorClose { cursor: rng.below(1 << 30) },
+            ] {
+                let b = encode_client_frame(id, &m);
+                let (bid, back) = decode_client_frame(&b).unwrap();
+                assert_eq!(bid, id);
+                match (&m, &back) {
+                    (
+                        ClientMsg::CursorNext { cursor: a },
+                        ClientMsg::CursorNext { cursor: b },
+                    )
+                    | (
+                        ClientMsg::CursorClose { cursor: a },
+                        ClientMsg::CursorClose { cursor: b },
+                    ) => assert_eq!(a, b),
+                    other => panic!("wrong shape: {other:?}"),
+                }
+            }
+            let page = CursorPage {
+                triples: (0..rng.below(6))
+                    .map(|_| (rand_str(&mut rng), rand_str(&mut rng), rand_str(&mut rng)))
+                    .collect(),
+                done: rng.below(2) == 0,
+            };
+            let b = encode_server_frame(id, &ServerMsg::CursorPage(page.clone()));
+            match decode_server_frame(&b).unwrap() {
+                (bid, ServerMsg::CursorPage(back)) => {
+                    assert_eq!(bid, id);
+                    assert_eq!(back, page);
+                }
+                other => panic!("wrong shape: {other:?}"),
+            }
+            let b = encode_server_frame(id, &ServerMsg::CursorOpened { cursor: 42 });
+            assert!(matches!(
+                decode_server_frame(&b).unwrap(),
+                (_, ServerMsg::CursorOpened { cursor: 42 })
+            ));
+            let b = encode_server_frame(id, &ServerMsg::CursorClosed);
+            assert!(matches!(decode_server_frame(&b).unwrap(), (_, ServerMsg::CursorClosed)));
+        }
     }
 
     #[test]
@@ -1118,32 +1311,55 @@ mod tests {
             D4mError::Runtime("r".into()),
             D4mError::Pipeline("l".into()),
             D4mError::InvalidArg("i".into()),
+            D4mError::UnexpectedResponse { expected: "Assoc".into(), got: "Tables".into() },
             D4mError::Remote("far away".into()),
         ];
         for e in errs {
             let expect = e.to_string();
-            let b = encode_server_msg(&ServerMsg::Reply(Err(e)));
-            match decode_server_msg(&b).unwrap() {
-                ServerMsg::Reply(Err(back)) => assert_eq!(back.to_string(), expect),
+            let b = encode_server_frame(9, &ServerMsg::Reply(Err(e)));
+            match decode_server_frame(&b).unwrap() {
+                (9, ServerMsg::Reply(Err(back))) => assert_eq!(back.to_string(), expect),
                 other => panic!("wrong message shape: {other:?}"),
             }
         }
+        // the shape-check error stays structured across the wire
+        let e = D4mError::UnexpectedResponse { expected: "Ok".into(), got: "Assoc".into() };
+        let b = encode_server_frame(1, &ServerMsg::Reply(Err(e)));
+        match decode_server_frame(&b).unwrap() {
+            (_, ServerMsg::Reply(Err(D4mError::UnexpectedResponse { expected, got }))) => {
+                assert_eq!(expected, "Ok");
+                assert_eq!(got, "Assoc");
+            }
+            other => panic!("expected UnexpectedResponse, got {other:?}"),
+        }
         // Io / Wire arrive as Remote (process-local payloads)
         let io = D4mError::Io(std::io::Error::other("disk gone"));
-        let b = encode_server_msg(&ServerMsg::Reply(Err(io)));
-        match decode_server_msg(&b).unwrap() {
-            ServerMsg::Reply(Err(D4mError::Remote(s))) => assert!(s.contains("disk gone")),
+        let b = encode_server_frame(2, &ServerMsg::Reply(Err(io)));
+        match decode_server_frame(&b).unwrap() {
+            (_, ServerMsg::Reply(Err(D4mError::Remote(s)))) => assert!(s.contains("disk gone")),
             other => panic!("io error should decode as Remote, got {other:?}"),
         }
     }
 
     #[test]
     fn admin_msgs_roundtrip() {
-        for m in [ClientMsg::Ping, ClientMsg::Stats, ClientMsg::Shutdown] {
-            let b = encode_client_msg(&m);
-            let back = decode_client_msg(&b).unwrap();
+        for m in [ClientMsg::Ping { version: VERSION }, ClientMsg::Stats, ClientMsg::Shutdown] {
+            let b = encode_client_frame(3, &m);
+            let (id, back) = decode_client_frame(&b).unwrap();
+            assert_eq!(id, 3);
             assert_eq!(std::mem::discriminant(&m), std::mem::discriminant(&back));
         }
+        // ping/pong carry the wire version for explicit negotiation
+        let b = encode_client_frame(1, &ClientMsg::Ping { version: VERSION });
+        assert!(matches!(
+            decode_client_frame(&b).unwrap(),
+            (1, ClientMsg::Ping { version: VERSION })
+        ));
+        let b = encode_server_frame(1, &ServerMsg::Pong { version: VERSION });
+        assert!(matches!(
+            decode_server_frame(&b).unwrap(),
+            (1, ServerMsg::Pong { version: VERSION })
+        ));
         let snaps = vec![Snapshot {
             name: "net.requests".into(),
             count: 42,
@@ -1151,9 +1367,9 @@ mod tests {
             mean_latency_ns: 12.0,
             p99_latency_ns: 99,
         }];
-        let b = encode_server_msg(&ServerMsg::Stats(snaps.clone()));
-        match decode_server_msg(&b).unwrap() {
-            ServerMsg::Stats(back) => assert_eq!(back, snaps),
+        let b = encode_server_frame(4, &ServerMsg::Stats(snaps.clone()));
+        match decode_server_frame(&b).unwrap() {
+            (4, ServerMsg::Stats(back)) => assert_eq!(back, snaps),
             other => panic!("wrong message shape: {other:?}"),
         }
     }
@@ -1163,7 +1379,7 @@ mod tests {
 
     #[test]
     fn frame_roundtrip() {
-        let payload = encode_client_msg(&ClientMsg::Api(Request::ListTables));
+        let payload = encode_client_frame(12, &ClientMsg::Api(Request::ListTables));
         let mut buf = Vec::new();
         write_frame(&mut buf, &payload).unwrap();
         assert_eq!(buf.len(), HEADER_LEN + payload.len());
@@ -1175,7 +1391,7 @@ mod tests {
     fn truncated_frame_is_typed_error_at_every_cut() {
         let mut rng = XorShift64::new(0xD4A4);
         let req = rand_request(&mut rng);
-        let payload = encode_client_msg(&ClientMsg::Api(req));
+        let payload = encode_client_frame(1, &ClientMsg::Api(req));
         let mut buf = Vec::new();
         write_frame(&mut buf, &payload).unwrap();
         for cut in 0..buf.len() {
@@ -1193,10 +1409,10 @@ mod tests {
         let mut rng = XorShift64::new(0xD4A5);
         for _ in 0..20 {
             let resp = rand_response(&mut rng);
-            let b = encode_server_msg(&ServerMsg::Reply(Ok(resp)));
+            let b = encode_server_frame(rng.below(1 << 20), &ServerMsg::Reply(Ok(resp)));
             for cut in 0..b.len() {
                 assert!(
-                    decode_server_msg(&b[..cut]).is_err(),
+                    decode_server_frame(&b[..cut]).is_err(),
                     "cut {cut} of {} decoded",
                     b.len()
                 );
@@ -1209,19 +1425,19 @@ mod tests {
         let mut rng = XorShift64::new(0xD4A6);
         for _ in 0..20 {
             let req = rand_request(&mut rng);
-            let mut b = encode_client_msg(&ClientMsg::Api(req));
+            let mut b = encode_client_frame(rng.below(1 << 20), &ClientMsg::Api(req));
             for i in 0..b.len() {
                 let orig = b[i];
                 b[i] ^= 0xFF;
-                let _ = decode_client_msg(&b); // Ok or Err — never a panic
+                let _ = decode_client_frame(&b); // Ok or Err — never a panic
                 b[i] = orig;
             }
             let resp = rand_response(&mut rng);
-            let mut b = encode_server_msg(&ServerMsg::Reply(Ok(resp)));
+            let mut b = encode_server_frame(rng.below(1 << 20), &ServerMsg::Reply(Ok(resp)));
             for i in 0..b.len() {
                 let orig = b[i];
                 b[i] = b[i].wrapping_add(0x55);
-                let _ = decode_server_msg(&b);
+                let _ = decode_server_frame(&b);
                 b[i] = orig;
             }
         }
@@ -1229,7 +1445,7 @@ mod tests {
 
     #[test]
     fn bad_magic_and_version_and_size() {
-        let payload = encode_client_msg(&ClientMsg::Ping);
+        let payload = encode_client_frame(1, &ClientMsg::Ping { version: VERSION });
         let mut buf = Vec::new();
         write_frame(&mut buf, &payload).unwrap();
 
@@ -1240,12 +1456,20 @@ mod tests {
             Err(D4mError::Wire(WireError::BadMagic(_)))
         ));
 
-        let mut bad = buf.clone();
-        bad[3] = VERSION + 1;
-        assert!(matches!(
-            read_frame(&mut &bad[..]),
-            Err(D4mError::Wire(WireError::BadVersion(_)))
-        ));
+        // a v1 frame against this v2 codec (and any other version skew)
+        // is one typed error before the payload is touched — never a
+        // decode failure mid-stream
+        for got in [1u8, VERSION + 1] {
+            let mut bad = buf.clone();
+            bad[3] = got;
+            match read_frame(&mut &bad[..]) {
+                Err(D4mError::Wire(WireError::Version { got: g, want })) => {
+                    assert_eq!(g, got);
+                    assert_eq!(want, VERSION);
+                }
+                other => panic!("expected Version error, got {other:?}"),
+            }
+        }
 
         // a header declaring an over-cap length is rejected before any
         // allocation — no 4 GiB Vec for a 12-byte input
@@ -1265,9 +1489,9 @@ mod tests {
 
     #[test]
     fn trailing_bytes_rejected() {
-        let mut b = encode_client_msg(&ClientMsg::Ping);
+        let mut b = encode_client_frame(1, &ClientMsg::Ping { version: VERSION });
         b.push(0);
-        assert!(matches!(decode_client_msg(&b), Err(WireError::TrailingBytes(1))));
+        assert!(matches!(decode_client_frame(&b), Err(WireError::TrailingBytes(1))));
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use d4m::assoc::{Assoc, KeySel};
 use d4m::connectors::{AccumuloConnector, D4mTableConfig, TableQuery};
-use d4m::coordinator::{D4mServer, Request, Response};
+use d4m::coordinator::{D4mApi, D4mServer};
 use d4m::gen::{kronecker_assoc, kronecker_triples, vertex_key, KroneckerParams};
 use d4m::graphulo::{self, ClientCtx, TableMultOpts};
 use d4m::kvstore::{KvStore, RowRange};
@@ -18,23 +18,20 @@ use d4m::polystore::{Island, Polystore};
 fn fig2_path_small() {
     let params = KroneckerParams::new(8, 8, 7);
     let server = D4mServer::with_engine(None);
-    let rep = server
-        .handle(Request::Ingest {
-            table: "G".into(),
-            triples: kronecker_triples(&params),
-            pipeline: PipelineConfig { num_workers: 3, batch_size: 256, ..Default::default() },
-        })
+    // the test drives the coordinator through the `D4mApi` trait — the
+    // same calls a remote client would make
+    let r = server
+        .ingest(
+            "G",
+            kronecker_triples(&params),
+            PipelineConfig { num_workers: 3, batch_size: 256, ..Default::default() },
+        )
         .unwrap();
-    let Response::Ingested(r) = rep else { panic!() };
     assert_eq!(r.triples, params.num_edges());
 
-    server.handle(Request::TableMult { a: "G".into(), b: "G".into(), out: "C".into() }).unwrap();
+    server.tablemult("G", "G", "C").unwrap();
     let server_c = graphulo::read_product(&server.store().table("C").unwrap()).unwrap();
-    let client_c = server
-        .handle(Request::TableMultClient { a: "G".into(), b: "G".into(), memory_limit: usize::MAX })
-        .unwrap()
-        .into_assoc()
-        .unwrap();
+    let client_c = server.tablemult_client("G", "G", usize::MAX).unwrap();
     assert_eq!(server_c.triples(), client_c.triples());
 }
 

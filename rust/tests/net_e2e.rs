@@ -2,17 +2,22 @@
 //! shared `D4mServer`, driven by real `RemoteD4m` connections on
 //! loopback.
 //!
-//! The load-bearing assertion (the acceptance criterion of the net PR):
-//! **4 concurrent remote clients issuing the same `TableQuery` each get
-//! an answer bit-identical to the in-process `D4mServer::handle`
-//! answer** — the remote path adds transport, never semantics.
+//! The load-bearing assertions (the acceptance criteria of the net
+//! PRs): **4 concurrent remote clients issuing the same `TableQuery`
+//! each get an answer bit-identical to the in-process
+//! `D4mServer::handle` answer**; **one connection with 8 pipelined
+//! in-flight requests completes all of them with out-of-order responses
+//! correctly correlated by request id**; and **a remote paged scan over
+//! a table larger than one page is bit-identical to the one-shot query
+//! while every page respects the `page_entries` bound** — the remote
+//! path adds transport, never semantics.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use d4m::assoc::KeySel;
 use d4m::connectors::TableQuery;
-use d4m::coordinator::{D4mServer, Request, Response};
+use d4m::coordinator::{D4mApi, D4mServer, Request, Response};
 use d4m::net::{serve, NetOpts, RemoteD4m};
 use d4m::pipeline::{PipelineConfig, TripleMsg};
 use d4m::D4mError;
@@ -203,8 +208,9 @@ fn bad_frame_poisons_connection_not_server() {
     raw.read_to_end(&mut reply).ok(); // server closes after the error frame
     assert!(!reply.is_empty(), "expected a framed error before close");
     let payload = d4m::net::wire::read_frame(&mut &reply[..]).expect("framed error reply");
-    match d4m::net::wire::decode_server_msg(&payload).expect("decodable reply") {
-        d4m::net::wire::ServerMsg::Reply(Err(e)) => {
+    match d4m::net::wire::decode_server_frame(&payload).expect("decodable reply") {
+        (id, d4m::net::wire::ServerMsg::Reply(Err(e))) => {
+            assert_eq!(id, d4m::net::wire::CONN_ERR_ID, "poison must use the reserved id");
             assert!(matches!(e, D4mError::Wire(_) | D4mError::Remote(_)), "got {e:?}");
         }
         other => panic!("expected an error reply, got {other:?}"),
@@ -237,6 +243,204 @@ fn client_initiated_shutdown_quiesces_server() {
         Err(_) => {}
         Ok(c2) => assert!(c2.ping().is_err(), "server answered after shutdown"),
     }
+}
+
+/// Acceptance criterion: 8 pipelined in-flight requests on ONE
+/// connection, claimed newest-first so responses are consumed out of
+/// submission order, every one correlated to the right request by id.
+#[test]
+fn pipelined_requests_correlate_out_of_order() {
+    let server = server_with_graph();
+    let (mut handle, addr) = spawn_net(server.clone());
+    let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+
+    // two distinguishable request shapes, alternating
+    let row_q = |k: &str| TableQuery::all().rows(KeySel::keys(&[k]));
+    let want_a = server
+        .handle(Request::Query { table: "G".into(), query: row_q("a") })
+        .unwrap()
+        .into_assoc()
+        .unwrap();
+
+    for _round in 0..5 {
+        let mut ids: Vec<(u64, bool)> = Vec::new();
+        for i in 0..8 {
+            let expect_tables = i % 2 == 0;
+            let req = if expect_tables {
+                Request::ListTables
+            } else {
+                Request::Query { table: "G".into(), query: row_q("a") }
+            };
+            ids.push((c.submit(req).unwrap(), expect_tables));
+        }
+        // claim in reverse submission order: the earlier responses land
+        // while we wait on the last id and must be parked + correlated
+        for (id, expect_tables) in ids.into_iter().rev() {
+            match c.wait(id).unwrap() {
+                Response::Tables(ts) => {
+                    assert!(expect_tables, "Tables answer correlated to a Query id");
+                    assert!(ts.iter().any(|t| t == "G"));
+                }
+                Response::Assoc(a) => {
+                    assert!(!expect_tables, "Assoc answer correlated to a ListTables id");
+                    assert_eq!(a, want_a, "pipelined query answer diverged");
+                }
+                other => panic!("unexpected response {other:?}"),
+            }
+        }
+    }
+    // ids are claimable exactly once: a re-wait on a claimed id and a
+    // wait on a never-submitted id both fail typed instead of hanging
+    match c.wait(1) {
+        Err(D4mError::InvalidArg(msg)) => assert!(msg.contains("not in flight")),
+        other => panic!("double-wait should fail typed, got {other:?}"),
+    }
+    match c.wait(u64::MAX) {
+        Err(D4mError::InvalidArg(msg)) => assert!(msg.contains("not in flight")),
+        other => panic!("unknown-id wait should fail typed, got {other:?}"),
+    }
+    // a submitted-then-forgotten id is discarded, not parked forever
+    let id = c.submit(Request::ListTables).unwrap();
+    c.forget(id);
+    match c.wait(id) {
+        Err(D4mError::InvalidArg(_)) => {}
+        other => panic!("forgotten-id wait should fail typed, got {other:?}"),
+    }
+    // and the connection stays healthy after all of it
+    c.ping().unwrap();
+    handle.shutdown();
+}
+
+/// Acceptance criterion: a remote paged scan over a table larger than
+/// one page is bit-identical to the in-process one-shot query, and no
+/// page exceeds `page_entries`.
+#[test]
+fn remote_scan_pages_bit_identical_and_bounded() {
+    let server = Arc::new(D4mServer::with_engine(None));
+    // 60 entries so a 7-entry page leaves many page boundaries
+    let triples: Vec<TripleMsg> = (0..60)
+        .map(|i| (format!("r{:02}", i % 12), format!("c{:02}", i / 12 * 5 + i % 5), "1".into()))
+        .collect();
+    server
+        .handle(Request::Ingest {
+            table: "G".into(),
+            triples,
+            pipeline: PipelineConfig { num_workers: 2, ..Default::default() },
+        })
+        .unwrap();
+    let (mut handle, addr) = spawn_net(server.clone());
+
+    let want = server
+        .handle(Request::Query { table: "G".into(), query: TableQuery::all() })
+        .unwrap()
+        .into_assoc()
+        .unwrap();
+    assert!(want.nnz() > 7, "table must span several pages");
+
+    let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+    let mut pages = 0usize;
+    let mut triples: Vec<TripleMsg> = Vec::new();
+    for page in c.scan_pages("G", TableQuery::all(), 7) {
+        let p = page.expect("cursor page");
+        assert!(p.len() <= 7, "page exceeded page_entries bound");
+        pages += 1;
+        triples.extend(p);
+    }
+    assert!(pages > 1, "expected multiple pages, got {pages}");
+    let got = d4m::assoc::io::parse_triples(triples).unwrap();
+    assert_eq!(got, want, "remote paged scan diverged from in-process query");
+    assert_eq!(got.matrix(), want.matrix(), "CSR arrays must round-trip bit-identically");
+
+    // into_assoc convenience takes the same path, selectors + limit hold
+    let q = TableQuery::all().rows(KeySel::Prefix("r0".into())).limit(9);
+    let want_sel = server
+        .handle(Request::Query { table: "G".into(), query: q.clone() })
+        .unwrap()
+        .into_assoc()
+        .unwrap();
+    let got_sel = d4m::coordinator::ScanPages::new(&c, "G", q, 4).into_assoc().unwrap();
+    assert_eq!(got_sel, want_sel);
+
+    // drained cursors freed themselves server-side
+    assert_eq!(server.open_cursor_count(), 0);
+    handle.shutdown();
+}
+
+/// A dropped connection reaps its cursors; an explicit CursorClose
+/// releases immediately.
+#[test]
+fn cursor_lifecycle_across_connections() {
+    let server = server_with_graph();
+    let (mut handle, addr) = spawn_net(server.clone());
+
+    let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+    let id = c.open_cursor("G", &TableQuery::all(), 2).unwrap();
+    assert_eq!(server.open_cursor_count(), 1);
+    let first = c.cursor_next(id).unwrap();
+    assert!(first.triples.len() <= 2);
+    assert!(!first.done);
+    // explicit close releases the snapshot now
+    c.cursor_close(id).unwrap();
+    assert_eq!(server.open_cursor_count(), 0);
+    // ...and the closed cursor is gone (typed error, connection healthy)
+    match c.cursor_next(id) {
+        Err(D4mError::NotFound(_)) => {}
+        other => panic!("expected NotFound for a closed cursor, got {other:?}"),
+    }
+    c.ping().unwrap();
+
+    // a second client's cursor is invisible to the first's owner scope,
+    // and dropping that client's connection reaps it
+    let c2 = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+    let id2 = c2.open_cursor("G", &TableQuery::all(), 1).unwrap();
+    assert_eq!(server.open_cursor_count(), 1);
+    match c.cursor_next(id2) {
+        Err(D4mError::NotFound(_)) => {}
+        other => panic!("cursor ownership leaked across connections: {other:?}"),
+    }
+    drop(c2); // connection closes; the server reaps its cursors
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while server.open_cursor_count() > 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "dropped connection's cursor was never reaped"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    handle.shutdown();
+}
+
+/// A v1 frame against the v2 server draws one typed version error (the
+/// reserved connection-error id), not a mid-stream decode failure.
+#[test]
+fn version_skew_is_one_typed_error() {
+    use std::io::{Read, Write};
+
+    let server = server_with_graph();
+    let (mut handle, addr) = spawn_net(server);
+
+    // a v1-shaped frame: magic, version 1, tiny payload
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    let mut frame = Vec::new();
+    frame.extend_from_slice(b"D4M");
+    frame.push(1); // wire v1
+    frame.extend_from_slice(&2u32.to_le_bytes());
+    frame.extend_from_slice(&[0x01, 0x00]);
+    raw.write_all(&frame).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reply = Vec::new();
+    raw.read_to_end(&mut reply).ok();
+    assert!(!reply.is_empty(), "expected a framed version error before close");
+    let payload = d4m::net::wire::read_frame(&mut &reply[..]).expect("framed reply");
+    match d4m::net::wire::decode_server_frame(&payload).expect("decodable reply") {
+        (id, d4m::net::wire::ServerMsg::Reply(Err(e))) => {
+            assert_eq!(id, d4m::net::wire::CONN_ERR_ID);
+            let msg = e.to_string();
+            assert!(msg.contains("version"), "not a version error: {msg}");
+        }
+        other => panic!("expected an error reply, got {other:?}"),
+    }
+    handle.shutdown();
 }
 
 #[test]

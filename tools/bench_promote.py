@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Promote CI-produced bench records into the committed baselines.
+
+The bench-trajectory CI job uploads the post-run BENCH_*.json files
+(committed records + the records this run appended) as the
+``bench-trajectory`` artifact. ROADMAP's "commit fresh records
+periodically" chore is this script: download the artifact, run
+
+    python3 tools/bench_promote.py path/to/artifact-dir
+
+and commit the rewritten BENCH files. The fresh records become the
+regression baseline for every later run (tools/bench_check.py compares
+against ``git show HEAD:<file>``).
+
+To keep the committed trajectory from growing without bound, each
+(op, backend, n) key retains at most ``--max-per-key`` most-recent
+records (default 4 — enough to eyeball a trend in-repo; the full
+history lives in the per-run artifacts).
+
+Exit status: 0 = promoted, 2 = usage/IO error.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+BENCH_FILES = ["BENCH_assoc.json", "BENCH_scan.json", "BENCH_net.json"]
+REQUIRED_FIELDS = {"op", "backend", "n", "seconds", "entries_per_sec"}
+
+
+def trim(records, max_per_key):
+    """Keep at most the last `max_per_key` records per key, preserving
+    overall append order."""
+    key = lambda r: (r["op"], r["backend"], r["n"])
+    keep = [False] * len(records)
+    seen = {}
+    for i in range(len(records) - 1, -1, -1):
+        k = key(records[i])
+        if seen.get(k, 0) < max_per_key:
+            seen[k] = seen.get(k, 0) + 1
+            keep[i] = True
+    return [r for r, k in zip(records, keep) if k]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact_dir",
+                    help="directory holding the downloaded bench-trajectory artifact")
+    ap.add_argument("--max-per-key", type=int, default=4,
+                    help="most-recent records kept per (op, backend, n) key")
+    ap.add_argument("--repo-root", default=os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), help="where the committed BENCH files live")
+    args = ap.parse_args()
+
+    promoted = 0
+    for name in BENCH_FILES:
+        src = os.path.join(args.artifact_dir, name)
+        if not os.path.exists(src):
+            print(f"bench_promote: {name}: not in artifact — skipping")
+            continue
+        try:
+            with open(src, encoding="utf-8") as f:
+                records = json.load(f)
+        except json.JSONDecodeError as e:
+            print(f"bench_promote: {src}: invalid JSON ({e})")
+            return 2
+        bad = [r for r in records
+               if not isinstance(r, dict) or not REQUIRED_FIELDS <= set(r)]
+        if bad:
+            print(f"bench_promote: {src}: {len(bad)} malformed record(s) — refusing")
+            return 2
+        trimmed = trim(records, max(1, args.max_per_key))
+        dst = os.path.join(args.repo_root, name)
+        with open(dst, "w", encoding="utf-8") as f:
+            f.write("[\n")
+            f.write(",\n".join(
+                "  " + json.dumps(r, separators=(",", ":"), sort_keys=False)
+                for r in trimmed))
+            f.write("\n]\n")
+        print(f"bench_promote: {name}: {len(records)} artifact record(s) -> "
+              f"{len(trimmed)} committed (max {args.max_per_key}/key)")
+        promoted += 1
+
+    if promoted == 0:
+        print("bench_promote: nothing promoted — is the artifact dir right?")
+        return 2
+    print("bench_promote: done — review `git diff BENCH_*.json` and commit")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
