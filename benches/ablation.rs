@@ -28,7 +28,7 @@ fn ablate_combiner_cap(smoke: bool) {
         let cfg = D4mTableConfig { transpose: false, degrees: false, ..Default::default() };
         let t = acc.bind("A", &cfg).unwrap();
         t.put_assoc(&g).unwrap();
-        let c = store.ensure_table("C", vec![]);
+        let c = store.ensure_table("C", vec![]).unwrap();
         let opts = TableMultOpts { combiner_cap: cap, ..Default::default() };
         let t0 = Instant::now();
         let stats = table_mult(&t.main(), &t.main(), &c, &opts).unwrap();
@@ -64,8 +64,8 @@ fn ablate_compaction(smoke: bool) {
         let store = KvStore::with_config(cfg);
         let t = store.create_table("t", vec![]).unwrap();
         let t0 = Instant::now();
-        t.put_batch(entries.clone());
-        t.flush();
+        t.put_batch(entries.clone()).unwrap();
+        t.flush().unwrap();
         let dt = t0.elapsed().as_secs_f64();
         println!(
             "{:<12} {:>10.3} {:>12} {:>12}",
@@ -91,9 +91,9 @@ fn ablate_batch_size(smoke: bool) {
         );
         let t0 = Instant::now();
         for i in 0..n {
-            w.put(&format!("r{:07}", i % 50_000), "c", "1");
+            w.put(&format!("r{:07}", i % 50_000), "c", "1").unwrap();
         }
-        w.flush();
+        w.flush().unwrap();
         let dt = t0.elapsed().as_secs_f64();
         println!("{:<12} {:>10.3} {:>12}", batch, dt, fmt_rate(n as f64 / dt));
     }

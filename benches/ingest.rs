@@ -4,59 +4,134 @@
 //! Accumulo group: ingest rate vs. number of parallel pipeline workers
 //! and batch size — the paper's claim is near-linear scaling with
 //! parallelism (their 100M/s needed 216 nodes; we reproduce the *scaling
-//! shape* on threads).
+//! shape* on threads). Run twice: against the default in-memory store
+//! and against the durable engine (WAL + on-disk runs), so the write-
+//! ahead-logging overhead is a tracked trajectory, not folklore.
 //!
 //! SciDB group: chunked array import rate vs. chunk size.
+//!
+//! Machine-readable records are appended to `BENCH_ingest.json`;
+//! `--smoke` runs the smallest sizes only (the CI regression probe).
 
+use std::path::Path;
 use std::sync::Arc;
 
 use d4m::arraystore::{ArraySchema, ArrayStore};
 use d4m::connectors::{AccumuloConnector, D4mTableConfig};
 use d4m::gen::doc_word_triples;
+use d4m::kvstore::{KvStore, StorageConfig, TabletConfig};
 use d4m::pipeline::{IngestPipeline, PipelineConfig};
+use d4m::util::bench::{append_records, BenchRecord};
 use d4m::util::{fmt_rate, XorShift64};
 
-fn accumulo_group(smoke: bool) {
+fn ingest_triples(smoke: bool) -> Vec<(String, String, String)> {
+    let docs = if smoke { 200 } else { 2_000 };
+    doc_word_triples(docs, 100, 5_000, 99).into_iter().collect()
+}
+
+fn run_pipeline(
+    acc: &AccumuloConnector,
+    triples: &[(String, String, String)],
+    workers: usize,
+    batch: usize,
+) -> d4m::pipeline::IngestReport {
+    let t = Arc::new(acc.bind("T", &D4mTableConfig::default()).unwrap());
+    let p = IngestPipeline::new(
+        t,
+        PipelineConfig {
+            num_workers: workers,
+            batch_size: batch,
+            queue_depth: 8,
+            shard_by_row: true,
+        },
+    );
+    p.run(triples.iter().cloned()).unwrap()
+}
+
+fn report_row(rep: &d4m::pipeline::IngestReport, workers: usize, batch: usize) {
+    println!(
+        "{:<9} {:<9} {:>10} {:>12.3} {:>14} {:>14} {:>8}",
+        workers,
+        batch,
+        rep.triples,
+        rep.elapsed.as_secs_f64(),
+        fmt_rate(rep.rate),
+        fmt_rate(rep.physical_rate),
+        rep.backpressure_stalls
+    );
+}
+
+fn accumulo_group(smoke: bool, records: &mut Vec<BenchRecord>) {
     println!("# T-ingest-acc: pipeline ingest rate vs workers / batch size");
     println!(
         "{:<9} {:<9} {:>10} {:>12} {:>14} {:>14} {:>8}",
         "workers", "batch", "triples", "seconds", "logical", "physical", "stalls"
     );
-    let docs = if smoke { 200 } else { 2_000 };
-    let triples: Vec<(String, String, String)> = doc_word_triples(docs, 100, 5_000, 99)
-        .into_iter()
-        .collect();
+    let triples = ingest_triples(smoke);
     let workers_set: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
     let batch_set: &[usize] = if smoke { &[4096] } else { &[512, 4096, 16384] };
     for &workers in workers_set {
         for &batch in batch_set {
             let acc = AccumuloConnector::new();
-            let t = Arc::new(acc.bind("T", &D4mTableConfig::default()).unwrap());
-            let p = IngestPipeline::new(
-                t,
-                PipelineConfig {
-                    num_workers: workers,
-                    batch_size: batch,
-                    queue_depth: 8,
-                    shard_by_row: true,
-                },
-            );
-            let rep = p.run(triples.iter().cloned()).unwrap();
-            println!(
-                "{:<9} {:<9} {:>10} {:>12.3} {:>14} {:>14} {:>8}",
-                workers,
-                batch,
-                rep.triples,
+            let rep = run_pipeline(&acc, &triples, workers, batch);
+            report_row(&rep, workers, batch);
+            records.push(BenchRecord::new(
+                "ingest",
+                triples.len(),
+                &format!("mem-w{workers}-b{batch}"),
                 rep.elapsed.as_secs_f64(),
-                fmt_rate(rep.rate),
-                fmt_rate(rep.physical_rate),
-                rep.backpressure_stalls
-            );
+                rep.triples as usize,
+            ));
         }
     }
 }
 
-fn scidb_group(smoke: bool) {
+/// The same pipeline shape against the durable engine: every batch goes
+/// through the per-table WAL before its memtable, flushes freeze into
+/// on-disk runs, and the background compactor runs throughout — the
+/// measured gap to the `mem-*` keys IS the durability tax.
+fn durable_group(smoke: bool, records: &mut Vec<BenchRecord>) {
+    println!("\n# T-ingest-wal: the same ingest through the durable engine");
+    println!(
+        "{:<9} {:<9} {:>10} {:>12} {:>14} {:>14} {:>8}",
+        "workers", "batch", "triples", "seconds", "logical", "physical", "stalls"
+    );
+    let triples = ingest_triples(smoke);
+    let workers_set: &[usize] = if smoke { &[2] } else { &[1, 4] };
+    for &workers in workers_set {
+        let dir = std::env::temp_dir().join(format!(
+            "d4m-bench-ingest-{}-w{workers}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(
+            KvStore::open(&dir, TabletConfig::default(), StorageConfig::default()).unwrap(),
+        );
+        let acc = AccumuloConnector::with_store(store.clone());
+        let rep = run_pipeline(&acc, &triples, workers, 4096);
+        report_row(&rep, workers, 4096);
+        let c = store.storage_counters().unwrap();
+        println!(
+            "#   wal: {} bytes appended, {} fsyncs, {} flushes, {} compactions",
+            c.wal_bytes_appended.get(),
+            c.wal_fsyncs.get(),
+            c.flushes.get(),
+            c.compactions.get()
+        );
+        records.push(BenchRecord::new(
+            "ingest",
+            triples.len(),
+            &format!("wal-w{workers}"),
+            rep.elapsed.as_secs_f64(),
+            rep.triples as usize,
+        ));
+        drop(acc);
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+fn scidb_group(smoke: bool, records: &mut Vec<BenchRecord>) {
     println!("\n# T-ingest-scidb: array import rate vs chunk size");
     println!("{:<9} {:>10} {:>12} {:>14} {:>8}", "chunk", "cells", "seconds", "rate", "chunks");
     let n: u64 = if smoke { 1 << 16 } else { 1 << 20 };
@@ -83,11 +158,25 @@ fn scidb_group(smoke: bool) {
             fmt_rate(n as f64 / dt),
             arr.num_chunks()
         );
+        records.push(BenchRecord::new(
+            "ingest",
+            n as usize,
+            &format!("scidb-c{chunk}"),
+            dt,
+            n as usize,
+        ));
     }
 }
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
-    accumulo_group(smoke);
-    scidb_group(smoke);
+    let mut records: Vec<BenchRecord> = Vec::new();
+    accumulo_group(smoke, &mut records);
+    durable_group(smoke, &mut records);
+    scidb_group(smoke, &mut records);
+    let out = Path::new("BENCH_ingest.json");
+    match append_records(out, &records) {
+        Ok(()) => println!("# appended {} records to {}", records.len(), out.display()),
+        Err(e) => eprintln!("# failed to write {}: {e}", out.display()),
+    }
 }

@@ -33,12 +33,12 @@ fn build_table(store: &KvStore, n: usize) -> Arc<Table> {
     let splits: Vec<String> = (1..8).map(|i| format!("r{:07}", i * n / 8)).collect();
     let t = store.create_table("scan_bench", splits).unwrap();
     for i in 0..n {
-        t.put(&format!("r{i:07}"), &format!("c{:02}", i % 17), "1");
+        t.put(&format!("r{i:07}"), &format!("c{:02}", i % 17), "1").unwrap();
     }
-    t.flush();
+    t.flush().unwrap();
     // a live unsorted memtable tail (~1/16 of the data) on top
     for i in 0..n / 16 {
-        t.put(&format!("r{:07}", i * 16), "c99", "2");
+        t.put(&format!("r{:07}", i * 16), "c99", "2").unwrap();
     }
     t
 }
@@ -106,7 +106,7 @@ fn run_readers(
             s.spawn(move || {
                 let mut i = 0u64;
                 while !stop.load(Ordering::Relaxed) {
-                    t.put(&format!("w{:05}", i % 1000), "c", &i.to_string());
+                    t.put(&format!("w{:05}", i % 1000), "c", &i.to_string()).unwrap();
                     i += 1;
                 }
             });

@@ -109,20 +109,20 @@ impl AccumuloConnector {
                 }
             }
         }
-        let main = self.store.ensure_table(name, cfg.splits.clone());
+        let main = self.store.ensure_table(name, cfg.splits.clone())?;
         let mut fresh_transpose = false;
         let mut fresh_degree = false;
         let transpose = if cfg.transpose {
             let full = format!("{name}_T");
             fresh_transpose = self.store.table(&full).is_none();
-            Some(self.store.ensure_table(&full, cfg.transpose_splits.clone()))
+            Some(self.store.ensure_table(&full, cfg.transpose_splits.clone())?)
         } else {
             None
         };
         let degree = if cfg.degrees {
             let full = format!("{name}_Deg");
             fresh_degree = self.store.table(&full).is_none();
-            Some(self.store.ensure_table(&full, cfg.transpose_splits.clone()))
+            Some(self.store.ensure_table(&full, cfg.transpose_splits.clone())?)
         } else {
             None
         };
@@ -137,7 +137,7 @@ impl AccumuloConnector {
         // a companion created next to a pre-existing main must reflect
         // its contents, or column queries / degrees would read empty
         if pre_existing && (fresh_transpose || fresh_degree) {
-            table.backfill_companions(fresh_transpose, fresh_degree);
+            table.backfill_companions(fresh_transpose, fresh_degree)?;
         }
         Ok(table)
     }
@@ -185,20 +185,18 @@ impl D4mTable {
     pub fn put_assoc(&self, a: &Assoc) -> Result<()> {
         let mut w = self.writer();
         for (r, c, v) in a.str_triples() {
-            w.put(&r, &c, &v);
+            w.put(&r, &c, &v)?;
         }
-        w.flush();
-        Ok(())
+        w.flush()
     }
 
     /// Ingest raw string triples.
     pub fn put_triples(&self, triples: &[(String, String, String)]) -> Result<()> {
         let mut w = self.writer();
         for (r, c, v) in triples {
-            w.put(r, c, v);
+            w.put(r, c, v)?;
         }
-        w.flush();
-        Ok(())
+        w.flush()
     }
 
     /// Read the whole table back as an associative array.
@@ -261,19 +259,20 @@ impl D4mTable {
     /// current contents (binding schema tables onto a table that already
     /// held data). Streams a main-table snapshot while writing the
     /// companions. Not synchronised with concurrent writers.
-    fn backfill_companions(&self, transpose: bool, degrees: bool) {
+    fn backfill_companions(&self, transpose: bool, degrees: bool) -> Result<()> {
         for e in self.main.scan_stream(&RowRange::all(), &IterConfig::default()) {
             if transpose {
                 if let Some(t) = &self.transpose {
-                    t.put(&e.key.cq, &e.key.row, &e.value);
+                    t.put(&e.key.cq, &e.key.row, &e.value)?;
                 }
             }
             if degrees {
                 if let Some(d) = &self.degree {
-                    d.put(&e.key.cq, "deg", "1");
+                    d.put(&e.key.cq, "deg", "1")?;
                 }
             }
         }
+        Ok(())
     }
 
     /// Tombstone every live cell in the schema tables (the key-value
@@ -282,7 +281,7 @@ impl D4mTable {
     /// `_T`/`_Deg` companions resolved from the store — not just the
     /// ones this binding attached — so a binding created with
     /// `transpose: false` cannot leave stale companion data behind.
-    pub fn clear(&self) {
+    pub fn clear(&self) -> Result<()> {
         let mut tables: Vec<Arc<Table>> = vec![self.main.clone()];
         for suffix in ["_T", "_Deg"] {
             if let Some(t) = self.store.table(&format!("{}{suffix}", self.name)) {
@@ -294,9 +293,10 @@ impl D4mTable {
             // the same table is safe: the open stream reads frozen
             // segments the deletes cannot touch
             for e in t.scan_stream(&RowRange::all(), &IterConfig::default()) {
-                t.delete(&e.key.row, &e.key.cq);
+                t.delete(&e.key.row, &e.key.cq)?;
             }
         }
+        Ok(())
     }
 
     /// Unified `T(r, c)` query with engine-side pushdown: row selectors
@@ -352,7 +352,7 @@ impl DbTable for D4mTable {
         // companion, not just the ones this binding attached, so a
         // `transpose: false` binding can't desynchronise a transpose
         // another binding relies on.
-        self.clear();
+        self.clear()?;
         let transpose = self.store.table(&format!("{}_T", self.name));
         let degree = self.store.table(&format!("{}_Deg", self.name));
         let mut w = D4mWriter {
@@ -361,10 +361,9 @@ impl DbTable for D4mTable {
             degree: degree.map(|d| BatchWriter::new(d, self.cfg.writer.clone())),
         };
         for (r, c, v) in a.str_triples() {
-            w.put(&r, &c, &v);
+            w.put(&r, &c, &v)?;
         }
-        w.flush();
-        Ok(())
+        w.flush()
     }
 
     fn get_assoc(&self) -> Result<Assoc> {
@@ -526,30 +525,32 @@ pub struct D4mWriter {
 
 impl D4mWriter {
     /// One logical cell: writes Tedge, TedgeT and a degree increment.
-    pub fn put(&mut self, row: &str, col: &str, value: &str) {
-        self.main.put(row, col, value);
+    pub fn put(&mut self, row: &str, col: &str, value: &str) -> Result<()> {
+        self.main.put(row, col, value)?;
         if let Some(t) = &mut self.transpose {
-            t.put(col, row, value);
+            t.put(col, row, value)?;
         }
         if let Some(d) = &mut self.degree {
             // degree table rows are col keys; cq = "deg"; summed at scan
-            d.put(col, "deg", "1");
+            d.put(col, "deg", "1")?;
         }
+        Ok(())
     }
 
     /// Numeric convenience.
-    pub fn put_num(&mut self, row: &str, col: &str, value: f64) {
-        self.put(row, col, &fmt_num(value));
+    pub fn put_num(&mut self, row: &str, col: &str, value: f64) -> Result<()> {
+        self.put(row, col, &fmt_num(value))
     }
 
-    pub fn flush(&mut self) {
-        self.main.flush();
+    pub fn flush(&mut self) -> Result<()> {
+        self.main.flush()?;
         if let Some(t) = &mut self.transpose {
-            t.flush();
+            t.flush()?;
         }
         if let Some(d) = &mut self.degree {
-            d.flush();
+            d.flush()?;
         }
+        Ok(())
     }
 
     pub fn written(&self) -> u64 {
@@ -666,9 +667,9 @@ mod tests {
         let acc = AccumuloConnector::new();
         // a main-only table populated directly in the store (the shape of
         // a Graphulo product being promoted to a full D4M table)
-        let raw = acc.store().ensure_table("C", vec![]);
-        raw.put("r1", "c1", "2");
-        raw.put("r2", "c1", "3");
+        let raw = acc.store().ensure_table("C", vec![]).unwrap();
+        raw.put("r1", "c1", "2").unwrap();
+        raw.put("r2", "c1", "3").unwrap();
         let t = acc.bind("C", &D4mTableConfig::default()).unwrap();
         // the freshly created transpose answers column queries correctly
         let col = t.get_assoc_by_col(&RowRange::single("c1")).unwrap();

@@ -141,6 +141,56 @@ impl D4mServer {
         }
     }
 
+    /// Start a coordinator over an existing store — typically a durable
+    /// one from [`KvStore::open`]. Tables recovered from disk are
+    /// re-bound into the registry (bindings are not persisted, table
+    /// contents are): every non-companion table becomes a D4M binding
+    /// whose transpose/degree flags mirror which `_T`/`_Deg` companions
+    /// survived, so queries and cursors work immediately after restart.
+    pub fn with_store(store: Arc<KvStore>) -> Result<Self> {
+        let s = D4mServer {
+            acc: AccumuloConnector::with_store(store),
+            tables: Mutex::new(HashMap::new()),
+            engine: PjrtEngine::new(PjrtEngine::default_dir()).ok(),
+            op_stats: Mutex::new(HashMap::new()),
+            requests: RateMeter::new(),
+            cursors: cursor::CursorTable::new(),
+        };
+        s.rebind_recovered()?;
+        Ok(s)
+    }
+
+    fn rebind_recovered(&self) -> Result<()> {
+        let store = self.acc.store();
+        for name in store.list_tables() {
+            // companions are reached through their base binding
+            let is_companion = ["_T", "_Deg"].iter().any(|suffix| {
+                name.strip_suffix(suffix)
+                    .map(|base| !base.is_empty() && store.table(base).is_some())
+                    .unwrap_or(false)
+            });
+            if is_companion {
+                continue;
+            }
+            let cfg = D4mTableConfig {
+                transpose: store.table(&format!("{name}_T")).is_some(),
+                degrees: store.table(&format!("{name}_Deg")).is_some(),
+                ..Default::default()
+            };
+            let t: Arc<dyn DbTable> = Arc::new(self.acc.bind(&name, &cfg)?);
+            self.tables.lock().unwrap().insert(name, t);
+        }
+        Ok(())
+    }
+
+    /// Flush every memtable into on-disk runs and fsync the WALs (plain
+    /// in-memory flush for non-durable stores). The graceful-shutdown
+    /// hook: the net server calls this before acknowledging `Shutdown`,
+    /// so an acked shutdown implies nothing is left only in RAM.
+    pub fn checkpoint(&self) -> Result<()> {
+        self.acc.store().checkpoint()
+    }
+
     pub fn store(&self) -> Arc<KvStore> {
         self.acc.store()
     }
@@ -226,7 +276,7 @@ impl D4mServer {
                 let ta = self.main_table(&a)?;
                 let tb = self.main_table(&b)?;
                 let store = self.acc.store();
-                let tc = store.ensure_table(&out, vec![]);
+                let tc = store.ensure_table(&out, vec![])?;
                 let stats = self.hist("tablemult_server").time(|| {
                     graphulo::table_mult(&ta, &tb, &tc, &TableMultOpts::default())
                 })?;
@@ -350,6 +400,22 @@ impl D4mServer {
                 p99_latency_ns: h.quantile_ns(0.99),
             })
             .collect();
+        if let Some(c) = self.acc.store().storage_counters() {
+            let storage = [
+                ("wal.bytes_appended", c.wal_bytes_appended.get()),
+                ("wal.fsyncs", c.wal_fsyncs.get()),
+                ("storage.flushes", c.flushes.get()),
+                ("storage.compactions", c.compactions.get()),
+                ("storage.backpressure_stalls", c.backpressure_stalls.get()),
+            ];
+            out.extend(storage.into_iter().map(|(name, count)| Snapshot {
+                name: name.to_string(),
+                count,
+                rate_per_sec: 0.0,
+                mean_latency_ns: 0.0,
+                p99_latency_ns: 0,
+            }));
+        }
         out.sort_by(|a, b| a.name.cmp(&b.name));
         out
     }

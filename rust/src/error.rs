@@ -38,6 +38,14 @@ pub enum D4mError {
     /// wire (remote variants that wrap process-local types — I/O, wire —
     /// arrive as their message strings).
     Remote(String),
+    /// Ingest was stalled by the durable store's compaction backlog for
+    /// longer than the configured backpressure timeout — the write was
+    /// **not** applied. Retry after the compactor drains the backlog.
+    Backpressure { table: String, waited_ms: u64 },
+    /// Durable-storage corruption or protocol violation (bad WAL/run/
+    /// manifest bytes, checksum mismatch, unrecognised layout). Hostile
+    /// or torn files surface here — never as a panic.
+    Storage(String),
 }
 
 impl fmt::Display for D4mError {
@@ -60,6 +68,11 @@ impl fmt::Display for D4mError {
             D4mError::Io(e) => write!(f, "io error: {e}"),
             D4mError::Wire(e) => write!(f, "wire error: {e}"),
             D4mError::Remote(s) => write!(f, "remote error: {s}"),
+            D4mError::Backpressure { table, waited_ms } => write!(
+                f,
+                "backpressure: ingest into {table} stalled {waited_ms} ms on the compaction backlog"
+            ),
+            D4mError::Storage(s) => write!(f, "storage error: {s}"),
         }
     }
 }

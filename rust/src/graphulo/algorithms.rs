@@ -64,7 +64,7 @@ pub fn jaccard_server(
     // N = A^T A  (contract over rows = shared neighbours... rows of the
     // edge table are source vertices; A^T A counts, for each vertex pair
     // (i, j), the sources pointing at both).
-    let n_table = store.ensure_table(&format!("{out_name}_N"), vec![]);
+    let n_table = store.ensure_table(&format!("{out_name}_N"), vec![])?;
     let opts = TableMultOpts { logical: true, ..Default::default() };
     table_mult(edge, edge, &n_table, &opts)?;
 
@@ -80,7 +80,7 @@ pub fn jaccard_server(
 
     // streaming combine pass over N: one entry of N resident at a time,
     // writes into `out` while the scan cursor is open
-    let out = store.ensure_table(out_name, vec![]);
+    let out = store.ensure_table(out_name, vec![])?;
     let mut w = BatchWriter::new(out.clone(), WriterConfig::default());
     let sum_cfg = IterConfig { summing: true, ..Default::default() };
     for e in n_table.scan_stream(&RowRange::all(), &sum_cfg) {
@@ -93,10 +93,10 @@ pub fn jaccard_server(
         let dj = degree.get(j).copied().unwrap_or(0.0);
         let denom = di + dj - nij;
         if denom > 0.0 && nij > 0.0 {
-            w.put(i, j, &fmt_num(nij / denom));
+            w.put(i, j, &fmt_num(nij / denom))?;
         }
     }
-    w.flush();
+    w.flush()?;
     let cfg = IterConfig::default();
     crate::connectors::accumulo::entries_to_assoc(out.scan_stream(&RowRange::all(), &cfg))
 }
@@ -119,12 +119,12 @@ pub fn ktruss_server(
     let mut generation = 0usize;
     loop {
         // A^T A over a symmetric A equals A*A; TableMult contracts rows.
-        let a2 = store.ensure_table(&format!("{base}_gen{generation}_sq"), vec![]);
+        let a2 = store.ensure_table(&format!("{base}_gen{generation}_sq"), vec![])?;
         table_mult(&current, &current, &a2, &TableMultOpts::default())?;
 
         // stream A merge-joined with A2 (both scans are key-sorted), keep
         // edges whose support >= need. One pass, no per-edge row scans.
-        let next = store.ensure_table(&format!("{base}_gen{}", generation + 1), vec![]);
+        let next = store.ensure_table(&format!("{base}_gen{}", generation + 1), vec![])?;
         let mut w = BatchWriter::new(next.clone(), WriterConfig::default());
         let mut kept = 0usize;
         let mut total = 0usize;
@@ -147,11 +147,11 @@ pub fn ktruss_server(
                 _ => 0.0,
             };
             if support >= need {
-                w.put(&e.key.row, &e.key.cq, "1");
+                w.put(&e.key.row, &e.key.cq, "1")?;
                 kept += 1;
             }
         }
-        w.flush();
+        w.flush()?;
         generation += 1;
         if kept == total {
             // fixpoint
@@ -173,16 +173,16 @@ pub fn symmetrise_table(
     edge: &Arc<Table>,
     out_name: &str,
 ) -> Result<Arc<Table>> {
-    let out = store.ensure_table(out_name, vec![]);
+    let out = store.ensure_table(out_name, vec![])?;
     let mut w = BatchWriter::new(out.clone(), WriterConfig::default());
     let cfg = IterConfig::default();
     for e in edge.scan_stream(&RowRange::all(), &cfg) {
         if e.key.row != e.key.cq {
-            w.put(&e.key.row, &e.key.cq, "1");
-            w.put(&e.key.cq, &e.key.row, "1");
+            w.put(&e.key.row, &e.key.cq, "1")?;
+            w.put(&e.key.cq, &e.key.row, "1")?;
         }
     }
-    w.flush();
+    w.flush()?;
     Ok(out)
 }
 

@@ -140,19 +140,19 @@ pub fn table_mult(
             for &(j, bv) in &row_b {
                 products.inc();
                 if opts.combiner_cap == 0 {
-                    writer.put(&key_names[i as usize], &key_names[j as usize], &fmt_num(av * bv));
+                    writer.put(&key_names[i as usize], &key_names[j as usize], &fmt_num(av * bv))?;
                 } else {
                     let cell = ((i as u64) << 32) | j as u64;
                     *combiner.entry(cell).or_insert(0.0) += av * bv;
                     if combiner.len() >= opts.combiner_cap {
-                        flush_combiner(&mut combiner, &key_names, &mut writer);
+                        flush_combiner(&mut combiner, &key_names, &mut writer)?;
                     }
                 }
             }
         }
     }
-    flush_combiner(&mut combiner, &key_names, &mut writer);
-    writer.flush();
+    flush_combiner(&mut combiner, &key_names, &mut writer)?;
+    writer.flush()?;
     stats.partial_products = products.get();
     Ok(stats)
 }
@@ -162,14 +162,15 @@ fn flush_combiner(
     combiner: &mut crate::util::FastMap<u64, f64>,
     key_names: &[String],
     writer: &mut BatchWriter,
-) {
+) -> Result<()> {
     for (cell, v) in combiner.drain() {
         if v != 0.0 {
             let i = (cell >> 32) as usize;
             let j = (cell & 0xFFFF_FFFF) as usize;
-            writer.put(&key_names[i], &key_names[j], &fmt_num(v));
+            writer.put(&key_names[i], &key_names[j], &fmt_num(v))?;
         }
     }
+    Ok(())
 }
 
 /// Read the product table as an assoc (summing partial products).

@@ -15,12 +15,14 @@
 
 pub mod iterator;
 pub mod key;
+pub mod storage;
 pub mod store;
 pub mod tablet;
 pub mod writer;
 
 pub use iterator::{EntryStream, IterConfig, MergeIter, SummingCombiner, VersioningIter};
 pub use key::{Entry, Key, RowRange};
+pub use storage::{StorageConfig, StorageCounters};
 pub use store::{KvStore, Table, TableSnapshot};
-pub use tablet::{Tablet, TabletConfig, TabletSnapshot};
+pub use tablet::{Segment, Tablet, TabletConfig, TabletSnapshot};
 pub use writer::{BatchWriter, WriterConfig};

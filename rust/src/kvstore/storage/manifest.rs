@@ -1,0 +1,241 @@
+//! Table manifest: the single source of truth for which run files are
+//! live, which WAL sequences still matter, and how the table is split.
+//!
+//! Layout: `"D4MM"` ver(u8) `[payload_len u32][crc32 u32][payload]`,
+//! payload = varint wal_floor, varint clock, varint next_file_id,
+//! splits (varint n + strings), then per tablet (splits + 1 of them) a
+//! varint run count and the run file ids **newest first** — the same
+//! order `Tablet.runs` holds them. Updates are atomic: write
+//! `MANIFEST.tmp`, fsync, rename over `MANIFEST`, fsync the directory.
+//! Run files not named here are flush/compaction leftovers and are
+//! deleted at open; WAL files with seq < `wal_floor` are fully
+//! superseded by the listed runs.
+
+use std::io::Write;
+use std::path::Path;
+
+use super::codec::{self, Reader};
+use crate::error::{D4mError, Result};
+
+pub const MANIFEST_NAME: &str = "MANIFEST";
+const MANIFEST_TMP: &str = "MANIFEST.tmp";
+const MAGIC: &[u8; 4] = b"D4MM";
+const VERSION: u8 = 1;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Replay WAL files with seq >= this; delete the rest.
+    pub wal_floor: u64,
+    /// Logical-clock floor at the time of the last checkpoint (recovery
+    /// takes the max of this and every recovered timestamp).
+    pub clock: u64,
+    /// Next run file id to allocate.
+    pub next_file_id: u64,
+    /// Tablet split points (the table has `splits.len() + 1` tablets).
+    pub splits: Vec<String>,
+    /// Per tablet: live run file ids, newest first.
+    pub tablet_runs: Vec<Vec<u64>>,
+}
+
+/// Load `dir/MANIFEST`. `Ok(None)` means the manifest was never written
+/// (a table directory mid-creation); corruption is a typed error.
+pub fn load(dir: &Path) -> Result<Option<Manifest>> {
+    let path = dir.join(MANIFEST_NAME);
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let bad = |what: &str| D4mError::Storage(format!("{}: {what}", path.display()));
+    if bytes.len() < 13 {
+        return Err(bad("truncated"));
+    }
+    if &bytes[..4] != MAGIC {
+        return Err(bad("bad magic"));
+    }
+    if bytes[4] != VERSION {
+        return Err(bad("unsupported manifest version"));
+    }
+    let len = u32::from_le_bytes(bytes[5..9].try_into().unwrap()) as usize;
+    let crc = u32::from_le_bytes(bytes[9..13].try_into().unwrap());
+    // the manifest is rename-replaced whole: anything but an exact-length
+    // checksummed payload is corruption, including trailing garbage
+    if bytes.len() - 13 != len {
+        return Err(bad("payload length mismatch"));
+    }
+    let payload = &bytes[13..];
+    if codec::crc32(payload) != crc {
+        return Err(bad("checksum mismatch"));
+    }
+    let mut r = Reader::new(payload);
+    let wal_floor = r.varint()?;
+    let clock = r.varint()?;
+    let next_file_id = r.varint()?;
+    let n_splits = r.varint()?;
+    if n_splits > payload.len() as u64 {
+        return Err(bad("split count exceeds payload"));
+    }
+    let mut splits = Vec::with_capacity(n_splits as usize);
+    for _ in 0..n_splits {
+        splits.push(r.str()?);
+    }
+    let n_tablets = r.varint()?;
+    if n_tablets != n_splits + 1 {
+        return Err(bad("tablet count disagrees with splits"));
+    }
+    let mut tablet_runs = Vec::with_capacity(n_tablets as usize);
+    for _ in 0..n_tablets {
+        let n_runs = r.varint()?;
+        if n_runs > payload.len() as u64 {
+            return Err(bad("run count exceeds payload"));
+        }
+        let mut runs = Vec::with_capacity(n_runs as usize);
+        for _ in 0..n_runs {
+            runs.push(r.varint()?);
+        }
+        tablet_runs.push(runs);
+    }
+    if !r.is_empty() {
+        return Err(bad("trailing bytes in payload"));
+    }
+    Ok(Some(Manifest { wal_floor, clock, next_file_id, splits, tablet_runs }))
+}
+
+/// Atomically replace `dir/MANIFEST` with `m`.
+pub fn store(dir: &Path, m: &Manifest) -> Result<()> {
+    debug_assert_eq!(m.tablet_runs.len(), m.splits.len() + 1);
+    let mut payload = Vec::new();
+    codec::put_varint(&mut payload, m.wal_floor);
+    codec::put_varint(&mut payload, m.clock);
+    codec::put_varint(&mut payload, m.next_file_id);
+    codec::put_varint(&mut payload, m.splits.len() as u64);
+    for s in &m.splits {
+        codec::put_str(&mut payload, s);
+    }
+    codec::put_varint(&mut payload, m.tablet_runs.len() as u64);
+    for runs in &m.tablet_runs {
+        codec::put_varint(&mut payload, runs.len() as u64);
+        for &id in runs {
+            codec::put_varint(&mut payload, id);
+        }
+    }
+    let mut out = Vec::with_capacity(13 + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&codec::crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    let tmp = dir.join(MANIFEST_TMP);
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&out)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, dir.join(MANIFEST_NAME))?;
+    codec::sync_dir(dir)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "d4m-manifest-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> Manifest {
+        Manifest {
+            wal_floor: 9,
+            clock: 12345,
+            next_file_id: 42,
+            splits: vec!["m".into(), "t".into()],
+            tablet_runs: vec![vec![7, 3], vec![], vec![41, 40, 2]],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let m = sample();
+        store(&dir, &m).unwrap();
+        assert_eq!(load(&dir).unwrap(), Some(m));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_is_none() {
+        let dir = tmp_dir("missing");
+        assert_eq!(load(&dir).unwrap(), None);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_replaces_atomically() {
+        let dir = tmp_dir("replace");
+        store(&dir, &sample()).unwrap();
+        let mut m2 = sample();
+        m2.wal_floor = 10;
+        m2.tablet_runs[0] = vec![50];
+        store(&dir, &m2).unwrap();
+        assert_eq!(load(&dir).unwrap(), Some(m2));
+        assert!(!dir.join(MANIFEST_TMP).exists(), "tmp file left behind");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncation_every_cut_is_typed_error() {
+        let dir = tmp_dir("cut");
+        store(&dir, &sample()).unwrap();
+        let path = dir.join(MANIFEST_NAME);
+        let full = std::fs::read(&path).unwrap();
+        for cut in 0..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            assert!(
+                matches!(load(&dir), Err(D4mError::Storage(_))),
+                "cut at {cut} did not surface as a typed error"
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn garbage_suffix_is_typed_error() {
+        let dir = tmp_dir("suffix");
+        store(&dir, &sample()).unwrap();
+        let path = dir.join(MANIFEST_NAME);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(load(&dir), Err(D4mError::Storage(_))));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bit_flips_error_never_panic() {
+        let dir = tmp_dir("flip");
+        store(&dir, &sample()).unwrap();
+        let path = dir.join(MANIFEST_NAME);
+        let full = std::fs::read(&path).unwrap();
+        crate::util::forall(150, 0x3A4F, |rng| {
+            let mut bytes = full.clone();
+            let at = rng.below(bytes.len() as u64) as usize;
+            bytes[at] ^= 1 << rng.below(8);
+            std::fs::write(&path, &bytes).unwrap();
+            match load(&dir) {
+                Err(D4mError::Storage(_)) => {}
+                Ok(_) => panic!("flip at {at} loaded clean"),
+                Err(e) => panic!("flip at {at}: unexpected error {e}"),
+            }
+        });
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

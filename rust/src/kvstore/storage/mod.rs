@@ -1,0 +1,296 @@
+//! Durable storage engine for the kvstore: per-table write-ahead log,
+//! on-disk frozen runs, an atomic manifest, crash recovery, and the
+//! backpressure gate that bounds the compaction backlog.
+//!
+//! The subsystem is deliberately layered under the PR-3 snapshot
+//! contract: a frozen run on disk is just another immutable,
+//! `Arc`-shared segment with a pull-based cursor, so `MergeIter`,
+//! `TabletSnapshot` and every streaming consumer upstream work
+//! unchanged whether a run lives in memory or in a file.
+
+pub mod codec;
+pub mod manifest;
+pub mod run;
+pub mod wal;
+
+pub use manifest::Manifest;
+pub use run::{DiskCursor, DiskRun};
+pub use wal::WalWriter;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{D4mError, Result};
+use crate::metrics::Counter;
+
+/// Tuning knobs for a durable [`KvStore`](crate::kvstore::KvStore).
+#[derive(Debug, Clone)]
+pub struct StorageConfig {
+    /// fsync the WAL at most once per this interval (group commit);
+    /// `Duration::ZERO` fsyncs every append. Acknowledged appends always
+    /// reach the OS before the ack, so killing the *process* loses
+    /// nothing either way — the interval bounds what a machine crash can
+    /// take with it.
+    pub group_commit_interval: Duration,
+    /// `put_batch` blocks while the store-wide compaction backlog
+    /// (bytes of on-disk runs beyond each tablet's `max_runs`) exceeds
+    /// this budget.
+    pub backlog_budget_bytes: u64,
+    /// How long a blocked `put_batch` waits for the compactor before
+    /// failing with a typed [`D4mError::Backpressure`].
+    pub backpressure_timeout: Duration,
+}
+
+impl Default for StorageConfig {
+    fn default() -> Self {
+        StorageConfig {
+            group_commit_interval: Duration::from_millis(20),
+            backlog_budget_bytes: 256 << 20,
+            backpressure_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Storage-side counters, folded into the server metrics snapshot and
+/// `d4m client stats`.
+#[derive(Debug, Default)]
+pub struct StorageCounters {
+    pub wal_bytes_appended: Counter,
+    pub wal_fsyncs: Counter,
+    pub flushes: Counter,
+    pub compactions: Counter,
+    pub backpressure_stalls: Counter,
+}
+
+impl StorageCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Store-wide ingest backpressure gate.
+///
+/// Each table reports its compaction debt — the bytes of on-disk runs
+/// beyond its tablets' `max_runs` — after every flush and compaction.
+/// Writers wait on the condvar while the summed debt exceeds the budget;
+/// the compactor's progress notifies them. The same condvar doubles as
+/// the compactor's work signal: new debt wakes it immediately.
+#[derive(Default)]
+pub struct StorageGate {
+    debt: Mutex<HashMap<String, u64>>,
+    cv: Condvar,
+}
+
+impl StorageGate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish `table`'s current debt and wake waiters (writers waiting
+    /// for the backlog to drain, and the compactor waiting for work).
+    pub fn set(&self, table: &str, bytes: u64) {
+        let mut debt = self.debt.lock().unwrap();
+        if bytes == 0 {
+            debt.remove(table);
+        } else {
+            debt.insert(table.to_string(), bytes);
+        }
+        drop(debt);
+        self.cv.notify_all();
+    }
+
+    /// Total debt across all tables.
+    pub fn total(&self) -> u64 {
+        self.debt.lock().unwrap().values().sum()
+    }
+
+    /// Wake everyone without changing state (shutdown).
+    pub fn poke(&self) {
+        self.cv.notify_all();
+    }
+
+    /// Block until total debt is within `budget`. Returns whether the
+    /// caller stalled at all; times out as a typed error naming `table`.
+    pub fn wait_below(&self, budget: u64, timeout: Duration, table: &str) -> Result<bool> {
+        let mut debt = self.debt.lock().unwrap();
+        if debt.values().sum::<u64>() <= budget {
+            return Ok(false);
+        }
+        let start = Instant::now();
+        loop {
+            let Some(left) = timeout.checked_sub(start.elapsed()) else {
+                return Err(D4mError::Backpressure {
+                    table: table.to_string(),
+                    waited_ms: start.elapsed().as_millis() as u64,
+                });
+            };
+            let (guard, _) = self
+                .cv
+                .wait_timeout(debt, left.min(Duration::from_millis(50)))
+                .unwrap();
+            debt = guard;
+            if debt.values().sum::<u64>() <= budget {
+                return Ok(true);
+            }
+        }
+    }
+
+    /// Park the compactor until debt changes somewhere (or `timeout`).
+    pub fn wait_for_work(&self, timeout: Duration) {
+        let debt = self.debt.lock().unwrap();
+        let _ = self.cv.wait_timeout(debt, timeout).unwrap();
+    }
+}
+
+/// Per-table durable state, owned by `Table` when its store has a data
+/// directory. `inner` serializes WAL appends with checkpoint's rotation
+/// — the lock order everywhere is `inner` before any tablet lock.
+pub(crate) struct TableStorage {
+    pub(crate) dir: PathBuf,
+    pub(crate) cfg: StorageConfig,
+    pub(crate) counters: std::sync::Arc<StorageCounters>,
+    pub(crate) gate: std::sync::Arc<StorageGate>,
+    /// Memtable size that triggers a checkpoint (the tablets themselves
+    /// are built with an unbounded inline threshold: durable flushes are
+    /// checkpoint's job, never `Tablet::flush`'s).
+    pub(crate) flush_bytes: usize,
+    /// On-disk runs per tablet beyond which the compactor owes a merge.
+    pub(crate) max_runs: usize,
+    pub(crate) inner: Mutex<WalState>,
+}
+
+pub(crate) struct WalState {
+    pub(crate) wal: WalWriter,
+    /// WAL sequences below this are superseded by the manifest's runs.
+    pub(crate) wal_floor: u64,
+    pub(crate) next_file_id: u64,
+}
+
+/// Escape a table name into a filesystem-safe directory name: bytes in
+/// `[A-Za-z0-9_-]` pass through, everything else becomes `%XX`.
+/// Reversible and collision-free, and the output can never be `.`,
+/// `..`, empty, or contain a path separator.
+pub fn escape_table_name(name: &str) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(name.len() + 4);
+    for &b in name.as_bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'_' | b'-' => out.push(b as char),
+            _ => {
+                let _ = write!(out, "%{b:02X}");
+            }
+        }
+    }
+    if out.is_empty() {
+        out.push('%');
+    }
+    out
+}
+
+/// Inverse of [`escape_table_name`]; `None` for directories we did not
+/// create (bad escapes, non-UTF-8 reconstructions).
+pub fn unescape_table_name(dir: &str) -> Option<String> {
+    if dir == "%" {
+        return Some(String::new());
+    }
+    let mut bytes = Vec::with_capacity(dir.len());
+    let mut it = dir.bytes();
+    while let Some(b) = it.next() {
+        if b == b'%' {
+            let hex = |c: u8| (c as char).to_digit(16).map(|d| d as u8);
+            let hi = hex(it.next()?)?;
+            let lo = hex(it.next()?)?;
+            bytes.push(hi * 16 + lo);
+        } else {
+            bytes.push(b);
+        }
+    }
+    String::from_utf8(bytes).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn escape_roundtrips() {
+        for name in [
+            "simple",
+            "with.dots",
+            "..",
+            ".",
+            "",
+            "path/traversal",
+            "emoji✓table",
+            "A_b-9",
+            "%already%escaped",
+            "spaces and\ttabs",
+        ] {
+            let esc = escape_table_name(name);
+            assert!(!esc.is_empty());
+            assert!(!esc.contains('/') && !esc.contains('\\'), "{esc}");
+            assert_ne!(esc, ".");
+            assert_ne!(esc, "..");
+            assert_eq!(unescape_table_name(&esc).as_deref(), Some(name), "{esc}");
+        }
+    }
+
+    #[test]
+    fn escape_is_injective_on_tricky_pairs() {
+        // '.' escapes, so "a.b" and its escaped form can't collide
+        assert_ne!(escape_table_name("a.b"), escape_table_name("a%2Eb"));
+        assert_ne!(escape_table_name("x"), escape_table_name("X%"));
+    }
+
+    #[test]
+    fn unescape_rejects_foreign_dirs() {
+        assert_eq!(unescape_table_name("%zz"), None);
+        assert_eq!(unescape_table_name("trailing%"), None);
+        assert_eq!(unescape_table_name("%4"), None);
+    }
+
+    #[test]
+    fn gate_waits_until_debt_drains() {
+        let gate = Arc::new(StorageGate::new());
+        gate.set("t", 100);
+        assert_eq!(gate.total(), 100);
+        // under budget: no wait at all
+        assert!(!gate.wait_below(100, Duration::from_millis(1), "t").unwrap());
+        // over budget, drained by another thread: stalls then passes
+        let g2 = Arc::clone(&gate);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            g2.set("t", 10);
+        });
+        let stalled = gate.wait_below(50, Duration::from_secs(5), "t").unwrap();
+        assert!(stalled);
+        h.join().unwrap();
+        assert_eq!(gate.total(), 10);
+    }
+
+    #[test]
+    fn gate_times_out_typed() {
+        let gate = StorageGate::new();
+        gate.set("big", 1 << 30);
+        match gate.wait_below(1, Duration::from_millis(20), "big") {
+            Err(D4mError::Backpressure { table, waited_ms }) => {
+                assert_eq!(table, "big");
+                assert!(waited_ms >= 20);
+            }
+            other => panic!("expected Backpressure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_sums_across_tables() {
+        let gate = StorageGate::new();
+        gate.set("a", 30);
+        gate.set("b", 40);
+        assert_eq!(gate.total(), 70);
+        gate.set("a", 0);
+        assert_eq!(gate.total(), 40);
+    }
+}

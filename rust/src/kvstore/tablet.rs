@@ -25,6 +25,82 @@ use std::sync::{Arc, Mutex};
 
 use super::iterator::{EntryStream, IterConfig, MergeIter};
 use super::key::{Entry, RowRange};
+use super::storage::DiskRun;
+
+/// One frozen, immutable segment of a tablet: an in-memory sorted run
+/// (`Arc`-shared with snapshots) or an on-disk frozen run read lazily
+/// through its sparse index. Both expose the same pull-based cursor
+/// shape, so the merge/iterator stack upstream never knows the
+/// difference — this is the seam the durable engine plugs into.
+#[derive(Debug, Clone)]
+pub enum Segment {
+    Mem(Arc<Vec<Entry>>),
+    Disk(Arc<DiskRun>),
+}
+
+impl Segment {
+    pub fn len(&self) -> usize {
+        match self {
+            Segment::Mem(r) => r.len(),
+            Segment::Disk(d) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes — on-disk segments keep only their index in memory.
+    fn mem_bytes(&self) -> usize {
+        match self {
+            Segment::Mem(r) => r.iter().map(Entry::bytes).sum(),
+            Segment::Disk(_) => 0,
+        }
+    }
+
+    /// Lazy sorted cursor over the rows of `range`.
+    pub fn cursor(&self, range: &RowRange) -> EntryStream {
+        match self {
+            Segment::Mem(r) => Box::new(RunCursor::new(r.clone(), range)),
+            Segment::Disk(d) => Box::new(d.cursor(range)),
+        }
+    }
+
+    /// Stored entries (all versions) whose row falls in `range`.
+    fn count_in(&self, range: &RowRange) -> usize {
+        match self {
+            Segment::Mem(r) => {
+                let (lo, hi) = slice_bounds(r, range);
+                hi - lo
+            }
+            Segment::Disk(d) => d.count_in(range),
+        }
+    }
+
+    /// Append this segment's distinct row keys in `range` to `out`
+    /// (consecutive-deduped; the caller merges across segments).
+    fn append_row_keys(&self, range: &RowRange, out: &mut Vec<String>) {
+        match self {
+            Segment::Mem(r) => {
+                let mut last: Option<&str> = None;
+                for e in slice_range(r, range) {
+                    if last != Some(e.key.row.as_str()) {
+                        out.push(e.key.row.clone());
+                        last = Some(e.key.row.as_str());
+                    }
+                }
+            }
+            Segment::Disk(d) => d.row_keys_in(range, out),
+        }
+    }
+
+    fn as_disk(&self) -> Option<&Arc<DiskRun>> {
+        match self {
+            Segment::Disk(d) => Some(d),
+            Segment::Mem(_) => None,
+        }
+    }
+}
 
 /// Tuning knobs for tablets (defaults sized for tests; benches override).
 #[derive(Debug, Clone)]
@@ -50,7 +126,10 @@ pub struct Tablet {
     sorted_upto: usize,
     memtable_bytes: usize,
     /// Immutable sorted runs, newest first; `Arc`-shared with snapshots.
-    runs: Vec<Arc<Vec<Entry>>>,
+    /// In-memory tablets hold only `Segment::Mem` runs; durable tablets
+    /// hold `Segment::Disk` (plus a transient `Mem` while a checkpoint
+    /// is writing the run file — see `freeze_memtable`).
+    runs: Vec<Segment>,
     /// Cached sorted view of the memtable for `&self` snapshots.
     /// Writers invalidate it (via `get_mut`, no lock traffic); the first
     /// subsequent snapshot rebuilds it once and later snapshots share
@@ -118,11 +197,91 @@ impl Tablet {
         };
         self.sorted_upto = 0;
         self.memtable_bytes = 0;
-        self.runs.insert(0, run);
+        self.runs.insert(0, Segment::Mem(run));
         self.flushes += 1;
         if self.runs.len() > self.config.max_runs {
             self.compact();
         }
+    }
+
+    /// Durable write path: freeze the memtable as a `Segment::Mem` run
+    /// and return the frozen `Arc`, so checkpoint can write the run file
+    /// *outside* the tablet lock while readers keep seeing the entries.
+    /// Once the file is durable, `replace_mem_with_disk` swaps it in.
+    /// No compaction here — merging durable tablets is the disk
+    /// compactor's job.
+    pub(crate) fn freeze_memtable(&mut self) -> Option<Arc<Vec<Entry>>> {
+        if self.memtable.is_empty() {
+            return None;
+        }
+        let cached = self.mem_view.get_mut().unwrap().take();
+        let run = match cached {
+            Some(v) if v.len() == self.memtable.len() => {
+                self.memtable.clear();
+                v
+            }
+            _ => {
+                self.ensure_sorted();
+                Arc::new(std::mem::take(&mut self.memtable))
+            }
+        };
+        self.sorted_upto = 0;
+        self.memtable_bytes = 0;
+        self.runs.insert(0, Segment::Mem(run.clone()));
+        self.flushes += 1;
+        Some(run)
+    }
+
+    /// Swap the frozen in-memory run installed by `freeze_memtable` for
+    /// its now-durable on-disk twin (matched by `Arc` identity). Open
+    /// snapshots keep their `Mem` reference; new snapshots read the file.
+    pub(crate) fn replace_mem_with_disk(&mut self, mem: &Arc<Vec<Entry>>, disk: Arc<DiskRun>) {
+        for s in &mut self.runs {
+            if let Segment::Mem(m) = s {
+                if Arc::ptr_eq(m, mem) {
+                    *s = Segment::Disk(disk);
+                    return;
+                }
+            }
+        }
+        debug_assert!(false, "frozen run vanished before its disk swap");
+    }
+
+    /// Install recovered on-disk runs (recovery only; replaces nothing).
+    pub(crate) fn set_disk_runs(&mut self, runs: Vec<Arc<DiskRun>>) {
+        debug_assert!(self.runs.is_empty() && self.memtable.is_empty());
+        self.runs = runs.into_iter().map(Segment::Disk).collect();
+    }
+
+    /// The tablet's on-disk runs, newest first.
+    pub(crate) fn disk_runs(&self) -> Vec<Arc<DiskRun>> {
+        self.runs.iter().filter_map(|s| s.as_disk().cloned()).collect()
+    }
+
+    /// Replace the disk runs named by `victim_ids` with one merged run
+    /// (disk compaction install step). Returns `false` — installing
+    /// nothing — unless *every* victim is still present, which guards
+    /// against racing table mutations between plan and install.
+    pub(crate) fn swap_disk_runs(&mut self, victim_ids: &[u64], merged: Arc<DiskRun>) -> bool {
+        let found = self
+            .runs
+            .iter()
+            .filter(|s| matches!(s.as_disk(), Some(d) if victim_ids.contains(&d.file_id())))
+            .count();
+        if found != victim_ids.len() {
+            return false;
+        }
+        self.runs
+            .retain(|s| !matches!(s.as_disk(), Some(d) if victim_ids.contains(&d.file_id())));
+        // merged data is the oldest layer among survivors: append last
+        self.runs.push(Segment::Disk(merged));
+        self.compactions += 1;
+        true
+    }
+
+    /// Current (unflushed) memtable size in bytes.
+    pub(crate) fn memtable_bytes(&self) -> usize {
+        self.memtable_bytes
     }
 
     /// Size-tiered compaction: merge the smallest runs together until at
@@ -137,10 +296,10 @@ impl Tablet {
         }
         // sort runs by size; merge everything except the `keep` largest
         self.runs.sort_by_key(|r| std::cmp::Reverse(r.len()));
-        let small: Vec<Arc<Vec<Entry>>> = self.runs.split_off(keep);
+        let small: Vec<Segment> = self.runs.split_off(keep);
         let sources: Vec<EntryStream> = small.into_iter().map(into_entry_iter).collect();
         let merged: Vec<Entry> = MergeIter::new(sources).collect();
-        self.runs.push(Arc::new(merged));
+        self.runs.push(Segment::Mem(Arc::new(merged)));
         // restore newest-first-ish ordering guarantee is not needed for
         // correctness (versioning is by timestamp, not layer), but keep
         // deterministic order for tests
@@ -165,7 +324,7 @@ impl Tablet {
         }
         let merged: Vec<Entry> =
             super::iterator::VersioningIter::new(MergeIter::new(sources)).collect();
-        self.runs = vec![Arc::new(merged)];
+        self.runs = vec![Segment::Mem(Arc::new(merged))];
         self.compactions += 1;
     }
 
@@ -174,14 +333,10 @@ impl Tablet {
         self.memtable.len() + self.runs.iter().map(|r| r.len()).sum::<usize>()
     }
 
-    /// Approximate resident bytes.
+    /// Approximate resident bytes (on-disk segments count nothing —
+    /// only their sparse index lives in memory).
     pub fn mem_bytes(&self) -> usize {
-        self.memtable_bytes
-            + self
-                .runs
-                .iter()
-                .map(|r| r.iter().map(Entry::bytes).sum::<usize>())
-                .sum::<usize>()
+        self.memtable_bytes + self.runs.iter().map(Segment::mem_bytes).sum::<usize>()
     }
 
     /// Freeze the tablet's current contents into an immutable,
@@ -236,36 +391,35 @@ impl Tablet {
 #[derive(Debug, Clone)]
 pub struct TabletSnapshot {
     mem: Arc<Vec<Entry>>,
-    runs: Vec<Arc<Vec<Entry>>>,
+    runs: Vec<Segment>,
 }
 
 impl TabletSnapshot {
     /// Scan a row range through the server-side iterator stack,
-    /// pull-based: entries are cloned out of the frozen segments one at
-    /// a time as the consumer advances, never into an owned `Vec`.
+    /// pull-based: entries are cloned out of the frozen segments (or
+    /// read block-at-a-time from disk segments) one at a time as the
+    /// consumer advances, never into an owned `Vec`.
     pub fn scan(&self, range: &RowRange, cfg: &IterConfig) -> EntryStream {
         let mut sources: Vec<EntryStream> = Vec::with_capacity(1 + self.runs.len());
         // memtable view first: lowest source index wins exact key ties
         sources.push(Box::new(RunCursor::new(self.mem.clone(), range)));
         for run in &self.runs {
-            sources.push(Box::new(RunCursor::new(run.clone(), range)));
+            sources.push(run.cursor(range));
         }
         cfg.apply(Box::new(MergeIter::new(sources)))
     }
 
     /// Stored entries in the snapshot (all versions, before the stack).
     pub fn raw_len(&self) -> usize {
-        self.mem.len() + self.runs.iter().map(|r| r.len()).sum::<usize>()
+        self.mem.len() + self.runs.iter().map(Segment::len).sum::<usize>()
     }
 
     /// Stored entries falling inside `range` (all versions) — binary
-    /// searched per segment, so sizing a scan costs O(log n) per layer.
+    /// searched per in-memory segment and index-counted per on-disk
+    /// segment, so sizing a scan stays cheap in every layer.
     pub fn raw_len_in(&self, range: &RowRange) -> usize {
-        let span = |run: &[Entry]| {
-            let (lo, hi) = slice_bounds(run, range);
-            hi - lo
-        };
-        span(&self.mem) + self.runs.iter().map(|r| span(r)).sum::<usize>()
+        let (lo, hi) = slice_bounds(&self.mem, range);
+        (hi - lo) + self.runs.iter().map(|s| s.count_in(range)).sum::<usize>()
     }
 
     /// Distinct row keys stored in `range`, sorted ascending. Each
@@ -274,14 +428,15 @@ impl TabletSnapshot {
     /// are all tombstoned may still be reported.
     pub fn row_keys_in(&self, range: &RowRange) -> Vec<String> {
         let mut out: Vec<String> = Vec::new();
-        for run in std::iter::once(&self.mem).chain(self.runs.iter()) {
-            let mut last: Option<&str> = None;
-            for e in slice_range(run, range) {
-                if last != Some(e.key.row.as_str()) {
-                    out.push(e.key.row.clone());
-                    last = Some(e.key.row.as_str());
-                }
+        let mut last: Option<&str> = None;
+        for e in slice_range(&self.mem, range) {
+            if last != Some(e.key.row.as_str()) {
+                out.push(e.key.row.clone());
+                last = Some(e.key.row.as_str());
             }
+        }
+        for run in &self.runs {
+            run.append_row_keys(range, &mut out);
         }
         out.sort_unstable();
         out.dedup();
@@ -322,16 +477,20 @@ impl Iterator for RunCursor {
     }
 }
 
-/// Turn a frozen run into an owned entry iterator: moves the entries
-/// when this was the last reference, falls back to a cloning cursor when
-/// an open snapshot still shares the segment.
-fn into_entry_iter(run: Arc<Vec<Entry>>) -> EntryStream {
-    match Arc::try_unwrap(run) {
-        Ok(v) => Box::new(v.into_iter()),
-        Err(shared) => {
-            let end = shared.len();
-            Box::new(RunCursor { run: shared, pos: 0, end })
-        }
+/// Turn a frozen segment into an owned entry iterator: moves the
+/// entries when this was the last reference to an in-memory run, falls
+/// back to a cloning cursor when an open snapshot still shares it, and
+/// streams a disk segment through its block cursor.
+fn into_entry_iter(seg: Segment) -> EntryStream {
+    match seg {
+        Segment::Mem(run) => match Arc::try_unwrap(run) {
+            Ok(v) => Box::new(v.into_iter()),
+            Err(shared) => {
+                let end = shared.len();
+                Box::new(RunCursor { run: shared, pos: 0, end })
+            }
+        },
+        Segment::Disk(d) => Box::new(d.cursor(&RowRange::all())),
     }
 }
 
@@ -550,5 +709,94 @@ mod tests {
         let rest: Vec<Entry> = stream.collect();
         assert_eq!(first, collected[0]);
         assert_eq!(rest, collected[1..]);
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static N: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "d4m-tablet-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn freeze_then_disk_swap_keeps_readers_whole() {
+        let dir = tmp_dir("freeze");
+        let mut t = Tablet::new(TabletConfig { memtable_flush_bytes: usize::MAX, max_runs: 8 });
+        for i in 0..50u64 {
+            t.put(Entry::new(Key::cell(format!("r{i:03}"), "c", i + 1), "v"));
+        }
+        let reference = t.scan(&RowRange::all(), &IterConfig::default());
+        // freeze: entries move from memtable to a Mem segment — scans
+        // must see them throughout
+        let frozen = t.freeze_memtable().expect("memtable was non-empty");
+        assert!(t.memtable.is_empty());
+        assert_eq!(t.scan(&RowRange::all(), &IterConfig::default()), reference);
+        let pre_swap = t.snapshot();
+        // write the run file and swap it in by Arc identity
+        let disk = DiskRun::create(&dir, 1, &frozen).unwrap();
+        t.replace_mem_with_disk(&frozen, disk);
+        assert!(matches!(t.runs[0], Segment::Disk(_)));
+        assert_eq!(t.scan(&RowRange::all(), &IterConfig::default()), reference);
+        // the snapshot taken mid-protocol still reads its Mem segment
+        let got: Vec<Entry> = pre_swap.scan(&RowRange::all(), &IterConfig::default()).collect();
+        assert_eq!(got, reference);
+        // and the freeze is idempotent on an empty memtable
+        assert!(t.freeze_memtable().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn mixed_mem_and_disk_segments_merge_transparently() {
+        let dir = tmp_dir("mixed");
+        let mut t = Tablet::new(TabletConfig { memtable_flush_bytes: usize::MAX, max_runs: 8 });
+        // old version on disk, new version in the memtable
+        t.put(Entry::new(Key::cell("r", "c", 1), "old"));
+        let frozen = t.freeze_memtable().unwrap();
+        let disk = DiskRun::create(&dir, 1, &frozen).unwrap();
+        t.replace_mem_with_disk(&frozen, disk);
+        t.put(Entry::new(Key::cell("r", "c", 2), "new"));
+        t.put(Entry::new(Key::cell("s", "c", 3), "7"));
+        let out = t.scan(&RowRange::all(), &IterConfig::default());
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].value, "new");
+        // summing combines across the disk/mem boundary
+        t.put(Entry::new(Key::cell("s", "c", 4), "5"));
+        let cfg = IterConfig { summing: true, ..Default::default() };
+        let summed = t.scan(&RowRange::single("s"), &cfg);
+        assert_eq!(summed[0].value, "12");
+        // row keys and counts agree across segment kinds
+        assert_eq!(t.row_keys_in(&RowRange::all()), vec!["r", "s"]);
+        assert_eq!(t.snapshot().raw_len_in(&RowRange::all()), 4);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn swap_disk_runs_requires_all_victims() {
+        let dir = tmp_dir("swap");
+        let mut t = Tablet::new(TabletConfig { memtable_flush_bytes: usize::MAX, max_runs: 2 });
+        let mut all = Vec::new();
+        for (id, row) in [(1u64, "a"), (2, "b"), (3, "c")] {
+            t.put(Entry::new(Key::cell(row, "c", id), "v"));
+            all.push(Entry::new(Key::cell(row, "c", id), "v"));
+            let frozen = t.freeze_memtable().unwrap();
+            let disk = DiskRun::create(&dir, id, &frozen).unwrap();
+            t.replace_mem_with_disk(&frozen, disk);
+        }
+        // a stale plan naming a missing victim installs nothing
+        let merged = DiskRun::create(&dir, 10, &all).unwrap();
+        assert!(!t.swap_disk_runs(&[1, 99], merged.clone()));
+        assert_eq!(t.disk_runs().len(), 3);
+        // a valid plan replaces exactly its victims
+        assert!(t.swap_disk_runs(&[1, 2], merged));
+        let ids: Vec<u64> = t.disk_runs().iter().map(|d| d.file_id()).collect();
+        assert_eq!(ids, vec![3, 10]);
+        assert_eq!(t.scan(&RowRange::all(), &IterConfig::default()).len(), 3);
+        assert_eq!(t.compactions, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

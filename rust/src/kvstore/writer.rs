@@ -7,6 +7,7 @@ use std::sync::Arc;
 
 use super::key::{Entry, Key};
 use super::store::Table;
+use crate::error::Result;
 use crate::metrics::Counter;
 
 /// BatchWriter tuning.
@@ -46,32 +47,41 @@ impl BatchWriter {
         }
     }
 
-    /// Queue one mutation (auto-timestamped).
-    pub fn put(&mut self, row: &str, cq: &str, value: &str) {
+    /// Queue one mutation (auto-timestamped). Fails only when a
+    /// threshold trips and the resulting flush fails (durable tables:
+    /// WAL I/O or backpressure) — the buffer is kept, so retrying is
+    /// safe.
+    pub fn put(&mut self, row: &str, cq: &str, value: &str) -> Result<()> {
         let ts = self.table.next_ts();
-        self.put_entry(Entry::new(Key::cell(row, cq, ts), value));
+        self.put_entry(Entry::new(Key::cell(row, cq, ts), value))
     }
 
     /// Queue a fully-formed entry.
-    pub fn put_entry(&mut self, e: Entry) {
+    pub fn put_entry(&mut self, e: Entry) -> Result<()> {
         self.buf_bytes += e.bytes();
         self.buf.push(e);
         if self.buf.len() >= self.config.max_batch || self.buf_bytes >= self.config.max_bytes {
-            self.flush();
+            return self.flush();
         }
+        Ok(())
     }
 
     /// Push the buffer into the table (grouped by tablet inside
     /// `put_batch` so each tablet lock is taken once per flush).
-    pub fn flush(&mut self) {
+    /// `put_batch` rejects batches whole, so on failure nothing was
+    /// applied and nothing is counted — but the rejected batch is gone;
+    /// a caller that wants to retry must re-queue its mutations.
+    pub fn flush(&mut self) -> Result<()> {
         if self.buf.is_empty() {
-            return;
+            return Ok(());
         }
         let batch = std::mem::take(&mut self.buf);
-        self.written.add(batch.len() as u64);
         self.buf_bytes = 0;
-        self.table.put_batch(batch);
+        let n = batch.len() as u64;
+        self.table.put_batch(batch)?;
+        self.written.add(n);
         self.flushes.inc();
+        Ok(())
     }
 
     /// Total entries pushed to the table so far (excludes buffered).
@@ -86,7 +96,9 @@ impl BatchWriter {
 
 impl Drop for BatchWriter {
     fn drop(&mut self) {
-        self.flush();
+        // best effort: callers that need the error (or the durability
+        // guarantee) must flush explicitly before dropping
+        let _ = self.flush();
     }
 }
 
@@ -103,11 +115,11 @@ mod tests {
         let t = store.create_table("t", vec![]).unwrap();
         let mut w = BatchWriter::new(t.clone(), WriterConfig { max_batch: 10, max_bytes: 1 << 30 });
         for i in 0..25 {
-            w.put(&format!("r{i:03}"), "c", "v");
+            w.put(&format!("r{i:03}"), "c", "v").unwrap();
         }
         assert_eq!(w.flushes(), 2); // two full batches, 5 still buffered
         assert_eq!(w.written(), 20);
-        w.flush();
+        w.flush().unwrap();
         assert_eq!(w.written(), 25);
         assert_eq!(t.scan(&RowRange::all(), &IterConfig::default()).len(), 25);
     }
@@ -119,7 +131,7 @@ mod tests {
         let mut w =
             BatchWriter::new(t.clone(), WriterConfig { max_batch: 1_000_000, max_bytes: 200 });
         for i in 0..20 {
-            w.put(&format!("row_number_{i:06}"), "column", "value");
+            w.put(&format!("row_number_{i:06}"), "column", "value").unwrap();
         }
         assert!(w.flushes() >= 2);
     }
@@ -130,7 +142,7 @@ mod tests {
         let t = store.create_table("t", vec![]).unwrap();
         {
             let mut w = BatchWriter::new(t.clone(), WriterConfig::default());
-            w.put("r", "c", "v");
+            w.put("r", "c", "v").unwrap();
         } // dropped here
         assert_eq!(t.scan(&RowRange::all(), &IterConfig::default()).len(), 1);
     }

@@ -446,7 +446,18 @@ fn execute(sh: &Shared, owner: u64, msg: ClientMsg) -> (ServerMsg, bool) {
         // explicitly (the client checks the Pong's version)
         ClientMsg::Ping { version: _ } => (ServerMsg::Pong { version: wire::VERSION }, false),
         ClientMsg::Stats => (ServerMsg::Stats(sh.snapshots()), false),
-        ClientMsg::Shutdown => (ServerMsg::ShutdownAck, true),
+        ClientMsg::Shutdown => {
+            // flush-before-ack: every memtable freezes into an on-disk
+            // run and the WALs fsync before the ack leaves, so an acked
+            // shutdown implies nothing was only in RAM. On checkpoint
+            // failure the ack still goes out — every acked write is in
+            // the WAL already, so recovery replays it; refusing to shut
+            // down would just wedge the client.
+            if let Err(e) = sh.server.checkpoint() {
+                eprintln!("d4m-net: checkpoint on shutdown failed: {e}");
+            }
+            (ServerMsg::ShutdownAck, true)
+        }
         ClientMsg::OpenCursor { table, query, page_entries } => {
             // clamp what a remote peer may ask for: the per-page byte
             // budget (cursor::PAGE_BYTE_BUDGET) bounds memory anyway,

@@ -851,6 +851,15 @@ fn put_error(b: &mut Vec<u8>, e: &D4mError) {
             put_u8(b, 10);
             put_str(b, s);
         }
+        D4mError::Backpressure { table, waited_ms } => {
+            put_u8(b, 12);
+            put_str(b, table);
+            put_varint(b, *waited_ms);
+        }
+        D4mError::Storage(s) => {
+            put_u8(b, 13);
+            put_str(b, s);
+        }
     }
 }
 
@@ -871,6 +880,8 @@ fn get_error(c: &mut Cursor) -> WireResult<D4mError> {
         9 => D4mError::Remote(format!("wire: {}", c.str()?)),
         10 => D4mError::Remote(c.str()?),
         11 => D4mError::UnexpectedResponse { expected: c.str()?, got: c.str()? },
+        12 => D4mError::Backpressure { table: c.str()?, waited_ms: c.varint()? },
+        13 => D4mError::Storage(c.str()?),
         tag => return Err(WireError::UnknownTag { what: "error", tag }),
     })
 }
@@ -1313,6 +1324,8 @@ mod tests {
             D4mError::InvalidArg("i".into()),
             D4mError::UnexpectedResponse { expected: "Assoc".into(), got: "Tables".into() },
             D4mError::Remote("far away".into()),
+            D4mError::Backpressure { table: "G".into(), waited_ms: 1234 },
+            D4mError::Storage("bad run footer".into()),
         ];
         for e in errs {
             let expect = e.to_string();

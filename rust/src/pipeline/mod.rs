@@ -101,17 +101,20 @@ impl IngestPipeline {
                 sync_channel(self.config.queue_depth);
             senders.push(tx);
             let table = self.table.clone();
-            handles.push(std::thread::spawn(move || -> u64 {
+            handles.push(std::thread::spawn(move || -> Result<u64> {
                 let mut w = table.writer();
                 let mut count = 0u64;
                 while let Ok(batch) = rx.recv() {
                     for (r, c, v) in &batch {
-                        w.put(r, c, v);
+                        // a write error (durable stores: WAL I/O or
+                        // backpressure timeout) kills the worker; its
+                        // closed channel fails the producer's next send
+                        w.put(r, c, v)?;
                     }
                     count += batch.len() as u64;
                 }
-                w.flush();
-                count
+                w.flush()?;
+                Ok(count)
             }));
         }
 
@@ -146,7 +149,7 @@ impl IngestPipeline {
 
         let mut per_worker = Vec::with_capacity(n);
         for h in handles {
-            per_worker.push(h.join().map_err(|_| D4mError::Pipeline("worker panicked".into()))?);
+            per_worker.push(h.join().map_err(|_| D4mError::Pipeline("worker panicked".into()))??);
         }
         let elapsed = t0.elapsed();
         let secs = elapsed.as_secs_f64().max(1e-9);

@@ -56,12 +56,12 @@ fn concurrent_readers_vs_writers_stream_consistency() {
                 let mut i = 0u64;
                 while !stop.load(Ordering::Relaxed) {
                     let row = format!("{prefix}{:04}", i % 400);
-                    t.put(&row, "c", &format!("{w}-{i}"));
+                    t.put(&row, "c", &format!("{w}-{i}")).unwrap();
                     if i % 7 == 0 {
-                        t.delete(&row, "c");
+                        t.delete(&row, "c").unwrap();
                     }
                     if i % 89 == 0 {
-                        t.flush();
+                        t.flush().unwrap();
                     }
                     i += 1;
                 }
@@ -118,11 +118,11 @@ fn delete_across_flush_boundary_under_concurrent_streams() {
             s.spawn(move || {
                 let mut generation = 0u64;
                 while !stop.load(Ordering::Relaxed) {
-                    t.put("r", "c", &generation.to_string());
-                    t.flush();
-                    t.delete("r", "c");
+                    t.put("r", "c", &generation.to_string()).unwrap();
+                    t.flush().unwrap();
+                    t.delete("r", "c").unwrap();
                     if generation % 3 == 0 {
-                        t.flush(); // tombstone crosses the boundary too
+                        t.flush().unwrap(); // tombstone crosses the boundary too
                     }
                     generation += 1;
                 }
@@ -164,16 +164,16 @@ fn open_streams_do_not_block_writers_or_each_other() {
     let store = stress_store();
     let t = store.create_table("t", vec!["m".into()]).unwrap();
     for i in 0..500 {
-        t.put(&format!("a{i:04}"), "c", "1");
-        t.put(&format!("z{i:04}"), "c", "1");
+        t.put(&format!("a{i:04}"), "c", "1").unwrap();
+        t.put(&format!("z{i:04}"), "c", "1").unwrap();
     }
     // open several streams and hold them un-consumed
     let cfg = IterConfig::default();
     let streams: Vec<_> = (0..4).map(|_| t.scan_stream(&RowRange::all(), &cfg)).collect();
     // writers (same thread — a held tablet lock would deadlock here)
-    t.put("a9999", "c", "late");
-    t.delete("a0000", "c");
-    t.flush();
+    t.put("a9999", "c", "late").unwrap();
+    t.delete("a0000", "c").unwrap();
+    t.flush().unwrap();
     // each held stream still reads its pre-write snapshot
     for s in streams {
         let seen: Vec<Entry> = s.collect();
