@@ -15,6 +15,12 @@
 //!                 twin of scan.rs's concurrent4)
 //!   paged       — one client draining the full table through a scan
 //!                 cursor (512-entry pages); received entries per second
+//!   degraded    — the same paged drain through a fault-injection proxy
+//!                 cutting ~1% of frames: the self-healing client
+//!                 reconnects and resumes the cursor, so the measured
+//!                 rate is the degraded-mode trajectory (still
+//!                 bit-complete — the drained entry count must match
+//!                 the clean paged leg)
 //!
 //! Records append to `BENCH_net.json`; `--smoke` runs the smallest size
 //! only (the CI regression probe checked by tools/bench_check.py).
@@ -28,7 +34,8 @@ use d4m::assoc::KeySel;
 use d4m::connectors::TableQuery;
 use d4m::coordinator::{D4mApi, D4mServer, Request};
 use d4m::gen::{kronecker_triples, vertex_key, KroneckerParams};
-use d4m::net::{serve, NetOpts, RemoteD4m};
+use d4m::net::chaos::{ChaosOpts, ChaosProxy, Profile};
+use d4m::net::{serve, NetOpts, RemoteD4m, RetryPolicy};
 use d4m::pipeline::PipelineConfig;
 use d4m::util::bench::{append_records, BenchRecord};
 use d4m::util::fmt_rate;
@@ -60,7 +67,8 @@ fn main() {
         let addr = handle.addr().to_string();
 
         // -- single-client round-trip latency (tiny frames, 1 in flight)
-        let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).expect("connect");
+        let c = RemoteD4m::connect_with(&addr, RetryPolicy::probe(25, Duration::from_millis(100)))
+            .expect("connect");
         let probe = vertex_key(1);
         let q = TableQuery::all().rows(KeySel::keys(&[probe.as_str()]));
         let t0 = Instant::now();
@@ -96,8 +104,11 @@ fn main() {
                 .map(|_| {
                     let addr = addr.clone();
                     s.spawn(move || {
-                        let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100))
-                            .expect("connect");
+                        let c = RemoteD4m::connect_with(
+                            &addr,
+                            RetryPolicy::probe(25, Duration::from_millis(100)),
+                        )
+                        .expect("connect");
                         let mut got = 0usize;
                         for _ in 0..passes {
                             got += c.query("G", TableQuery::all()).expect("scan").nnz();
@@ -123,6 +134,46 @@ fn main() {
         }
         let dt = t3.elapsed().as_secs_f64();
         report(&mut records, n, "paged", dt, paged_total);
+
+        // -- the same paged drain through a faulty link: ~1% of frames
+        // cut the connection; the healing client reconnects and resumes
+        let mut proxy = ChaosProxy::start(
+            "127.0.0.1:0",
+            &addr,
+            ChaosOpts { profile: Profile::Drop { rate: 0.01 }, ..Default::default() },
+        )
+        .expect("chaos proxy");
+        let heal = RetryPolicy {
+            max_attempts: 16,
+            base_delay: Duration::from_millis(5),
+            max_delay: Duration::from_millis(100),
+            deadline: Some(Duration::from_secs(120)),
+            ..Default::default()
+        };
+        let cd =
+            RemoteD4m::connect_with(&proxy.addr().to_string(), heal).expect("connect degraded");
+        let t4 = Instant::now();
+        let mut degraded_total = 0usize;
+        for _ in 0..passes {
+            for page in cd.scan_pages("G", TableQuery::all(), PAGE_ENTRIES) {
+                degraded_total += page.expect("cursor page").len();
+            }
+        }
+        let dt = t4.elapsed().as_secs_f64();
+        assert_eq!(
+            degraded_total, paged_total,
+            "degraded scan dropped entries despite healing"
+        );
+        println!(
+            "# degraded healing: {} retries, {} reconnects, {} cursor resumes, {} faults injected",
+            cd.retry_count(),
+            cd.reconnect_count(),
+            cd.cursor_resume_count(),
+            proxy.stats().faults
+        );
+        report(&mut records, n, "degraded", dt, degraded_total);
+        drop(cd);
+        proxy.shutdown();
 
         handle.shutdown();
     }

@@ -53,7 +53,10 @@ pub trait D4mApi: Send + Sync {
     fn open_cursor(&self, table: &str, query: &TableQuery, page_entries: usize) -> Result<u64>;
 
     /// Pull the next page of an open cursor. When [`CursorPage::done`]
-    /// is set the stream is exhausted and the cursor already freed.
+    /// is set the stream is exhausted and its snapshot released; send
+    /// [`D4mApi::cursor_close`] to free the cursor handle (the server
+    /// retains it briefly so a lost `done` reply is replayable after a
+    /// reconnect — see `coordinator::cursor`).
     fn cursor_next(&self, cursor: u64) -> Result<CursorPage>;
 
     /// Close a cursor early, releasing its snapshot. Idempotent.
@@ -226,9 +229,12 @@ impl Iterator for ScanPages<'_> {
         match self.api.cursor_next(id) {
             Ok(page) => {
                 if page.done {
-                    // the server freed the cursor with the final page
+                    // final page delivered: free the cursor handle now
+                    // (the server retains done cursors for resume
+                    // replay until closed or swept)
                     self.finished = true;
                     self.cursor = None;
+                    let _ = self.api.cursor_close(id);
                     if page.triples.is_empty() {
                         return None;
                     }

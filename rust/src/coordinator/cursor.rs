@@ -1,10 +1,10 @@
-//! Server-side scan cursors: bounded, owned, evictable handles over live
-//! snapshot [`TripleStream`]s.
+//! Server-side scan cursors: bounded, owned, evictable, **resumable**
+//! handles over live snapshot [`TripleStream`]s.
 //!
 //! A cursor is opened against a bound table's
 //! [`DbTable::scan_triples`](crate::connectors::DbTable::scan_triples)
 //! stream and drained page by page (at most `page_entries` triples per
-//! [`CursorPage`]). The table enforces three protections so an abandoned
+//! [`CursorPage`]). The table enforces four protections so an abandoned
 //! cursor can never pin a snapshot forever:
 //!
 //! * **ownership** — every cursor belongs to the owner id that opened it
@@ -13,18 +13,32 @@
 //!   `reap_owner` (surfaced as `D4mServer::reap_cursors`) drops every
 //!   cursor of a disconnected owner at once.
 //! * **cap** — at most `cap` cursors may be open server-wide; the N+1th
-//!   open is refused with a typed error instead of accumulating pinned
-//!   snapshots.
-//! * **idle TTL** — a cursor untouched for `idle_ttl` is evicted on the
-//!   next cursor op (open/next/close all sweep), releasing its snapshot.
+//!   open is refused with a typed [`D4mError::Overloaded`] carrying a
+//!   retry hint instead of accumulating pinned snapshots.
+//! * **idle TTL** — a cursor untouched for `idle_ttl` is evicted by the
+//!   next sweep (every cursor op sweeps, and the network server also
+//!   sweeps from a background timer so an idle connection's leaked
+//!   cursors are reaped on an otherwise-quiet server).
+//! * **resume grace** — a disconnected owner's cursors are not dropped
+//!   immediately: `orphan_owner` parks them for a short grace window in
+//!   which a reconnecting client holding the cursor's resume token
+//!   (issued at open) can re-attach to the same pinned snapshot and
+//!   continue, bit-identical to an uninterrupted scan. Orphans past
+//!   their grace deadline are dropped by the sweep.
 //!
-//! §Cursor state machine (DESIGN.md §Wire v2): `open → (next)* → done`,
-//! where `done` is reached by draining the stream (the server frees the
-//! cursor itself and sets [`CursorPage::done`]), an explicit close, a
-//! stream error (the cursor is poisoned and freed), TTL eviction, or
-//! owner reap. `next` is one-at-a-time per cursor: while a page is being
-//! pulled the cursor is checked out of the table, so a concurrent `next`
-//! on the same id reports `NotFound` rather than interleaving pages.
+//! §Cursor state machine (DESIGN.md §Fault model): `open → (next)* →
+//! done → close`, where `done` means the stream is exhausted — the
+//! snapshot is released at once but the cursor *handle* is retained
+//! (with a buffered copy of the final page) until an explicit close,
+//! TTL eviction, or grace expiry, so a client that lost the `done`
+//! reply can still resume and have it replayed. Every `next` buffers
+//! the page it returns; a resume whose `pages_acked` is one short of
+//! the pages served replays that buffered page instead of losing it.
+//! `next` is one-at-a-time per cursor: while a page is being pulled the
+//! cursor is checked out of the table, so a concurrent `next` on the
+//! same id reports `NotFound` rather than interleaving pages, and a
+//! resume that lands mid-pull is asked to retry with
+//! [`D4mError::Overloaded`].
 
 use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
@@ -38,6 +52,12 @@ use crate::pipeline::TripleMsg;
 pub const DEFAULT_CURSOR_CAP: usize = 64;
 /// Default idle TTL before an untouched cursor is evicted.
 pub const DEFAULT_CURSOR_TTL: Duration = Duration::from_secs(300);
+/// Default grace window in which a disconnected owner's cursors stay
+/// resumable before the sweep drops them.
+pub const DEFAULT_RESUME_GRACE: Duration = Duration::from_secs(3);
+/// `retry_after_ms` hint sent with [`D4mError::Overloaded`] when the
+/// cursor table is saturated or a resume races an in-flight pull.
+pub const CURSOR_RETRY_AFTER_MS: u64 = 100;
 /// Byte budget per page: a pull stops early once the accumulated triple
 /// bytes reach this, whatever `page_entries` says — so a hostile or
 /// careless `page_entries` cannot make one `next` materialise the whole
@@ -55,15 +75,48 @@ pub struct CursorPage {
     /// the cursor's `page_entries` of them (fewer when
     /// [`PAGE_BYTE_BUDGET`] cuts a page of large values short).
     pub triples: Vec<TripleMsg>,
-    /// True when the stream is exhausted. The server has already freed
-    /// the cursor; a trailing `CursorClose` is unnecessary but harmless.
+    /// True when the stream is exhausted and its snapshot released. The
+    /// cursor handle itself survives until an explicit `CursorClose`
+    /// (which [`ScanPages`](crate::coordinator::api::ScanPages) sends
+    /// automatically), TTL eviction, or resume-grace expiry — so a lost
+    /// `done` reply is replayable after a reconnect.
     pub done: bool,
+}
+
+/// Client-supplied token re-attaching a cursor after a reconnect: the
+/// cursor id, the secret issued with `CursorOpened`, and how many pages
+/// the client has fully received. A resume with `pages_acked` equal to
+/// the pages served continues the stream; one page short replays the
+/// buffered last page (the reply was lost in flight); any other gap is
+/// a protocol error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CursorResume {
+    pub cursor: u64,
+    pub token: u64,
+    pub pages_acked: u64,
 }
 
 struct CursorState {
     owner: u64,
+    /// Resume secret issued at open; a reconnecting client must present
+    /// it to take the cursor over.
+    token: u64,
     page_entries: usize,
-    stream: TripleStream,
+    /// `None` once the stream is exhausted (`done` served) — the
+    /// snapshot is released immediately, only the handle + buffered
+    /// last page linger for resume.
+    stream: Option<TripleStream>,
+    /// Pages produced by fresh pulls (replays don't count).
+    served: u64,
+    /// Copy of the most recently pulled page, for replay after a lost
+    /// reply. Replaced on every fresh pull.
+    last_page: Option<CursorPage>,
+    /// Set by a resume that found `pages_acked == served - 1`: the next
+    /// `next` re-delivers `last_page` instead of pulling.
+    replay: bool,
+    /// Set when the owner disconnected: drop at this deadline unless a
+    /// resume re-attaches first.
+    orphan_deadline: Option<Instant>,
     last_used: Instant,
 }
 
@@ -71,24 +124,41 @@ struct Inner {
     next_id: u64,
     cap: usize,
     idle_ttl: Duration,
+    resume_grace: Duration,
+    /// Token source — not cryptographic, just unguessable enough that a
+    /// buggy client cannot resume someone else's cursor by accident.
+    rng: crate::util::XorShift64,
     cursors: HashMap<u64, CursorState>,
-    /// Cursors checked out by an in-flight `next` (id → owner). A close
-    /// or reap that lands mid-pull cannot find the cursor in `cursors`;
-    /// recording the checkout here lets it leave a mark instead of
-    /// silently missing.
-    busy: HashMap<u64, u64>,
+    /// Cursors checked out by an in-flight `next` (id → (owner, token)).
+    /// A close/reap/resume that lands mid-pull cannot find the cursor in
+    /// `cursors`; recording the checkout here lets it leave a mark (or,
+    /// for resume, verify the token and ask the client to retry).
+    busy: HashMap<u64, (u64, u64)>,
     /// Checked-out cursors whose close/reap arrived mid-pull: dropped at
     /// reinsert time instead of resurrected (a successful `close` must
     /// release the snapshot even when it races a concurrent `next`).
     closing: HashSet<u64>,
+    /// Checked-out cursors whose owner disconnected mid-pull: reinserted
+    /// as orphans with this grace deadline instead of dropped.
+    orphaning: HashMap<u64, Instant>,
 }
 
 impl Inner {
-    /// Drop every cursor idle past the TTL (run on every cursor op — the
-    /// table needs no background thread to stay bounded).
-    fn evict_idle(&mut self, now: Instant) {
+    /// Drop every cursor idle past the TTL and every orphan past its
+    /// grace deadline. Run on every cursor op *and* from the network
+    /// server's background timer, so leaked cursors are reaped even on a
+    /// quiet server. Returns how many were dropped.
+    fn sweep(&mut self, now: Instant) -> usize {
         let ttl = self.idle_ttl;
-        self.cursors.retain(|_, c| now.duration_since(c.last_used) < ttl);
+        let before = self.cursors.len();
+        self.cursors.retain(|_, c| {
+            let grace_ok = match c.orphan_deadline {
+                Some(deadline) => now < deadline,
+                None => true,
+            };
+            now.duration_since(c.last_used) < ttl && grace_ok
+        });
+        before - self.cursors.len()
     }
 }
 
@@ -99,14 +169,23 @@ pub(crate) struct CursorTable {
 
 impl CursorTable {
     pub(crate) fn new() -> Self {
+        // seed the token source from wall-clock nanos: distinct per
+        // process, and good enough for accident-proofing (see `rng` doc)
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x0D4A11CE);
         CursorTable {
             inner: Mutex::new(Inner {
                 next_id: 1,
                 cap: DEFAULT_CURSOR_CAP,
                 idle_ttl: DEFAULT_CURSOR_TTL,
+                resume_grace: DEFAULT_RESUME_GRACE,
+                rng: crate::util::XorShift64::new(seed | 1),
                 cursors: HashMap::new(),
                 busy: HashMap::new(),
                 closing: HashSet::new(),
+                orphaning: HashMap::new(),
             }),
         }
     }
@@ -117,70 +196,133 @@ impl CursorTable {
         g.idle_ttl = idle_ttl;
     }
 
+    pub(crate) fn set_resume_grace(&self, grace: Duration) {
+        self.inner.lock().unwrap().resume_grace = grace;
+    }
+
     pub(crate) fn len(&self) -> usize {
         let g = self.inner.lock().unwrap();
         g.cursors.len() + g.busy.len()
     }
 
+    /// Sweep expired cursors now (TTL + orphan grace); returns how many
+    /// were dropped. The network server calls this from its accept-loop
+    /// timer so eviction doesn't depend on cursor traffic.
+    pub(crate) fn sweep(&self) -> usize {
+        self.inner.lock().unwrap().sweep(Instant::now())
+    }
+
+    /// Open a cursor; returns `(id, resume token)`.
     pub(crate) fn open(
         &self,
         owner: u64,
         page_entries: usize,
         stream: TripleStream,
-    ) -> Result<u64> {
+    ) -> Result<(u64, u64)> {
         let mut g = self.inner.lock().unwrap();
-        g.evict_idle(Instant::now());
+        g.sweep(Instant::now());
         let open = g.cursors.len() + g.busy.len();
         if open >= g.cap {
-            return Err(D4mError::InvalidArg(format!(
-                "cursor cap reached: {open} cursors open (cap {}) — drain or close \
-                 existing cursors before opening more",
-                g.cap
-            )));
+            // typed shed, not InvalidArg: the client did nothing wrong —
+            // the table is saturated and the open is safe to retry
+            return Err(D4mError::Overloaded { retry_after_ms: CURSOR_RETRY_AFTER_MS });
         }
         let id = g.next_id;
         g.next_id += 1;
+        let token = g.rng.next_u64();
         g.cursors.insert(
             id,
             CursorState {
                 owner,
+                token,
                 page_entries: page_entries.max(1),
-                stream,
+                stream: Some(stream),
+                served: 0,
+                last_page: None,
+                replay: false,
+                orphan_deadline: None,
                 last_used: Instant::now(),
             },
         );
-        Ok(id)
+        Ok((id, token))
+    }
+
+    /// Re-attach a cursor after a reconnect. The token must match the
+    /// one issued at open; `pages_acked` positions the stream (continue,
+    /// or replay the buffered last page). On success the cursor belongs
+    /// to `new_owner` and its orphan mark is cleared.
+    pub(crate) fn resume(&self, new_owner: u64, r: &CursorResume) -> Result<(u64, u64)> {
+        let mut g = self.inner.lock().unwrap();
+        g.sweep(Instant::now());
+        if let Some(&(_, token)) = g.busy.get(&r.cursor) {
+            // mid-pull for its (dead) previous owner: the pull finishes
+            // and reinserts shortly — ask the client to retry
+            if token == r.token && !g.closing.contains(&r.cursor) {
+                return Err(D4mError::Overloaded { retry_after_ms: CURSOR_RETRY_AFTER_MS });
+            }
+            return Err(not_found(r.cursor));
+        }
+        let c = match g.cursors.get_mut(&r.cursor) {
+            Some(c) if c.token == r.token => c,
+            _ => return Err(not_found(r.cursor)),
+        };
+        if r.pages_acked == c.served {
+            c.replay = false;
+        } else if r.pages_acked + 1 == c.served && c.last_page.is_some() {
+            c.replay = true;
+        } else {
+            return Err(D4mError::InvalidArg(format!(
+                "cursor {} resume gap: client acked {} pages but server served {}",
+                r.cursor, r.pages_acked, c.served
+            )));
+        }
+        c.owner = new_owner;
+        c.orphan_deadline = None;
+        c.last_used = Instant::now();
+        Ok((r.cursor, c.token))
     }
 
     /// Pull the next page. The cursor is checked out of the table while
     /// the stream is pulled, so the table lock is never held across the
     /// (possibly slow) pull and other connections' cursor ops proceed; a
     /// close/reap landing mid-pull marks the checkout and the cursor is
-    /// dropped instead of reinserted. The page stops at `page_entries`
-    /// triples or [`PAGE_BYTE_BUDGET`] bytes, whichever comes first.
+    /// dropped (or orphaned) instead of reinserted. The page stops at
+    /// `page_entries` triples or [`PAGE_BYTE_BUDGET`] bytes, whichever
+    /// comes first. A pending replay returns the buffered page without
+    /// touching the stream; a finished cursor returns an empty `done`
+    /// page (idempotent).
     pub(crate) fn next(&self, owner: u64, id: u64) -> Result<CursorPage> {
         let mut st = {
             let mut g = self.inner.lock().unwrap();
-            g.evict_idle(Instant::now());
-            match g.cursors.remove(&id) {
+            g.sweep(Instant::now());
+            match g.cursors.get_mut(&id) {
                 Some(c) if c.owner == owner => {
-                    g.busy.insert(id, owner);
-                    c
+                    c.last_used = Instant::now();
+                    if c.replay {
+                        c.replay = false;
+                        // buffered page guaranteed by `resume`
+                        return Ok(c.last_page.clone().unwrap_or_default());
+                    }
+                    if c.stream.is_none() {
+                        // drained: the done page was already delivered
+                        // and acked — answer idempotently
+                        return Ok(CursorPage { triples: Vec::new(), done: true });
+                    }
                 }
-                Some(c) => {
-                    // someone else's cursor: put it back, reveal nothing
-                    g.cursors.insert(id, c);
-                    return Err(not_found(id));
-                }
-                None => return Err(not_found(id)),
+                _ => return Err(not_found(id)),
             }
+            // stream pull needed: check the cursor out
+            let c = g.cursors.remove(&id).expect("checked above");
+            g.busy.insert(id, (c.owner, c.token));
+            c
         };
+        let stream = st.stream.as_mut().expect("checked out with a live stream");
         let mut triples = Vec::with_capacity(st.page_entries.min(4096));
         let mut bytes = 0usize;
         let mut done = false;
         let mut err = None;
         for _ in 0..st.page_entries {
-            match st.stream.next() {
+            match stream.next() {
                 Some(Ok(t)) => {
                     bytes += t.0.len() + t.1.len() + t.2.len();
                     triples.push(t);
@@ -200,52 +342,89 @@ impl CursorTable {
                 }
             }
         }
+        if done {
+            // release the snapshot now; the handle + buffered page stay
+            st.stream = None;
+        }
         let mut g = self.inner.lock().unwrap();
         g.busy.remove(&id);
         let closed_mid_pull = g.closing.remove(&id);
+        let orphaned_mid_pull = g.orphaning.remove(&id);
         match err {
             Some(e) => Err(e),
             None => {
-                if !done && !closed_mid_pull {
+                let page = CursorPage { triples, done };
+                if !closed_mid_pull {
+                    st.served += 1;
+                    st.last_page = Some(page.clone());
+                    st.orphan_deadline = orphaned_mid_pull;
                     st.last_used = Instant::now();
                     g.cursors.insert(id, st);
                 }
-                Ok(CursorPage { triples, done })
+                Ok(page)
             }
         }
     }
 
     /// Close a cursor, releasing its snapshot. Idempotent: closing an
-    /// unknown/already-freed id is `Ok` (a drained cursor frees itself,
-    /// and a pipelined close may race the final page). A close racing a
-    /// concurrent `next` on the same cursor marks the checkout so the
-    /// cursor is dropped when the pull finishes — never resurrected.
+    /// unknown/already-freed id is `Ok` (a pipelined close may race TTL
+    /// eviction). A close racing a concurrent `next` on the same cursor
+    /// marks the checkout so the cursor is dropped when the pull
+    /// finishes — never resurrected.
     pub(crate) fn close(&self, owner: u64, id: u64) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
-        g.evict_idle(Instant::now());
+        g.sweep(Instant::now());
         if g.cursors.get(&id).map(|c| c.owner) == Some(owner) {
             g.cursors.remove(&id);
-        } else if g.busy.get(&id) == Some(&owner) {
+        } else if g.busy.get(&id).map(|&(o, _)| o) == Some(owner) {
             g.closing.insert(id);
         }
         Ok(())
     }
 
-    /// Drop every cursor belonging to `owner` (connection teardown),
-    /// including checked-out ones (marked, dropped at reinsert time).
-    /// Returns how many were reaped.
+    /// Drop every cursor belonging to `owner` immediately (no resume
+    /// grace), including checked-out ones (marked, dropped at reinsert
+    /// time). Returns how many were reaped.
     pub(crate) fn reap_owner(&self, owner: u64) -> usize {
         let mut g = self.inner.lock().unwrap();
         let inner = &mut *g;
         let before = inner.cursors.len();
         inner.cursors.retain(|_, c| c.owner != owner);
         let mut reaped = before - inner.cursors.len();
-        for (&id, &o) in inner.busy.iter() {
+        for (&id, &(o, _)) in inner.busy.iter() {
             if o == owner && inner.closing.insert(id) {
                 reaped += 1;
             }
         }
         reaped
+    }
+
+    /// Park every cursor belonging to `owner` (connection teardown) for
+    /// the resume-grace window: a reconnecting client presenting the
+    /// resume token re-attaches; otherwise the sweep drops them at the
+    /// deadline. Returns how many were parked.
+    pub(crate) fn orphan_owner(&self, owner: u64) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let deadline = Instant::now() + g.resume_grace;
+        let mut parked = 0usize;
+        for c in g.cursors.values_mut() {
+            if c.owner == owner && c.orphan_deadline.is_none() {
+                c.orphan_deadline = Some(deadline);
+                parked += 1;
+            }
+        }
+        let busy_ids: Vec<u64> = g
+            .busy
+            .iter()
+            .filter(|&(_, &(o, _))| o == owner)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in busy_ids {
+            if !g.closing.contains(&id) && g.orphaning.insert(id, deadline).is_none() {
+                parked += 1;
+            }
+        }
+        parked
     }
 }
 

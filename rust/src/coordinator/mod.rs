@@ -19,7 +19,7 @@ pub mod batcher;
 pub mod cursor;
 
 pub use api::{D4mApi, ScanPages};
-pub use cursor::{CursorPage, LOCAL_OWNER};
+pub use cursor::{CursorPage, CursorResume, LOCAL_OWNER};
 
 use std::collections::BTreeMap;
 use std::collections::HashMap;
@@ -66,6 +66,36 @@ pub enum Request {
     PageRank { table: String, opts: graphulo::PageRankOpts },
     /// List tables.
     ListTables,
+}
+
+impl Request {
+    /// Whether replaying this request after an ambiguous transport
+    /// failure is safe — i.e. executing it twice leaves the server in
+    /// the same state as executing it once. The self-healing client
+    /// ([`crate::net::RemoteD4m`]) only auto-retries idempotent
+    /// requests once the bytes may have reached the server; everything
+    /// else surfaces [`D4mError::AmbiguousWrite`].
+    ///
+    /// Non-idempotent today: `Ingest` (maintains accumulating `_Deg`
+    /// degree companions), `TableMult` (server-side `out += A^T B`
+    /// accumulation), and `Jaccard`/`KTruss` (write server-side result
+    /// tables mid-computation). `CreateTable` binds create-if-needed,
+    /// so it is safe.
+    pub fn is_idempotent(&self) -> bool {
+        match self {
+            Request::CreateTable { .. }
+            | Request::Query { .. }
+            | Request::TableMultClient { .. }
+            | Request::TableMultDense { .. }
+            | Request::Bfs { .. }
+            | Request::PageRank { .. }
+            | Request::ListTables => true,
+            Request::Ingest { .. }
+            | Request::TableMult { .. }
+            | Request::Jaccard { .. }
+            | Request::KTruss { .. } => false,
+        }
+    }
 }
 
 /// Responses.
@@ -344,26 +374,50 @@ impl D4mServer {
         self.cursors.configure(cap, idle_ttl);
     }
 
-    /// How many cursors are currently open (all owners).
+    /// Configure the resume-grace window: how long a disconnected
+    /// owner's cursors stay resumable before the sweep drops them.
+    pub fn set_cursor_grace(&self, grace: Duration) {
+        self.cursors.set_resume_grace(grace);
+    }
+
+    /// How many cursors are currently open (all owners, including
+    /// orphans inside their resume-grace window — their snapshots are
+    /// still pinned).
     pub fn open_cursor_count(&self) -> usize {
         self.cursors.len()
     }
 
+    /// Sweep expired cursors (idle TTL + orphan grace) now; returns how
+    /// many were dropped. The network server calls this on a timer so
+    /// eviction doesn't depend on cursor traffic.
+    pub fn sweep_cursors(&self) -> usize {
+        self.cursors.sweep()
+    }
+
     /// Open a cursor owned by `owner` (see [`cursor`] for the ownership,
-    /// cap and TTL rules). Pins a snapshot stream over the bound table.
+    /// cap, TTL and resume rules). Pins a snapshot stream over the bound
+    /// table. Returns `(cursor id, resume token)`.
     pub fn open_cursor_owned(
         &self,
         owner: u64,
         table: &str,
         query: &TableQuery,
         page_entries: usize,
-    ) -> Result<u64> {
+    ) -> Result<(u64, u64)> {
         self.requests.add(1);
         let t = self.bound(table)?;
         self.hist("cursor_open").time(|| {
             let stream = t.scan_triples(query)?;
             self.cursors.open(owner, page_entries, stream)
         })
+    }
+
+    /// Re-attach an existing cursor to `owner` after a reconnect (see
+    /// [`cursor::CursorTable::resume`]). Returns `(cursor id, token)` —
+    /// the same values issued at open.
+    pub fn resume_cursor_owned(&self, owner: u64, resume: &CursorResume) -> Result<(u64, u64)> {
+        self.requests.add(1);
+        self.hist("cursor_resume").time(|| self.cursors.resume(owner, resume))
     }
 
     /// Pull the next page of a cursor owned by `owner`.
@@ -378,10 +432,18 @@ impl D4mServer {
         self.cursors.close(owner, id)
     }
 
-    /// Drop every cursor belonging to `owner` (connection teardown);
-    /// returns how many were reaped.
+    /// Drop every cursor belonging to `owner` immediately (no resume
+    /// grace); returns how many were reaped.
     pub fn reap_cursors(&self, owner: u64) -> usize {
         self.cursors.reap_owner(owner)
+    }
+
+    /// Park every cursor belonging to `owner` for the resume-grace
+    /// window (connection teardown on the network server: the client
+    /// may reconnect and resume). Returns how many were parked; the
+    /// sweep drops whatever is not resumed in time.
+    pub fn orphan_cursors(&self, owner: u64) -> usize {
+        self.cursors.orphan_owner(owner)
     }
 
     /// Metrics snapshots for every op seen so far. Rates come from each
@@ -440,6 +502,7 @@ impl D4mApi for D4mServer {
 
     fn open_cursor(&self, table: &str, query: &TableQuery, page_entries: usize) -> Result<u64> {
         self.open_cursor_owned(cursor::LOCAL_OWNER, table, query, page_entries)
+            .map(|(id, _token)| id)
     }
 
     fn cursor_next(&self, id: u64) -> Result<cursor::CursorPage> {
@@ -683,11 +746,17 @@ mod tests {
             }
         }
         assert_eq!(seen, 4, "cursor should see exactly the snapshot's 4 edges");
+        // a drained cursor keeps its handle (for resume replay) but the
+        // snapshot is released; close frees the handle
+        assert_eq!(s.open_cursor_count(), 1);
+        s.cursor_close(id).unwrap();
+        assert_eq!(s.open_cursor_count(), 0);
         // ...while a fresh cursor sees them
         let id2 = s.open_cursor("G", &TableQuery::all(), 100).unwrap();
         let p = s.cursor_next(id2).unwrap();
         assert!(p.triples.iter().any(|(r, _, _)| r == "zz"));
         assert!(p.done);
+        s.cursor_close(id2).unwrap();
         // explicit close releases; double close is idempotent
         let id3 = s.open_cursor("G", &TableQuery::all(), 1).unwrap();
         assert_eq!(s.open_cursor_count(), 1);
@@ -704,9 +773,11 @@ mod tests {
         s.set_cursor_limits(2, Duration::from_secs(300));
         let a = s.open_cursor("G", &TableQuery::all(), 1).unwrap();
         let _b = s.open_cursor("G", &TableQuery::all(), 1).unwrap();
+        // a saturated cursor table sheds with a typed retry hint — the
+        // self-healing client backs off and retries instead of failing
         match s.open_cursor("G", &TableQuery::all(), 1) {
-            Err(D4mError::InvalidArg(msg)) => assert!(msg.contains("cursor cap")),
-            other => panic!("expected the cap to reject, got {other:?}"),
+            Err(D4mError::Overloaded { retry_after_ms }) => assert!(retry_after_ms > 0),
+            other => panic!("expected the cap to shed with Overloaded, got {other:?}"),
         }
         // closing one frees a slot
         s.cursor_close(a).unwrap();
@@ -728,7 +799,7 @@ mod tests {
     #[test]
     fn cursor_ownership_is_enforced_and_reaped() {
         let s = server_with_graph();
-        let id = s.open_cursor_owned(7, "G", &TableQuery::all(), 2).unwrap();
+        let (id, _token) = s.open_cursor_owned(7, "G", &TableQuery::all(), 2).unwrap();
         // another owner can neither read nor close it
         assert!(matches!(s.cursor_next_owned(8, id), Err(D4mError::NotFound(_))));
         s.cursor_close_owned(8, id).unwrap(); // idempotent no-op for non-owners
@@ -736,6 +807,146 @@ mod tests {
         // the owner's teardown reaps it
         assert_eq!(s.reap_cursors(7), 1);
         assert_eq!(s.open_cursor_count(), 0);
+    }
+
+    // ------------------------------------------------------------------
+    // cursor resume (the reconnect story; the over-TCP twin lives in
+    // the chaos e2e suite)
+
+    #[test]
+    fn cursor_resume_continues_bit_identically() {
+        let s = server_with_bigger_graph();
+        let one_shot = D4mApi::query(&s, "G", TableQuery::all()).unwrap();
+        let (id, token) = s.open_cursor_owned(7, "G", &TableQuery::all(), 3).unwrap();
+        // owner 7 pulls two pages, acks both, then "disconnects"
+        let mut triples: Vec<TripleMsg> = Vec::new();
+        for _ in 0..2 {
+            let p = s.cursor_next_owned(7, id).unwrap();
+            assert!(!p.done, "graph too small");
+            triples.extend(p.triples);
+        }
+        assert_eq!(s.orphan_cursors(7), 1);
+        // a new connection (owner 9) resumes with the token and drains
+        let resume = CursorResume { cursor: id, token, pages_acked: 2 };
+        let (rid, _) = s.resume_cursor_owned(9, &resume).unwrap();
+        assert_eq!(rid, id, "resume must re-attach the same cursor id");
+        loop {
+            let p = s.cursor_next_owned(9, id).unwrap();
+            triples.extend(p.triples);
+            if p.done {
+                break;
+            }
+        }
+        s.cursor_close_owned(9, id).unwrap();
+        let resumed = crate::assoc::io::parse_triples(triples).unwrap();
+        assert_eq!(resumed, one_shot, "resumed scan diverged from one-shot query");
+        assert_eq!(s.open_cursor_count(), 0);
+    }
+
+    #[test]
+    fn cursor_resume_replays_a_lost_page() {
+        let s = server_with_bigger_graph();
+        let one_shot = D4mApi::query(&s, "G", TableQuery::all()).unwrap();
+        let (id, token) = s.open_cursor_owned(7, "G", &TableQuery::all(), 3).unwrap();
+        let first = s.cursor_next_owned(7, id).unwrap();
+        // second page is pulled server-side but the reply is "lost":
+        // the client never acks it
+        let lost = s.cursor_next_owned(7, id).unwrap();
+        s.orphan_cursors(7);
+        let resume = CursorResume { cursor: id, token, pages_acked: 1 };
+        s.resume_cursor_owned(9, &resume).unwrap();
+        // the next pull replays the lost page verbatim
+        let replayed = s.cursor_next_owned(9, id).unwrap();
+        assert_eq!(replayed, lost, "replay must be the buffered page, bit-identical");
+        let mut triples = first.triples;
+        triples.extend(replayed.triples);
+        loop {
+            let p = s.cursor_next_owned(9, id).unwrap();
+            triples.extend(p.triples);
+            if p.done {
+                break;
+            }
+        }
+        s.cursor_close_owned(9, id).unwrap();
+        let resumed = crate::assoc::io::parse_triples(triples).unwrap();
+        assert_eq!(resumed, one_shot);
+    }
+
+    #[test]
+    fn cursor_resume_replays_a_lost_done_page() {
+        let s = server_with_graph();
+        let (id, token) = s.open_cursor_owned(7, "G", &TableQuery::all(), 100).unwrap();
+        let done_page = s.cursor_next_owned(7, id).unwrap();
+        assert!(done_page.done);
+        // the done reply is lost; the cursor handle must survive (the
+        // snapshot itself is already released) so the resume can replay
+        s.orphan_cursors(7);
+        let resume = CursorResume { cursor: id, token, pages_acked: 0 };
+        s.resume_cursor_owned(9, &resume).unwrap();
+        let replayed = s.cursor_next_owned(9, id).unwrap();
+        assert_eq!(replayed, done_page);
+        s.cursor_close_owned(9, id).unwrap();
+        assert_eq!(s.open_cursor_count(), 0);
+    }
+
+    #[test]
+    fn cursor_resume_rejects_bad_token_and_gaps() {
+        let s = server_with_bigger_graph();
+        let (id, token) = s.open_cursor_owned(7, "G", &TableQuery::all(), 3).unwrap();
+        s.cursor_next_owned(7, id).unwrap();
+        s.orphan_cursors(7);
+        // wrong token: NotFound, revealing nothing
+        let bad = CursorResume { cursor: id, token: token.wrapping_add(1), pages_acked: 1 };
+        assert!(matches!(s.resume_cursor_owned(9, &bad), Err(D4mError::NotFound(_))));
+        // acked more pages than served: protocol error
+        let gap = CursorResume { cursor: id, token, pages_acked: 5 };
+        assert!(matches!(s.resume_cursor_owned(9, &gap), Err(D4mError::InvalidArg(_))));
+        // acked too few (more than one page behind): protocol error —
+        // the server only buffers the last page
+        let (id2, token2) = s.open_cursor_owned(7, "G", &TableQuery::all(), 2).unwrap();
+        s.cursor_next_owned(7, id2).unwrap();
+        s.cursor_next_owned(7, id2).unwrap();
+        s.cursor_next_owned(7, id2).unwrap();
+        s.orphan_cursors(7);
+        let gap2 = CursorResume { cursor: id2, token: token2, pages_acked: 1 };
+        assert!(matches!(s.resume_cursor_owned(9, &gap2), Err(D4mError::InvalidArg(_))));
+        // a valid resume still works after the failed attempts
+        let ok = CursorResume { cursor: id, token, pages_acked: 1 };
+        s.resume_cursor_owned(9, &ok).unwrap();
+    }
+
+    #[test]
+    fn orphaned_cursors_expire_after_grace() {
+        let s = server_with_graph();
+        s.set_cursor_grace(Duration::from_millis(20));
+        let (id, token) = s.open_cursor_owned(7, "G", &TableQuery::all(), 2).unwrap();
+        assert_eq!(s.orphan_cursors(7), 1);
+        // inside the grace window the cursor still counts (snapshot
+        // pinned) and is resumable
+        assert_eq!(s.open_cursor_count(), 1);
+        std::thread::sleep(Duration::from_millis(60));
+        // past the deadline the sweep drops it — no cursor traffic needed
+        assert_eq!(s.sweep_cursors(), 1);
+        assert_eq!(s.open_cursor_count(), 0);
+        let resume = CursorResume { cursor: id, token, pages_acked: 0 };
+        assert!(matches!(s.resume_cursor_owned(9, &resume), Err(D4mError::NotFound(_))));
+    }
+
+    #[test]
+    fn reap_is_immediate_but_orphan_keeps_resumable() {
+        let s = server_with_graph();
+        let (_id, _) = s.open_cursor_owned(7, "G", &TableQuery::all(), 2).unwrap();
+        let (id2, token2) = s.open_cursor_owned(8, "G", &TableQuery::all(), 2).unwrap();
+        // reap drops owner 7's cursor with no grace
+        assert_eq!(s.reap_cursors(7), 1);
+        assert_eq!(s.open_cursor_count(), 1);
+        // orphan parks owner 8's cursor; it resumes fine within grace
+        assert_eq!(s.orphan_cursors(8), 1);
+        let resume = CursorResume { cursor: id2, token: token2, pages_acked: 0 };
+        let (rid, _) = s.resume_cursor_owned(9, &resume).unwrap();
+        assert_eq!(rid, id2);
+        // ...and the old owner can no longer touch it
+        assert!(matches!(s.cursor_next_owned(8, id2), Err(D4mError::NotFound(_))));
     }
 
     #[test]

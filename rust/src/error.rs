@@ -46,6 +46,23 @@ pub enum D4mError {
     /// manifest bytes, checksum mismatch, unrecognised layout). Hostile
     /// or torn files surface here — never as a panic.
     Storage(String),
+    /// The server shed this request/connection under load (conn pool or
+    /// cursor table saturated) **before doing any work** — the request
+    /// was not applied and is always safe to retry after roughly
+    /// `retry_after_ms` milliseconds. Self-healing clients honor the
+    /// hint as a backoff floor.
+    Overloaded { retry_after_ms: u64 },
+    /// A retryable (idempotent) request failed on every attempt the
+    /// [`RetryPolicy`](crate::net::client::RetryPolicy) allowed; `last`
+    /// is the final attempt's error rendered as a string.
+    RetryExhausted { attempts: u32, last: String },
+    /// A **non-idempotent** request (ingest, server-side accumulating
+    /// multiply, …) may or may not have been applied: the connection
+    /// died after the request bytes could have reached the server but
+    /// before a reply arrived. The client refuses to replay it — doing
+    /// so could double-apply — and surfaces this instead. The caller
+    /// must reconcile (re-read and compare) before retrying.
+    AmbiguousWrite(String),
 }
 
 impl fmt::Display for D4mError {
@@ -73,6 +90,16 @@ impl fmt::Display for D4mError {
                 "backpressure: ingest into {table} stalled {waited_ms} ms on the compaction backlog"
             ),
             D4mError::Storage(s) => write!(f, "storage error: {s}"),
+            D4mError::Overloaded { retry_after_ms } => {
+                write!(f, "server overloaded: retry after {retry_after_ms} ms")
+            }
+            D4mError::RetryExhausted { attempts, last } => {
+                write!(f, "retry budget exhausted after {attempts} attempts: {last}")
+            }
+            D4mError::AmbiguousWrite(s) => write!(
+                f,
+                "ambiguous write (connection died mid-flight, request may or may not have been applied): {s}"
+            ),
         }
     }
 }

@@ -18,7 +18,13 @@
 //!                                   crash recovery on restart
 //! d4m client <ping|tables|quickstart|scan4|scan-pages|pipeline-bench|
 //!             ingest-batches|verify-batches|stats|shutdown> [--addr H:P]
-//!                                   drive a remote d4m serve
+//!                                   drive a remote d4m serve (typed ops
+//!                                   self-heal: retries with backoff,
+//!                                   reconnect, cursor resume)
+//! d4m chaos   --upstream H:P [--listen H:P] [--seed N]
+//!             [--profile drop|delay|corrupt|mixed|none] [--rate F]
+//!             [--delay-ms N]        fault-injection proxy in front of a
+//!                                   d4m serve (runs until killed)
 //! ```
 
 use std::collections::{HashMap, VecDeque};
@@ -30,7 +36,7 @@ use d4m::connectors::TableQuery;
 use d4m::coordinator::{D4mApi, D4mServer, Request, Response};
 use d4m::gen::{kronecker_triples, KroneckerParams};
 use d4m::kvstore::{KvStore, StorageConfig, TabletConfig};
-use d4m::net::{NetOpts, RemoteD4m};
+use d4m::net::{ChaosOpts, ChaosProxy, NetOpts, Profile, RemoteD4m, RetryPolicy};
 use d4m::pipeline::PipelineConfig;
 use d4m::util::fmt_rate;
 
@@ -289,7 +295,8 @@ fn cmd_client(args: &[String]) {
     let addr: String = flag(&flags, "addr", "127.0.0.1:4950".to_string());
     let retries: u32 = flag(&flags, "retries", 25);
     let connect = || -> RemoteD4m {
-        match RemoteD4m::connect_retry(&addr, retries, Duration::from_millis(200)) {
+        let probe = RetryPolicy::probe(retries, Duration::from_millis(200));
+        match RemoteD4m::connect_with(&addr, probe) {
             Ok(c) => c,
             Err(e) => {
                 eprintln!("d4m client: connect {addr} failed: {e}");
@@ -354,6 +361,11 @@ fn cmd_client(args: &[String]) {
             match c.stats() {
                 Ok(snaps) => {
                     for s in snaps {
+                        println!("{s}");
+                    }
+                    // this client's own healing counters ride along so
+                    // a chaos run can read its retries from the output
+                    for s in c.client_snapshots() {
                         println!("{s}");
                     }
                 }
@@ -462,6 +474,12 @@ fn client_scan_pages(c: &RemoteD4m, table: &str, page: usize) {
          ({:.3}s, {}), bit-identical to one-shot query",
         dt,
         fmt_rate(total as f64 / dt)
+    );
+    println!(
+        "scan-pages healing: {} retries, {} reconnects, {} cursor resumes",
+        c.retry_count(),
+        c.reconnect_count(),
+        c.cursor_resume_count()
     );
 }
 
@@ -589,11 +607,11 @@ fn client_scan_concurrent(addr: &str, retries: u32, clients: usize, passes: usiz
         let handles: Vec<_> = (0..clients.max(1))
             .map(|i| {
                 s.spawn(move || {
-                    let c = RemoteD4m::connect_retry(addr, retries, Duration::from_millis(200))
-                        .unwrap_or_else(|e| {
-                            eprintln!("scan4 client {i}: connect failed: {e}");
-                            std::process::exit(1);
-                        });
+                    let probe = RetryPolicy::probe(retries, Duration::from_millis(200));
+                    let c = RemoteD4m::connect_with(addr, probe).unwrap_or_else(|e| {
+                        eprintln!("scan4 client {i}: connect failed: {e}");
+                        std::process::exit(1);
+                    });
                     let mut entries = 0usize;
                     let mut last: Vec<d4m::assoc::Triple> = Vec::new();
                     for _ in 0..passes.max(1) {
@@ -631,6 +649,40 @@ fn client_scan_concurrent(addr: &str, retries: u32, clients: usize, passes: usiz
     );
 }
 
+/// `d4m chaos` — run the fault-injection proxy in front of a serving
+/// coordinator until the process is killed (the CI chaos leg runs the
+/// whole client workload through it, then kills it).
+fn cmd_chaos(flags: HashMap<String, String>) {
+    let listen: String = flag(&flags, "listen", "127.0.0.1:4960".to_string());
+    let upstream: String = flag(&flags, "upstream", "127.0.0.1:4950".to_string());
+    let seed: u64 = flag(&flags, "seed", 0xC4A0_5EED);
+    let name: String = flag(&flags, "profile", "none".to_string());
+    let rate: f64 = flag(&flags, "rate", 0.01);
+    let delay_ms: u64 = flag(&flags, "delay-ms", 20);
+    let profile = match Profile::parse(&name, rate, delay_ms) {
+        Some(p) => p,
+        None => {
+            eprintln!("d4m chaos: unknown profile {name}; use drop|delay|corrupt|mixed|none");
+            std::process::exit(2);
+        }
+    };
+    let opts = ChaosOpts { seed, profile, scripted: Vec::new() };
+    let proxy = match ChaosProxy::start(&listen, &upstream, opts) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("d4m chaos: bind {listen} failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "d4m chaos: {} -> {upstream}, profile {name} rate {rate} seed {seed:#x}",
+        proxy.addr()
+    );
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
 fn cmd_tables() {
     let server = D4mServer::new();
     ingest_kronecker(&server, 8, 2, 1024);
@@ -656,9 +708,10 @@ fn main() {
         "tables" => cmd_tables(),
         "serve" => cmd_serve(flags),
         "client" => cmd_client(&args[1..]),
+        "chaos" => cmd_chaos(flags),
         _ => {
             eprintln!(
-                "usage: d4m <demo|ingest|tablemult|bfs|jaccard|ktruss|pagerank|tables|serve|client> [--flag value ...]"
+                "usage: d4m <demo|ingest|tablemult|bfs|jaccard|ktruss|pagerank|tables|serve|client|chaos> [--flag value ...]"
             );
             std::process::exit(2);
         }

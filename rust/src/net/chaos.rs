@@ -1,0 +1,509 @@
+//! Fault-injection TCP proxy — a frame-aware chaos layer between a
+//! `RemoteD4m` client and a `d4m serve` coordinator, so every network
+//! failure mode the self-healing client must survive is **reproducible**:
+//!
+//! ```text
+//! client ──► ChaosProxy(listen) ──► upstream d4m server
+//! ```
+//!
+//! The proxy splits each direction into wire frames (same header codec
+//! as [`wire`]) and consults a fault schedule per
+//! `(connection, direction, frame index)`:
+//!
+//! * [`Fault::Cut`] — close both sockets *before* relaying the frame
+//!   (the mid-flight connection drop);
+//! * [`Fault::Truncate`] — relay only a prefix of the frame, then cut
+//!   (the dribbled partial frame);
+//! * [`Fault::Duplicate`] — relay the frame twice (a stale retransmit);
+//! * [`Fault::CorruptByte`] — XOR one byte of the relayed frame (offset
+//!   0 hits the magic, which the receiver is guaranteed to detect — the
+//!   wire format carries no checksum, so payload corruption may pass
+//!   silently; tests corrupt headers);
+//! * [`Fault::Delay`] — sleep before relaying (latency spike).
+//!
+//! Faults come from an explicit script ([`ScriptedFault`], exact and
+//! deterministic — what the chaos e2e tests use) and/or a seeded
+//! probabilistic [`Profile`] (what the degraded bench and the CI chaos
+//! leg use). Per-direction RNG streams are derived from
+//! `(seed, connection, direction)`, so a given seed always produces the
+//! same fault sequence for the same traffic shape.
+//!
+//! The proxy never originates frames and never reorders within a
+//! direction; with an empty schedule it is a transparent relay (the
+//! `Passthrough` profile), which the tests use to pin "proxy present,
+//! no faults" as a bit-identical baseline.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::metrics::Counter;
+use crate::net::wire;
+use crate::util::rng::XorShift64;
+
+/// How often relay threads re-check the shutdown flag while idle.
+const POLL: Duration = Duration::from_millis(100);
+
+/// Relay direction, relative to the proxied client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dir {
+    /// Client → server (requests).
+    Up,
+    /// Server → client (replies).
+    Down,
+}
+
+/// One injectable fault, applied to a specific relayed frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Close both sides of the connection instead of relaying the frame.
+    Cut,
+    /// Relay only the first `bytes` of the raw frame, then cut.
+    Truncate { bytes: usize },
+    /// Relay the frame twice back to back.
+    Duplicate,
+    /// XOR the byte at `offset` (into the raw frame, header included)
+    /// with `xor` before relaying.
+    CorruptByte { offset: usize, xor: u8 },
+    /// Sleep `ms` milliseconds before relaying the frame.
+    Delay { ms: u64 },
+}
+
+/// A deterministic, scripted fault: applied to frame number `frame`
+/// (0-based, counted per direction) of connection number `conn`
+/// (0-based, in accept order).
+#[derive(Debug, Clone, Copy)]
+pub struct ScriptedFault {
+    pub conn: u64,
+    pub dir: Dir,
+    pub frame: u64,
+    pub fault: Fault,
+}
+
+/// Seeded probabilistic fault mix, drawn independently per frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Profile {
+    /// Transparent relay (scripted faults still apply).
+    Passthrough,
+    /// Cut the connection at a frame with probability `rate`.
+    Drop { rate: f64 },
+    /// Delay a frame `ms` with probability `rate`.
+    Delay { rate: f64, ms: u64 },
+    /// Corrupt a frame's magic byte with probability `rate` (always
+    /// detected by the receiver).
+    Corrupt { rate: f64 },
+    /// Uniform mix of cut / delay / corrupt / duplicate, each frame
+    /// faulted with probability `rate`.
+    Mixed { rate: f64 },
+}
+
+impl Profile {
+    /// Parse a CLI profile name. `rate`/`ms` parameterize it.
+    pub fn parse(name: &str, rate: f64, ms: u64) -> Option<Profile> {
+        match name {
+            "passthrough" | "none" => Some(Profile::Passthrough),
+            "drop" => Some(Profile::Drop { rate }),
+            "delay" => Some(Profile::Delay { rate, ms }),
+            "corrupt" => Some(Profile::Corrupt { rate }),
+            "mixed" => Some(Profile::Mixed { rate }),
+            _ => None,
+        }
+    }
+}
+
+/// Proxy configuration.
+#[derive(Debug, Clone)]
+pub struct ChaosOpts {
+    /// Seed for the per-direction fault RNG streams.
+    pub seed: u64,
+    /// Probabilistic fault mix (on top of any scripted faults).
+    pub profile: Profile,
+    /// Exact faults for specific frames (tests).
+    pub scripted: Vec<ScriptedFault>,
+}
+
+impl Default for ChaosOpts {
+    fn default() -> Self {
+        ChaosOpts { seed: 0xC4A0_5EED, profile: Profile::Passthrough, scripted: Vec::new() }
+    }
+}
+
+/// Counters observable while the proxy runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosStats {
+    /// Connections accepted.
+    pub conns: u64,
+    /// Frames relayed (both directions, pre-fault).
+    pub frames: u64,
+    /// Faults injected.
+    pub faults: u64,
+}
+
+struct Shared {
+    upstream: String,
+    opts: ChaosOpts,
+    /// `(conn, dir, frame)` → scripted faults for that frame.
+    script: HashMap<(u64, Dir, u64), Vec<Fault>>,
+    addr: SocketAddr,
+    shutdown: AtomicBool,
+    conns: Counter,
+    frames: Counter,
+    faults: Counter,
+}
+
+/// A running fault-injection proxy; dropping it shuts it down.
+pub struct ChaosProxy {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Listen on `listen` (port 0 picks an ephemeral port) and relay
+    /// every accepted connection to `upstream` under the fault schedule.
+    pub fn start(listen: &str, upstream: &str, opts: ChaosOpts) -> Result<ChaosProxy> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let mut script: HashMap<(u64, Dir, u64), Vec<Fault>> = HashMap::new();
+        for s in &opts.scripted {
+            script.entry((s.conn, s.dir, s.frame)).or_default().push(s.fault);
+        }
+        let shared = Arc::new(Shared {
+            upstream: upstream.to_string(),
+            opts,
+            script,
+            addr,
+            shutdown: AtomicBool::new(false),
+            conns: Counter::new(),
+            frames: Counter::new(),
+            faults: Counter::new(),
+        });
+        let sh = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("d4m-chaos-accept".into())
+            .spawn(move || accept_loop(listener, sh))?;
+        Ok(ChaosProxy { shared, accept: Some(accept) })
+    }
+
+    /// The proxy's listen address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Current relay/fault counters.
+    pub fn stats(&self) -> ChaosStats {
+        ChaosStats {
+            conns: self.shared.conns.get(),
+            frames: self.shared.frames.get(),
+            faults: self.shared.faults.get(),
+        }
+    }
+
+    /// Stop accepting, cut every live relay, and join all threads.
+    pub fn shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // poke the blocking accept with a loopback connect
+        let mut poke = self.shared.addr;
+        if poke.ip().is_unspecified() {
+            poke.set_ip(match poke.ip() {
+                std::net::IpAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                std::net::IpAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+            });
+        }
+        let _ = TcpStream::connect_timeout(&poke, Duration::from_secs(2));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
+    let mut relays: Vec<JoinHandle<()>> = Vec::new();
+    let mut conn_idx: u64 = 0;
+    for conn in listener.incoming() {
+        if sh.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let client = match conn {
+            Ok(s) => s,
+            Err(_) => {
+                std::thread::sleep(POLL);
+                continue;
+            }
+        };
+        let server = match TcpStream::connect(&sh.upstream) {
+            Ok(s) => s,
+            Err(_) => continue, // upstream down: drop the client socket
+        };
+        client.set_nodelay(true).ok();
+        server.set_nodelay(true).ok();
+        sh.conns.inc();
+        let conn = conn_idx;
+        conn_idx += 1;
+        // two half-duplex relays; a fault in either direction cuts both
+        // sockets, so the peer sees a dead connection promptly
+        for (dir, src, dst) in [
+            (Dir::Up, client.try_clone(), server.try_clone()),
+            (Dir::Down, server.try_clone(), client.try_clone()),
+        ] {
+            let (src, dst) = match (src, dst) {
+                (Ok(s), Ok(d)) => (s, d),
+                _ => break,
+            };
+            let sh = sh.clone();
+            if let Ok(h) = std::thread::Builder::new()
+                .name("d4m-chaos-relay".into())
+                .spawn(move || relay(src, dst, conn, dir, &sh))
+            {
+                relays.push(h);
+            }
+        }
+    }
+    // relay threads notice the flag within one poll tick
+    for h in relays {
+        let _ = h.join();
+    }
+}
+
+/// Relay one direction frame by frame, injecting faults. Returns when
+/// either socket dies, a cut fault fires, or the proxy shuts down.
+fn relay(src: TcpStream, mut dst: TcpStream, conn: u64, dir: Dir, sh: &Shared) {
+    src.set_read_timeout(Some(POLL)).ok();
+    dst.set_write_timeout(Some(Duration::from_secs(30))).ok();
+    let salt = match dir {
+        Dir::Up => 0x55,
+        Dir::Down => 0xAA,
+    };
+    let mut rng =
+        XorShift64::new(sh.opts.seed ^ conn.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ salt);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 64 * 1024];
+    let mut frame_idx: u64 = 0;
+    // set when a header fails to parse (should not happen with our own
+    // endpoints): fall back to a dumb byte pipe rather than stalling
+    let mut passthrough = false;
+    loop {
+        while !passthrough {
+            let frame = match take_frame(&mut buf) {
+                Ok(Some(f)) => f,
+                Ok(None) => break,
+                Err(()) => {
+                    passthrough = true;
+                    if !buf.is_empty() && dst.write_all(&buf).is_err() {
+                        cut(&src, &dst);
+                        return;
+                    }
+                    buf.clear();
+                    break;
+                }
+            };
+            sh.frames.inc();
+            let idx = frame_idx;
+            frame_idx += 1;
+            if !forward(&frame, &mut dst, conn, dir, idx, sh, &mut rng) {
+                cut(&src, &dst);
+                return;
+            }
+        }
+        if sh.shutdown.load(Ordering::SeqCst) {
+            cut(&src, &dst);
+            return;
+        }
+        match (&src).read(&mut chunk) {
+            Ok(0) => {
+                // peer hung up cleanly: flush nothing (partial frames
+                // die with the connection) and propagate the close
+                cut(&src, &dst);
+                return;
+            }
+            Ok(n) => {
+                if passthrough {
+                    if dst.write_all(&chunk[..n]).is_err() {
+                        cut(&src, &dst);
+                        return;
+                    }
+                } else {
+                    buf.extend_from_slice(&chunk[..n]);
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => {
+                cut(&src, &dst);
+                return;
+            }
+        }
+    }
+}
+
+/// Pop one complete raw frame (header + payload) off `buf`, if present.
+/// `Err(())` means the header is not a valid frame (degrade to a dumb
+/// pipe).
+fn take_frame(buf: &mut Vec<u8>) -> std::result::Result<Option<Vec<u8>>, ()> {
+    if buf.len() < wire::HEADER_LEN {
+        return Ok(None);
+    }
+    let mut header = [0u8; wire::HEADER_LEN];
+    header.copy_from_slice(&buf[..wire::HEADER_LEN]);
+    let len = wire::frame_payload_len(&header).map_err(|_| ())?;
+    let total = wire::HEADER_LEN + len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let frame = buf[..total].to_vec();
+    buf.drain(..total);
+    Ok(Some(frame))
+}
+
+/// Apply this frame's faults and write it (or don't). Returns false
+/// when the connection must be cut.
+fn forward(
+    frame: &[u8],
+    dst: &mut TcpStream,
+    conn: u64,
+    dir: Dir,
+    idx: u64,
+    sh: &Shared,
+    rng: &mut XorShift64,
+) -> bool {
+    let mut faults: Vec<Fault> = sh.script.get(&(conn, dir, idx)).cloned().unwrap_or_default();
+    if let Some(f) = draw(&sh.opts.profile, rng) {
+        faults.push(f);
+    }
+    if faults.is_empty() {
+        return dst.write_all(frame).is_ok();
+    }
+    sh.faults.add(faults.len() as u64);
+    // delays first (they compose with whatever happens to the frame)
+    for f in &faults {
+        if let Fault::Delay { ms } = f {
+            std::thread::sleep(Duration::from_millis(*ms));
+        }
+    }
+    if faults.iter().any(|f| matches!(f, Fault::Cut)) {
+        return false;
+    }
+    if let Some(Fault::Truncate { bytes }) = faults
+        .iter()
+        .find(|f| matches!(f, Fault::Truncate { .. }))
+        .copied()
+    {
+        let n = bytes.min(frame.len());
+        let _ = dst.write_all(&frame[..n]);
+        return false;
+    }
+    let mut out = frame.to_vec();
+    for f in &faults {
+        if let Fault::CorruptByte { offset, xor } = f {
+            let at = offset % out.len();
+            out[at] ^= xor;
+        }
+    }
+    let copies = 1 + faults.iter().filter(|f| matches!(f, Fault::Duplicate)).count();
+    for _ in 0..copies {
+        if dst.write_all(&out).is_err() {
+            return false;
+        }
+    }
+    true
+}
+
+/// One probabilistic fault draw for a frame.
+fn draw(profile: &Profile, rng: &mut XorShift64) -> Option<Fault> {
+    match *profile {
+        Profile::Passthrough => None,
+        Profile::Drop { rate } => rng.chance(rate).then_some(Fault::Cut),
+        Profile::Delay { rate, ms } => rng.chance(rate).then_some(Fault::Delay { ms }),
+        Profile::Corrupt { rate } => {
+            rng.chance(rate).then_some(Fault::CorruptByte { offset: 0, xor: 0xFF })
+        }
+        Profile::Mixed { rate } => {
+            if !rng.chance(rate) {
+                return None;
+            }
+            Some(match rng.below(4) {
+                0 => Fault::Cut,
+                1 => Fault::Delay { ms: 20 },
+                2 => Fault::CorruptByte { offset: 0, xor: 0xFF },
+                _ => Fault::Duplicate,
+            })
+        }
+    }
+}
+
+/// Kill both sides of a relayed connection; the paired relay thread's
+/// next read fails and it exits too.
+fn cut(a: &TcpStream, b: &TcpStream) {
+    let _ = a.shutdown(Shutdown::Both);
+    let _ = b.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_frame_splits_and_rejects() {
+        let payload = b"hello".to_vec();
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&wire::MAGIC);
+        raw.push(wire::VERSION);
+        raw.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        raw.extend_from_slice(&payload);
+
+        // partial header, partial payload, then the whole frame
+        let mut buf = raw[..4].to_vec();
+        assert_eq!(take_frame(&mut buf), Ok(None));
+        buf = raw[..10].to_vec();
+        assert_eq!(take_frame(&mut buf), Ok(None));
+        buf = raw.clone();
+        buf.extend_from_slice(&raw); // two frames back to back
+        let f1 = take_frame(&mut buf).unwrap().unwrap();
+        assert_eq!(f1, raw);
+        let f2 = take_frame(&mut buf).unwrap().unwrap();
+        assert_eq!(f2, raw);
+        assert!(buf.is_empty());
+
+        // corrupt magic → not a frame
+        let mut bad = raw.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(take_frame(&mut bad), Err(()));
+    }
+
+    #[test]
+    fn profile_draws_are_deterministic_per_seed() {
+        let draws = |seed: u64| {
+            let mut rng = XorShift64::new(seed);
+            (0..64)
+                .map(|_| draw(&Profile::Mixed { rate: 0.3 }, &mut rng))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(draws(42), draws(42));
+        assert_ne!(draws(42), draws(43));
+        assert!(draws(42).iter().any(|f| f.is_some()));
+        assert!(draws(42).iter().any(|f| f.is_none()));
+    }
+
+    #[test]
+    fn profile_parse_covers_cli_names() {
+        assert_eq!(Profile::parse("none", 0.5, 5), Some(Profile::Passthrough));
+        assert_eq!(Profile::parse("drop", 0.5, 5), Some(Profile::Drop { rate: 0.5 }));
+        assert_eq!(Profile::parse("delay", 0.5, 5), Some(Profile::Delay { rate: 0.5, ms: 5 }));
+        assert_eq!(Profile::parse("corrupt", 0.5, 5), Some(Profile::Corrupt { rate: 0.5 }));
+        assert_eq!(Profile::parse("mixed", 0.5, 5), Some(Profile::Mixed { rate: 0.5 }));
+        assert_eq!(Profile::parse("bogus", 0.5, 5), None);
+    }
+}

@@ -1,38 +1,149 @@
-//! `RemoteD4m` — a pipelined network client implementing the
-//! [`D4mApi`] trait, so any code written against the in-process
-//! coordinator runs remote by swapping a constructor:
+//! `RemoteD4m` — a pipelined, **self-healing** network client
+//! implementing the [`D4mApi`] trait, so any code written against the
+//! in-process coordinator runs remote by swapping a constructor:
 //!
 //! ```text
 //! let api: &dyn D4mApi = &D4mServer::new();           // in-process
 //! let api: &dyn D4mApi = &RemoteD4m::connect(addr)?;  // remote
 //! ```
 //!
-//! One `RemoteD4m` owns one TCP connection, **multiplexed**: any thread
-//! may [`RemoteD4m::submit`] a request (assigned a fresh request id and
-//! written immediately) and later [`RemoteD4m::wait`] for that id's
-//! response. Responses arrive in whatever order the server completes
-//! them; a correlation map parks early arrivals until their waiter shows
-//! up. There is no dedicated reader thread — whichever waiting thread
-//! gets there first reads frames off the socket (parking frames that
-//! answer other ids and waking their waiters), so a single-threaded
-//! caller pays no thread overhead and a multi-threaded caller shares
-//! one connection safely.
+//! One `RemoteD4m` owns one TCP connection at a time, **multiplexed**:
+//! any thread may [`RemoteD4m::submit`] a request (assigned a fresh
+//! request id and written immediately) and later [`RemoteD4m::wait`]
+//! for that id's response. Responses arrive in whatever order the
+//! server completes them; a correlation map parks early arrivals until
+//! their waiter shows up. There is no dedicated reader thread —
+//! whichever waiting thread gets there first polls frames off the
+//! socket (parking frames that answer other ids and waking their
+//! waiters), so a single-threaded caller pays no thread overhead and a
+//! multi-threaded caller shares one connection safely.
 //!
-//! Streaming scans ride the same session: [`D4mApi::scan_pages`]
-//! (via the trait) opens a server-side cursor and lazily pulls bounded
-//! pages — see `coordinator::api`.
+//! §Self-healing (DESIGN.md §Fault model): every **typed** call (the
+//! `D4mApi` surface plus `ping`/`stats`) runs under a [`RetryPolicy`] —
+//! exponential backoff with jitter, a retry budget, and a per-request
+//! deadline. A dead connection is transparently re-established and the
+//! request replayed **iff it is safe**:
+//!
+//! * a request that provably never reached the socket is replayed
+//!   unconditionally;
+//! * an *idempotent* request ([`Request::is_idempotent`]) is replayed
+//!   even when the connection died after the frame was sent;
+//! * a non-idempotent request that *may* have been applied surfaces
+//!   [`D4mError::AmbiguousWrite`] — never a silent double-apply;
+//! * a server [`D4mError::Overloaded`] (load shed / cursor cap) means
+//!   the server did **no** work, so everything retries after the
+//!   `retry_after_ms` hint.
+//!
+//! Cursor pulls additionally survive reconnects: the client remembers
+//! each cursor's resume token and acked page count, re-attaches via
+//! `OpenCursor { resume }` on the next connection, and the server
+//! replays the one possibly-lost page — a paged scan interrupted by a
+//! connection drop completes bit-identical to an uninterrupted one.
+//!
+//! The **raw** pipelining surface (`submit`/`wait`/`forget`) stays
+//! single-connection and never retries: ids are claimed against the
+//! connection current at submit time, exactly as before.
 
 use std::collections::{HashMap, HashSet};
+use std::io::Read;
 use std::net::TcpStream;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::connectors::TableQuery;
-use crate::coordinator::{CursorPage, D4mApi, Request, Response};
+use crate::coordinator::{CursorPage, CursorResume, D4mApi, Request, Response};
 use crate::error::{D4mError, Result};
-use crate::metrics::Snapshot;
+use crate::metrics::{Counter, Snapshot};
 use crate::net::wire::{self, ClientMsg, ServerMsg, WireError};
+use crate::util::rng::XorShift64;
+
+/// How often a polling reader (or a parked waiter) wakes to re-check
+/// deadlines and connection death.
+const POLL: Duration = Duration::from_millis(100);
+
+/// Write timeout on the client socket — a wedged server cannot park a
+/// submitting thread forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Retry/backoff/deadline budget for the self-healing request path.
+///
+/// `attempt` 1 is the first try; attempt `n` retries after
+/// `base_delay * 2^(n-1)` (capped at `max_delay`, jittered to 50–100%
+/// of the nominal value so synchronized clients fan out). A server
+/// `retry_after_ms` hint raises the delay floor. When the budget is
+/// spent the last error surfaces as [`D4mError::RetryExhausted`].
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (minimum 1).
+    pub max_attempts: u32,
+    /// Backoff before the first retry.
+    pub base_delay: Duration,
+    /// Backoff cap — the exponential stops growing here.
+    pub max_delay: Duration,
+    /// Wall-clock budget per typed call, spanning every attempt and
+    /// backoff sleep. `None` means attempts alone bound the retries.
+    pub deadline: Option<Duration>,
+    /// Jitter seed — same seed, same jitter sequence (determinism for
+    /// tests).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 8,
+            base_delay: Duration::from_millis(25),
+            max_delay: Duration::from_secs(2),
+            deadline: Some(Duration::from_secs(60)),
+            seed: 0x5EED_D4A1,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy that never retries (first error surfaces raw, wrapped
+    /// in [`D4mError::RetryExhausted`] only for transport failures).
+    pub fn no_retry() -> Self {
+        RetryPolicy { max_attempts: 1, ..Self::default() }
+    }
+
+    /// Fixed-interval probe: `attempts` tries `delay` apart — the shape
+    /// of the old `connect_retry` readiness loop.
+    pub fn probe(attempts: u32, delay: Duration) -> Self {
+        RetryPolicy {
+            max_attempts: attempts.max(1),
+            base_delay: delay,
+            max_delay: delay,
+            deadline: None,
+            ..Self::default()
+        }
+    }
+}
+
+/// Why a connection is unusable — kept typed so waiters can tell a load
+/// shed (nothing executed, retry everything) from a mid-flight death
+/// (in-flight requests may have been applied).
+#[derive(Debug, Clone)]
+enum Dead {
+    /// The server shed this connection at accept with a framed
+    /// `Overloaded` under the reserved id 0 — it read no frames, so no
+    /// request was executed.
+    Overloaded { retry_after_ms: u64 },
+    /// Transport or protocol failure; anything in flight is ambiguous.
+    Gone(String),
+}
+
+impl Dead {
+    fn to_error(&self) -> D4mError {
+        match self {
+            Dead::Overloaded { retry_after_ms } => {
+                D4mError::Overloaded { retry_after_ms: *retry_after_ms }
+            }
+            Dead::Gone(s) => D4mError::Remote(format!("connection failed: {s}")),
+        }
+    }
+}
 
 /// Correlation state shared by every waiter on one connection.
 struct Pending {
@@ -43,39 +154,87 @@ struct Pending {
     outstanding: HashSet<u64>,
     /// Frames that arrived before their waiter: id → message.
     ready: HashMap<u64, ServerMsg>,
-    /// True while some thread is blocked reading the socket on behalf of
+    /// True while some thread is polling the socket on behalf of
     /// everyone (at most one reader at a time).
     reader_active: bool,
     /// First fatal transport error; once set, every current and future
     /// wait fails with it (the connection is unusable).
-    dead: Option<String>,
+    dead: Option<Dead>,
 }
 
-/// A pipelined connection to a remote `d4m serve` coordinator.
-pub struct RemoteD4m {
+/// Incremental frame reader: buffers partial bytes across short read
+/// timeouts so a poll tick can return "nothing yet" without losing the
+/// prefix of an in-flight frame (a plain `read_exact` would).
+struct FrameReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    /// One poll tick: try to complete a frame within roughly one
+    /// [`POLL`] of socket waiting. `Ok(None)` means no full frame yet.
+    fn poll(&mut self) -> Result<Option<Vec<u8>>> {
+        loop {
+            if self.buf.len() >= wire::HEADER_LEN {
+                let mut header = [0u8; wire::HEADER_LEN];
+                header.copy_from_slice(&self.buf[..wire::HEADER_LEN]);
+                let len = wire::frame_payload_len(&header)?;
+                if self.buf.len() >= wire::HEADER_LEN + len {
+                    let payload = self.buf[wire::HEADER_LEN..wire::HEADER_LEN + len].to_vec();
+                    self.buf.drain(..wire::HEADER_LEN + len);
+                    return Ok(Some(payload));
+                }
+            }
+            let mut chunk = [0u8; 64 * 1024];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(D4mError::Remote("server closed the connection".into()));
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Ok(None);
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+/// One live connection: sockets plus the correlation state. Replaced
+/// wholesale on reconnect — waiters on the old one fail with its `dead`
+/// reason and the healing layer retries on the new one.
+struct Conn {
+    /// Monotonic per-client connection number; cursor metadata records
+    /// the epoch it is attached on, so a pull on a newer connection
+    /// knows to re-attach first.
+    epoch: u64,
     /// Write half (a `try_clone` of the socket) — frames are written
-    /// whole under this lock, so submissions from many threads interleave
-    /// at frame granularity only.
+    /// whole under this lock, so submissions from many threads
+    /// interleave at frame granularity only.
     writer: Mutex<TcpStream>,
     /// Read half — held only by the thread currently playing reader.
-    reader: Mutex<TcpStream>,
-    /// Next request id (ids start at 1; 0 is the server's
-    /// connection-error id).
-    next_id: AtomicU64,
+    reader: Mutex<FrameReader>,
     pending: Mutex<Pending>,
     wakeup: Condvar,
 }
 
-impl RemoteD4m {
-    /// Connect to a serving coordinator (`"host:port"`).
-    pub fn connect(addr: &str) -> Result<Self> {
+impl Conn {
+    fn open(addr: &str, epoch: u64) -> Result<Self> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
+        stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
         let reader = stream.try_clone()?;
-        Ok(RemoteD4m {
+        // short read timeout: the polling reader wakes every tick to
+        // re-check deadlines; FrameReader buffers partial frames across
+        // ticks
+        reader.set_read_timeout(Some(POLL)).ok();
+        Ok(Conn {
+            epoch,
             writer: Mutex::new(stream),
-            reader: Mutex::new(reader),
-            next_id: AtomicU64::new(1),
+            reader: Mutex::new(FrameReader { stream: reader, buf: Vec::new() }),
             pending: Mutex::new(Pending {
                 outstanding: HashSet::new(),
                 ready: HashMap::new(),
@@ -86,24 +245,433 @@ impl RemoteD4m {
         })
     }
 
-    /// Connect with retries — the CI/e2e readiness probe for a server
-    /// process that is still binding its port.
-    pub fn connect_retry(addr: &str, attempts: u32, delay: Duration) -> Result<Self> {
-        let mut last: Option<D4mError> = None;
-        for _ in 0..attempts.max(1) {
-            match Self::connect(addr) {
-                Ok(c) => return Ok(c),
+    fn is_dead(&self) -> bool {
+        self.pending.lock().unwrap().dead.is_some()
+    }
+
+    /// Write one request frame under `id`. A write failure kills the
+    /// connection (TCP gives no way to resync mid-frame) — but the
+    /// frame provably never fully reached the kernel, so the caller may
+    /// replay it on a fresh connection unconditionally.
+    fn submit_msg(&self, id: u64, msg: &ClientMsg) -> Result<()> {
+        {
+            let mut g = self.pending.lock().unwrap();
+            if let Some(d) = &g.dead {
+                return Err(d.to_error());
+            }
+            g.outstanding.insert(id);
+        }
+        let payload = wire::encode_client_frame(id, msg);
+        let mut w = self.writer.lock().unwrap();
+        if let Err(e) = wire::write_frame(&mut *w, &payload) {
+            drop(w);
+            let mut g = self.pending.lock().unwrap();
+            g.outstanding.remove(&id);
+            if g.dead.is_none() {
+                g.dead = Some(Dead::Gone(e.to_string()));
+            }
+            drop(g);
+            self.wakeup.notify_all();
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Block until the frame answering `id` arrives, the connection
+    /// dies, the id turns out not to be in flight, or `deadline`
+    /// passes. See the module docs for the cooperative-reader protocol.
+    fn wait_msg(&self, id: u64, deadline: Option<Instant>) -> Result<ServerMsg> {
+        let mut g = self.pending.lock().unwrap();
+        loop {
+            if let Some(m) = g.ready.remove(&id) {
+                return Ok(m);
+            }
+            if let Some(d) = &g.dead {
+                return Err(d.to_error());
+            }
+            if !g.outstanding.contains(&id) {
+                return Err(D4mError::InvalidArg(format!(
+                    "request id {id} is not in flight \
+                     (never submitted, already claimed, or forgotten)"
+                )));
+            }
+            if let Some(dl) = deadline {
+                if Instant::now() >= dl {
+                    // forget the id so its late reply is dropped, not
+                    // parked forever
+                    g.outstanding.remove(&id);
+                    return Err(D4mError::Remote(format!(
+                        "deadline exceeded waiting for reply to request id {id}"
+                    )));
+                }
+            }
+            if g.reader_active {
+                // someone else is polling; they'll wake us when a frame
+                // lands (maybe ours) — bounded wait so our deadline
+                // stays live even if they stall
+                let (g2, _) = self.wakeup.wait_timeout(g, POLL).unwrap();
+                g = g2;
+                continue;
+            }
+            // become the reader for everyone
+            g.reader_active = true;
+            drop(g);
+            let polled = self.reader.lock().unwrap().poll();
+            g = self.pending.lock().unwrap();
+            g.reader_active = false;
+            match polled {
+                Ok(None) => {} // poll tick: loop re-checks deadline/death
+                Ok(Some(payload)) => match wire::decode_server_frame(&payload) {
+                    Ok((rid, msg)) if rid == wire::CONN_ERR_ID => {
+                        // connection-level server error: fatal for all
+                        // waits — but a shed stays typed so the healing
+                        // layer knows nothing was executed
+                        g.dead = Some(match msg {
+                            ServerMsg::Reply(Err(D4mError::Overloaded { retry_after_ms })) => {
+                                Dead::Overloaded { retry_after_ms }
+                            }
+                            ServerMsg::Reply(Err(e)) => Dead::Gone(e.to_string()),
+                            other => Dead::Gone(format!(
+                                "unattributed {} frame",
+                                frame_name(&other)
+                            )),
+                        });
+                    }
+                    Ok((rid, msg)) => {
+                        // park only frames someone can still claim; a
+                        // reply to a forgotten id is dropped here
+                        if g.outstanding.remove(&rid) {
+                            g.ready.insert(rid, msg);
+                        }
+                    }
+                    Err(we) => g.dead = Some(Dead::Gone(we.to_string())),
+                },
                 Err(e) => {
-                    last = Some(e);
-                    std::thread::sleep(delay);
+                    if g.dead.is_none() {
+                        g.dead = Some(Dead::Gone(e.to_string()));
+                    }
+                }
+            }
+            self.wakeup.notify_all();
+        }
+    }
+
+    fn forget(&self, id: u64) {
+        let mut g = self.pending.lock().unwrap();
+        g.outstanding.remove(&id);
+        g.ready.remove(&id);
+        // wake any thread currently waiting on this id so it errors out
+        // instead of sleeping until the next frame happens to land
+        self.wakeup.notify_all();
+    }
+}
+
+/// Client-side cursor bookkeeping for reconnect resume.
+struct CursorMeta {
+    /// The server-issued resume token.
+    token: u64,
+    /// Pages successfully received by this client — the server replays
+    /// the `pages_acked + 1`-th page if its reply was lost.
+    pages_acked: u64,
+    /// Connection epoch the cursor is currently attached on.
+    epoch: u64,
+}
+
+/// A pipelined, self-healing connection to a remote `d4m serve`
+/// coordinator (see the module docs for the retry/replay contract).
+pub struct RemoteD4m {
+    addr: String,
+    policy: RetryPolicy,
+    /// The current connection; `None` until (re)established. Swapped
+    /// under this lock on reconnect.
+    conn: Mutex<Option<Arc<Conn>>>,
+    /// Next request id (ids start at 1; 0 is the server's
+    /// connection-error id). Global across reconnects so a stale reply
+    /// can never be claimed by a later request.
+    next_id: AtomicU64,
+    /// Next connection epoch.
+    next_epoch: AtomicU64,
+    ever_connected: AtomicBool,
+    /// Jitter source for backoff.
+    rng: Mutex<XorShift64>,
+    /// Per-cursor resume state, keyed by server cursor id.
+    cursors: Mutex<HashMap<u64, CursorMeta>>,
+    retries: Counter,
+    reconnects: Counter,
+    cursor_resumes: Counter,
+}
+
+impl RemoteD4m {
+    /// Connect to a serving coordinator (`"host:port"`), one attempt,
+    /// with the default [`RetryPolicy`] governing subsequent requests.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let c = Self::unconnected(addr, RetryPolicy::default());
+        c.current()?;
+        Ok(c)
+    }
+
+    /// Connect under an explicit policy; the *initial* connect is also
+    /// retried within the policy's attempt budget (the CI/e2e readiness
+    /// probe for a server process that is still binding its port).
+    pub fn connect_with(addr: &str, policy: RetryPolicy) -> Result<Self> {
+        let c = Self::unconnected(addr, policy);
+        let mut attempt: u32 = 0;
+        loop {
+            attempt += 1;
+            match c.current() {
+                Ok(_) => return Ok(c),
+                Err(e) => {
+                    if attempt >= c.policy.max_attempts.max(1) {
+                        return Err(e);
+                    }
+                    std::thread::sleep(c.backoff(attempt, None));
                 }
             }
         }
-        Err(last.unwrap_or_else(|| D4mError::InvalidArg("connect_retry: 0 attempts".into())))
+    }
+
+    /// Connect with retries — the old fixed-interval readiness probe.
+    #[deprecated(note = "use connect_with(addr, RetryPolicy::probe(attempts, delay))")]
+    pub fn connect_retry(addr: &str, attempts: u32, delay: Duration) -> Result<Self> {
+        Self::connect_with(addr, RetryPolicy::probe(attempts, delay))
+    }
+
+    fn unconnected(addr: &str, policy: RetryPolicy) -> Self {
+        let seed = policy.seed;
+        RemoteD4m {
+            addr: addr.to_string(),
+            policy,
+            conn: Mutex::new(None),
+            next_id: AtomicU64::new(1),
+            next_epoch: AtomicU64::new(1),
+            ever_connected: AtomicBool::new(false),
+            rng: Mutex::new(XorShift64::new(seed)),
+            cursors: Mutex::new(HashMap::new()),
+            retries: Counter::new(),
+            reconnects: Counter::new(),
+            cursor_resumes: Counter::new(),
+        }
+    }
+
+    /// The policy this client heals under.
+    pub fn policy(&self) -> &RetryPolicy {
+        &self.policy
+    }
+
+    /// Attempts beyond the first across all typed calls.
+    pub fn retry_count(&self) -> u64 {
+        self.retries.get()
+    }
+
+    /// Connections established after the first.
+    pub fn reconnect_count(&self) -> u64 {
+        self.reconnects.get()
+    }
+
+    /// Cursors re-attached via a resume token after a reconnect.
+    pub fn cursor_resume_count(&self) -> u64 {
+        self.cursor_resumes.get()
+    }
+
+    /// Client-side healing counters in the same [`Snapshot`] shape the
+    /// server's `stats` uses, so CLI output can print both uniformly.
+    pub fn client_snapshots(&self) -> Vec<Snapshot> {
+        [
+            ("client.retries", self.retries.get()),
+            ("client.reconnects", self.reconnects.get()),
+            ("client.cursor_resumes", self.cursor_resumes.get()),
+        ]
+        .into_iter()
+        .map(|(name, count)| Snapshot {
+            name: name.into(),
+            count,
+            rate_per_sec: 0.0,
+            mean_latency_ns: 0.0,
+            p99_latency_ns: 0,
+        })
+        .collect()
     }
 
     // ------------------------------------------------------------------
-    // pipelining: submit / wait
+    // connection management
+
+    /// The live connection, (re)establishing one if needed. A fresh
+    /// connection after the first counts as a reconnect.
+    fn current(&self) -> Result<Arc<Conn>> {
+        let mut g = self.conn.lock().unwrap();
+        if let Some(c) = g.as_ref() {
+            if !c.is_dead() {
+                return Ok(c.clone());
+            }
+        }
+        let epoch = self.next_epoch.fetch_add(1, Ordering::Relaxed);
+        let conn = Arc::new(Conn::open(&self.addr, epoch)?);
+        if self.ever_connected.swap(true, Ordering::Relaxed) {
+            self.reconnects.inc();
+        }
+        *g = Some(conn.clone());
+        Ok(conn)
+    }
+
+    /// Drop `conn` from the current slot if it died (another thread may
+    /// already have reconnected; leave its connection alone).
+    fn invalidate(&self, conn: &Arc<Conn>) {
+        if !conn.is_dead() {
+            return;
+        }
+        let mut g = self.conn.lock().unwrap();
+        if let Some(cur) = g.as_ref() {
+            if Arc::ptr_eq(cur, conn) {
+                *g = None;
+            }
+        }
+    }
+
+    /// Backoff before retry number `attempt` (1-based), jittered,
+    /// raised to at least a server `retry_after_ms` hint.
+    fn backoff(&self, attempt: u32, hint_ms: Option<u64>) -> Duration {
+        let shift = attempt.saturating_sub(1).min(16);
+        let nominal = self
+            .policy
+            .base_delay
+            .saturating_mul(1u32 << shift)
+            .min(self.policy.max_delay);
+        let jitter = 0.5 + self.rng.lock().unwrap().f64() * 0.5;
+        let mut d = nominal.mul_f64(jitter);
+        if let Some(ms) = hint_ms {
+            d = d.max(Duration::from_millis(ms));
+        }
+        d
+    }
+
+    // ------------------------------------------------------------------
+    // the healing driver
+
+    /// One submit+wait on `conn`. On failure the second tuple slot says
+    /// whether the frame may have reached the server (`true` = the
+    /// write succeeded, so a non-idempotent request is now ambiguous).
+    /// A typed server `Overloaded` reply is converted to a retryable
+    /// failure here — the server sheds *before* doing any work, so it
+    /// is never ambiguous.
+    fn attempt(
+        &self,
+        conn: &Arc<Conn>,
+        msg: &ClientMsg,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<ServerMsg, (D4mError, bool)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Err(e) = conn.submit_msg(id, msg) {
+            self.invalidate(conn);
+            return Err((e, false));
+        }
+        match conn.wait_msg(id, deadline) {
+            Ok(ServerMsg::Reply(Err(D4mError::Overloaded { retry_after_ms }))) => {
+                Err((D4mError::Overloaded { retry_after_ms }, false))
+            }
+            Ok(m) => Ok(m),
+            Err(e) => {
+                self.invalidate(conn);
+                Err((e, true))
+            }
+        }
+    }
+
+    /// Run `step` under the retry policy. `step` performs one attempt
+    /// end to end and reports failures as `(error, may_have_sent)`;
+    /// this driver decides whether a retry is safe (see the module
+    /// docs), sleeps the backoff, and converts an exhausted budget into
+    /// [`D4mError::RetryExhausted`].
+    fn with_retry<T>(
+        &self,
+        idempotent: bool,
+        step: &mut dyn FnMut(Option<Instant>) -> std::result::Result<T, (D4mError, bool)>,
+    ) -> Result<T> {
+        let deadline = self.policy.deadline.map(|d| Instant::now() + d);
+        let mut attempt: u32 = 0;
+        loop {
+            attempt += 1;
+            let (err, sent) = match step(deadline) {
+                Ok(v) => return Ok(v),
+                Err(pair) => pair,
+            };
+            let hint_ms = match &err {
+                D4mError::Overloaded { retry_after_ms } => Some(*retry_after_ms),
+                _ if is_transport(&err) => None,
+                // typed server-side failure (NotFound, InvalidArg, …):
+                // the request executed and failed; retrying cannot help
+                _ => return Err(err),
+            };
+            if sent && hint_ms.is_none() && !idempotent {
+                return Err(D4mError::AmbiguousWrite(err.to_string()));
+            }
+            let delay = self.backoff(attempt, hint_ms);
+            let out_of_time = match deadline {
+                Some(dl) => Instant::now() + delay >= dl,
+                None => false,
+            };
+            if attempt >= self.policy.max_attempts.max(1) || out_of_time {
+                return Err(D4mError::RetryExhausted { attempts: attempt, last: err.to_string() });
+            }
+            self.retries.inc();
+            std::thread::sleep(delay);
+        }
+    }
+
+    /// A whole typed request under the policy: fresh connection if
+    /// needed, one attempt per loop turn.
+    fn heal_rpc(&self, msg: &ClientMsg, idempotent: bool) -> Result<ServerMsg> {
+        self.with_retry(idempotent, &mut |deadline| {
+            let conn = self.current().map_err(|e| (e, false))?;
+            self.attempt(&conn, msg, deadline)
+        })
+    }
+
+    /// Re-attach `cursor` on `conn` if it is parked on an older
+    /// connection epoch: send `OpenCursor { resume }` with the stored
+    /// token and acked page count. The table/query/page_entries fields
+    /// are ignored by the server on resume.
+    fn reattach(
+        &self,
+        conn: &Arc<Conn>,
+        cursor: u64,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<(), (D4mError, bool)> {
+        let resume = {
+            let g = self.cursors.lock().unwrap();
+            match g.get(&cursor) {
+                Some(m) if m.epoch != conn.epoch => Some(CursorResume {
+                    cursor,
+                    token: m.token,
+                    pages_acked: m.pages_acked,
+                }),
+                _ => None,
+            }
+        };
+        let Some(r) = resume else { return Ok(()) };
+        let msg = ClientMsg::OpenCursor {
+            table: String::new(),
+            query: TableQuery::all(),
+            page_entries: 0,
+            resume: Some(r),
+        };
+        match self.attempt(conn, &msg, deadline)? {
+            ServerMsg::CursorOpened { cursor: cid, token } => {
+                debug_assert_eq!(cid, cursor);
+                self.cursor_resumes.inc();
+                let mut g = self.cursors.lock().unwrap();
+                if let Some(m) = g.get_mut(&cursor) {
+                    m.epoch = conn.epoch;
+                    m.token = token;
+                }
+                Ok(())
+            }
+            ServerMsg::Reply(Err(e)) => Err((e, true)),
+            other => Err((unexpected_frame("CursorOpened", &other), true)),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // pipelining: submit / wait (raw, non-healing)
 
     /// Submit a coordinator request without waiting: the frame is written
     /// now and the returned id claims its response later via
@@ -111,19 +679,25 @@ impl RemoteD4m {
     /// the connection; the server answers them in completion order.
     /// Every submitted id should eventually be [`RemoteD4m::wait`]ed or
     /// [`RemoteD4m::forget`]ten — an id that is neither keeps its parked
-    /// response buffered until the connection drops.
+    /// response buffered until the connection drops. This raw surface
+    /// never retries and is pinned to the connection current at submit
+    /// time.
     pub fn submit(&self, req: Request) -> Result<u64> {
-        self.submit_msg(&ClientMsg::Api(req))
+        let conn = self.current()?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        conn.submit_msg(id, &ClientMsg::Api(req))?;
+        Ok(id)
     }
 
     /// Claim the response to a previously [`RemoteD4m::submit`]ted id
     /// (block until its frame arrives). Each id is claimable exactly
     /// once; a wait on an id that is not in flight (never submitted,
-    /// already claimed, or forgotten) fails with a typed error instead
-    /// of hanging. Waiting threads cooperate — whoever waits first reads
-    /// the socket for everyone.
+    /// already claimed, forgotten, or lost with a replaced connection)
+    /// fails with a typed error instead of hanging. Waiting threads
+    /// cooperate — whoever waits first reads the socket for everyone.
     pub fn wait(&self, id: u64) -> Result<Response> {
-        match self.wait_msg(id)? {
+        let conn = self.current()?;
+        match conn.wait_msg(id, None)? {
             ServerMsg::Reply(r) => r,
             other => Err(unexpected_frame("Reply", &other)),
         }
@@ -134,95 +708,10 @@ impl RemoteD4m {
     /// error paths that bail out of a pipelined window without claiming
     /// every id.
     pub fn forget(&self, id: u64) {
-        let mut g = self.pending.lock().unwrap();
-        g.outstanding.remove(&id);
-        g.ready.remove(&id);
-        // wake any thread currently waiting on this id so it errors out
-        // instead of sleeping until the next frame happens to land
-        self.wakeup.notify_all();
-    }
-
-    fn submit_msg(&self, msg: &ClientMsg) -> Result<u64> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        {
-            let mut g = self.pending.lock().unwrap();
-            if let Some(e) = &g.dead {
-                return Err(D4mError::Remote(format!("connection failed: {e}")));
-            }
-            g.outstanding.insert(id);
+        let conn = self.conn.lock().unwrap().clone();
+        if let Some(c) = conn {
+            c.forget(id);
         }
-        let payload = wire::encode_client_frame(id, msg);
-        let mut w = self.writer.lock().unwrap();
-        if let Err(e) = wire::write_frame(&mut *w, &payload) {
-            self.pending.lock().unwrap().outstanding.remove(&id);
-            return Err(e);
-        }
-        Ok(id)
-    }
-
-    /// Block until the frame answering `id` arrives (or the connection
-    /// dies, or the id turns out not to be in flight). See the module
-    /// docs for the cooperative-reader protocol.
-    fn wait_msg(&self, id: u64) -> Result<ServerMsg> {
-        let mut g = self.pending.lock().unwrap();
-        loop {
-            if let Some(m) = g.ready.remove(&id) {
-                return Ok(m);
-            }
-            if let Some(e) = &g.dead {
-                return Err(D4mError::Remote(format!("connection failed: {e}")));
-            }
-            if !g.outstanding.contains(&id) {
-                return Err(D4mError::InvalidArg(format!(
-                    "request id {id} is not in flight \
-                     (never submitted, already claimed, or forgotten)"
-                )));
-            }
-            if g.reader_active {
-                // someone else is reading; they'll wake us when a frame
-                // lands (maybe ours)
-                g = self.wakeup.wait(g).unwrap();
-                continue;
-            }
-            // become the reader for everyone
-            g.reader_active = true;
-            drop(g);
-            let read = self.read_one();
-            g = self.pending.lock().unwrap();
-            g.reader_active = false;
-            match read {
-                Ok((rid, msg)) if rid == wire::CONN_ERR_ID => {
-                    // connection-level server error: fatal for all waits
-                    let detail = match msg {
-                        ServerMsg::Reply(Err(e)) => e.to_string(),
-                        other => format!("unattributed {} frame", frame_name(&other)),
-                    };
-                    g.dead = Some(detail);
-                }
-                Ok((rid, msg)) => {
-                    // park only frames someone can still claim; a reply
-                    // to a forgotten id is dropped here
-                    if g.outstanding.remove(&rid) {
-                        g.ready.insert(rid, msg);
-                    }
-                }
-                Err(e) => {
-                    g.dead = Some(e.to_string());
-                }
-            }
-            self.wakeup.notify_all();
-        }
-    }
-
-    fn read_one(&self) -> Result<(u64, ServerMsg)> {
-        let mut r = self.reader.lock().unwrap();
-        let payload = wire::read_frame(&mut *r)?;
-        Ok(wire::decode_server_frame(&payload)?)
-    }
-
-    fn rpc(&self, msg: &ClientMsg) -> Result<ServerMsg> {
-        let id = self.submit_msg(msg)?;
-        self.wait_msg(id)
     }
 
     // ------------------------------------------------------------------
@@ -230,9 +719,9 @@ impl RemoteD4m {
 
     /// Liveness + version probe: checks the server's `Pong` carries the
     /// wire version this client speaks, failing with a typed
-    /// [`WireError::Version`] on skew.
+    /// [`WireError::Version`] on skew. Heals like any idempotent call.
     pub fn ping(&self) -> Result<()> {
-        match self.rpc(&ClientMsg::Ping { version: wire::VERSION })? {
+        match self.heal_rpc(&ClientMsg::Ping { version: wire::VERSION }, true)? {
             ServerMsg::Pong { version } if version == wire::VERSION => Ok(()),
             ServerMsg::Pong { version } => {
                 Err(WireError::Version { got: version, want: wire::VERSION }.into())
@@ -243,18 +732,25 @@ impl RemoteD4m {
     }
 
     /// Remote metrics: the coordinator's per-op snapshots plus the
-    /// server's net-layer counters.
+    /// server's net-layer counters (client-side healing counters are
+    /// separate — [`RemoteD4m::client_snapshots`]).
     pub fn stats(&self) -> Result<Vec<Snapshot>> {
-        match self.rpc(&ClientMsg::Stats)? {
+        match self.heal_rpc(&ClientMsg::Stats, true)? {
             ServerMsg::Stats(s) => Ok(s),
             ServerMsg::Reply(Err(e)) => Err(e),
             other => Err(unexpected_frame("Stats", &other)),
         }
     }
 
-    /// Ask the server to shut down gracefully; returns once acknowledged.
+    /// Ask the server to shut down gracefully; returns once
+    /// acknowledged. Deliberately **not** healed: a lost ack would
+    /// otherwise have the client retrying against a server that is
+    /// already gone.
     pub fn shutdown_server(&self) -> Result<()> {
-        match self.rpc(&ClientMsg::Shutdown)? {
+        let conn = self.current()?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        conn.submit_msg(id, &ClientMsg::Shutdown)?;
+        match conn.wait_msg(id, None)? {
             ServerMsg::ShutdownAck => Ok(()),
             ServerMsg::Reply(Err(e)) => Err(e),
             other => Err(unexpected_frame("ShutdownAck", &other)),
@@ -263,11 +759,17 @@ impl RemoteD4m {
 }
 
 impl D4mApi for RemoteD4m {
-    /// One request, one response — `submit` + `wait` back to back. For
-    /// overlap, use those two directly.
+    /// One request, one response, under the retry policy. Idempotent
+    /// requests replay transparently across reconnects; a
+    /// non-idempotent request that may have reached the server surfaces
+    /// [`D4mError::AmbiguousWrite`]. For pipelined overlap use the raw
+    /// `submit`/`wait` pair (which never retries).
     fn handle(&self, req: Request) -> Result<Response> {
-        let id = self.submit(req)?;
-        self.wait(id)
+        let idempotent = req.is_idempotent();
+        match self.heal_rpc(&ClientMsg::Api(req), idempotent)? {
+            ServerMsg::Reply(r) => r,
+            other => Err(unexpected_frame("Reply", &other)),
+        }
     }
 
     fn open_cursor(&self, table: &str, query: &TableQuery, page_entries: usize) -> Result<u64> {
@@ -275,29 +777,71 @@ impl D4mApi for RemoteD4m {
             table: table.into(),
             query: query.clone(),
             page_entries: page_entries as u64,
+            resume: None,
         };
-        match self.rpc(&msg)? {
-            ServerMsg::CursorOpened { cursor } => Ok(cursor),
+        let mut epoch = 0u64;
+        let reply = self.with_retry(true, &mut |deadline| {
+            let conn = self.current().map_err(|e| (e, false))?;
+            epoch = conn.epoch;
+            self.attempt(&conn, &msg, deadline)
+        })?;
+        match reply {
+            ServerMsg::CursorOpened { cursor, token } => {
+                self.cursors
+                    .lock()
+                    .unwrap()
+                    .insert(cursor, CursorMeta { token, pages_acked: 0, epoch });
+                Ok(cursor)
+            }
             ServerMsg::Reply(Err(e)) => Err(e),
             other => Err(unexpected_frame("CursorOpened", &other)),
         }
     }
 
     fn cursor_next(&self, cursor: u64) -> Result<CursorPage> {
-        match self.rpc(&ClientMsg::CursorNext { cursor })? {
-            ServerMsg::CursorPage(page) => Ok(page),
+        let msg = ClientMsg::CursorNext { cursor };
+        let reply = self.with_retry(true, &mut |deadline| {
+            let conn = self.current().map_err(|e| (e, false))?;
+            // if the cursor is parked on a dead connection's epoch,
+            // re-attach with the resume token first — the server then
+            // continues (or replays the one lost page) bit-identically
+            self.reattach(&conn, cursor, deadline)?;
+            self.attempt(&conn, &msg, deadline)
+        })?;
+        match reply {
+            ServerMsg::CursorPage(page) => {
+                if let Some(m) = self.cursors.lock().unwrap().get_mut(&cursor) {
+                    m.pages_acked += 1;
+                }
+                Ok(page)
+            }
             ServerMsg::Reply(Err(e)) => Err(e),
             other => Err(unexpected_frame("CursorPage", &other)),
         }
     }
 
     fn cursor_close(&self, cursor: u64) -> Result<()> {
-        match self.rpc(&ClientMsg::CursorClose { cursor })? {
+        let msg = ClientMsg::CursorClose { cursor };
+        let r = self.with_retry(true, &mut |deadline| {
+            let conn = self.current().map_err(|e| (e, false))?;
+            // re-own the cursor first, else the close is a NotFound no-op
+            // and the server-side handle lingers until swept
+            self.reattach(&conn, cursor, deadline)?;
+            self.attempt(&conn, &msg, deadline)
+        });
+        self.cursors.lock().unwrap().remove(&cursor);
+        match r? {
             ServerMsg::CursorClosed => Ok(()),
             ServerMsg::Reply(Err(e)) => Err(e),
             other => Err(unexpected_frame("CursorClosed", &other)),
         }
     }
+}
+
+/// Errors that indicate the transport (not the request) failed —
+/// reconnect-and-retry is the right response when it is safe.
+fn is_transport(e: &D4mError) -> bool {
+    matches!(e, D4mError::Io(_) | D4mError::Remote(_) | D4mError::Wire(_))
 }
 
 fn unexpected_frame(expected: &str, msg: &ServerMsg) -> D4mError {

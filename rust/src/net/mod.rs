@@ -10,24 +10,37 @@
 //!   `Arc<D4mServer>` across a bounded thread-per-connection pool; each
 //!   connection is a demux (one reader + bounded workers) so N pipelined
 //!   requests from one connection execute concurrently, with
-//!   per-connection cursor ownership and reap-on-disconnect.
-//! * [`client`] — [`RemoteD4m`], a pipelined client implementing the
-//!   [`D4mApi`](crate::coordinator::D4mApi) trait, so call sites written
-//!   against the in-process coordinator go remote by swapping the
-//!   constructor; `submit()`/`wait(id)` expose the pipelining directly
-//!   and `scan_pages` lazily pulls cursor pages.
+//!   per-connection cursor ownership, orphan-on-disconnect into a
+//!   resume-grace window, and load shedding (typed `Overloaded` with a
+//!   retry hint) when the pool saturates.
+//! * [`client`] — [`RemoteD4m`], a pipelined **self-healing** client
+//!   implementing the [`D4mApi`](crate::coordinator::D4mApi) trait, so
+//!   call sites written against the in-process coordinator go remote by
+//!   swapping the constructor; typed calls retry under a [`RetryPolicy`]
+//!   (backoff + jitter + deadline), reconnect transparently, resume
+//!   cursors, and refuse to double-apply non-idempotent writes;
+//!   `submit()`/`wait(id)` expose the raw pipelining directly.
+//!
+//! A fourth layer, [`chaos`], is a frame-aware fault-injection proxy
+//! (seeded, deterministic schedules: cuts, delays, duplicates,
+//! truncations, corruption) that sits between client and server so the
+//! client's healing — retry with backoff, reconnect, cursor resume —
+//! is exercised reproducibly (`rust/tests/chaos_e2e.rs`, the `degraded`
+//! bench leg, and `d4m chaos` from the CLI).
 //!
 //! `d4m serve --addr HOST:PORT` exposes the server from the CLI and
 //! `d4m client --addr HOST:PORT <cmd>` drives it (including
 //! `pipeline-bench` and `scan-pages`); `rust/tests/net_e2e.rs` pins that
 //! remote answers are bit-identical to in-process ones, and
-//! `benches/net.rs` records the round-trip, pipelined and paged-scan
-//! trajectories into `BENCH_net.json`.
+//! `benches/net.rs` records the round-trip, pipelined, paged-scan and
+//! degraded trajectories into `BENCH_net.json`.
 
+pub mod chaos;
 pub mod client;
 pub mod server;
 pub mod wire;
 
-pub use client::RemoteD4m;
+pub use chaos::{ChaosOpts, ChaosProxy, Fault, Profile, ScriptedFault};
+pub use client::{RemoteD4m, RetryPolicy};
 pub use server::{serve, NetHandle, NetOpts};
 pub use wire::{WireError, WireResult};

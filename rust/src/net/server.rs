@@ -12,16 +12,25 @@
 //! execute against the shared [`D4mServer`] concurrently and write each
 //! reply frame under a shared writer lock **as it completes**, so
 //! responses legitimately overtake each other; the client correlates by
-//! request id. At most [`NetOpts::max_conns`] connections are served —
-//! the accept loop blocks on a condvar when the pool is full, so a
-//! connection flood backpressures at the TCP backlog.
+//! request id. At most [`NetOpts::max_conns`] connections are served.
+//!
+//! §Load shedding (DESIGN.md §Fault model): when the pool is full the
+//! accept loop waits up to [`NetOpts::shed_after`] for a slot, then
+//! **sheds** the accepted connection with a framed
+//! [`D4mError::Overloaded`] carrying a `retry_after_ms` hint (under the
+//! reserved id 0) instead of queueing peers on the accept condvar
+//! indefinitely. A shed happens before any frame is read, so nothing
+//! was executed — the self-healing client treats it as safe to retry
+//! everything after the hinted backoff.
 //!
 //! §Cursor ownership: every connection gets a distinct owner id;
 //! `OpenCursor`/`CursorNext`/`CursorClose` act only on that owner's
-//! cursors, and connection teardown (clean or poisoned) reaps whatever
-//! the connection left open — a dropped client can't pin a snapshot
-//! beyond its connection's life (plus the server-side idle TTL as the
-//! last resort for live-but-idle connections).
+//! cursors, and connection teardown (clean or poisoned) **orphans**
+//! whatever the connection left open into the resume-grace window — a
+//! reconnecting client presenting the resume token re-attaches to the
+//! same pinned snapshot; everything else is dropped by the background
+//! cursor sweep (which also enforces the idle TTL on a quiet server,
+//! so leaked cursors are reaped even with zero cursor traffic).
 //!
 //! §Error framing: a malformed frame poisons only its own connection —
 //! the server replies with a framed error carrying the reserved id 0
@@ -84,6 +93,11 @@ pub struct NetOpts {
     /// this budget is dropped — dribbling one byte per poll cannot hold
     /// a pool slot forever.
     pub io_timeout: Duration,
+    /// How long a full pool holds an accepted connection waiting for a
+    /// slot before shedding it with a framed
+    /// [`D4mError::Overloaded`] (`retry_after_ms` = this budget). Zero
+    /// sheds immediately.
+    pub shed_after: Duration,
 }
 
 impl Default for NetOpts {
@@ -93,9 +107,15 @@ impl Default for NetOpts {
             workers_per_conn: 8,
             idle_poll: Duration::from_millis(200),
             io_timeout: Duration::from_secs(30),
+            shed_after: Duration::from_millis(500),
         }
     }
 }
+
+/// Cadence of the background cursor sweep (TTL + orphan-grace eviction)
+/// that runs from the accept-side sweeper thread, so cursor eviction no
+/// longer depends on cursor traffic to make progress.
+const SWEEP_EVERY: Duration = Duration::from_millis(500);
 
 /// State shared between the accept loop, connection threads and the
 /// [`NetHandle`].
@@ -115,7 +135,15 @@ struct Shared {
     bad_frames: Counter,
     bytes_in: Counter,
     bytes_out: Counter,
+    /// Cursors dropped by the background sweep (idle TTL or expired
+    /// orphan grace).
     cursors_reaped: Counter,
+    /// Cursors parked into the resume-grace window at connection
+    /// teardown.
+    cursors_orphaned: Counter,
+    /// Connections shed with `Overloaded` because the pool stayed full
+    /// past `shed_after`.
+    sheds: Counter,
 }
 
 impl Shared {
@@ -136,6 +164,8 @@ impl Shared {
             ("net.bytes_out", self.bytes_out.get()),
             ("net.cursors_open", self.server.open_cursor_count() as u64),
             ("net.cursors_reaped", self.cursors_reaped.get()),
+            ("net.cursors_orphaned", self.cursors_orphaned.get()),
+            ("net.sheds", self.sheds.get()),
         ] {
             snaps.push(Snapshot {
                 name: name.into(),
@@ -169,6 +199,7 @@ impl Shared {
 pub struct NetHandle {
     shared: Arc<Shared>,
     accept: Option<JoinHandle<()>>,
+    sweeper: Option<JoinHandle<()>>,
 }
 
 impl NetHandle {
@@ -191,6 +222,9 @@ impl NetHandle {
     /// every connection drained). Returns immediately if already joined.
     pub fn wait(&mut self) {
         if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sweeper.take() {
             let _ = h.join();
         }
     }
@@ -232,12 +266,38 @@ pub fn serve(server: Arc<D4mServer>, addr: &str, mut opts: NetOpts) -> Result<Ne
         bytes_in: Counter::new(),
         bytes_out: Counter::new(),
         cursors_reaped: Counter::new(),
+        cursors_orphaned: Counter::new(),
+        sheds: Counter::new(),
     });
     let sh = shared.clone();
     let accept = std::thread::Builder::new()
         .name("d4m-net-accept".into())
         .spawn(move || accept_loop(listener, sh))?;
-    Ok(NetHandle { shared, accept: Some(accept) })
+    let sh = shared.clone();
+    let sweeper = std::thread::Builder::new()
+        .name("d4m-net-sweep".into())
+        .spawn(move || sweep_loop(sh))?;
+    Ok(NetHandle { shared, accept: Some(accept), sweeper: Some(sweeper) })
+}
+
+/// Background cursor sweep: evicts idle-TTL'd cursors and expired
+/// orphans on a fixed cadence, independent of cursor traffic (the
+/// cursor-op path used to be the only place eviction ran, so a leaked
+/// cursor on a quiet server was never collected).
+fn sweep_loop(sh: Arc<Shared>) {
+    let tick = sh.opts.idle_poll.min(SWEEP_EVERY).max(Duration::from_millis(10));
+    let mut since_sweep = Duration::ZERO;
+    while !sh.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        since_sweep += tick;
+        if since_sweep >= SWEEP_EVERY {
+            since_sweep = Duration::ZERO;
+            let n = sh.server.sweep_cursors();
+            if n > 0 {
+                sh.cursors_reaped.add(n as u64);
+            }
+        }
+    }
 }
 
 fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
@@ -254,21 +314,36 @@ fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
                 continue;
             }
         };
-        // bounded pool: hold the accepted socket until a slot frees
+        // bounded pool: hold the accepted socket briefly for a slot,
+        // then shed with a typed Overloaded hint rather than queueing
+        // the peer on the condvar indefinitely
         {
+            let shed_deadline = Instant::now() + sh.opts.shed_after;
             let mut active = sh.active.lock().unwrap();
+            let mut shed_now = false;
             while *active >= sh.opts.max_conns && !sh.shutdown.load(Ordering::SeqCst) {
-                active = sh.pool_cv.wait(active).unwrap();
+                let now = Instant::now();
+                if now >= shed_deadline {
+                    shed_now = true;
+                    break;
+                }
+                let (g, _) = sh.pool_cv.wait_timeout(active, shed_deadline - now).unwrap();
+                active = g;
             }
             if sh.shutdown.load(Ordering::SeqCst) {
                 break;
+            }
+            if shed_now {
+                drop(active);
+                shed(stream, &sh);
+                continue;
             }
             *active += 1;
         }
         let sh2 = sh.clone();
         let builder = std::thread::Builder::new().name("d4m-net-conn".into());
         let spawned = builder.spawn(move || {
-            // the guard's Drop releases the pool slot and reaps the
+            // the guard's Drop releases the pool slot and orphans the
             // connection's cursors even if the demux panics (a worker
             // panic propagates through thread::scope and would otherwise
             // leak the slot forever and wedge the shutdown drain)
@@ -293,10 +368,11 @@ fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
 }
 
 /// End-of-connection cleanup that must run no matter how the connection
-/// thread exits — clean return, error, or panic: reap the connection's
-/// cursors, release its pool slot, and wake the accept loop. Runs in
-/// `Drop` so an unwinding demux cannot leak a `max_conns` slot or pin a
-/// cursor snapshot.
+/// thread exits — clean return, error, or panic: orphan the
+/// connection's cursors into the resume-grace window, release its pool
+/// slot, and wake the accept loop. Runs in `Drop` so an unwinding demux
+/// cannot leak a `max_conns` slot or pin a cursor snapshot beyond the
+/// grace window.
 struct ConnGuard<'a> {
     sh: &'a Shared,
     owner: u64,
@@ -304,9 +380,12 @@ struct ConnGuard<'a> {
 
 impl Drop for ConnGuard<'_> {
     fn drop(&mut self) {
-        let reaped = self.sh.server.reap_cursors(self.owner);
-        if reaped > 0 {
-            self.sh.cursors_reaped.add(reaped as u64);
+        // park (not drop) the connection's cursors: a reconnecting
+        // client presenting the resume token re-attaches within the
+        // grace window; the background sweep collects the rest
+        let orphaned = self.sh.server.orphan_cursors(self.owner);
+        if orphaned > 0 {
+            self.sh.cursors_orphaned.add(orphaned as u64);
         }
         // recover a poisoned lock rather than double-panicking in drop:
         // the counter itself is always coherent (only ever touched under
@@ -458,20 +537,26 @@ fn execute(sh: &Shared, owner: u64, msg: ClientMsg) -> (ServerMsg, bool) {
             }
             (ServerMsg::ShutdownAck, true)
         }
-        ClientMsg::OpenCursor { table, query, page_entries } => {
-            // clamp what a remote peer may ask for: the per-page byte
-            // budget (cursor::PAGE_BYTE_BUDGET) bounds memory anyway,
-            // but a sane entry cap keeps a hostile ask from reserving
-            // absurd page buffers
-            let pe = usize::try_from(page_entries)
-                .unwrap_or(MAX_PAGE_ENTRIES)
-                .clamp(1, MAX_PAGE_ENTRIES);
-            let r = sh
-                .requests
-                .time(|| sh.server.open_cursor_owned(owner, &table, &query, pe));
+        ClientMsg::OpenCursor { table, query, page_entries, resume } => {
+            let r = match resume {
+                // a resume re-attaches to the surviving server-side
+                // cursor (same pinned snapshot); table/query/page_entries
+                // only describe the original open and are ignored here
+                Some(rt) => sh.requests.time(|| sh.server.resume_cursor_owned(owner, &rt)),
+                None => {
+                    // clamp what a remote peer may ask for: the per-page
+                    // byte budget (cursor::PAGE_BYTE_BUDGET) bounds
+                    // memory anyway, but a sane entry cap keeps a
+                    // hostile ask from reserving absurd page buffers
+                    let pe = usize::try_from(page_entries)
+                        .unwrap_or(MAX_PAGE_ENTRIES)
+                        .clamp(1, MAX_PAGE_ENTRIES);
+                    sh.requests.time(|| sh.server.open_cursor_owned(owner, &table, &query, pe))
+                }
+            };
             (
                 match r {
-                    Ok(cursor) => ServerMsg::CursorOpened { cursor },
+                    Ok((cursor, token)) => ServerMsg::CursorOpened { cursor, token },
                     Err(e) => ServerMsg::Reply(Err(e)),
                 },
                 false,
@@ -562,6 +647,23 @@ impl Read for DeadlineReader<'_> {
                 other => return other,
             }
         }
+    }
+}
+
+/// Shed an accepted-but-unserved connection: best-effort framed
+/// [`D4mError::Overloaded`] under the reserved id 0, then close. The
+/// shed happens before any frame is read off the socket, so the peer
+/// knows nothing it sent was executed — a retry after the hint is
+/// always safe, writes included.
+fn shed(stream: TcpStream, sh: &Shared) {
+    sh.sheds.inc();
+    let retry_after_ms = (sh.opts.shed_after.as_millis() as u64).max(50);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+    let reply = ServerMsg::Reply(Err(D4mError::Overloaded { retry_after_ms }));
+    let buf = wire::encode_server_frame(wire::CONN_ERR_ID, &reply);
+    let mut stream = stream;
+    if wire::write_frame(&mut stream, &buf).is_ok() {
+        sh.bytes_out.add((wire::HEADER_LEN + buf.len()) as u64);
     }
 }
 

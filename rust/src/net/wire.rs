@@ -37,7 +37,13 @@
 //! probe compatibility explicitly. v1 → v2: request-id prefix added to
 //! every payload, `Ping`/`Pong` gained the version byte, cursor
 //! messages (`OpenCursor`/`CursorNext`/`CursorClose` and
-//! `CursorOpened`/`CursorPage`/`CursorClosed`) added.
+//! `CursorOpened`/`CursorPage`/`CursorClosed`) added. v2 → v3:
+//! `OpenCursor` gained an optional resume token (cursor id + secret +
+//! acked-page count, see [`CursorResume`]) and `CursorOpened` gained
+//! the server-issued resume secret — both changes to existing tag
+//! encodings, hence the bump; error tags 14–16 (`Overloaded`,
+//! `RetryExhausted`, `AmbiguousWrite`) are compatible trailing
+//! additions.
 //!
 //! [`Assoc`] frames carry the array structurally — sorted key vectors,
 //! the optional value-key table and the raw CSR arrays — so a decoded
@@ -54,7 +60,7 @@ use std::time::Duration;
 use crate::assoc::spmat::SpMat;
 use crate::assoc::{Assoc, KeySel};
 use crate::connectors::TableQuery;
-use crate::coordinator::{CursorPage, Request, Response};
+use crate::coordinator::{CursorPage, CursorResume, Request, Response};
 use crate::error::D4mError;
 use crate::graphulo::{PageRankOpts, PageRankResult, TableMultStats};
 use crate::metrics::Snapshot;
@@ -62,9 +68,9 @@ use crate::pipeline::{IngestReport, PipelineConfig, TripleMsg};
 
 /// Frame magic (the version byte follows it).
 pub const MAGIC: [u8; 3] = *b"D4M";
-/// Wire-protocol version carried in every frame header (v2: request-id
-/// framing + cursor messages).
-pub const VERSION: u8 = 2;
+/// Wire-protocol version carried in every frame header (v3: cursor
+/// resume tokens; v2: request-id framing + cursor messages).
+pub const VERSION: u8 = 3;
 /// Request id reserved for connection-level server errors (a reply the
 /// server could not attribute to any request). Clients assign from 1.
 pub const CONN_ERR_ID: u64 = 0;
@@ -137,7 +143,9 @@ pub type WireResult<T> = std::result::Result<T, WireError>;
 /// Client→server messages: the coordinator API, the cursor ops, and the
 /// three admin verbs the CLI and CI harness need. On the wire each is
 /// prefixed by its client-assigned request id (see the module docs).
-#[derive(Debug)]
+/// `Clone` so a self-healing client can replay an idempotent request
+/// after reconnecting.
+#[derive(Debug, Clone)]
 pub enum ClientMsg {
     /// A coordinator [`Request`], answered by [`ServerMsg::Reply`].
     Api(Request),
@@ -150,7 +158,17 @@ pub enum ClientMsg {
     Shutdown,
     /// Open a streaming scan cursor, answered by
     /// [`ServerMsg::CursorOpened`] (or an error [`ServerMsg::Reply`]).
-    OpenCursor { table: String, query: TableQuery, page_entries: u64 },
+    /// With `resume` set, re-attach to an existing cursor after a
+    /// reconnect instead of opening a new one: `table`/`query`/
+    /// `page_entries` are ignored server-side (the original pinned
+    /// snapshot and page size continue) and the reply echoes the
+    /// original cursor id.
+    OpenCursor {
+        table: String,
+        query: TableQuery,
+        page_entries: u64,
+        resume: Option<CursorResume>,
+    },
     /// Pull the next page of an open cursor, answered by
     /// [`ServerMsg::CursorPage`].
     CursorNext { cursor: u64 },
@@ -172,10 +190,14 @@ pub enum ServerMsg {
     /// Per-op metrics snapshots plus the net-layer counters.
     Stats(Vec<Snapshot>),
     ShutdownAck,
-    /// A cursor was opened; `cursor` keys the follow-up ops.
-    CursorOpened { cursor: u64 },
+    /// A cursor was opened (or resumed); `cursor` keys the follow-up
+    /// ops and `token` is the server-issued resume secret the client
+    /// must present in [`CursorResume`] to re-attach after a reconnect.
+    CursorOpened { cursor: u64, token: u64 },
     /// One page of cursor results (at most the cursor's `page_entries`
-    /// triples; `done` means the server already freed the cursor).
+    /// triples; `done` means the scan is exhausted and the snapshot
+    /// released — the client should send `CursorClose` to free the
+    /// handle, which otherwise falls to the idle-TTL sweep).
     CursorPage(CursorPage),
     /// Acknowledges [`ClientMsg::CursorClose`].
     CursorClosed,
@@ -210,22 +232,32 @@ pub fn read_frame(r: &mut impl Read) -> crate::error::Result<Vec<u8>> {
 /// server reads that byte separately while polling an idle connection
 /// for shutdown — see `net::server`).
 pub fn read_frame_rest(first: u8, r: &mut impl Read) -> crate::error::Result<Vec<u8>> {
-    let mut rest = [0u8; HEADER_LEN - 1];
-    r.read_exact(&mut rest).map_err(eof_as_truncated)?;
-    let magic = [first, rest[0], rest[1]];
-    if magic != MAGIC {
-        return Err(WireError::BadMagic(magic).into());
-    }
-    if rest[2] != VERSION {
-        return Err(WireError::Version { got: rest[2], want: VERSION }.into());
-    }
-    let len = u32::from_le_bytes([rest[3], rest[4], rest[5], rest[6]]) as usize;
-    if len > MAX_FRAME {
-        return Err(WireError::FrameTooLarge(len).into());
-    }
+    let mut header = [0u8; HEADER_LEN];
+    header[0] = first;
+    r.read_exact(&mut header[1..]).map_err(eof_as_truncated)?;
+    let len = frame_payload_len(&header)?;
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload).map_err(eof_as_truncated)?;
     Ok(payload)
+}
+
+/// Validate a frame header and return its payload length. Used by
+/// incremental readers that buffer partial frames themselves (the
+/// self-healing client's poll loop, the chaos proxy's frame splitter)
+/// instead of blocking in [`read_frame`].
+pub fn frame_payload_len(header: &[u8; HEADER_LEN]) -> crate::error::Result<usize> {
+    let magic = [header[0], header[1], header[2]];
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic).into());
+    }
+    if header[3] != VERSION {
+        return Err(WireError::Version { got: header[3], want: VERSION }.into());
+    }
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::FrameTooLarge(len).into());
+    }
+    Ok(len)
 }
 
 /// A peer hanging up mid-frame surfaces as `UnexpectedEof`; report it as
@@ -860,6 +892,19 @@ fn put_error(b: &mut Vec<u8>, e: &D4mError) {
             put_u8(b, 13);
             put_str(b, s);
         }
+        D4mError::Overloaded { retry_after_ms } => {
+            put_u8(b, 14);
+            put_varint(b, *retry_after_ms);
+        }
+        D4mError::RetryExhausted { attempts, last } => {
+            put_u8(b, 15);
+            put_varint(b, *attempts as u64);
+            put_str(b, last);
+        }
+        D4mError::AmbiguousWrite(s) => {
+            put_u8(b, 16);
+            put_str(b, s);
+        }
     }
 }
 
@@ -882,6 +927,12 @@ fn get_error(c: &mut Cursor) -> WireResult<D4mError> {
         11 => D4mError::UnexpectedResponse { expected: c.str()?, got: c.str()? },
         12 => D4mError::Backpressure { table: c.str()?, waited_ms: c.varint()? },
         13 => D4mError::Storage(c.str()?),
+        14 => D4mError::Overloaded { retry_after_ms: c.varint()? },
+        15 => D4mError::RetryExhausted {
+            attempts: c.varint()?.min(u32::MAX as u64) as u32,
+            last: c.str()?,
+        },
+        16 => D4mError::AmbiguousWrite(c.str()?),
         tag => return Err(WireError::UnknownTag { what: "error", tag }),
     })
 }
@@ -904,11 +955,17 @@ pub fn encode_client_frame(id: u64, m: &ClientMsg) -> Vec<u8> {
         }
         ClientMsg::Stats => put_u8(&mut b, 2),
         ClientMsg::Shutdown => put_u8(&mut b, 3),
-        ClientMsg::OpenCursor { table, query, page_entries } => {
+        ClientMsg::OpenCursor { table, query, page_entries, resume } => {
             put_u8(&mut b, 4);
             put_str(&mut b, table);
             put_query(&mut b, query);
             put_varint(&mut b, *page_entries);
+            put_bool(&mut b, resume.is_some());
+            if let Some(r) = resume {
+                put_varint(&mut b, r.cursor);
+                put_varint(&mut b, r.token);
+                put_varint(&mut b, r.pages_acked);
+            }
         }
         ClientMsg::CursorNext { cursor } => {
             put_u8(&mut b, 5);
@@ -936,6 +993,15 @@ pub fn decode_client_frame(buf: &[u8]) -> WireResult<(u64, ClientMsg)> {
             table: c.str()?,
             query: get_query(&mut c)?,
             page_entries: c.varint()?,
+            resume: if c.bool()? {
+                Some(CursorResume {
+                    cursor: c.varint()?,
+                    token: c.varint()?,
+                    pages_acked: c.varint()?,
+                })
+            } else {
+                None
+            },
         },
         5 => ClientMsg::CursorNext { cursor: c.varint()? },
         6 => ClientMsg::CursorClose { cursor: c.varint()? },
@@ -975,9 +1041,10 @@ pub fn encode_server_frame(id: u64, m: &ServerMsg) -> Vec<u8> {
             }
         }
         ServerMsg::ShutdownAck => put_u8(&mut b, 4),
-        ServerMsg::CursorOpened { cursor } => {
+        ServerMsg::CursorOpened { cursor, token } => {
             put_u8(&mut b, 5);
             put_varint(&mut b, *cursor);
+            put_varint(&mut b, *token);
         }
         ServerMsg::CursorPage(page) => {
             put_u8(&mut b, 6);
@@ -1018,7 +1085,7 @@ pub fn decode_server_frame(buf: &[u8]) -> WireResult<(u64, ServerMsg)> {
             ServerMsg::Stats(snaps)
         }
         4 => ServerMsg::ShutdownAck,
-        5 => ServerMsg::CursorOpened { cursor: c.varint()? },
+        5 => ServerMsg::CursorOpened { cursor: c.varint()?, token: c.varint()? },
         6 => {
             let n = c.count(3)?; // each triple: 3 length bytes minimum
             let mut triples: Vec<TripleMsg> = Vec::with_capacity(n.min(PREALLOC_CAP));
@@ -1229,17 +1296,32 @@ mod tests {
                 table: rand_str(&mut rng),
                 query: rand_query(&mut rng),
                 page_entries: 1 + rng.below(1 << 20),
+                resume: if rng.below(2) == 0 {
+                    None
+                } else {
+                    Some(CursorResume {
+                        cursor: rng.below(1 << 30),
+                        token: rng.next_u64(),
+                        pages_acked: rng.below(1 << 20),
+                    })
+                },
             };
             let b = encode_client_frame(id, &open);
             match (decode_client_frame(&b).unwrap(), &open) {
                 (
-                    (bid, ClientMsg::OpenCursor { table, query, page_entries }),
-                    ClientMsg::OpenCursor { table: t0, query: q0, page_entries: p0 },
+                    (bid, ClientMsg::OpenCursor { table, query, page_entries, resume }),
+                    ClientMsg::OpenCursor {
+                        table: t0,
+                        query: q0,
+                        page_entries: p0,
+                        resume: r0,
+                    },
                 ) => {
                     assert_eq!(bid, id);
                     assert_eq!(&table, t0);
                     assert_eq!(&query, q0);
                     assert_eq!(&page_entries, p0);
+                    assert_eq!(&resume, r0);
                 }
                 other => panic!("wrong shape: {other:?}"),
             }
@@ -1276,10 +1358,11 @@ mod tests {
                 }
                 other => panic!("wrong shape: {other:?}"),
             }
-            let b = encode_server_frame(id, &ServerMsg::CursorOpened { cursor: 42 });
+            let b =
+                encode_server_frame(id, &ServerMsg::CursorOpened { cursor: 42, token: 0xBEEF });
             assert!(matches!(
                 decode_server_frame(&b).unwrap(),
-                (_, ServerMsg::CursorOpened { cursor: 42 })
+                (_, ServerMsg::CursorOpened { cursor: 42, token: 0xBEEF })
             ));
             let b = encode_server_frame(id, &ServerMsg::CursorClosed);
             assert!(matches!(decode_server_frame(&b).unwrap(), (_, ServerMsg::CursorClosed)));
@@ -1326,6 +1409,9 @@ mod tests {
             D4mError::Remote("far away".into()),
             D4mError::Backpressure { table: "G".into(), waited_ms: 1234 },
             D4mError::Storage("bad run footer".into()),
+            D4mError::Overloaded { retry_after_ms: 250 },
+            D4mError::RetryExhausted { attempts: 5, last: "connection refused".into() },
+            D4mError::AmbiguousWrite("ingest into G".into()),
         ];
         for e in errs {
             let expect = e.to_string();
@@ -1351,6 +1437,16 @@ mod tests {
         match decode_server_frame(&b).unwrap() {
             (_, ServerMsg::Reply(Err(D4mError::Remote(s)))) => assert!(s.contains("disk gone")),
             other => panic!("io error should decode as Remote, got {other:?}"),
+        }
+        // the shed hint stays structured — self-healing clients read the
+        // retry_after_ms field, not the message string
+        let e = D4mError::Overloaded { retry_after_ms: 75 };
+        let b = encode_server_frame(3, &ServerMsg::Reply(Err(e)));
+        match decode_server_frame(&b).unwrap() {
+            (_, ServerMsg::Reply(Err(D4mError::Overloaded { retry_after_ms }))) => {
+                assert_eq!(retry_after_ms, 75);
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
         }
     }
 

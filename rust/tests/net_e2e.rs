@@ -18,9 +18,15 @@ use std::time::Duration;
 use d4m::assoc::KeySel;
 use d4m::connectors::TableQuery;
 use d4m::coordinator::{D4mApi, D4mServer, Request, Response};
-use d4m::net::{serve, NetOpts, RemoteD4m};
+use d4m::net::{serve, NetOpts, RemoteD4m, RetryPolicy};
 use d4m::pipeline::{PipelineConfig, TripleMsg};
 use d4m::D4mError;
+
+/// Readiness-probe connect (the old fixed-interval `connect_retry`).
+fn connect(addr: &str) -> RemoteD4m {
+    RemoteD4m::connect_with(addr, RetryPolicy::probe(25, Duration::from_millis(100)))
+        .expect("connect")
+}
 
 /// An in-process coordinator with the 4-edge demo graph ingested.
 fn server_with_graph() -> Arc<D4mServer> {
@@ -78,8 +84,7 @@ fn four_concurrent_remote_clients_match_in_process_bit_for_bit() {
             let queries = &queries;
             let reference = &reference;
             s.spawn(move || {
-                let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100))
-                    .expect("connect");
+                let c = connect(&addr);
                 for _pass in 0..5 {
                     for (q, want) in queries.iter().zip(reference.iter()) {
                         let got = c.query("G", q.clone()).expect("remote query");
@@ -102,7 +107,7 @@ fn four_concurrent_remote_clients_match_in_process_bit_for_bit() {
 fn remote_mirrors_every_coordinator_op() {
     let server = server_with_graph();
     let (mut handle, addr) = spawn_net(server.clone());
-    let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+    let c = connect(&addr);
 
     // ping + tables
     c.ping().unwrap();
@@ -164,7 +169,7 @@ fn remote_mirrors_every_coordinator_op() {
 fn remote_errors_arrive_typed_not_as_panics() {
     let server = Arc::new(D4mServer::with_engine(None));
     let (mut handle, addr) = spawn_net(server);
-    let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+    let c = connect(&addr);
 
     // unknown table: the coordinator's NotFound crosses the wire intact
     match c.query("nope", TableQuery::all()) {
@@ -217,7 +222,7 @@ fn bad_frame_poisons_connection_not_server() {
     }
 
     // ...while a well-behaved client on a fresh connection still works
-    let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+    let c = connect(&addr);
     assert_eq!(c.query("G", TableQuery::all()).unwrap().nnz(), 4);
 
     let stats = c.stats().unwrap();
@@ -230,7 +235,7 @@ fn client_initiated_shutdown_quiesces_server() {
     let server = server_with_graph();
     let (mut handle, addr) = spawn_net(server);
 
-    let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+    let c = connect(&addr);
     c.shutdown_server().unwrap();
 
     // wait() returns because the accept loop exited and drained
@@ -252,7 +257,7 @@ fn client_initiated_shutdown_quiesces_server() {
 fn pipelined_requests_correlate_out_of_order() {
     let server = server_with_graph();
     let (mut handle, addr) = spawn_net(server.clone());
-    let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+    let c = connect(&addr);
 
     // two distinguishable request shapes, alternating
     let row_q = |k: &str| TableQuery::all().rows(KeySel::keys(&[k]));
@@ -337,7 +342,7 @@ fn remote_scan_pages_bit_identical_and_bounded() {
         .unwrap();
     assert!(want.nnz() > 7, "table must span several pages");
 
-    let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+    let c = connect(&addr);
     let mut pages = 0usize;
     let mut triples: Vec<TripleMsg> = Vec::new();
     for page in c.scan_pages("G", TableQuery::all(), 7) {
@@ -366,14 +371,15 @@ fn remote_scan_pages_bit_identical_and_bounded() {
     handle.shutdown();
 }
 
-/// A dropped connection reaps its cursors; an explicit CursorClose
+/// A dropped connection orphans its cursors into the resume-grace
+/// window and the background sweep reaps them; an explicit CursorClose
 /// releases immediately.
 #[test]
 fn cursor_lifecycle_across_connections() {
     let server = server_with_graph();
     let (mut handle, addr) = spawn_net(server.clone());
 
-    let c = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+    let c = connect(&addr);
     let id = c.open_cursor("G", &TableQuery::all(), 2).unwrap();
     assert_eq!(server.open_cursor_count(), 1);
     let first = c.cursor_next(id).unwrap();
@@ -391,14 +397,14 @@ fn cursor_lifecycle_across_connections() {
 
     // a second client's cursor is invisible to the first's owner scope,
     // and dropping that client's connection reaps it
-    let c2 = RemoteD4m::connect_retry(&addr, 25, Duration::from_millis(100)).unwrap();
+    let c2 = connect(&addr);
     let id2 = c2.open_cursor("G", &TableQuery::all(), 1).unwrap();
     assert_eq!(server.open_cursor_count(), 1);
     match c.cursor_next(id2) {
         Err(D4mError::NotFound(_)) => {}
         other => panic!("cursor ownership leaked across connections: {other:?}"),
     }
-    drop(c2); // connection closes; the server reaps its cursors
+    drop(c2); // connection closes; after the resume grace the sweep reaps
     let deadline = std::time::Instant::now() + Duration::from_secs(10);
     while server.open_cursor_count() > 0 {
         assert!(
@@ -410,7 +416,7 @@ fn cursor_lifecycle_across_connections() {
     handle.shutdown();
 }
 
-/// A v1 frame against the v2 server draws one typed version error (the
+/// A v1 frame against the current server draws one typed version error (the
 /// reserved connection-error id), not a mid-stream decode failure.
 #[test]
 fn version_skew_is_one_typed_error() {
@@ -451,16 +457,149 @@ fn bounded_pool_still_serves_under_conn_pressure() {
     let addr = handle.addr().to_string();
 
     // 6 concurrent clients against a pool of 2: everyone is eventually
-    // served, the surplus just waits at the accept queue
+    // served — stragglers either wait out the accept queue or are shed
+    // with a typed Overloaded that the healing client retries
     std::thread::scope(|s| {
         for _ in 0..6 {
             let addr = addr.clone();
             s.spawn(move || {
-                let c = RemoteD4m::connect_retry(&addr, 50, Duration::from_millis(100))
-                    .expect("connect");
+                let c = RemoteD4m::connect_with(
+                    &addr,
+                    RetryPolicy::probe(50, Duration::from_millis(100)),
+                )
+                .expect("connect");
                 assert_eq!(c.query("G", TableQuery::all()).unwrap().nnz(), 4);
                 // drop the client promptly to free the slot
             });
+        }
+    });
+    handle.shutdown();
+}
+
+/// A saturated pool sheds new connections with a typed `Overloaded`
+/// carrying a retry hint; a healing client rides the hint to success
+/// once a slot frees up, and a no-retry client surfaces the error.
+#[test]
+fn saturated_pool_sheds_with_typed_overloaded() {
+    let server = server_with_graph();
+    let opts = NetOpts {
+        max_conns: 1,
+        shed_after: Duration::from_millis(50),
+        ..Default::default()
+    };
+    let mut handle = serve(server, "127.0.0.1:0", opts).expect("bind");
+    let addr = handle.addr().to_string();
+
+    let holder = connect(&addr);
+    holder.ping().unwrap(); // the one slot is now in use
+
+    // no retries: the shed surfaces as a typed failure naming the overload
+    let brittle = RemoteD4m::connect_with(
+        &addr,
+        RetryPolicy { max_attempts: 1, ..Default::default() },
+    )
+    .unwrap();
+    match brittle.query("G", TableQuery::all()) {
+        Err(D4mError::RetryExhausted { attempts, last }) => {
+            assert_eq!(attempts, 1);
+            assert!(last.contains("overloaded"), "unexpected last error: {last}");
+        }
+        other => panic!("expected RetryExhausted from a shed, got {other:?}"),
+    }
+
+    // a healing client retries the Overloaded hint until the slot frees
+    let healing = RemoteD4m::connect_with(&addr, RetryPolicy::default()).unwrap();
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            std::thread::sleep(Duration::from_millis(200));
+            drop(holder); // free the slot mid-retry
+        });
+        assert_eq!(healing.query("G", TableQuery::all()).unwrap().nnz(), 4);
+        assert!(healing.retry_count() >= 1, "healing client never retried");
+    });
+    assert!(
+        handle
+            .snapshots()
+            .iter()
+            .any(|s| s.name == "net.sheds" && s.count >= 1),
+        "server never recorded a shed"
+    );
+    handle.shutdown();
+}
+
+/// A slow-loris connection (valid header dribbled one byte at a tick)
+/// is cut by the whole-frame deadline instead of pinning a pool slot,
+/// and normal clients keep getting served while it dribbles.
+#[test]
+fn slow_loris_is_cut_without_pinning_the_pool() {
+    use std::io::{Read, Write};
+
+    let server = server_with_graph();
+    let opts = NetOpts {
+        max_conns: 2,
+        idle_poll: Duration::from_millis(50),
+        io_timeout: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let mut handle = serve(server, "127.0.0.1:0", opts).expect("bind");
+    let addr = handle.addr().to_string();
+
+    // a perfectly valid frame the loris will never finish sending: a
+    // long table name keeps the payload far bigger than the deadline
+    // allows at one byte per tick
+    let req = d4m::net::wire::ClientMsg::Api(Request::Query {
+        table: "x".repeat(256),
+        query: TableQuery::all(),
+    });
+    let payload = d4m::net::wire::encode_client_frame(7, &req);
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&d4m::net::wire::MAGIC);
+    frame.push(d4m::net::wire::VERSION);
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&payload);
+
+    let mut loris = std::net::TcpStream::connect(&addr).unwrap();
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let mut cut = false;
+            for b in frame.iter() {
+                if loris.write_all(&[*b]).is_err() {
+                    cut = true; // server closed on us mid-dribble
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+                if t0.elapsed() > Duration::from_secs(8) {
+                    break;
+                }
+            }
+            if !cut {
+                // writes can keep landing in the kernel buffer for a
+                // while after the cut; the read side must still see it
+                loris.set_read_timeout(Some(Duration::from_secs(5))).ok();
+                let mut buf = [0u8; 16];
+                cut = match loris.read(&mut buf) {
+                    Ok(0) => true,
+                    Err(e)
+                        if e.kind() != std::io::ErrorKind::WouldBlock
+                            && e.kind() != std::io::ErrorKind::TimedOut =>
+                    {
+                        true
+                    }
+                    _ => false,
+                };
+            }
+            assert!(cut, "slow-loris connection was never cut");
+            assert!(
+                t0.elapsed() < Duration::from_secs(8),
+                "loris outlived the io deadline by far"
+            );
+        });
+
+        // meanwhile the other pool slot serves normal traffic promptly
+        let c = connect(&addr);
+        for _ in 0..5 {
+            assert_eq!(c.query("G", TableQuery::all()).unwrap().nnz(), 4);
         }
     });
     handle.shutdown();
