@@ -17,6 +17,7 @@
 use std::path::Path;
 use std::time::Instant;
 
+use d4m::assoc::kernel::KernelConfig;
 use d4m::assoc::naive::NaiveAssoc;
 use d4m::assoc::{Assoc, KeySel};
 use d4m::util::bench::{append_records, BenchRecord};
@@ -90,8 +91,9 @@ fn main() {
         let dt_naive = time_op(|| {
             std::hint::black_box(na.matmul(&nb));
         });
+        let serial = KernelConfig::detect().with_threads(1);
         let dt_csr = time_op(|| {
-            std::hint::black_box(ca.matmul(&cb));
+            std::hint::black_box(ca.matmul_with(&cb, &serial));
         });
         report(&mut records, n, "matmul", dt_naive, dt_csr);
 
@@ -114,10 +116,59 @@ fn main() {
         report(&mut records, n, "subsref", dt_naive, dt_csr);
     }
 
+    kernel_legs(&mut records, smoke);
+
     let out = Path::new("BENCH_assoc.json");
     match append_records(out, &records) {
         Ok(()) => println!("# appended {} records to {}", records.len(), out.display()),
         Err(e) => eprintln!("# failed to write {}: {e}", out.display()),
+    }
+}
+
+/// Parallel-kernel legs: the same SpGEMM on serial / par{N} / blocked
+/// kernels over a denser operand (the random T-jl triples rarely clear
+/// the parallel cutoff). `N` is the detected thread count, so the CI
+/// runner's `D4M_KERNEL_THREADS=2` produces a stable `par2` key.
+fn kernel_legs(records: &mut Vec<BenchRecord>, smoke: bool) {
+    let edge = if smoke { 1usize << 11 } else { 1usize << 12 };
+    let per_row = 24;
+    let t1 = rand_triples(edge * per_row, edge as u64, 11);
+    let t2 = rand_triples(edge * per_row, edge as u64, 12);
+    let a = Assoc::from_triples(&t1);
+    let b = Assoc::from_triples(&t2);
+    let detect = KernelConfig::detect();
+    let par_label = format!("par{}", detect.threads);
+    let blocked = KernelConfig {
+        tile_cols: 512,
+        blocked_row_flops: 0,
+        ..detect
+    };
+    let legs: &[(&str, KernelConfig)] = &[
+        ("serial", detect.with_threads(1)),
+        (par_label.as_str(), detect),
+        ("blocked", blocked),
+    ];
+    println!(
+        "# parallel kernel legs: matmul on {} x {} operands ({} nnz each)",
+        edge,
+        edge,
+        a.nnz()
+    );
+    for (backend, cfg) in legs {
+        // min of 3 reps: one-shot timings are too noisy for the 40% gate
+        let mut best = f64::MAX;
+        let mut out_nnz = 0usize;
+        for _ in 0..3 {
+            let dt = time_op(|| {
+                out_nnz = std::hint::black_box(a.matmul_with(&b, cfg)).nnz();
+            });
+            best = best.min(dt);
+        }
+        println!(
+            "{:<8} {:<12} {:>12.5}s  {:>12} out-nnz  [{}]",
+            edge, "matmul", best, out_nnz, backend
+        );
+        records.push(BenchRecord::new("matmul", edge, backend, best, out_nnz));
     }
 }
 

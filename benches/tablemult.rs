@@ -2,9 +2,10 @@
 //!
 //! For each Kronecker SCALE, runs C = A^T A three ways:
 //!   graphulo  — server-side streaming TableMult (bounded memory)
+//!   par2      — the same server-side TableMult sharded across 2 workers
 //!   d4m       — client-side assoc matmul under a RAM budget
-//!   d4m-pjrt  — client-side dense-block path through the AOT Pallas
-//!               kernels (only when density makes it sensible)
+//!   d4m-dense — client-side path through the in-crate blocked dense
+//!               GEMM (only when density makes it sensible)
 //!
 //! Output: one row per (SCALE, mode) with rate in partial products/sec.
 //! The paper's shape to reproduce: graphulo ≈ d4m at small scale, d4m
@@ -67,6 +68,30 @@ fn main() {
             stats.partial_products as usize,
         ));
 
+        // graphulo sharded across 2 workers (its own output table so the
+        // combiner folds only this run's partials)
+        let c2 = store.create_table("C2", vec![]).unwrap();
+        let popts = TableMultOpts { workers: 2, ..Default::default() };
+        let tp = Instant::now();
+        let pstats = graphulo::table_mult(&t.main(), &t.main(), &c2, &popts).unwrap();
+        let dt = tp.elapsed().as_secs_f64();
+        println!(
+            "{:<7} {:<10} {:>10} {:>14} {:>14.3} {:>12}",
+            scale,
+            "par2",
+            g.nnz(),
+            pstats.partial_products,
+            dt,
+            fmt_rate(pstats.partial_products as f64 / dt)
+        );
+        records.push(BenchRecord::new(
+            "tablemult",
+            g.nnz(),
+            "par2",
+            dt,
+            pstats.partial_products as usize,
+        ));
+
         // d4m client-side with memory budget
         let ctx = ClientCtx::with_limit(CLIENT_MEM_LIMIT);
         let t1 = Instant::now();
@@ -98,30 +123,29 @@ fn main() {
             }
         }
 
-        // d4m dense path through PJRT (small scales only: dense blocks
-        // over the full vertex space get huge fast)
+        // d4m dense path through the native blocked GEMM (small scales
+        // only: dense blocks over the full vertex space get huge fast)
         if scale <= 9 {
-            if let Ok(engine) = d4m::runtime::PjrtEngine::new(d4m::runtime::PjrtEngine::default_dir()) {
-                let t2 = Instant::now();
-                let _ = d4m::runtime::blocks::assoc_at_b_dense(&engine, &g, &g, 128).unwrap();
-                let dt = t2.elapsed().as_secs_f64();
-                println!(
-                    "{:<7} {:<10} {:>10} {:>14} {:>14.3} {:>12}",
-                    scale,
-                    "d4m-pjrt",
-                    g.nnz(),
-                    stats.partial_products,
-                    dt,
-                    fmt_rate(stats.partial_products as f64 / dt)
-                );
-                records.push(BenchRecord::new(
-                    "tablemult",
-                    g.nnz(),
-                    "d4m-pjrt",
-                    dt,
-                    stats.partial_products as usize,
-                ));
-            }
+            let engine = d4m::runtime::DenseEngine::new();
+            let t2 = Instant::now();
+            let _ = d4m::runtime::blocks::assoc_at_b_dense(&engine, &g, &g, 128).unwrap();
+            let dt = t2.elapsed().as_secs_f64();
+            println!(
+                "{:<7} {:<10} {:>10} {:>14} {:>14.3} {:>12}",
+                scale,
+                "d4m-dense",
+                g.nnz(),
+                stats.partial_products,
+                dt,
+                fmt_rate(stats.partial_products as f64 / dt)
+            );
+            records.push(BenchRecord::new(
+                "tablemult",
+                g.nnz(),
+                "d4m-dense",
+                dt,
+                stats.partial_products as usize,
+            ));
         }
     }
 

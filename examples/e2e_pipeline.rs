@@ -7,14 +7,14 @@
 //!     with the full D4M 2.0 schema (edge + transpose + degree tables);
 //!  3. run **Graphulo TableMult** server-side and the client-side D4M
 //!     baseline, verifying agreement;
-//!  4. run the dense-block TableMult through the **AOT-compiled
-//!     JAX/Pallas kernels via PJRT** (L1/L2 artifacts) if available,
-//!     verifying against the CSR result;
+//!  4. run the dense-block TableMult through the **in-crate blocked
+//!     dense GEMM** (parallel over row tiles), verifying against the
+//!     CSR result;
 //!  5. run BFS + Jaccard server-side;
 //!  6. print the ingest rate and TableMult rate — the headline numbers
 //!     recorded in EXPERIMENTS.md.
 //!
-//! Run with: `make e2e` (builds artifacts first) or
+//! Run with: `make e2e` or
 //! `cargo run --release --example e2e_pipeline [SCALE]`
 
 use std::time::Instant;
@@ -38,8 +38,8 @@ fn main() {
 
     let server = D4mServer::new();
     println!(
-        "PJRT engine: {}",
-        if server.has_engine() { "attached (artifacts loaded)" } else { "absent (run `make artifacts`)" }
+        "dense engine: {}",
+        if server.has_engine() { "attached (native blocked GEMM)" } else { "absent" }
     );
 
     // ---- 1+2: generate + pipeline ingest (the example programs against
@@ -104,9 +104,9 @@ fn main() {
     assert_eq!(server_c.nnz(), client_c.nnz(), "server/client TableMult disagree");
     println!("[verify]    graphulo == d4m client ✓ ({} output nnz)", server_c.nnz());
 
-    // ---- 4: dense path through the AOT kernels. The raw Kronecker graph
+    // ---- 4: dense path through the blocked GEMM. The raw Kronecker graph
     // is too sparse for dense tiles, but its co-occurrence product C is
-    // dense-ish — exactly the operand profile the PJRT path targets. We
+    // dense-ish — exactly the operand profile the dense path targets. We
     // compute C^T C both ways and verify.
     if server.has_engine() {
         // subsample C's hub rows to keep the dense demo quick at any SCALE
@@ -121,7 +121,7 @@ fn main() {
             .expect("dense tablemult");
         let dt = t2.elapsed().as_secs_f64();
         let csr = hub.transpose().matmul(&hub);
-        assert_eq!(dense.nnz(), csr.nnz(), "PJRT dense path nnz mismatch");
+        assert_eq!(dense.nnz(), csr.nnz(), "dense path nnz mismatch");
         let probe = csr.triples();
         for t in probe.iter().step_by((probe.len() / 50).max(1)) {
             let got = dense.get(&t.0, &t.1);
@@ -135,7 +135,7 @@ fn main() {
             );
         }
         println!(
-            "[pjrt]      dense C^T C via Pallas kernels: {} nnz in {:.2}s, {} kernel calls ✓",
+            "[dense]     blocked-GEMM C^T C: {} nnz in {:.2}s, {} kernel calls ✓",
             dense.nnz(),
             dt,
             engine.calls.get()

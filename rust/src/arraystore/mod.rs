@@ -10,6 +10,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Mutex, RwLock};
 
+use crate::assoc::kernel::{self, KernelConfig};
 use crate::error::{D4mError, Result};
 
 /// Schema of a 2-D array: dimension bounds and attribute names.
@@ -244,20 +245,57 @@ impl ArrayStore {
                 }
             }
         }
-        let mut acc: HashMap<(u64, u64), f64> = HashMap::new();
+        // snapshot A's matched cells with per-cell work estimates, so
+        // the chunk locks are released before the product loop and the
+        // kernel pool can partition by actual FLOPs
+        let mut cells_a: Vec<(u64, u64, f64)> = Vec::new();
+        let mut weights: Vec<u64> = Vec::new();
         {
             let chunks = a.chunks.lock().unwrap();
             for chunk in chunks.values() {
                 for (&(i, k), cell) in &chunk.cells {
                     if let Some(brow) = b_rows.get(&k) {
-                        let av = cell[attr_a];
-                        for &(j, bv) in brow {
-                            *acc.entry((i, j)).or_insert(0.0) += av * bv;
-                        }
+                        cells_a.push((i, k, cell[attr_a]));
+                        weights.push(1 + brow.len() as u64);
                     }
                 }
             }
         }
+        let cfg = KernelConfig::global();
+        let total: u64 = weights.iter().sum();
+        let workers = kernel::plan_workers(&cfg, total);
+        let product = |cells: &[(u64, u64, f64)]| -> HashMap<(u64, u64), f64> {
+            let mut m: HashMap<(u64, u64), f64> = HashMap::new();
+            for &(i, k, av) in cells {
+                for &(j, bv) in &b_rows[&k] {
+                    *m.entry((i, j)).or_insert(0.0) += av * bv;
+                }
+            }
+            m
+        };
+        let acc: HashMap<(u64, u64), f64> = if workers <= 1 {
+            product(&cells_a)
+        } else {
+            let bounds = kernel::balanced_partition(&weights, workers);
+            let parts: Vec<HashMap<(u64, u64), f64>> = std::thread::scope(|s| {
+                let product = &product;
+                let handles: Vec<_> = bounds
+                    .windows(2)
+                    .map(|w| {
+                        let slice = &cells_a[w[0]..w[1]];
+                        s.spawn(move || product(slice))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let mut merged: HashMap<(u64, u64), f64> = HashMap::new();
+            for part in parts {
+                for (cell, v) in part {
+                    *merged.entry(cell).or_insert(0.0) += v;
+                }
+            }
+            merged
+        };
         let schema = ArraySchema::new(
             out,
             (a.schema.shape.0, b.schema.shape.1),
@@ -354,6 +392,30 @@ mod tests {
         assert_eq!(c.get(0, 1), Some(vec![2.0]));
         assert_eq!(c.get(1, 0), Some(vec![3.0]));
         assert_eq!(c.get(1, 1), Some(vec![3.0]));
+    }
+
+    #[test]
+    fn spgemm_large_crosses_parallel_cutoff() {
+        // dense ones: work = nnz(A) * (1 + 16) ≈ 70k partial products,
+        // above the default parallel cutoff, so the sharded accumulator
+        // path runs; C[i][j] must be exactly the inner dimension
+        let s = ArrayStore::new();
+        let a = s.create(ArraySchema::new("a", (256, 16), 32, &["val"])).unwrap();
+        let b = s.create(ArraySchema::new("b", (16, 16), 32, &["val"])).unwrap();
+        for i in 0..256 {
+            for k in 0..16 {
+                a.put(i, k, vec![1.0]).unwrap();
+            }
+        }
+        for k in 0..16 {
+            for j in 0..16 {
+                b.put(k, j, vec![1.0]).unwrap();
+            }
+        }
+        let c = s.spgemm("a", "b", "c").unwrap();
+        for &(i, j) in &[(0u64, 0u64), (128, 7), (255, 15)] {
+            assert_eq!(c.get(i, j), Some(vec![16.0]), "({i},{j})");
+        }
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Kernel pool — process-wide configuration and counters for the
+//! parallel blocked algebra kernels (DESIGN.md §Parallel kernels).
+//!
+//! Every multiplying kernel (SpGEMM, CatKeyMul, server-side TableMult,
+//! the array-store `spgemm`, the dense blocked GEMM) reads a
+//! [`KernelConfig`] to decide how many `std::thread::scope` workers to
+//! fork and when a row is skewed enough to take the cache-blocked
+//! accumulator. The process-wide default comes from
+//! `available_parallelism` (overridable with `D4M_KERNEL_THREADS` or
+//! `d4m serve --kernel-threads`); call sites that need a pinned
+//! configuration — tests, benches, the serial baseline legs — pass an
+//! explicit config through the `*_with` APIs instead of mutating the
+//! global.
+
+use std::sync::OnceLock;
+
+use crate::error::{D4mError, Result};
+use crate::metrics::Counter;
+
+/// Upper bound on configurable worker threads; values above this are
+/// treated as absurd and clamped (with a typed [`D4mError::InvalidArg`]
+/// surfaced to the caller) rather than spawning a thread storm.
+pub const MAX_KERNEL_THREADS: usize = 512;
+
+/// Tuning knobs for the parallel blocked kernels. `Copy`, so call sites
+/// snapshot it once per op — a concurrent reconfigure never changes a
+/// kernel mid-flight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Worker threads for row-block parallel kernels (>= 1; 1 = serial).
+    pub threads: usize,
+    /// Minimum estimated partial products (FLOPs) in an op before worker
+    /// threads are forked; below it the spawn overhead dominates.
+    pub parallel_cutoff: usize,
+    /// Column-tile width of the cache-blocked accumulator (sized so one
+    /// f64 tile plus its marker tile stays L2-resident).
+    pub tile_cols: usize,
+    /// Per-row FLOP estimate above which a row switches from the
+    /// full-width marker accumulator to the cache-blocked one.
+    pub blocked_row_flops: usize,
+}
+
+impl KernelConfig {
+    /// Detect a default configuration: `D4M_KERNEL_THREADS` (when set to
+    /// a sane value) or `available_parallelism`.
+    pub fn detect() -> Self {
+        let threads = std::env::var("D4M_KERNEL_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| (1..=MAX_KERNEL_THREADS).contains(&n))
+            .unwrap_or_else(default_threads);
+        KernelConfig {
+            threads,
+            parallel_cutoff: 1 << 15,
+            tile_cols: 1 << 12,
+            blocked_row_flops: 1 << 15,
+        }
+    }
+
+    /// Snapshot of the process-wide configuration.
+    pub fn global() -> Self {
+        *global_cell().lock().unwrap()
+    }
+
+    /// The global configuration pinned to one thread (the serial
+    /// baseline used by equivalence tests and bench legs).
+    pub fn serial() -> Self {
+        KernelConfig { threads: 1, ..Self::global() }
+    }
+
+    /// This configuration with a different thread count.
+    pub fn with_threads(self, threads: usize) -> Self {
+        KernelConfig { threads, ..self }
+    }
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig::detect()
+    }
+}
+
+fn global_cell() -> &'static std::sync::Mutex<KernelConfig> {
+    static CELL: OnceLock<std::sync::Mutex<KernelConfig>> = OnceLock::new();
+    CELL.get_or_init(|| std::sync::Mutex::new(KernelConfig::detect()))
+}
+
+/// Replace the process-wide kernel configuration (`d4m serve
+/// --kernel-threads` plumbs through here). Ops already running keep the
+/// snapshot they took.
+pub fn configure(cfg: KernelConfig) {
+    *global_cell().lock().unwrap() = cfg;
+}
+
+/// Hardware default: `available_parallelism`, 1 when undetectable.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Validate a requested worker-thread count. `0` and values above
+/// [`MAX_KERNEL_THREADS`] are rejected with a typed
+/// [`D4mError::InvalidArg`]; the CLI catches it and clamps to
+/// [`default_threads`].
+pub fn validated_threads(n: usize) -> Result<usize> {
+    if n == 0 || n > MAX_KERNEL_THREADS {
+        return Err(D4mError::InvalidArg(format!(
+            "kernel-threads must be in 1..={MAX_KERNEL_THREADS}, got {n}"
+        )));
+    }
+    Ok(n)
+}
+
+/// Dispatch counters for the metrics snapshot (`kernels.*` keys in
+/// `d4m client stats`). Process-global like the config: kernels are a
+/// process resource, not a per-server one.
+pub struct KernelCounters {
+    /// Ops dispatched across worker threads.
+    pub parallel_ops: Counter,
+    /// Ops that stayed on the calling thread (below the cutoff or a
+    /// 1-thread pool).
+    pub serial_ops: Counter,
+    /// Rows routed through the cache-blocked accumulator.
+    pub blocked_rows: Counter,
+}
+
+/// The process-wide kernel counters.
+pub fn counters() -> &'static KernelCounters {
+    static CELL: OnceLock<KernelCounters> = OnceLock::new();
+    CELL.get_or_init(|| KernelCounters {
+        parallel_ops: Counter::new(),
+        serial_ops: Counter::new(),
+        blocked_rows: Counter::new(),
+    })
+}
+
+/// Split `0..weights.len()` items into at most `parts` contiguous blocks
+/// of roughly equal total weight. Returns block boundaries
+/// `b[0]=0 < b[1] < .. < b[k]=len` (empty blocks are skipped, so every
+/// returned block is non-empty; a zero-total input yields one block).
+/// Shared by the SpGEMM row partitioner and the dense row-tile split.
+pub fn balanced_partition(weights: &[u64], parts: usize) -> Vec<usize> {
+    let n = weights.len();
+    let mut prefix = Vec::with_capacity(n + 1);
+    let mut acc = 0u64;
+    prefix.push(0u64);
+    for &w in weights {
+        acc += w;
+        prefix.push(acc);
+    }
+    let total = acc;
+    let mut bounds = vec![0usize];
+    if n == 0 || parts <= 1 || total == 0 {
+        bounds.push(n);
+        return bounds;
+    }
+    for t in 1..parts {
+        let target = total * t as u64 / parts as u64;
+        let cut = prefix.partition_point(|&p| p < target).min(n);
+        if cut > *bounds.last().unwrap() && cut < n {
+            bounds.push(cut);
+        }
+    }
+    bounds.push(n);
+    bounds
+}
+
+/// Number of scoped workers a kernel should fork for an op with
+/// `estimated_flops` total work: 1 (serial) below the cutoff, else the
+/// configured thread count. Also bumps the matching dispatch counter so
+/// every kernel accounts consistently.
+pub fn plan_workers(cfg: &KernelConfig, estimated_flops: u64) -> usize {
+    let threads = cfg.threads.max(1);
+    if threads <= 1 || estimated_flops < cfg.parallel_cutoff as u64 {
+        counters().serial_ops.inc();
+        1
+    } else {
+        counters().parallel_ops.inc();
+        threads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validated_threads_accepts_sane() {
+        assert_eq!(validated_threads(1).unwrap(), 1);
+        assert_eq!(validated_threads(8).unwrap(), 8);
+        assert_eq!(validated_threads(MAX_KERNEL_THREADS).unwrap(), MAX_KERNEL_THREADS);
+    }
+
+    #[test]
+    fn validated_threads_rejects_zero_and_absurd() {
+        for bad in [0, MAX_KERNEL_THREADS + 1, usize::MAX] {
+            match validated_threads(bad) {
+                Err(D4mError::InvalidArg(msg)) => {
+                    assert!(msg.contains("kernel-threads"), "{msg}")
+                }
+                other => panic!("expected InvalidArg for {bad}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn detect_has_at_least_one_thread() {
+        let cfg = KernelConfig::detect();
+        assert!(cfg.threads >= 1);
+        assert!(cfg.tile_cols > 0);
+    }
+
+    #[test]
+    fn balanced_partition_covers_all_items() {
+        let w = [5u64, 1, 1, 1, 20, 1, 1, 1, 5, 5];
+        for parts in 1..=12 {
+            let b = balanced_partition(&w, parts);
+            assert_eq!(*b.first().unwrap(), 0);
+            assert_eq!(*b.last().unwrap(), w.len());
+            assert!(b.windows(2).all(|x| x[0] < x[1]), "{b:?}");
+            assert!(b.len() <= parts + 1);
+        }
+    }
+
+    #[test]
+    fn balanced_partition_empty_and_zero_weight() {
+        assert_eq!(balanced_partition(&[], 4), vec![0, 0]);
+        assert_eq!(balanced_partition(&[0, 0, 0], 4), vec![0, 3]);
+    }
+
+    #[test]
+    fn balanced_partition_skewed_isolates_heavy_rows() {
+        // one hub row dominating the weight: the partition must not put
+        // equal row *counts* in each block
+        let mut w = vec![1u64; 64];
+        w[0] = 1000;
+        let b = balanced_partition(&w, 4);
+        // the hub lands alone (or nearly) in the first block
+        assert!(b[1] <= 2, "{b:?}");
+    }
+}

@@ -20,6 +20,7 @@
 //! the sorted key vectors instead of scanning them.
 
 pub mod io;
+pub mod kernel;
 pub mod text;
 pub mod naive;
 pub mod spmat;
@@ -28,6 +29,7 @@ use std::borrow::Cow;
 
 use crate::error::{D4mError, Result};
 use crate::util::{find_key, intersect_sorted_keys, merge_sorted_keys};
+use kernel::KernelConfig;
 use spmat::SpMat;
 
 /// Associative array: `(row key, col key) -> value`.
@@ -378,10 +380,16 @@ impl Assoc {
     /// The contraction runs through [`SpMat::matmul_inner`] — no
     /// identity-selected submatrices are materialised.
     pub fn matmul(&self, other: &Assoc) -> Assoc {
+        self.matmul_with(other, &KernelConfig::global())
+    }
+
+    /// [`Assoc::matmul`] under an explicit [`KernelConfig`] (pinned
+    /// thread counts for equivalence tests and bench legs).
+    pub fn matmul_with(&self, other: &Assoc, cfg: &KernelConfig) -> Assoc {
         let a = self.numeric_view();
         let b = other.numeric_view();
         let (_, ia, ib) = intersect_sorted_keys(&a.col_keys, &b.row_keys);
-        let prod = a.mat.matmul_inner(&b.mat, &ia, &ib);
+        let prod = a.mat.matmul_inner_with(&b.mat, &ia, &ib, cfg);
         Assoc::from_parts(a.row_keys.clone(), b.col_keys.clone(), prod, None).compacted_owned()
     }
 
@@ -389,6 +397,15 @@ impl Assoc {
     /// `;`-joined list of inner keys that contributed (provenance-tracking
     /// multiply). Returns a string-valued array.
     pub fn catkeymul(&self, other: &Assoc) -> Assoc {
+        self.catkeymul_with(other, &KernelConfig::global())
+    }
+
+    /// [`Assoc::catkeymul`] under an explicit [`KernelConfig`]. Rows of A
+    /// split into contiguous nnz-balanced blocks across scoped workers;
+    /// each worker accumulates its own ordered cell map over a disjoint
+    /// row range, so concatenating the block outputs in range order
+    /// reproduces the serial traversal exactly.
+    pub fn catkeymul_with(&self, other: &Assoc, cfg: &KernelConfig) -> Assoc {
         let a = self.numeric_view();
         let b = other.numeric_view();
         let (inner, ia, ib) = intersect_sorted_keys(&a.col_keys, &b.row_keys);
@@ -399,21 +416,48 @@ impl Assoc {
         }
         // accumulate contributing key lists per output cell, walking A's
         // rows directly (ia is increasing, so keys arrive in sorted order)
-        let mut cells: std::collections::BTreeMap<(usize, usize), Vec<&str>> =
-            std::collections::BTreeMap::new();
-        for r in 0..a.mat.nr {
-            for (c, _) in a.mat.row(r) {
-                let t = inner_of[c];
-                if t == usize::MAX {
-                    continue;
-                }
-                for (bc, _) in b.mat.row(ib[t]) {
-                    cells.entry((r, bc)).or_default().push(&inner[t]);
+        let block = |rows: std::ops::Range<usize>| -> Vec<((usize, usize), Vec<&str>)> {
+            let mut cells: std::collections::BTreeMap<(usize, usize), Vec<&str>> =
+                std::collections::BTreeMap::new();
+            for r in rows {
+                for (c, _) in a.mat.row(r) {
+                    let t = inner_of[c];
+                    if t == usize::MAX {
+                        continue;
+                    }
+                    for (bc, _) in b.mat.row(ib[t]) {
+                        cells.entry((r, bc)).or_default().push(&inner[t]);
+                    }
                 }
             }
-        }
-        let triples: Vec<(String, String, String)> = cells
+            cells.into_iter().collect()
+        };
+        let row_work: Vec<u64> = (0..a.mat.nr)
+            .map(|r| (a.mat.indptr[r + 1] - a.mat.indptr[r]) as u64)
+            .collect();
+        let workers = kernel::plan_workers(cfg, row_work.iter().sum());
+        let parts: Vec<Vec<((usize, usize), Vec<&str>)>> = if workers <= 1 {
+            vec![block(0..a.mat.nr)]
+        } else {
+            let bounds = kernel::balanced_partition(&row_work, workers);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = bounds
+                    .windows(2)
+                    .map(|w| {
+                        let block = &block;
+                        let (lo, hi) = (w[0], w[1]);
+                        s.spawn(move || block(lo..hi))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("catkeymul worker panicked"))
+                    .collect()
+            })
+        };
+        let triples: Vec<(String, String, String)> = parts
             .into_iter()
+            .flatten()
             .map(|((r, c), keys)| {
                 (a.row_keys[r].clone(), b.col_keys[c].clone(), keys.join(";"))
             })

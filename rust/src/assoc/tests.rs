@@ -258,6 +258,26 @@ fn prop_matmul_matches_oracle() {
 }
 
 #[test]
+fn prop_matmul_parallel_matches_oracle() {
+    // same oracle, forced through the parallel and blocked kernels:
+    // every cutoff is zeroed so even these tiny inputs fan out
+    use crate::assoc::kernel::KernelConfig;
+    let par = KernelConfig {
+        threads: 8,
+        parallel_cutoff: 0,
+        ..KernelConfig::detect()
+    };
+    let blocked = KernelConfig { tile_cols: 4, blocked_row_flops: 0, ..par };
+    forall(60, 0x3A7, |rng| {
+        let (a, na) = assoc_pair(rng);
+        let (b, nb) = assoc_pair(rng);
+        let want = na.matmul(&nb);
+        same(&a.matmul_with(&b, &par), &want);
+        same(&a.matmul_with(&b, &blocked), &want);
+    });
+}
+
+#[test]
 fn prop_transpose_matches_oracle() {
     forall(40, 0x7A0, |rng| {
         let (a, na) = assoc_pair(rng);

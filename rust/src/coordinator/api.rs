@@ -105,7 +105,7 @@ pub trait D4mApi: Send + Sync {
             .into_assoc()
     }
 
-    /// Client-side TableMult routed through the PJRT dense path.
+    /// Client-side TableMult routed through the blocked dense-GEMM path.
     fn tablemult_dense(&self, a: &str, b: &str, tile: usize) -> Result<Assoc> {
         self.handle(Request::TableMultDense { a: a.into(), b: b.into(), tile })?.into_assoc()
     }

@@ -33,7 +33,7 @@ use crate::graphulo::{self, ClientCtx, TableMultOpts};
 use crate::kvstore::{KvStore, Table};
 use crate::metrics::{Histogram, RateMeter, Snapshot};
 use crate::pipeline::{IngestPipeline, IngestReport, PipelineConfig, TripleMsg};
-use crate::runtime::PjrtEngine;
+use crate::runtime::DenseEngine;
 
 /// Requests the coordinator serves.
 ///
@@ -54,7 +54,7 @@ pub enum Request {
     TableMult { a: String, b: String, out: String },
     /// Client-side D4M TableMult with a RAM budget.
     TableMultClient { a: String, b: String, memory_limit: usize },
-    /// Client-side TableMult routed through the PJRT dense path.
+    /// Client-side TableMult routed through the blocked dense-GEMM path.
     TableMultDense { a: String, b: String, tile: usize },
     /// Server-side BFS.
     Bfs { table: String, seeds: Vec<String>, hops: usize },
@@ -145,7 +145,7 @@ pub struct D4mServer {
     acc: AccumuloConnector,
     /// Bound tables, as engine-generic trait objects.
     tables: Mutex<HashMap<String, Arc<dyn DbTable>>>,
-    engine: Option<PjrtEngine>,
+    engine: Option<DenseEngine>,
     /// Per-op latency histograms, keyed by op name.
     op_stats: Mutex<HashMap<&'static str, Arc<Histogram>>>,
     requests: RateMeter,
@@ -154,13 +154,13 @@ pub struct D4mServer {
 }
 
 impl D4mServer {
-    /// Start a coordinator with a fresh embedded store; tries to attach
-    /// the PJRT engine (optional — dense ops degrade to CSR without it).
+    /// Start a coordinator with a fresh embedded store and the native
+    /// dense engine attached.
     pub fn new() -> Self {
-        D4mServer::with_engine(PjrtEngine::new(PjrtEngine::default_dir()).ok())
+        D4mServer::with_engine(Some(DenseEngine::new()))
     }
 
-    pub fn with_engine(engine: Option<PjrtEngine>) -> Self {
+    pub fn with_engine(engine: Option<DenseEngine>) -> Self {
         D4mServer {
             acc: AccumuloConnector::new(),
             tables: Mutex::new(HashMap::new()),
@@ -181,7 +181,7 @@ impl D4mServer {
         let s = D4mServer {
             acc: AccumuloConnector::with_store(store),
             tables: Mutex::new(HashMap::new()),
-            engine: PjrtEngine::new(PjrtEngine::default_dir()).ok(),
+            engine: Some(DenseEngine::new()),
             op_stats: Mutex::new(HashMap::new()),
             requests: RateMeter::new(),
             cursors: cursor::CursorTable::new(),
@@ -229,7 +229,7 @@ impl D4mServer {
         self.engine.is_some()
     }
 
-    pub fn engine(&self) -> Option<&PjrtEngine> {
+    pub fn engine(&self) -> Option<&DenseEngine> {
         self.engine.as_ref()
     }
 
@@ -478,6 +478,19 @@ impl D4mServer {
                 p99_latency_ns: 0,
             }));
         }
+        let kc = crate::assoc::kernel::counters();
+        let kernels = [
+            ("kernels.parallel_ops", kc.parallel_ops.get()),
+            ("kernels.serial_ops", kc.serial_ops.get()),
+            ("kernels.blocked_rows", kc.blocked_rows.get()),
+        ];
+        out.extend(kernels.into_iter().map(|(name, count)| Snapshot {
+            name: name.to_string(),
+            count,
+            rate_per_sec: 0.0,
+            mean_latency_ns: 0.0,
+            p99_latency_ns: 0,
+        }));
         out.sort_by(|a, b| a.name.cmp(&b.name));
         out
     }

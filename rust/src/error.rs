@@ -17,7 +17,7 @@ pub enum D4mError {
     MemoryLimit { used: usize, limit: usize },
     /// Malformed input data (triples file, CSV, schema violation).
     Parse(String),
-    /// PJRT runtime failure (artifact missing, compile/execute error).
+    /// Dense-runtime failure (kernel engine error).
     Runtime(String),
     /// Ingest pipeline failure (worker panic, channel closed).
     Pipeline(String),

@@ -16,11 +16,17 @@
 use std::sync::Arc;
 
 use crate::assoc::io::fmt_num;
+use crate::assoc::kernel::{self, KernelConfig};
 use crate::error::Result;
 use crate::kvstore::{
     BatchWriter, IterConfig, RowRange, Table, WriterConfig,
 };
 use crate::metrics::Counter;
+
+/// Minimum contracted-candidate rows per worker before a TableMult run
+/// is sharded; below it the extra scans and writers cost more than the
+/// parallelism returns.
+const MIN_ROWS_PER_WORKER: usize = 8;
 
 /// Tuning + instrumentation for a TableMult run.
 pub struct TableMultOpts {
@@ -35,6 +41,12 @@ pub struct TableMultOpts {
     /// Memory stays bounded: the buffer flushes to the store's summing
     /// combiner whenever it reaches this many distinct cells.
     pub combiner_cap: usize,
+    /// Worker threads: `0` = the kernel pool's configured thread count.
+    /// Each worker contracts a disjoint row-key shard with its own
+    /// scans, combiner, and batch writer (same composition as running
+    /// sharded `row_range`s sequentially — the store's summing combiner
+    /// folds the shard contributions).
+    pub workers: usize,
 }
 
 impl Default for TableMultOpts {
@@ -44,6 +56,7 @@ impl Default for TableMultOpts {
             row_range: RowRange::all(),
             logical: false,
             combiner_cap: 1 << 22,
+            workers: 0,
         }
     }
 }
@@ -59,22 +72,78 @@ pub struct TableMultStats {
     pub peak_row_entries: usize,
 }
 
-/// Run `C += A^T * B` server-side. `a` and `b` are scanned once, in key
-/// order, merged on their shared row keys; partial products stream into
-/// `c` through a buffered writer.
+/// Run `C += A^T * B` server-side, sharded across the kernel pool when
+/// the operand is big enough. The contracted row-key set (a key-only
+/// scan of A) is cut into `workers` contiguous shards at distinct key
+/// boundaries — a row never straddles shards — and each worker runs the
+/// streaming merge join over its own shard with its own writer; the
+/// store's summing combiner folds the shard contributions, exactly as
+/// the sequential sharded-`row_range` composition does.
 pub fn table_mult(
     a: &Arc<Table>,
     b: &Arc<Table>,
     c: &Arc<Table>,
     opts: &TableMultOpts,
 ) -> Result<TableMultStats> {
+    let threads = if opts.workers == 0 {
+        KernelConfig::global().threads
+    } else {
+        opts.workers
+    };
+    let keys = a.scan_row_keys(&opts.row_range);
+    let workers = threads.min(keys.len() / MIN_ROWS_PER_WORKER).max(1);
+    if workers <= 1 {
+        kernel::counters().serial_ops.inc();
+        return table_mult_range(a, b, c, opts, &opts.row_range);
+    }
+    kernel::counters().parallel_ops.inc();
+    // shard boundaries at distinct A-row keys, ends half-open like
+    // RowRange itself; first/last shard inherit the caller's bounds
+    let mut shards = Vec::with_capacity(workers);
+    let mut start = opts.row_range.start.clone();
+    for w in 1..=workers {
+        let end = if w == workers {
+            opts.row_range.end.clone()
+        } else {
+            Some(keys[keys.len() * w / workers].clone())
+        };
+        shards.push(RowRange { start: start.clone(), end: end.clone() });
+        start = end;
+    }
+    let results: Vec<Result<TableMultStats>> = std::thread::scope(|s| {
+        let handles: Vec<_> = shards
+            .iter()
+            .map(|r| s.spawn(move || table_mult_range(a, b, c, opts, r)))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut stats = TableMultStats::default();
+    for r in results {
+        let s = r?;
+        stats.rows_contracted += s.rows_contracted;
+        stats.partial_products += s.partial_products;
+        stats.peak_row_entries = stats.peak_row_entries.max(s.peak_row_entries);
+    }
+    Ok(stats)
+}
+
+/// One shard of a TableMult: the streaming merge join over `range`.
+/// Memory stays bounded per worker: one row of A + one row of B + this
+/// worker's write buffer.
+fn table_mult_range(
+    a: &Arc<Table>,
+    b: &Arc<Table>,
+    c: &Arc<Table>,
+    opts: &TableMultOpts,
+    range: &RowRange,
+) -> Result<TableMultStats> {
     let cfg = IterConfig { summing: true, ..Default::default() };
     // Streaming snapshot scans of both operands in key order: only one
     // row of A and one row of B are ever resident — the operand tables
     // are never materialised, and no tablet lock is held while the
     // product loop runs, so concurrent writers proceed unimpeded.
-    let mut sa = a.scan_stream(&opts.row_range, &cfg).peekable();
-    let mut sb = b.scan_stream(&opts.row_range, &cfg).peekable();
+    let mut sa = a.scan_stream(range, &cfg).peekable();
+    let mut sb = b.scan_stream(range, &cfg).peekable();
     let mut writer = BatchWriter::new(c.clone(), opts.writer.clone());
     let products = Counter::new();
     let mut stats = TableMultStats::default();
@@ -253,6 +322,73 @@ mod tests {
         // and the product matches the client computation
         let want = a.transpose().matmul(&a);
         assert_eq!(read_product(&tc).unwrap().triples(), want.triples());
+    }
+
+    #[test]
+    fn parallel_workers_match_serial() {
+        // ~60 contracted rows with integer-valued products, so the
+        // shard sums are exact and serial/parallel must agree exactly
+        let mut t = vec![];
+        let mut rng = crate::util::XorShift64::new(42);
+        for r in 0..60 {
+            for c in 0..6 {
+                if rng.chance(0.6) {
+                    t.push((format!("k{r:03}"), format!("i{c}"), (rng.below(9) + 1) as f64));
+                }
+            }
+        }
+        let a = Assoc::from_triples(&t);
+        let (_s1, ta1, tb1, tc1) = setup(&a, &a);
+        let serial = table_mult(
+            &ta1,
+            &tb1,
+            &tc1,
+            &TableMultOpts { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let (_s2, ta2, tb2, tc2) = setup(&a, &a);
+        let par = table_mult(
+            &ta2,
+            &tb2,
+            &tc2,
+            &TableMultOpts { workers: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(read_product(&tc1).unwrap().triples(), read_product(&tc2).unwrap().triples());
+        assert_eq!(serial.rows_contracted, par.rows_contracted);
+        assert_eq!(serial.partial_products, par.partial_products);
+        // a shard's peak can't exceed the serial run's
+        assert!(par.peak_row_entries <= serial.peak_row_entries);
+    }
+
+    #[test]
+    fn parallel_respects_row_range_bounds() {
+        // parallel sharding of a bounded range contracts the same rows
+        let mut t = vec![];
+        for r in 0..64 {
+            t.push((format!("k{r:03}"), "i".to_string(), 1.0));
+        }
+        let a = Assoc::from_triples(&t);
+        let (_s1, ta1, tb1, tc1) = setup(&a, &a);
+        let range = RowRange::span("k010", "k050");
+        let serial = table_mult(
+            &ta1,
+            &tb1,
+            &tc1,
+            &TableMultOpts { workers: 1, row_range: range.clone(), ..Default::default() },
+        )
+        .unwrap();
+        let (_s2, ta2, tb2, tc2) = setup(&a, &a);
+        let par = table_mult(
+            &ta2,
+            &tb2,
+            &tc2,
+            &TableMultOpts { workers: 4, row_range: range, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(serial.rows_contracted, 40);
+        assert_eq!(par.rows_contracted, 40);
+        assert_eq!(read_product(&tc1).unwrap().triples(), read_product(&tc2).unwrap().triples());
     }
 
     #[test]

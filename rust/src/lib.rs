@@ -19,8 +19,8 @@
 //! * [`pipeline`] — the streaming ingest orchestrator (sharding, bounded
 //!   queues with backpressure, parallel batch writers).
 //! * [`polystore`] — BigDAWG-style islands with CAST through assoc arrays.
-//! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) on the dense-block hot path.
+//! * [`runtime`] — the native dense engine: in-crate cache-blocked f64
+//!   GEMM, parallel over row tiles, on the dense-block hot path.
 //! * [`coordinator`] — the D4M server: table registry, request routing,
 //!   op batching, scan cursors, metrics — behind the object-safe
 //!   [`D4mApi`] trait both the in-process server and the remote client

@@ -11,7 +11,8 @@
 //! d4m ktruss  [--scale S] [--k K]
 //! d4m tables                        list tables after a demo ingest
 //! d4m serve   [--addr H:P] [--max-conns N] [--workers N]
-//!             [--data-dir DIR] [--flush-bytes N]   network front-end
+//!             [--kernel-threads N] [--data-dir DIR] [--flush-bytes N]
+//!                                   network front-end
 //!                                   (runs until a client sends
 //!                                   shutdown); --data-dir turns on the
 //!                                   durable engine: WAL + on-disk runs,
@@ -137,7 +138,7 @@ fn cmd_tablemult(flags: HashMap<String, String>) {
         }
         "dense" => {
             if !server.has_engine() {
-                eprintln!("no PJRT artifacts found — run `make artifacts` first");
+                eprintln!("no dense engine attached to this coordinator");
                 std::process::exit(2);
             }
             let c = server
@@ -146,7 +147,7 @@ fn cmd_tablemult(flags: HashMap<String, String>) {
                 .into_assoc()
                 .expect("assoc response");
             println!(
-                "dense TableMult via PJRT: {} output nnz, {} kernel calls",
+                "dense TableMult via blocked GEMM: {} output nnz, {} kernel calls",
                 c.nnz(),
                 server.engine().map(|e| e.calls.get()).unwrap_or(0)
             );
@@ -234,10 +235,34 @@ fn cmd_pagerank(flags: HashMap<String, String>) {
     }
 }
 
+/// Resolve `--kernel-threads`: absent = hardware default; `0`, junk, or
+/// absurd values are rejected by the typed validator and clamped to the
+/// hardware default with a warning.
+fn resolve_kernel_threads(raw: Option<&str>) -> usize {
+    use d4m::assoc::kernel;
+    let Some(raw) = raw else {
+        return kernel::default_threads();
+    };
+    let requested = raw.parse::<usize>().unwrap_or(0);
+    match kernel::validated_threads(requested) {
+        Ok(n) => n,
+        Err(e) => {
+            let fallback = kernel::default_threads();
+            eprintln!("d4m serve: {e}; clamping --kernel-threads to {fallback}");
+            fallback
+        }
+    }
+}
+
 fn cmd_serve(flags: HashMap<String, String>) {
     let addr: String = flag(&flags, "addr", "127.0.0.1:4950".to_string());
     let max_conns: usize = flag(&flags, "max-conns", 64);
     let workers: usize = flag(&flags, "workers", NetOpts::default().workers_per_conn);
+    let kernel_threads = resolve_kernel_threads(flags.get("kernel-threads").map(String::as_str));
+    d4m::assoc::kernel::configure(
+        d4m::assoc::kernel::KernelConfig::detect().with_threads(kernel_threads),
+    );
+    println!("d4m serve: kernel pool: {kernel_threads} threads");
     let data_dir = flags.get("data-dir").cloned().filter(|d| !d.is_empty());
     let server = match &data_dir {
         Some(dir) => {
@@ -690,6 +715,31 @@ fn cmd_tables() {
         for t in ts {
             println!("{t}");
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_threads_flag_clamps_invalid_values() {
+        let hw = d4m::assoc::kernel::default_threads();
+        assert_eq!(resolve_kernel_threads(None), hw);
+        assert_eq!(resolve_kernel_threads(Some("8")), 8);
+        assert_eq!(resolve_kernel_threads(Some("1")), 1);
+        // zero, junk, and absurd values all clamp to the hardware default
+        assert_eq!(resolve_kernel_threads(Some("0")), hw);
+        assert_eq!(resolve_kernel_threads(Some("not-a-number")), hw);
+        assert_eq!(resolve_kernel_threads(Some("100000")), hw);
+    }
+
+    #[test]
+    fn parse_flags_keeps_kernel_threads_value() {
+        let args: Vec<String> =
+            ["--kernel-threads", "4", "--addr", "h:1"].iter().map(|s| s.to_string()).collect();
+        let f = parse_flags(&args);
+        assert_eq!(f.get("kernel-threads").map(String::as_str), Some("4"));
     }
 }
 

@@ -1,14 +1,19 @@
-//! Dense-block bridge: runs associative-array matrix multiplies through
-//! the AOT-compiled Pallas kernels by tiling the aligned numeric matrices
-//! into fixed-shape dense blocks (the artifact shapes), executing each
-//! tile product on the PJRT engine, and accumulating.
+//! Dense-block kernels: the in-crate cache-blocked f64 GEMM and the
+//! bridge that runs associative-array matrix multiplies through it by
+//! aligning the operands, densifying, and tiling.
 //!
 //! This is the "numeric hot path" of client-side D4M: for dense-ish
 //! operands (e.g. co-occurrence matrices) it beats CSR SpGEMM; for very
 //! sparse operands the CSR path wins. [`assoc_matmul_auto`] picks by a
 //! density heuristic (tuned in the §Perf pass; see EXPERIMENTS.md).
+//!
+//! Determinism: [`gemm`] always walks k-tiles in ascending order in the
+//! outermost loop, so every output cell accumulates its k-terms in the
+//! same order regardless of tile size or worker count — results are
+//! bit-identical across configurations, mirroring the SpGEMM guarantee.
 
-use super::PjrtEngine;
+use super::DenseEngine;
+use crate::assoc::kernel::{self, KernelConfig};
 use crate::assoc::spmat::SpMat;
 use crate::assoc::Assoc;
 use crate::error::Result;
@@ -18,10 +23,9 @@ use crate::util::intersect_sorted_keys;
 /// nonzeros in the aligned operands).
 pub const DENSE_THRESHOLD: f64 = 0.05;
 
-/// Pick the artifact tile for a given problem shape: large tiles
-/// amortise per-call PJRT overhead (literal copies, dispatch) once any
-/// dimension exceeds half the large tile (§Perf: 507 calls -> 12 calls
-/// on the e2e workload).
+/// Pick the tile edge for a given problem shape: large tiles amortise
+/// loop overhead once any dimension exceeds half the large tile, small
+/// tiles keep tiny problems from padding work.
 pub fn best_tile(k: usize, m: usize, n: usize) -> usize {
     if k.max(m).max(n) > super::TILE_LARGE / 2 {
         super::TILE_LARGE
@@ -30,83 +34,115 @@ pub fn best_tile(k: usize, m: usize, n: usize) -> usize {
     }
 }
 
-/// Pad a CSR matrix into a row-major dense f32 buffer of shape
-/// (rows_padded, cols_padded).
-fn to_dense_padded(m: &SpMat, rows_padded: usize, cols_padded: usize) -> Vec<f32> {
-    let mut out = vec![0f32; rows_padded * cols_padded];
-    for r in 0..m.nr {
-        for (c, v) in m.row(r) {
-            out[r * cols_padded + c] = v as f32;
-        }
-    }
-    out
-}
-
-/// Extract one (tile x tile) block starting at (r0, c0) from a padded
-/// dense buffer with row stride `stride`.
-fn block(buf: &[f32], stride: usize, r0: usize, c0: usize, tile: usize) -> Vec<f32> {
-    let mut out = vec![0f32; tile * tile];
-    for r in 0..tile {
-        let src = (r0 + r) * stride + c0;
-        out[r * tile..(r + 1) * tile].copy_from_slice(&buf[src..src + tile]);
-    }
-    out
-}
-
 fn div_up(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
-/// `C = A^T B` over aligned CSR operands via dense tiles of edge `tile`
-/// executed on the engine. a: (K, M), b: (K, N) -> (M, N) dense row-major
-/// (trimmed to the true shape).
-pub fn at_b_dense(
-    engine: &PjrtEngine,
-    a: &SpMat,
-    b: &SpMat,
+/// Blocked dense `C = A B`: a is (m, k), b is (k, n), both row-major
+/// f64; returns (m, n) row-major. Tiled over all three dimensions so the
+/// working set (one A row strip, one B tile) stays cache-resident, and
+/// parallel over contiguous row blocks via `std::thread::scope` when the
+/// FLOP estimate clears `cfg.parallel_cutoff`. The k-tile loop is
+/// outermost and ascending, so each `c[i][j]` sees its additions in a
+/// fixed order — bit-identical output for every tile size/thread count.
+pub fn gemm(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
     tile: usize,
-) -> Result<Vec<f64>> {
-    assert_eq!(a.nr, b.nr, "contraction dim mismatch");
-    let (k, m, n) = (a.nr, a.nc, b.nc);
-    let (kp, mp, np) = (div_up(k, tile) * tile, div_up(m, tile) * tile, div_up(n, tile) * tile);
-    let da = to_dense_padded(a, kp, mp);
-    let db = to_dense_padded(b, kp, np);
-    let mut out = vec![0f64; m * n];
-    for bi in 0..mp / tile {
-        for bj in 0..np / tile {
-            // accumulate over the K tile axis
-            let mut acc = vec![0f64; tile * tile];
-            for bk in 0..kp / tile {
-                let ta = block(&da, mp, bk * tile, bi * tile, tile);
-                let tb = block(&db, np, bk * tile, bj * tile, tile);
-                let tc = engine.tablemult_tile(&ta, &tb, tile)?;
-                for (x, y) in acc.iter_mut().zip(tc.iter()) {
-                    *x += *y as f64;
-                }
-            }
-            // write back the valid region
-            for r in 0..tile {
-                let gr = bi * tile + r;
-                if gr >= m {
-                    break;
-                }
-                for c in 0..tile {
-                    let gc = bj * tile + c;
-                    if gc >= n {
-                        break;
+    cfg: &KernelConfig,
+) -> Vec<f64> {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    let mut c = vec![0f64; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let tile = tile.max(8);
+    let flops = (m as u64).saturating_mul(k as u64).saturating_mul(n as u64);
+    let workers = kernel::plan_workers(cfg, flops).min(div_up(m, tile)).max(1);
+
+    // Dense work is uniform per row, so contiguous equal row-tile groups
+    // balance; split at tile boundaries so no output row is shared.
+    let row_tiles = div_up(m, tile);
+    let run = |rows: std::ops::Range<usize>, c: &mut [f64]| {
+        let r0 = rows.start;
+        for kt in (0..k).step_by(tile) {
+            let kend = (kt + tile).min(k);
+            for jt in (0..n).step_by(tile) {
+                let jend = (jt + tile).min(n);
+                for i in rows.clone() {
+                    let arow = &a[i * k..i * k + k];
+                    let crow = &mut c[(i - r0) * n..(i - r0) * n + n];
+                    for kx in kt..kend {
+                        let av = arow[kx];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kx * n..kx * n + n];
+                        for jx in jt..jend {
+                            crow[jx] += av * brow[jx];
+                        }
                     }
-                    out[gr * n + gc] = acc[r * tile + c];
                 }
             }
         }
+    };
+
+    if workers <= 1 {
+        run(0..m, &mut c);
+    } else {
+        let mut chunks: Vec<&mut [f64]> = Vec::with_capacity(workers);
+        let mut bounds = Vec::with_capacity(workers + 1);
+        let mut rest = c.as_mut_slice();
+        let mut row = 0usize;
+        for w in 0..workers {
+            let end_tile = row_tiles * (w + 1) / workers;
+            let end_row = (end_tile * tile).min(m);
+            let (head, tail) = rest.split_at_mut((end_row - row) * n);
+            chunks.push(head);
+            rest = tail;
+            bounds.push(row..end_row);
+            row = end_row;
+        }
+        let run = &run;
+        std::thread::scope(|s| {
+            for (rows, chunk) in bounds.into_iter().zip(chunks) {
+                s.spawn(move || run(rows, chunk));
+            }
+        });
     }
-    Ok(out)
+    c
+}
+
+/// `C = A^T B` over aligned CSR operands via the dense blocked GEMM.
+/// a: (K, M), b: (K, N) -> (M, N) dense row-major.
+pub fn at_b_dense(engine: &DenseEngine, a: &SpMat, b: &SpMat, tile: usize) -> Result<Vec<f64>> {
+    assert_eq!(a.nr, b.nr, "contraction dim mismatch");
+    let (k, m, n) = (a.nr, a.nc, b.nc);
+    // densify A transposed (M, K) and B as-is (K, N)
+    let mut at = vec![0f64; m * k];
+    for r in 0..k {
+        for (c, v) in a.row(r) {
+            at[c * k + r] = v;
+        }
+    }
+    let mut db = vec![0f64; k * n];
+    for r in 0..k {
+        for (c, v) in b.row(r) {
+            db[r * n + c] = v;
+        }
+    }
+    engine.calls.inc();
+    Ok(gemm(&at, &db, m, k, n, tile, engine.config()))
 }
 
 /// Key-aligned `A^T * B` over assocs routed through the dense tile path.
 /// Alignment contracts over the intersection of row keys (TableMult form:
 /// rows are the shared dimension).
-pub fn assoc_at_b_dense(engine: &PjrtEngine, a: &Assoc, b: &Assoc, tile: usize) -> Result<Assoc> {
+pub fn assoc_at_b_dense(engine: &DenseEngine, a: &Assoc, b: &Assoc, tile: usize) -> Result<Assoc> {
     let (_, ia, ib) = intersect_sorted_keys(a.row_keys(), b.row_keys());
     let cols_a: Vec<usize> = (0..a.col_keys().len()).collect();
     let cols_b: Vec<usize> = (0..b.col_keys().len()).collect();
@@ -136,9 +172,10 @@ pub fn aligned_density(a: &Assoc, b: &Assoc) -> f64 {
     nnz / ((k * m + k * n) as f64)
 }
 
-/// Route `A^T * B` to the dense PJRT path or the CSR path by density.
+/// Route `A^T * B` to the dense blocked-GEMM path or the CSR path by
+/// density.
 pub fn assoc_matmul_auto(
-    engine: Option<&PjrtEngine>,
+    engine: Option<&DenseEngine>,
     a: &Assoc,
     b: &Assoc,
     tile: usize,
@@ -160,8 +197,12 @@ pub fn assoc_matmul_auto(
 mod tests {
     use super::*;
 
-    fn engine() -> Option<PjrtEngine> {
-        PjrtEngine::new(PjrtEngine::default_dir()).ok()
+    fn engine() -> DenseEngine {
+        DenseEngine::with_config(KernelConfig {
+            threads: 4,
+            parallel_cutoff: 0,
+            ..KernelConfig::global()
+        })
     }
 
     fn dense_assoc(nr: usize, nc: usize, seed: u64) -> Assoc {
@@ -179,10 +220,7 @@ mod tests {
 
     #[test]
     fn dense_path_matches_csr_small() {
-        let Some(e) = engine() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let e = engine();
         let a = dense_assoc(40, 30, 1);
         let b = dense_assoc(40, 20, 2);
         let want = a.transpose().matmul(&b);
@@ -190,26 +228,44 @@ mod tests {
         assert_eq!(want.triples().len(), got.triples().len());
         for (x, y) in want.triples().iter().zip(got.triples().iter()) {
             assert_eq!((&x.0, &x.1), (&y.0, &y.1));
-            assert!((x.2 - y.2).abs() < 1e-3, "{x:?} vs {y:?}");
+            assert!((x.2 - y.2).abs() < 1e-9, "{x:?} vs {y:?}");
         }
+        assert!(e.calls.get() >= 1);
     }
 
     #[test]
     fn dense_path_multi_tile() {
-        let Some(e) = engine() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let e = engine();
         // spans >1 tile in every dimension (tile = 128)
         let a = dense_assoc(150, 140, 3);
         let b = dense_assoc(150, 135, 4);
         let want = a.transpose().matmul(&b);
         let got = assoc_at_b_dense(&e, &a, &b, super::super::TILE_SMALL).unwrap();
         assert_eq!(want.nnz(), got.nnz());
-        // spot check
         let wt = want.triples();
         for t in wt.iter().step_by(97) {
-            assert!((got.get(&t.0, &t.1) - t.2).abs() < 1e-2);
+            assert!((got.get(&t.0, &t.1) - t.2).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gemm_bit_identical_across_tiles_and_threads() {
+        let (m, k, n) = (45, 45, 45);
+        let mut rng = crate::util::XorShift64::new(11);
+        let a: Vec<f64> = (0..m * k).map(|_| (rng.below(1000) as f64) / 7.0 - 60.0).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| (rng.below(1000) as f64) / 11.0 - 40.0).collect();
+        let base = gemm(&a, &b, m, k, n, 16, &KernelConfig::serial());
+        for (tile, threads) in [(16, 2), (16, 8), (8, 4), (64, 3)] {
+            let cfg = KernelConfig {
+                threads,
+                parallel_cutoff: 0,
+                ..KernelConfig::global()
+            };
+            let got = gemm(&a, &b, m, k, n, tile, &cfg);
+            assert!(
+                base.iter().zip(got.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "tile={tile} threads={threads} not bit-identical"
+            );
         }
     }
 

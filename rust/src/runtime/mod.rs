@@ -1,142 +1,122 @@
-//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts
-//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
-//! them from the L3 hot path. Python never runs here.
+//! Native dense runtime — in-crate blocked dense-GEMM kernels behind the
+//! engine facade that used to front the PJRT/XLA stub.
 //!
-//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
-//! 64-bit instruction ids that the crate's XLA (0.5.1) rejects, while the
-//! text parser reassigns ids cleanly — see DESIGN.md and aot.py.
+//! History: the dense path was originally written against vendored `xla`
+//! PJRT bindings executing AOT-compiled JAX/Pallas artifacts; the
+//! offline/CI build had no such crate, so a stub made engine
+//! construction fail and every dense caller silently degraded to CSR.
+//! The stub is gone: [`DenseEngine`] is always constructible and executes
+//! a cache-blocked f64 GEMM in-crate ([`blocks::gemm`]), parallel over
+//! row tiles through the assoc kernel pool — the dense fallback is real
+//! code with real tests, not an error path.
 
 pub mod blocks;
 
-// The dense path was written against the vendored `xla` PJRT bindings;
-// the offline/CI build has no such crate, so a std-only stub satisfies
-// the same API and fails at client construction — `PjrtEngine::new`
-// errors cleanly and every dense caller degrades to the CSR path. See
-// xla_stub.rs for the swap-back story.
-#[path = "xla_stub.rs"]
-mod xla;
-
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-use crate::error::{D4mError, Result};
+use crate::assoc::kernel::KernelConfig;
+use crate::metrics::Counter;
 
 /// Small tile edge (test/default config).
 pub const TILE_SMALL: usize = 128;
 /// Large tile edge (production config).
 pub const TILE_LARGE: usize = 512;
 
-fn rt_err<E: std::fmt::Display>(e: E) -> D4mError {
-    D4mError::Runtime(e.to_string())
+/// Dense kernel engine: tiled f64 kernels executed natively. Carries the
+/// execution counter (for EXPERIMENTS.md §Perf accounting) and pins the
+/// kernel configuration its GEMMs run under.
+pub struct DenseEngine {
+    cfg: KernelConfig,
+    /// Kernel executions performed.
+    pub calls: Counter,
 }
 
-/// A compiled-executable cache over a PJRT CPU client.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    execs: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
-    /// Executions performed (for EXPERIMENTS.md §Perf accounting).
-    pub calls: crate::metrics::Counter,
-}
-
-impl PjrtEngine {
-    /// Create an engine over the artifacts directory. Fails fast if the
-    /// directory does not exist (run `make artifacts`).
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        if !dir.is_dir() {
-            return Err(D4mError::Runtime(format!(
-                "artifacts directory {} missing — run `make artifacts`",
-                dir.display()
-            )));
-        }
-        let client = xla::PjRtClient::cpu().map_err(rt_err)?;
-        Ok(PjrtEngine {
-            client,
-            dir,
-            execs: Mutex::new(HashMap::new()),
-            calls: crate::metrics::Counter::new(),
-        })
+impl DenseEngine {
+    /// Engine under the process-wide [`KernelConfig`].
+    pub fn new() -> Self {
+        DenseEngine::with_config(KernelConfig::global())
     }
 
-    /// Resolve the conventional artifacts dir (`$D4M_ARTIFACTS` or
-    /// `./artifacts`).
-    pub fn default_dir() -> PathBuf {
-        std::env::var("D4M_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    /// Engine under an explicit kernel configuration.
+    pub fn with_config(cfg: KernelConfig) -> Self {
+        DenseEngine { cfg, calls: Counter::new() }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-blocked".to_string()
     }
 
-    /// Compile (or fetch from cache) the named artifact.
-    fn load(&self, name: &str) -> Result<()> {
-        let mut execs = self.execs.lock().unwrap();
-        if execs.contains_key(name) {
-            return Ok(());
-        }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        if !path.is_file() {
-            return Err(D4mError::Runtime(format!("artifact {} missing", path.display())));
-        }
-        let proto =
-            xla::HloModuleProto::from_text_file(path.to_str().unwrap()).map_err(rt_err)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(rt_err)?;
-        execs.insert(name.to_string(), exe);
-        Ok(())
+    /// The kernel configuration this engine's GEMMs run under.
+    pub fn config(&self) -> &KernelConfig {
+        &self.cfg
     }
 
-    /// Execute a named artifact on f32 inputs with the given shapes;
-    /// returns the flattened f32 output (the lowered graphs return a
-    /// 1-tuple, unwrapped here).
-    pub fn run_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
-        self.load(name)?;
-        let execs = self.execs.lock().unwrap();
-        let exe = execs.get(name).unwrap();
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, shape)| xla::Literal::vec1(data).reshape(shape).map_err(rt_err))
-            .collect::<Result<Vec<_>>>()?;
-        let result = exe.execute::<xla::Literal>(&literals).map_err(rt_err)?[0][0]
-            .to_literal_sync()
-            .map_err(rt_err)?;
+    /// `C = A B` on dense row-major f64 buffers: a is (m, k), b is
+    /// (k, n); returns (m, n) row-major.
+    pub fn matmul(&self, a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
         self.calls.inc();
-        let out = result.to_tuple1().map_err(rt_err)?;
-        out.to_vec::<f32>().map_err(rt_err)
+        blocks::gemm(a, b, m, k, n, blocks::best_tile(k, m, n), &self.cfg)
     }
 
-    // -------------------------------------------------------- wrappers
-
-    /// `C = A^T B` on one dense tile: a is (k, m), b is (k, n) with
-    /// k = m = n = `tile` (128 or 512); returns (m, n) row-major.
-    pub fn tablemult_tile(&self, a: &[f32], b: &[f32], tile: usize) -> Result<Vec<f32>> {
-        let name = format!("tablemult_{tile}x{tile}x{tile}");
-        let t = tile as i64;
-        self.run_f32(&name, &[(a, &[t, t]), (b, &[t, t])])
+    /// `C = A^T B` on dense row-major f64 buffers: a is (k, m), b is
+    /// (k, n); returns (m, n) row-major. Transposes A once, then runs the
+    /// row-major blocked GEMM (unit-stride inner loops on both operands).
+    pub fn at_b(&self, a: &[f64], b: &[f64], k: usize, m: usize, n: usize) -> Vec<f64> {
+        let mut at = vec![0f64; m * k];
+        for r in 0..k {
+            for c in 0..m {
+                at[c * k + r] = a[r * m + c];
+            }
+        }
+        self.matmul(&at, b, m, k, n)
     }
 
-    /// `C = A B` on one dense tile (m, k) x (k, n), square `tile`.
-    pub fn matmul_tile(&self, a: &[f32], b: &[f32], tile: usize) -> Result<Vec<f32>> {
-        let name = format!("matmul_{tile}x{tile}x{tile}");
-        let t = tile as i64;
-        self.run_f32(&name, &[(a, &[t, t]), (b, &[t, t])])
+    // ----------------------------------------------- square-tile wrappers
+    // (the artifact-shaped entry points the PJRT path exposed; kept so
+    // tile-level callers and tests keep working on the native engine)
+
+    /// `C = A^T B` on one dense square tile: a and b are (tile, tile).
+    pub fn tablemult_tile(&self, a: &[f64], b: &[f64], tile: usize) -> Vec<f64> {
+        self.at_b(a, b, tile, tile, tile)
     }
 
-    /// Row sums of a (tile, tile) block -> (tile, 1).
-    pub fn degree_tile(&self, a: &[f32], tile: usize) -> Result<Vec<f32>> {
-        let name = format!("degree_{tile}x{tile}");
-        let t = tile as i64;
-        self.run_f32(&name, &[(a, &[t, t])])
+    /// `C = A B` on one dense square tile.
+    pub fn matmul_tile(&self, a: &[f64], b: &[f64], tile: usize) -> Vec<f64> {
+        self.matmul(a, b, tile, tile, tile)
     }
 
-    /// Fused Jaccard over an incidence tile a (tile, tile): returns the
-    /// (tile, tile) coefficient matrix.
-    pub fn jaccard_tile(&self, a: &[f32], tile: usize) -> Result<Vec<f32>> {
-        let name = format!("jaccard_{tile}x{tile}");
-        let t = tile as i64;
-        self.run_f32(&name, &[(a, &[t, t])])
+    /// Row sums of a (tile, tile) block -> length `tile`.
+    pub fn degree_tile(&self, a: &[f64], tile: usize) -> Vec<f64> {
+        self.calls.inc();
+        (0..tile).map(|r| a[r * tile..(r + 1) * tile].iter().sum()).collect()
+    }
+
+    /// Fused Jaccard over a 0/1 incidence tile a (tile, tile): returns
+    /// the (tile, tile) coefficient matrix
+    /// `J[i][j] = |i ∩ j| / (|i| + |j| - |i ∩ j|)` over column supports.
+    pub fn jaccard_tile(&self, a: &[f64], tile: usize) -> Vec<f64> {
+        let inter = self.at_b(a, a, tile, tile, tile);
+        let mut deg = vec![0f64; tile];
+        for r in 0..tile {
+            for c in 0..tile {
+                deg[c] += a[r * tile + c];
+            }
+        }
+        let mut out = vec![0f64; tile * tile];
+        for i in 0..tile {
+            for j in 0..tile {
+                let x = inter[i * tile + j];
+                let denom = deg[i] + deg[j] - x;
+                if denom > 0.0 {
+                    out[i * tile + j] = x / denom;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for DenseEngine {
+    fn default() -> Self {
+        DenseEngine::new()
     }
 }
 
@@ -144,72 +124,74 @@ impl PjrtEngine {
 mod tests {
     use super::*;
 
-    fn engine() -> Option<PjrtEngine> {
-        PjrtEngine::new(PjrtEngine::default_dir()).ok()
-    }
-
-    #[test]
-    fn missing_dir_errors() {
-        assert!(PjrtEngine::new("/nonexistent/artifacts").is_err());
+    fn engine() -> DenseEngine {
+        // pinned multi-thread config so the parallel row-tile path is
+        // exercised regardless of the host's core count
+        DenseEngine::with_config(KernelConfig {
+            threads: 4,
+            parallel_cutoff: 0,
+            ..KernelConfig::global()
+        })
     }
 
     #[test]
     fn tablemult_tile_identity() {
-        let Some(e) = engine() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let e = engine();
         let t = TILE_SMALL;
         // a = I (so a^T b = b), b = counter pattern
-        let mut a = vec![0f32; t * t];
+        let mut a = vec![0f64; t * t];
         for i in 0..t {
             a[i * t + i] = 1.0;
         }
-        let b: Vec<f32> = (0..t * t).map(|i| (i % 7) as f32).collect();
-        let c = e.tablemult_tile(&a, &b, t).unwrap();
+        let b: Vec<f64> = (0..t * t).map(|i| (i % 7) as f64).collect();
+        let c = e.tablemult_tile(&a, &b, t);
         assert_eq!(c, b);
         assert_eq!(e.calls.get(), 1);
     }
 
     #[test]
-    fn matmul_tile_matches_cpu() {
-        let Some(e) = engine() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+    fn matmul_tile_matches_scalar() {
+        let e = engine();
         let t = TILE_SMALL;
-        let a: Vec<f32> = (0..t * t).map(|i| ((i % 5) as f32) - 2.0).collect();
-        let b: Vec<f32> = (0..t * t).map(|i| ((i % 3) as f32) - 1.0).collect();
-        let c = e.matmul_tile(&a, &b, t).unwrap();
-        // spot-check a few cells against scalar compute
+        let a: Vec<f64> = (0..t * t).map(|i| ((i % 5) as f64) - 2.0).collect();
+        let b: Vec<f64> = (0..t * t).map(|i| ((i % 3) as f64) - 1.0).collect();
+        let c = e.matmul_tile(&a, &b, t);
         for &(i, j) in &[(0usize, 0usize), (17, 93), (127, 127)] {
-            let want: f32 = (0..t).map(|k| a[i * t + k] * b[k * t + j]).sum();
-            assert!((c[i * t + j] - want).abs() < 1e-2, "({i},{j})");
+            let want: f64 = (0..t).map(|k| a[i * t + k] * b[k * t + j]).sum();
+            assert!((c[i * t + j] - want).abs() < 1e-9, "({i},{j})");
+        }
+    }
+
+    #[test]
+    fn rectangular_matmul_matches_scalar() {
+        let (m, k, n) = (37, 21, 53); // deliberately not tile multiples
+        let a: Vec<f64> = (0..m * k).map(|i| ((i % 11) as f64) / 3.0 - 1.5).collect();
+        let b: Vec<f64> = (0..k * n).map(|i| ((i % 7) as f64) / 2.0 - 1.0).collect();
+        let c = DenseEngine::new().matmul(&a, &b, m, k, n);
+        for i in (0..m).step_by(9) {
+            for j in (0..n).step_by(13) {
+                let want: f64 = (0..k).map(|x| a[i * k + x] * b[x * n + j]).sum();
+                assert!((c[i * n + j] - want).abs() < 1e-9, "({i},{j})");
+            }
         }
     }
 
     #[test]
     fn degree_tile_rowsums() {
-        let Some(e) = engine() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let e = engine();
         let t = TILE_SMALL;
-        let a = vec![1f32; t * t];
-        let d = e.degree_tile(&a, t).unwrap();
+        let a = vec![1f64; t * t];
+        let d = e.degree_tile(&a, t);
         assert_eq!(d.len(), t);
-        assert!(d.iter().all(|&x| (x - t as f32).abs() < 1e-3));
+        assert!(d.iter().all(|&x| (x - t as f64).abs() < 1e-9));
     }
 
     #[test]
     fn jaccard_tile_diagonal_ones() {
-        let Some(e) = engine() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
+        let e = engine();
         let t = TILE_SMALL;
         // deterministic 0/1 incidence with every column nonempty
-        let mut a = vec![0f32; t * t];
+        let mut a = vec![0f64; t * t];
         for i in 0..t {
             for j in 0..t {
                 if (i * 31 + j * 17) % 5 == 0 {
@@ -218,9 +200,9 @@ mod tests {
             }
             a[i * t + i] = 1.0;
         }
-        let jm = e.jaccard_tile(&a, t).unwrap();
+        let jm = e.jaccard_tile(&a, t);
         for j in 0..t {
-            assert!((jm[j * t + j] - 1.0).abs() < 1e-4, "diag {j} = {}", jm[j * t + j]);
+            assert!((jm[j * t + j] - 1.0).abs() < 1e-9, "diag {j} = {}", jm[j * t + j]);
         }
     }
 }

@@ -25,7 +25,8 @@ import json
 import os
 import sys
 
-BENCH_FILES = ["BENCH_assoc.json", "BENCH_scan.json", "BENCH_net.json"]
+BENCH_FILES = ["BENCH_assoc.json", "BENCH_scan.json", "BENCH_net.json",
+               "BENCH_ingest.json"]
 REQUIRED_FIELDS = {"op", "backend", "n", "seconds", "entries_per_sec"}
 
 
