@@ -15,6 +15,15 @@
 //!                 twin of scan.rs's concurrent4)
 //!   paged       — one client draining the full table through a scan
 //!                 cursor (512-entry pages); received entries per second
+//!   plan-seq    — a select → matmul → sum chain the pre-plan way: two
+//!                 Query round trips per pass (the right operand is the
+//!                 whole table) plus client-side matmul + sum; result
+//!                 entries per second
+//!   plan        — the same chain compiled to ONE `Request::Plan`: the
+//!                 expression executes server-side with the select folded
+//!                 into the scan and the reduce streamed through the
+//!                 contraction, so only the small result crosses the
+//!                 wire; bit-identical to plan-seq by assertion
 //!   degraded    — the same paged drain through a fault-injection proxy
 //!                 cutting ~1% of frames: the self-healing client
 //!                 reconnects and resumes the cursor, so the measured
@@ -39,6 +48,7 @@ use d4m::net::{serve, NetOpts, RemoteD4m, RetryPolicy};
 use d4m::pipeline::PipelineConfig;
 use d4m::util::bench::{append_records, BenchRecord};
 use d4m::util::fmt_rate;
+use d4m::Plan;
 
 const CLIENTS: usize = 4;
 const INFLIGHT: usize = 8;
@@ -134,6 +144,42 @@ fn main() {
         }
         let dt = t3.elapsed().as_secs_f64();
         report(&mut records, n, "paged", dt, paged_total);
+
+        // -- the expression-language legs: a select → matmul → sum chain,
+        // first as sequential round trips (the full right operand crosses
+        // the wire every pass), then as one compiled server-side plan
+        let range = KeySel::Range(vertex_key(0), vertex_key(63));
+        let sel_q = TableQuery::all().rows(range.clone());
+        let t4 = Instant::now();
+        let mut seq_entries = 0usize;
+        let mut seq_last = None;
+        for _ in 0..passes {
+            let a = c.query("G", sel_q.clone()).expect("seq select query");
+            let g = c.query("G", TableQuery::all()).expect("seq full query");
+            let r = a.matmul(&g).sum(2);
+            seq_entries += r.nnz();
+            seq_last = Some(r);
+        }
+        let dt = t4.elapsed().as_secs_f64();
+        report(&mut records, n, "plan-seq", dt, seq_entries);
+
+        let ops = Plan::table("G")
+            .select(range, KeySel::All)
+            .matmul(&Plan::table("G"))
+            .sum(2)
+            .compile()
+            .expect("compile plan");
+        let t5 = Instant::now();
+        let mut plan_entries = 0usize;
+        let mut plan_last = None;
+        for _ in 0..passes {
+            let (r, _) = c.plan(&ops).expect("plan");
+            plan_entries += r.nnz();
+            plan_last = Some(r);
+        }
+        let dt = t5.elapsed().as_secs_f64();
+        assert_eq!(plan_last, seq_last, "plan leg diverged from sequential leg");
+        report(&mut records, n, "plan", dt, plan_entries);
 
         // -- the same paged drain through a faulty link: ~1% of frames
         // cut the connection; the healing client reconnects and resumes

@@ -5,13 +5,17 @@
 //!  2. stream it through the **parallel ingest pipeline** (sharding,
 //!     bounded queues, backpressure) into the embedded Accumulo substrate
 //!     with the full D4M 2.0 schema (edge + transpose + degree tables);
-//!  3. run **Graphulo TableMult** server-side and the client-side D4M
+//!  3. compile a select → matmul → sum chain into **one plan** and
+//!     execute it server-side in a single request, verifying it is
+//!     bit-identical to the sequential round trips and that the fused
+//!     executor materialised zero intermediates;
+//!  4. run **Graphulo TableMult** server-side and the client-side D4M
 //!     baseline, verifying agreement;
-//!  4. run the dense-block TableMult through the **in-crate blocked
+//!  5. run the dense-block TableMult through the **in-crate blocked
 //!     dense GEMM** (parallel over row tiles), verifying against the
 //!     CSR result;
-//!  5. run BFS + Jaccard server-side;
-//!  6. print the ingest rate and TableMult rate — the headline numbers
+//!  6. run BFS + Jaccard server-side;
+//!  7. print the ingest rate and TableMult rate — the headline numbers
 //!     recorded in EXPERIMENTS.md.
 //!
 //! Run with: `make e2e` or
@@ -25,6 +29,7 @@ use d4m::coordinator::{D4mApi, D4mServer};
 use d4m::gen::{kronecker_triples, vertex_key, KroneckerParams};
 use d4m::pipeline::PipelineConfig;
 use d4m::util::fmt_rate;
+use d4m::Plan;
 
 fn main() {
     let scale: u32 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12);
@@ -79,7 +84,47 @@ fn main() {
     assert_eq!(paged, sub, "paged scan diverged from one-shot query");
     println!("[cursor]    same selection in {pages} pages of <= 256 entries ✓");
 
-    // ---- 3: TableMult server vs client
+    // ---- 3: the multi-op chain as ONE compiled plan. Sequentially this
+    // is two Query round trips plus client-side matmul + sum; the plan
+    // ships the whole expression server-side, folds the select into the
+    // scan and streams the reduce through the contraction, so nothing the
+    // answer doesn't need is ever materialised.
+    let range = KeySel::Range(vertex_key(0), vertex_key(63));
+    let ops = Plan::table("G")
+        .select(range, KeySel::All)
+        .matmul(&Plan::table("G"))
+        .sum(2)
+        .compile()
+        .expect("compile plan");
+    let t = Instant::now();
+    let (planned, pstats) = server.plan(&ops).expect("plan");
+    let dt_plan = t.elapsed().as_secs_f64();
+    // the same chain in the compact text syntax compiles to the same ops
+    let expr = format!("sum(G('{},:,{},', ':') * G, 2)", vertex_key(0), vertex_key(63));
+    assert_eq!(
+        Plan::parse(&expr).expect("parse").compile().expect("compile"),
+        ops,
+        "text syntax and builder compiled differently"
+    );
+    // sequential reference: what a pre-plan client had to do
+    let g_full = server.query("G", TableQuery::all()).expect("full query");
+    let sequential = sub.matmul(&g_full).sum(2);
+    assert_eq!(planned, sequential, "plan diverged from sequential ops");
+    assert_eq!(pstats.intermediates, 0, "fused plan materialised an intermediate");
+    // the same plan drained through a streaming cursor, page by page
+    let mut plan_triples: Vec<(String, String, String)> = Vec::new();
+    for page in server.plan_pages(&ops, 256) {
+        plan_triples.extend(page.expect("plan cursor page"));
+    }
+    let plan_paged = d4m::assoc::io::parse_triples(plan_triples).expect("assemble plan pages");
+    assert_eq!(plan_paged, planned, "paged plan diverged from one-shot plan");
+    println!(
+        "[plan]      {expr}: {} nnz in {:.2}s, one request ({pstats}) ✓",
+        planned.nnz(),
+        dt_plan
+    );
+
+    // ---- 4: TableMult server vs client
     let t0 = Instant::now();
     let stats = server.tablemult("G", "G", "C").expect("server tablemult");
     let dt_server = t0.elapsed().as_secs_f64();
@@ -104,7 +149,7 @@ fn main() {
     assert_eq!(server_c.nnz(), client_c.nnz(), "server/client TableMult disagree");
     println!("[verify]    graphulo == d4m client ✓ ({} output nnz)", server_c.nnz());
 
-    // ---- 4: dense path through the blocked GEMM. The raw Kronecker graph
+    // ---- 5: dense path through the blocked GEMM. The raw Kronecker graph
     // is too sparse for dense tiles, but its co-occurrence product C is
     // dense-ish — exactly the operand profile the dense path targets. We
     // compute C^T C both ways and verify.
@@ -142,7 +187,7 @@ fn main() {
         );
     }
 
-    // ---- 5: BFS + Jaccard
+    // ---- 6: BFS + Jaccard
     let seed = vertex_key(1);
     let t3 = Instant::now();
     let d = server.bfs("G", &[seed.as_str()], 3).expect("bfs");
@@ -152,7 +197,7 @@ fn main() {
     let j = server.jaccard("G", "J").expect("jaccard");
     println!("[jaccard]   {} coefficients ({:.2}s)", j.nnz(), t4.elapsed().as_secs_f64());
 
-    // ---- 6: headline metrics
+    // ---- 7: headline metrics
     println!("\n== headline metrics (EXPERIMENTS.md) ==");
     println!("ingest rate:          {} logical / {} physical", fmt_rate(ingest.rate), fmt_rate(ingest.physical_rate));
     println!(

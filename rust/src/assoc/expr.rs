@@ -1,0 +1,915 @@
+//! The lazy D4M expression language: client-side plan graphs
+//! (`Plan::table("E").select(..).matmul(..)`), the compact text syntax
+//! (`sum(E('a,:,b,', ':') * E, 2) => out`), and the flat [`PlanOp`]
+//! program both compile to — the unit shipped over the wire as
+//! `Request::Plan` and executed server-side with streaming fusion
+//! (DESIGN.md §Plan language).
+//!
+//! The op list is SSA-shaped: `ops[i]` may only reference results of
+//! `ops[j]` with `j < i`, and the **last** op's value is the plan
+//! result. [`validate_plan`] enforces that shape plus the size and dim
+//! caps, and runs on **both** ends — at compile time client-side and
+//! again after wire decode server-side — so a hostile peer cannot ship
+//! an op list the executor would trip over.
+//!
+//! The text syntax is lexed and parsed by a plain recursive-descent
+//! pipeline with hard input caps ([`MAX_EXPR_LEN`], [`MAX_DEPTH`]):
+//! arbitrary bytes never panic — every rejection is a typed
+//! [`D4mError::Parse`] naming the byte offset. Grammar:
+//!
+//! ```text
+//! plan    := expr ('=>' IDENT)?
+//! expr    := mul (('+' | '-') mul)*
+//! mul     := postfix (('*' | '.*') postfix)*
+//! postfix := atom ('(' sel ',' sel ')')*
+//! atom    := IDENT                       table scan
+//!          | FUNC '(' args ')'           sum/scale/transpose/catkeymul/
+//!          |                             emin/emax/limit
+//!          | '(' expr ')'
+//! sel     := STR | ':'                   via util::parse_keysel
+//! ```
+//!
+//! `*` is key-aligned matrix multiply, `.*` elementwise multiply, `+`/`-`
+//! the union-pattern elementwise ops. Selector strings use the D4M
+//! forms shared with the CLI (`'a,b,'` keys, `'a,:,b,'` range, `'a*'`
+//! prefix, `':'` all — [`crate::util::parse_keysel`]). The function
+//! names are reserved words: a table cannot be named `sum`, `scale`,
+//! `transpose`, `catkeymul`, `emin`, `emax` or `limit`.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::assoc::KeySel;
+use crate::error::{D4mError, Result};
+use crate::util::parse_keysel;
+
+/// Hard cap on compiled plan length, enforced at compile time and again
+/// at wire decode (a hostile peer cannot make the executor walk an
+/// unbounded program).
+pub const MAX_PLAN_OPS: usize = 1024;
+/// Hard cap on text-expression length fed to the parser.
+pub const MAX_EXPR_LEN: usize = 64 * 1024;
+/// Hard cap on parser recursion depth (nested parentheses / calls).
+pub const MAX_DEPTH: usize = 64;
+
+/// One op of a compiled plan. `src`/`a`/`b` are indices of earlier ops
+/// (SSA refs); [`validate_plan`] guarantees they point strictly
+/// backwards. Wire tags are the variant order (0 = `Load` … 12 =
+/// `Store`) — see `net::wire`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanOp {
+    /// Scan a table with pushdown selectors + limit (a leaf).
+    Load { table: String, rows: KeySel, cols: KeySel, limit: Option<usize> },
+    /// `src(rows, cols)` — subsref of an earlier result. The executor
+    /// folds a select over a still-unforced scan into its pushdown
+    /// query instead of materialising.
+    Select { src: usize, rows: KeySel, cols: KeySel },
+    /// Transpose.
+    Transpose { src: usize },
+    /// Key-aligned matrix multiply `a * b`.
+    MatMul { a: usize, b: usize },
+    /// Provenance-tracking multiply (string-valued result).
+    CatKeyMul { a: usize, b: usize },
+    /// Union-pattern elementwise add.
+    ElemAdd { a: usize, b: usize },
+    /// Union-pattern elementwise subtract.
+    ElemSub { a: usize, b: usize },
+    /// Intersection-pattern elementwise multiply (`.*`).
+    ElemMult { a: usize, b: usize },
+    /// Intersection-pattern elementwise min.
+    ElemMin { a: usize, b: usize },
+    /// Union-pattern elementwise max.
+    ElemMax { a: usize, b: usize },
+    /// `sum(src, dim)`, dim ∈ {1, 2}. The executor streams a reduce
+    /// over a pending matmul without materialising the product.
+    Reduce { src: usize, dim: usize },
+    /// Scalar multiply.
+    Scale { src: usize, factor: f64 },
+    /// Write the result into a server table (the one write op; its
+    /// presence makes the whole plan non-idempotent).
+    Store { src: usize, table: String },
+}
+
+/// Check the SSA shape of a compiled plan: non-empty, within
+/// [`MAX_PLAN_OPS`], every ref strictly backwards, every reduce dim in
+/// {1, 2}. Run client-side at compile time and server-side after wire
+/// decode.
+pub fn validate_plan(ops: &[PlanOp]) -> Result<()> {
+    if ops.is_empty() {
+        return Err(D4mError::InvalidArg("empty plan".into()));
+    }
+    if ops.len() > MAX_PLAN_OPS {
+        return Err(D4mError::InvalidArg(format!(
+            "plan has {} ops, cap is {MAX_PLAN_OPS}",
+            ops.len()
+        )));
+    }
+    for (i, op) in ops.iter().enumerate() {
+        let back = |s: usize| -> Result<()> {
+            if s >= i {
+                return Err(D4mError::InvalidArg(format!(
+                    "plan op {i} references slot {s}, which is not strictly before it"
+                )));
+            }
+            Ok(())
+        };
+        match op {
+            PlanOp::Load { .. } => {}
+            PlanOp::Select { src, .. }
+            | PlanOp::Transpose { src }
+            | PlanOp::Scale { src, .. }
+            | PlanOp::Store { src, .. } => back(*src)?,
+            PlanOp::Reduce { src, dim } => {
+                back(*src)?;
+                if *dim != 1 && *dim != 2 {
+                    return Err(D4mError::InvalidArg(format!(
+                        "plan op {i}: reduce dim must be 1 or 2, got {dim}"
+                    )));
+                }
+            }
+            PlanOp::MatMul { a, b }
+            | PlanOp::CatKeyMul { a, b }
+            | PlanOp::ElemAdd { a, b }
+            | PlanOp::ElemSub { a, b }
+            | PlanOp::ElemMult { a, b }
+            | PlanOp::ElemMin { a, b }
+            | PlanOp::ElemMax { a, b } => {
+                back(*a)?;
+                back(*b)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Whether replaying a plan is safe: true iff it contains no
+/// [`PlanOp::Store`]. The healing client and `Request::is_idempotent`
+/// gate auto-retry on this.
+pub fn plan_is_idempotent(ops: &[PlanOp]) -> bool {
+    !ops.iter().any(|op| matches!(op, PlanOp::Store { .. }))
+}
+
+// ----------------------------------------------------------------------
+// the lazy builder graph
+
+#[derive(Debug)]
+enum Node {
+    Table { name: String, rows: KeySel, cols: KeySel, limit: Option<usize> },
+    Select { src: Rc<Node>, rows: KeySel, cols: KeySel },
+    Transpose { src: Rc<Node> },
+    Bin { kind: BinKind, a: Rc<Node>, b: Rc<Node> },
+    Reduce { src: Rc<Node>, dim: usize },
+    Scale { src: Rc<Node>, factor: f64 },
+    Store { src: Rc<Node>, table: String },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BinKind {
+    MatMul,
+    CatKeyMul,
+    Add,
+    Sub,
+    Mult,
+    Min,
+    Max,
+}
+
+/// A lazy D4M expression: a shared-subexpression DAG built by chaining
+/// methods (nothing executes until the compiled ops reach a server).
+/// Cloning a `Plan` and reusing it as an operand shares the node —
+/// [`Plan::compile`] emits each shared subexpression once.
+///
+/// ```
+/// use d4m::assoc::{expr::Plan, KeySel};
+/// let g = Plan::table("E");
+/// let ops = g
+///     .select(KeySel::Range("a".into(), "m".into()), KeySel::All)
+///     .matmul(&g)
+///     .sum(2)
+///     .compile()
+///     .unwrap();
+/// assert_eq!(ops.len(), 4); // load, select, matmul (load shared), reduce
+/// ```
+#[derive(Debug, Clone)]
+pub struct Plan {
+    node: Rc<Node>,
+}
+
+impl Plan {
+    fn wrap(node: Node) -> Plan {
+        Plan { node: Rc::new(node) }
+    }
+
+    /// A full scan of `name` — the leaf every expression starts from.
+    pub fn table(name: &str) -> Plan {
+        Plan::wrap(Node::Table {
+            name: name.to_string(),
+            rows: KeySel::All,
+            cols: KeySel::All,
+            limit: None,
+        })
+    }
+
+    /// `self(rows, cols)` — subsref. On a table leaf the executor folds
+    /// the selectors into the pushdown query.
+    pub fn select(&self, rows: KeySel, cols: KeySel) -> Plan {
+        Plan::wrap(Node::Select { src: self.node.clone(), rows, cols })
+    }
+
+    /// Keep at most `n` entries (row-major key order). Valid only
+    /// directly on a table scan — the limit is part of the pushdown
+    /// query, not an algebraic op.
+    pub fn limit(&self, n: usize) -> Result<Plan> {
+        match &*self.node {
+            Node::Table { name, rows, cols, .. } => Ok(Plan::wrap(Node::Table {
+                name: name.clone(),
+                rows: rows.clone(),
+                cols: cols.clone(),
+                limit: Some(n),
+            })),
+            _ => Err(D4mError::InvalidArg(
+                "limit() applies to table scans only".into(),
+            )),
+        }
+    }
+
+    /// Table scan with explicit selectors (one node instead of
+    /// `table(..).select(..)` — the common pushdown form).
+    pub fn table_sel(name: &str, rows: KeySel, cols: KeySel) -> Plan {
+        Plan::wrap(Node::Table { name: name.to_string(), rows, cols, limit: None })
+    }
+
+    pub fn transpose(&self) -> Plan {
+        Plan::wrap(Node::Transpose { src: self.node.clone() })
+    }
+
+    fn bin(&self, kind: BinKind, other: &Plan) -> Plan {
+        Plan::wrap(Node::Bin { kind, a: self.node.clone(), b: other.node.clone() })
+    }
+
+    /// Key-aligned matrix multiply `self * other`.
+    pub fn matmul(&self, other: &Plan) -> Plan {
+        self.bin(BinKind::MatMul, other)
+    }
+
+    /// Provenance-tracking multiply (string-valued result).
+    pub fn catkeymul(&self, other: &Plan) -> Plan {
+        self.bin(BinKind::CatKeyMul, other)
+    }
+
+    /// Union-pattern elementwise add.
+    pub fn add(&self, other: &Plan) -> Plan {
+        self.bin(BinKind::Add, other)
+    }
+
+    /// Union-pattern elementwise subtract.
+    pub fn sub(&self, other: &Plan) -> Plan {
+        self.bin(BinKind::Sub, other)
+    }
+
+    /// Intersection-pattern elementwise multiply.
+    pub fn elem_mult(&self, other: &Plan) -> Plan {
+        self.bin(BinKind::Mult, other)
+    }
+
+    /// Intersection-pattern elementwise min.
+    pub fn elem_min(&self, other: &Plan) -> Plan {
+        self.bin(BinKind::Min, other)
+    }
+
+    /// Union-pattern elementwise max.
+    pub fn elem_max(&self, other: &Plan) -> Plan {
+        self.bin(BinKind::Max, other)
+    }
+
+    /// `sum(self, dim)`: dim 1 sums down columns, 2 across rows
+    /// (validated at [`Plan::compile`]).
+    pub fn sum(&self, dim: usize) -> Plan {
+        Plan::wrap(Node::Reduce { src: self.node.clone(), dim })
+    }
+
+    /// Scalar multiply.
+    pub fn scale(&self, factor: f64) -> Plan {
+        Plan::wrap(Node::Scale { src: self.node.clone(), factor })
+    }
+
+    /// Write the result into server table `table` (`=> table` in the
+    /// text syntax). Makes the plan non-idempotent.
+    pub fn store_into(&self, table: &str) -> Plan {
+        Plan::wrap(Node::Store { src: self.node.clone(), table: table.to_string() })
+    }
+
+    /// Parse the compact text syntax into a plan (see the module doc
+    /// for the grammar). Hostile-input-safe: any byte sequence either
+    /// parses or returns a typed [`D4mError::Parse`] with a position.
+    pub fn parse(src: &str) -> Result<Plan> {
+        parse_text(src)
+    }
+
+    /// Flatten the DAG into the SSA op list shipped as
+    /// `Request::Plan`. Shared subexpressions (`Rc` pointer identity)
+    /// are emitted once; the result is [`validate_plan`]-clean by
+    /// construction or a typed error (bad reduce dim, oversized plan).
+    pub fn compile(&self) -> Result<Vec<PlanOp>> {
+        let mut ops: Vec<PlanOp> = Vec::new();
+        let mut memo: HashMap<usize, usize> = HashMap::new();
+        let root = self.node.clone();
+        emit(&root, &mut ops, &mut memo)?;
+        validate_plan(&ops)?;
+        Ok(ops)
+    }
+}
+
+/// Post-order emit with pointer-identity memoisation. Plans are bounded
+/// by [`MAX_PLAN_OPS`] distinct nodes, so recursion depth is bounded
+/// too (the parser additionally caps nesting at [`MAX_DEPTH`]).
+fn emit(node: &Rc<Node>, ops: &mut Vec<PlanOp>, memo: &mut HashMap<usize, usize>) -> Result<usize> {
+    let key = Rc::as_ptr(node) as usize;
+    if let Some(&slot) = memo.get(&key) {
+        return Ok(slot);
+    }
+    if ops.len() >= MAX_PLAN_OPS {
+        return Err(D4mError::InvalidArg(format!(
+            "plan exceeds the {MAX_PLAN_OPS}-op cap"
+        )));
+    }
+    let op = match &**node {
+        Node::Table { name, rows, cols, limit } => PlanOp::Load {
+            table: name.clone(),
+            rows: rows.clone(),
+            cols: cols.clone(),
+            limit: *limit,
+        },
+        Node::Select { src, rows, cols } => {
+            let s = emit(src, ops, memo)?;
+            PlanOp::Select { src: s, rows: rows.clone(), cols: cols.clone() }
+        }
+        Node::Transpose { src } => {
+            let s = emit(src, ops, memo)?;
+            PlanOp::Transpose { src: s }
+        }
+        Node::Bin { kind, a, b } => {
+            let sa = emit(a, ops, memo)?;
+            let sb = emit(b, ops, memo)?;
+            match kind {
+                BinKind::MatMul => PlanOp::MatMul { a: sa, b: sb },
+                BinKind::CatKeyMul => PlanOp::CatKeyMul { a: sa, b: sb },
+                BinKind::Add => PlanOp::ElemAdd { a: sa, b: sb },
+                BinKind::Sub => PlanOp::ElemSub { a: sa, b: sb },
+                BinKind::Mult => PlanOp::ElemMult { a: sa, b: sb },
+                BinKind::Min => PlanOp::ElemMin { a: sa, b: sb },
+                BinKind::Max => PlanOp::ElemMax { a: sa, b: sb },
+            }
+        }
+        Node::Reduce { src, dim } => {
+            let s = emit(src, ops, memo)?;
+            if *dim != 1 && *dim != 2 {
+                return Err(D4mError::InvalidArg(format!(
+                    "sum dim must be 1 or 2, got {dim}"
+                )));
+            }
+            PlanOp::Reduce { src: s, dim: *dim }
+        }
+        Node::Scale { src, factor } => {
+            let s = emit(src, ops, memo)?;
+            PlanOp::Scale { src: s, factor: *factor }
+        }
+        Node::Store { src, table } => {
+            let s = emit(src, ops, memo)?;
+            PlanOp::Store { src: s, table: table.clone() }
+        }
+    };
+    if ops.len() >= MAX_PLAN_OPS {
+        return Err(D4mError::InvalidArg(format!(
+            "plan exceeds the {MAX_PLAN_OPS}-op cap"
+        )));
+    }
+    ops.push(op);
+    let slot = ops.len() - 1;
+    memo.insert(key, slot);
+    Ok(slot)
+}
+
+// ----------------------------------------------------------------------
+// lexer
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Ident(String),
+    Str(String),
+    Num(f64),
+    LParen,
+    RParen,
+    Comma,
+    Colon,
+    Plus,
+    Minus,
+    Star,
+    DotStar,
+    Arrow,
+}
+
+fn perr(at: usize, msg: impl Into<String>) -> D4mError {
+    D4mError::Parse(format!("plan expr, byte {at}: {}", msg.into()))
+}
+
+fn lex(src: &str) -> Result<Vec<(usize, Tok)>> {
+    if src.len() > MAX_EXPR_LEN {
+        return Err(D4mError::Parse(format!(
+            "plan expr is {} bytes, cap is {MAX_EXPR_LEN}",
+            src.len()
+        )));
+    }
+    let bytes = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let at = i;
+        let b = bytes[i];
+        match b {
+            b' ' | b'\t' | b'\r' | b'\n' => i += 1,
+            b'(' => {
+                toks.push((at, Tok::LParen));
+                i += 1;
+            }
+            b')' => {
+                toks.push((at, Tok::RParen));
+                i += 1;
+            }
+            b',' => {
+                toks.push((at, Tok::Comma));
+                i += 1;
+            }
+            b':' => {
+                toks.push((at, Tok::Colon));
+                i += 1;
+            }
+            b'+' => {
+                toks.push((at, Tok::Plus));
+                i += 1;
+            }
+            b'-' => {
+                toks.push((at, Tok::Minus));
+                i += 1;
+            }
+            b'*' => {
+                toks.push((at, Tok::Star));
+                i += 1;
+            }
+            b'.' => {
+                if bytes.get(i + 1) == Some(&b'*') {
+                    toks.push((at, Tok::DotStar));
+                    i += 2;
+                } else {
+                    return Err(perr(at, "'.' must be followed by '*'"));
+                }
+            }
+            b'=' => {
+                if bytes.get(i + 1) == Some(&b'>') {
+                    toks.push((at, Tok::Arrow));
+                    i += 2;
+                } else {
+                    return Err(perr(at, "'=' must be followed by '>'"));
+                }
+            }
+            b'\'' => {
+                // single-quoted selector string, no escapes
+                let start = i + 1;
+                let mut j = start;
+                while j < bytes.len() && bytes[j] != b'\'' {
+                    j += 1;
+                }
+                if j >= bytes.len() {
+                    return Err(perr(at, "unterminated selector string"));
+                }
+                let s = std::str::from_utf8(&bytes[start..j])
+                    .map_err(|_| perr(at, "selector string is not UTF-8"))?;
+                toks.push((at, Tok::Str(s.to_string())));
+                i = j + 1;
+            }
+            b'0'..=b'9' => {
+                let mut j = i;
+                while j < bytes.len() && (bytes[j].is_ascii_digit() || bytes[j] == b'.') {
+                    j += 1;
+                }
+                let s = std::str::from_utf8(&bytes[i..j]).expect("digits are UTF-8");
+                let n: f64 =
+                    s.parse().map_err(|_| perr(at, format!("bad number '{s}'")))?;
+                toks.push((at, Tok::Num(n)));
+                i = j;
+            }
+            b'A'..=b'Z' | b'a'..=b'z' | b'_' => {
+                let mut j = i;
+                while j < bytes.len()
+                    && (bytes[j].is_ascii_alphanumeric() || bytes[j] == b'_')
+                {
+                    j += 1;
+                }
+                let s = std::str::from_utf8(&bytes[i..j]).expect("idents are ASCII");
+                toks.push((at, Tok::Ident(s.to_string())));
+                i = j;
+            }
+            _ => return Err(perr(at, format!("unexpected byte 0x{b:02x}"))),
+        }
+    }
+    Ok(toks)
+}
+
+// ----------------------------------------------------------------------
+// parser
+
+const FUNCS: &[&str] = &["sum", "scale", "transpose", "catkeymul", "emin", "emax", "limit"];
+
+struct Parser {
+    toks: Vec<(usize, Tok)>,
+    pos: usize,
+    end: usize,
+    depth: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|(_, t)| t)
+    }
+
+    fn at(&self) -> usize {
+        self.toks.get(self.pos).map(|(a, _)| *a).unwrap_or(self.end)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).map(|(_, t)| t.clone());
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, want: &Tok, what: &str) -> Result<()> {
+        let at = self.at();
+        match self.next() {
+            Some(t) if &t == want => Ok(()),
+            Some(t) => Err(perr(at, format!("expected {what}, found {t:?}"))),
+            None => Err(perr(at, format!("expected {what}, found end of input"))),
+        }
+    }
+
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(perr(self.at(), format!("nesting deeper than {MAX_DEPTH}")));
+        }
+        Ok(())
+    }
+
+    fn leave(&mut self) {
+        self.depth -= 1;
+    }
+
+    /// expr := mul (('+' | '-') mul)*
+    fn expr(&mut self) -> Result<Plan> {
+        self.enter()?;
+        let mut lhs = self.mul()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Plus) => {
+                    self.next();
+                    let rhs = self.mul()?;
+                    lhs = lhs.add(&rhs);
+                }
+                Some(Tok::Minus) => {
+                    self.next();
+                    let rhs = self.mul()?;
+                    lhs = lhs.sub(&rhs);
+                }
+                _ => break,
+            }
+        }
+        self.leave();
+        Ok(lhs)
+    }
+
+    /// mul := postfix (('*' | '.*') postfix)*
+    fn mul(&mut self) -> Result<Plan> {
+        let mut lhs = self.postfix()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Star) => {
+                    self.next();
+                    let rhs = self.postfix()?;
+                    lhs = lhs.matmul(&rhs);
+                }
+                Some(Tok::DotStar) => {
+                    self.next();
+                    let rhs = self.postfix()?;
+                    lhs = lhs.elem_mult(&rhs);
+                }
+                _ => break,
+            }
+        }
+        Ok(lhs)
+    }
+
+    /// postfix := atom ('(' sel ',' sel ')')*
+    fn postfix(&mut self) -> Result<Plan> {
+        let mut e = self.atom()?;
+        while self.peek() == Some(&Tok::LParen) {
+            self.next();
+            let rows = self.sel()?;
+            self.expect(&Tok::Comma, "','")?;
+            let cols = self.sel()?;
+            self.expect(&Tok::RParen, "')'")?;
+            e = self.apply_select(e, rows, cols);
+        }
+        Ok(e)
+    }
+
+    /// A select directly on a table leaf folds into the scan node (the
+    /// pushdown form); anything else becomes a Select op.
+    fn apply_select(&mut self, e: Plan, rows: KeySel, cols: KeySel) -> Plan {
+        if let Node::Table { name, rows: KeySel::All, cols: KeySel::All, limit: None } = &*e.node
+        {
+            return Plan::table_sel(name, rows, cols);
+        }
+        e.select(rows, cols)
+    }
+
+    /// sel := STR | ':'
+    fn sel(&mut self) -> Result<KeySel> {
+        let at = self.at();
+        match self.next() {
+            Some(Tok::Str(s)) => Ok(parse_keysel(&s)),
+            Some(Tok::Colon) => Ok(KeySel::All),
+            Some(t) => Err(perr(at, format!("expected a selector string or ':', found {t:?}"))),
+            None => Err(perr(at, "expected a selector, found end of input")),
+        }
+    }
+
+    fn num(&mut self, what: &str) -> Result<f64> {
+        let at = self.at();
+        let neg = if self.peek() == Some(&Tok::Minus) {
+            self.next();
+            true
+        } else {
+            false
+        };
+        match self.next() {
+            Some(Tok::Num(n)) => Ok(if neg { -n } else { n }),
+            Some(t) => Err(perr(at, format!("expected {what}, found {t:?}"))),
+            None => Err(perr(at, format!("expected {what}, found end of input"))),
+        }
+    }
+
+    fn atom(&mut self) -> Result<Plan> {
+        let at = self.at();
+        match self.next() {
+            Some(Tok::LParen) => {
+                self.enter()?;
+                let e = self.expr()?;
+                self.expect(&Tok::RParen, "')'")?;
+                self.leave();
+                Ok(e)
+            }
+            Some(Tok::Ident(name)) => {
+                if FUNCS.contains(&name.as_str()) {
+                    self.func(at, &name)
+                } else {
+                    Ok(Plan::table(&name))
+                }
+            }
+            Some(t) => Err(perr(at, format!("expected a table, function or '(', found {t:?}"))),
+            None => Err(perr(at, "expected an expression, found end of input")),
+        }
+    }
+
+    fn func(&mut self, at: usize, name: &str) -> Result<Plan> {
+        self.enter()?;
+        self.expect(&Tok::LParen, "'('")?;
+        let out = match name {
+            "transpose" => {
+                let e = self.expr()?;
+                e.transpose()
+            }
+            "sum" => {
+                let e = self.expr()?;
+                self.expect(&Tok::Comma, "','")?;
+                let d = self.num("a dim (1 or 2)")?;
+                if d != 1.0 && d != 2.0 {
+                    return Err(perr(at, format!("sum dim must be 1 or 2, got {d}")));
+                }
+                e.sum(d as usize)
+            }
+            "scale" => {
+                let e = self.expr()?;
+                self.expect(&Tok::Comma, "','")?;
+                let f = self.num("a scale factor")?;
+                e.scale(f)
+            }
+            "limit" => {
+                let e = self.expr()?;
+                self.expect(&Tok::Comma, "','")?;
+                let n = self.num("a limit")?;
+                if n < 0.0 || n.fract() != 0.0 {
+                    return Err(perr(at, format!("limit must be a non-negative integer, got {n}")));
+                }
+                e.limit(n as usize)
+                    .map_err(|e| perr(at, e.to_string()))?
+            }
+            "catkeymul" | "emin" | "emax" => {
+                let a = self.expr()?;
+                self.expect(&Tok::Comma, "','")?;
+                let b = self.expr()?;
+                match name {
+                    "catkeymul" => a.catkeymul(&b),
+                    "emin" => a.elem_min(&b),
+                    _ => a.elem_max(&b),
+                }
+            }
+            _ => unreachable!("FUNCS and this match are kept in sync"),
+        };
+        self.expect(&Tok::RParen, "')'")?;
+        self.leave();
+        Ok(out)
+    }
+}
+
+fn parse_text(src: &str) -> Result<Plan> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0, end: src.len(), depth: 0 };
+    let mut plan = p.expr()?;
+    if p.peek() == Some(&Tok::Arrow) {
+        p.next();
+        let at = p.at();
+        match p.next() {
+            Some(Tok::Ident(table)) => plan = plan.store_into(&table),
+            Some(t) => return Err(perr(at, format!("expected a table name after '=>', found {t:?}"))),
+            None => return Err(perr(at, "expected a table name after '=>'")),
+        }
+    }
+    if let Some(t) = p.peek() {
+        return Err(perr(p.at(), format!("trailing input: {t:?}")));
+    }
+    plan.compile()?; // surface structural errors (bad dim, size) at parse time
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::forall;
+
+    #[test]
+    fn builder_compiles_in_ssa_order_with_sharing() {
+        let g = Plan::table("G");
+        let ops = g
+            .select(KeySel::Range("a".into(), "m".into()), KeySel::All)
+            .matmul(&g)
+            .sum(2)
+            .compile()
+            .unwrap();
+        // load G, select, (G shared -> same slot), matmul, reduce
+        assert_eq!(ops.len(), 4);
+        assert!(matches!(&ops[0], PlanOp::Load { table, .. } if table == "G"));
+        assert!(matches!(&ops[1], PlanOp::Select { src: 0, .. }));
+        assert!(matches!(&ops[2], PlanOp::MatMul { a: 1, b: 0 }));
+        assert!(matches!(&ops[3], PlanOp::Reduce { src: 2, dim: 2 }));
+        validate_plan(&ops).unwrap();
+    }
+
+    #[test]
+    fn text_and_builder_compile_identically() {
+        let text = Plan::parse("sum(G('a,:,m,', ':') * G, 2)").unwrap().compile().unwrap();
+        let g = Plan::table("G");
+        let built = g
+            .select(KeySel::Range("a".into(), "m".into()), KeySel::All)
+            .matmul(&g)
+            .sum(2)
+            .compile()
+            .unwrap();
+        // the parser folds the select into the scan, the builder emits a
+        // distinct Select op — same semantics, assert both validate and
+        // reference the same table
+        validate_plan(&text).unwrap();
+        assert!(matches!(&text[0], PlanOp::Load { table, rows: KeySel::Range(lo, hi), .. }
+            if table == "G" && lo == "a" && hi == "m"));
+        assert!(matches!(built.last(), Some(PlanOp::Reduce { dim: 2, .. })));
+        assert!(matches!(text.last(), Some(PlanOp::Reduce { dim: 2, .. })));
+    }
+
+    #[test]
+    fn text_ops_cover_the_grammar() {
+        let cases = [
+            "A + B",
+            "A - B",
+            "A .* B",
+            "A * B * C",
+            "transpose(A) * A",
+            "scale(sum(A, 1), 0.5)",
+            "emin(A, B) + emax(A, B)",
+            "catkeymul(A('x*', ':'), B)",
+            "limit(A, 10) * B",
+            "sum(A('a,b,c,', ':') * B, 2) => out",
+            "(A + B) .* (A - B)",
+        ];
+        for c in cases {
+            let ops = Plan::parse(c).unwrap().compile().unwrap();
+            validate_plan(&ops).unwrap_or_else(|e| panic!("{c}: {e}"));
+        }
+    }
+
+    #[test]
+    fn store_arrow_emits_store_op_and_kills_idempotency() {
+        let ops = Plan::parse("A * B => C").unwrap().compile().unwrap();
+        assert!(matches!(ops.last(), Some(PlanOp::Store { table, .. }) if table == "C"));
+        assert!(!plan_is_idempotent(&ops));
+        let ro = Plan::parse("A * B").unwrap().compile().unwrap();
+        assert!(plan_is_idempotent(&ro));
+    }
+
+    #[test]
+    fn parse_rejections_are_typed_with_position() {
+        let bad = [
+            "",
+            "sum(A)",            // missing dim
+            "sum(A, 3)",         // bad dim
+            "A('a,' 'b,')",      // missing comma
+            "A +",               // dangling op
+            "A => ",             // missing store table
+            "A) B",              // trailing input
+            "'lone selector'",   // selector is not an expression
+            "A .+ B",            // bad operator
+            "limit(A + B, 5)",   // limit off a non-scan
+            "A ('a,', ':'",      // unterminated paren
+            "A('a",              // unterminated string
+            &"(".repeat(MAX_DEPTH + 2), // nesting bomb
+        ];
+        for b in bad {
+            match Plan::parse(b) {
+                Err(D4mError::Parse(msg)) => {
+                    assert!(!msg.is_empty(), "empty parse error for {b:?}")
+                }
+                Err(D4mError::InvalidArg(_)) => {}
+                other => panic!("{b:?}: expected a typed parse error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_input_is_rejected_not_lexed() {
+        let huge = "A".repeat(MAX_EXPR_LEN + 1);
+        assert!(matches!(Plan::parse(&huge), Err(D4mError::Parse(_))));
+    }
+
+    #[test]
+    fn random_bytes_never_panic_always_typed() {
+        forall(500, 0xD4A1_9E57, |rng| {
+            let len = (rng.next_u64() % 80) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() % 256) as u8).collect();
+            let s = String::from_utf8_lossy(&bytes).into_owned();
+            match Plan::parse(&s) {
+                Ok(p) => {
+                    p.compile().unwrap(); // parse implies compilable
+                }
+                Err(D4mError::Parse(_)) | Err(D4mError::InvalidArg(_)) => {}
+                Err(other) => panic!("untyped parser error: {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn mutated_valid_exprs_never_panic() {
+        let seed_expr = "sum(G('a,:,m,', ':') * transpose(H), 2) => out";
+        forall(500, 0x5EED_9A25, |rng| {
+            let mut b = seed_expr.as_bytes().to_vec();
+            let flips = 1 + (rng.next_u64() % 4) as usize;
+            for _ in 0..flips {
+                let i = (rng.next_u64() as usize) % b.len();
+                b[i] = (rng.next_u64() % 256) as u8;
+            }
+            let s = String::from_utf8_lossy(&b).into_owned();
+            match Plan::parse(&s) {
+                Ok(p) => {
+                    p.compile().unwrap();
+                }
+                Err(D4mError::Parse(_)) | Err(D4mError::InvalidArg(_)) => {}
+                Err(other) => panic!("untyped parser error: {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn validate_rejects_forward_and_self_refs() {
+        let fwd = vec![
+            PlanOp::Load { table: "A".into(), rows: KeySel::All, cols: KeySel::All, limit: None },
+            PlanOp::MatMul { a: 0, b: 2 },
+        ];
+        assert!(validate_plan(&fwd).is_err());
+        let selfref = vec![PlanOp::Transpose { src: 0 }];
+        assert!(validate_plan(&selfref).is_err());
+        assert!(validate_plan(&[]).is_err());
+        let bad_dim = vec![
+            PlanOp::Load { table: "A".into(), rows: KeySel::All, cols: KeySel::All, limit: None },
+            PlanOp::Reduce { src: 0, dim: 3 },
+        ];
+        assert!(validate_plan(&bad_dim).is_err());
+    }
+}

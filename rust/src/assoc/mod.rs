@@ -19,6 +19,7 @@
 //! key, no per-triple binary search), and key selection binary-searches
 //! the sorted key vectors instead of scanning them.
 
+pub mod expr;
 pub mod io;
 pub mod kernel;
 pub mod text;
@@ -503,6 +504,89 @@ impl Assoc {
                 Assoc::from_triples(&triples)
             }
             _ => panic!("sum dim must be 1 or 2"),
+        }
+    }
+
+    /// Fused `self.matmul(other).sum(dim)`: the contraction streams
+    /// straight into the reduction, one product row at a time — the
+    /// product CSR (and its `Assoc`) is never built. This is the kernel
+    /// behind the plan executor's select→matmul→reduce fusion
+    /// (DESIGN.md §Plan language).
+    ///
+    /// Bit-identical to the two-step form by construction: per output
+    /// cell the additions arrive in the same ascending-k order the
+    /// SpGEMM accumulator uses (both its variants), cells that cancel to
+    /// exactly `0.0` are dropped exactly where the product would drop
+    /// them, and the fold then walks surviving cells in the same
+    /// ascending `(row, col)` order `row_sums`/`col_sums` walk the
+    /// stored product.
+    pub fn matmul_sum(&self, other: &Assoc, dim: usize) -> Assoc {
+        assert!(dim == 1 || dim == 2, "sum dim must be 1 or 2");
+        let a = self.numeric_view();
+        let b = other.numeric_view();
+        let (_, ia, ib) = intersect_sorted_keys(&a.col_keys, &b.row_keys);
+        // A-column index -> contracted B-row index (usize::MAX = not shared)
+        let mut row_of = vec![usize::MAX; a.col_keys.len()];
+        for (t, &c) in ia.iter().enumerate() {
+            row_of[c] = ib[t];
+        }
+        let nc = b.mat.nc;
+        let mut acc = vec![0f64; nc];
+        let mut seen = vec![false; nc];
+        let mut touched: Vec<usize> = Vec::new();
+        let mut col_tot = vec![0f64; if dim == 1 { nc } else { 0 }];
+        let mut row_triples: Vec<(&str, &str, f64)> = Vec::new();
+        for r in 0..a.mat.nr {
+            for (k, av) in a.mat.row(r) {
+                let br = row_of[k];
+                if br == usize::MAX {
+                    continue;
+                }
+                for (c, bv) in b.mat.row(br) {
+                    if !seen[c] {
+                        seen[c] = true;
+                        touched.push(c);
+                    }
+                    acc[c] += av * bv;
+                }
+            }
+            touched.sort_unstable();
+            if dim == 1 {
+                for &c in &touched {
+                    // cells that cancel to 0.0 would not be stored in the
+                    // product, so col_sums would never see them
+                    if acc[c] != 0.0 {
+                        col_tot[c] += acc[c];
+                    }
+                    acc[c] = 0.0;
+                    seen[c] = false;
+                }
+            } else {
+                let mut row_total = 0f64;
+                for &c in &touched {
+                    if acc[c] != 0.0 {
+                        row_total += acc[c];
+                    }
+                    acc[c] = 0.0;
+                    seen[c] = false;
+                }
+                if row_total != 0.0 {
+                    row_triples.push((a.row_keys[r].as_str(), "", row_total));
+                }
+            }
+            touched.clear();
+        }
+        if dim == 1 {
+            let triples: Vec<(&str, &str, f64)> = b
+                .col_keys
+                .iter()
+                .zip(col_tot.iter())
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(c, &v)| ("", c.as_str(), v))
+                .collect();
+            Assoc::from_triples(&triples)
+        } else {
+            Assoc::from_triples(&row_triples)
         }
     }
 

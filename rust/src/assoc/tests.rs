@@ -324,6 +324,28 @@ fn prop_sum2_matches_oracle_rowsums() {
 }
 
 #[test]
+fn prop_matmul_sum_fused_bit_identical() {
+    // the plan executor's fused reduce: matmul_sum must equal
+    // matmul-then-sum to the BIT (assert_eq on the Assoc, no tolerance),
+    // numeric and string-valued operands, both dims, including the
+    // empty-contraction edge (disjoint inner keys)
+    forall(60, 0xF05ED5, |rng| {
+        let (a, _) = assoc_pair(rng);
+        let (b, _) = assoc_pair(rng);
+        let bt = b.transpose(); // rows cXX — real contraction with a's cols
+        assert_eq!(a.matmul_sum(&bt, 1), a.matmul(&bt).sum(1));
+        assert_eq!(a.matmul_sum(&bt, 2), a.matmul(&bt).sum(2));
+        // disjoint inner keys: both sides empty, still identical
+        assert_eq!(a.matmul_sum(&b, 1), a.matmul(&b).sum(1));
+        // string-valued operands coerce through the same numeric_view
+        let (s, _) = str_pair(rng);
+        let st = s.transpose();
+        assert_eq!(s.matmul_sum(&st, 1), s.matmul(&st).sum(1));
+        assert_eq!(a.matmul_sum(&st, 2), a.matmul(&st).sum(2));
+    });
+}
+
+#[test]
 fn prop_distributive_matmul_over_add() {
     // A(B + C) == AB + AC
     forall(30, 0xD15, |rng| {

@@ -27,6 +27,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::assoc::expr::{self, PlanOp};
 use crate::assoc::Assoc;
 use crate::connectors::TableQuery;
 use crate::error::{D4mError, Result};
@@ -34,7 +35,8 @@ use crate::graphulo::{PageRankOpts, PageRankResult, TableMultStats};
 use crate::pipeline::{IngestReport, PipelineConfig, TripleMsg};
 
 use super::cursor::CursorPage;
-use super::{Request, Response};
+use super::plan::PlanStats;
+use super::{ExecHint, MultDest, Request, Response};
 
 /// The coordinator surface, object-safe. See the module docs.
 pub trait D4mApi: Send + Sync {
@@ -61,6 +63,13 @@ pub trait D4mApi: Send + Sync {
 
     /// Close a cursor early, releasing its snapshot. Idempotent.
     fn cursor_close(&self, cursor: u64) -> Result<()>;
+
+    /// Execute a plan server-side and page its **result** back through
+    /// the cursor machinery instead of one big response: same
+    /// ownership/cap/TTL/resume rules as [`D4mApi::open_cursor`], same
+    /// `cursor_next`/`cursor_close` drain. The plan runs to completion
+    /// (with streaming fusion) before the first page is served.
+    fn open_plan_cursor(&self, ops: &[PlanOp], page_entries: usize) -> Result<u64>;
 
     // ------------------------------------------------------------------
     // typed wrappers — one per request variant
@@ -93,7 +102,13 @@ pub trait D4mApi: Send + Sync {
 
     /// Server-side Graphulo TableMult: `out += A^T B`.
     fn tablemult(&self, a: &str, b: &str, out: &str) -> Result<TableMultStats> {
-        match self.handle(Request::TableMult { a: a.into(), b: b.into(), out: out.into() })? {
+        let req = Request::TableMult {
+            a: a.into(),
+            b: b.into(),
+            dest: MultDest::Table { out: out.into() },
+            exec: ExecHint::Stream,
+        };
+        match self.handle(req)? {
             Response::MultStats(s) => Ok(s),
             other => Err(unexpected("MultStats", &other)),
         }
@@ -101,13 +116,41 @@ pub trait D4mApi: Send + Sync {
 
     /// Client-side D4M TableMult with a RAM budget.
     fn tablemult_client(&self, a: &str, b: &str, memory_limit: usize) -> Result<Assoc> {
-        self.handle(Request::TableMultClient { a: a.into(), b: b.into(), memory_limit })?
-            .into_assoc()
+        self.handle(Request::TableMult {
+            a: a.into(),
+            b: b.into(),
+            dest: MultDest::Client,
+            exec: ExecHint::Memory { limit: memory_limit },
+        })?
+        .into_assoc()
     }
 
     /// Client-side TableMult routed through the blocked dense-GEMM path.
     fn tablemult_dense(&self, a: &str, b: &str, tile: usize) -> Result<Assoc> {
-        self.handle(Request::TableMultDense { a: a.into(), b: b.into(), tile })?.into_assoc()
+        self.handle(Request::TableMult {
+            a: a.into(),
+            b: b.into(),
+            dest: MultDest::Client,
+            exec: ExecHint::Dense { tile },
+        })?
+        .into_assoc()
+    }
+
+    /// Execute a compiled plan server-side in **one round trip**,
+    /// returning the final value plus the executor's fusion counters.
+    fn plan(&self, ops: &[PlanOp]) -> Result<(Assoc, PlanStats)> {
+        match self.handle(Request::Plan { ops: ops.to_vec() })? {
+            Response::PlanResult { result, stats } => Ok((result, stats)),
+            other => Err(unexpected("PlanResult", &other)),
+        }
+    }
+
+    /// Parse, compile, and execute a plan from the compact text syntax
+    /// (see [`crate::assoc::expr`]). Parse errors surface as
+    /// [`D4mError::Parse`] before anything touches the server.
+    fn plan_expr(&self, src: &str) -> Result<(Assoc, PlanStats)> {
+        let ops = expr::Plan::parse(src)?.compile()?;
+        self.plan(&ops)
     }
 
     /// Server-side BFS.
@@ -154,6 +197,17 @@ pub trait D4mApi: Send + Sync {
     {
         ScanPages::new(self, table, query, page_entries)
     }
+
+    /// Lazily-paged plan: execute `ops` server-side and stream the
+    /// result back one bounded page per pull, exactly like
+    /// [`D4mApi::scan_pages`] but sourced from a plan cursor. (On `&dyn
+    /// D4mApi`, construct with [`ScanPages::plan`].)
+    fn plan_pages(&self, ops: &[PlanOp], page_entries: usize) -> ScanPages<'_>
+    where
+        Self: Sized,
+    {
+        ScanPages::plan(self, ops, page_entries)
+    }
 }
 
 fn unexpected(expected: &str, got: &Response) -> D4mError {
@@ -175,11 +229,17 @@ fn unexpected(expected: &str, got: &Response) -> D4mError {
 /// (best-effort), releasing the server-side snapshot promptly.
 pub struct ScanPages<'a> {
     api: &'a dyn D4mApi,
-    table: String,
-    query: TableQuery,
+    source: PageSource,
     page_entries: usize,
     cursor: Option<u64>,
     finished: bool,
+}
+
+/// What a [`ScanPages`] cursor is opened over: a table scan or a
+/// server-side plan whose result is paged back.
+enum PageSource {
+    Table { table: String, query: TableQuery },
+    Plan { ops: Vec<PlanOp> },
 }
 
 impl<'a> ScanPages<'a> {
@@ -187,8 +247,19 @@ impl<'a> ScanPages<'a> {
     pub fn new(api: &'a dyn D4mApi, table: &str, query: TableQuery, page_entries: usize) -> Self {
         ScanPages {
             api,
-            table: table.into(),
-            query,
+            source: PageSource::Table { table: table.into(), query },
+            page_entries: page_entries.max(1),
+            cursor: None,
+            finished: false,
+        }
+    }
+
+    /// Build a paged plan execution over `api` (plan runs when the
+    /// cursor opens on first pull; pages carry the plan's result).
+    pub fn plan(api: &'a dyn D4mApi, ops: &[PlanOp], page_entries: usize) -> Self {
+        ScanPages {
+            api,
+            source: PageSource::Plan { ops: ops.to_vec() },
             page_entries: page_entries.max(1),
             cursor: None,
             finished: false,
@@ -215,16 +286,24 @@ impl Iterator for ScanPages<'_> {
         }
         let id = match self.cursor {
             Some(id) => id,
-            None => match self.api.open_cursor(&self.table, &self.query, self.page_entries) {
-                Ok(id) => {
-                    self.cursor = Some(id);
-                    id
+            None => {
+                let opened = match &self.source {
+                    PageSource::Table { table, query } => {
+                        self.api.open_cursor(table, query, self.page_entries)
+                    }
+                    PageSource::Plan { ops } => self.api.open_plan_cursor(ops, self.page_entries),
+                };
+                match opened {
+                    Ok(id) => {
+                        self.cursor = Some(id);
+                        id
+                    }
+                    Err(e) => {
+                        self.finished = true;
+                        return Some(Err(e));
+                    }
                 }
-                Err(e) => {
-                    self.finished = true;
-                    return Some(Err(e));
-                }
-            },
+            }
         };
         match self.api.cursor_next(id) {
             Ok(page) => {

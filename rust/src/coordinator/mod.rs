@@ -17,15 +17,18 @@
 pub mod api;
 pub mod batcher;
 pub mod cursor;
+pub mod plan;
 
 pub use api::{D4mApi, ScanPages};
 pub use cursor::{CursorPage, CursorResume, LOCAL_OWNER};
+pub use plan::PlanStats;
 
 use std::collections::BTreeMap;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::assoc::expr::PlanOp;
 use crate::assoc::Assoc;
 use crate::connectors::{AccumuloConnector, D4mTable, D4mTableConfig, DbTable, TableQuery};
 use crate::error::{D4mError, Result};
@@ -50,12 +53,16 @@ pub enum Request {
     /// down through the table's [`DbTable`] binding (column selectors
     /// route through the transpose table on the key-value engine).
     Query { table: String, query: TableQuery },
-    /// Server-side Graphulo TableMult: `out += A^T B`.
-    TableMult { a: String, b: String, out: String },
-    /// Client-side D4M TableMult with a RAM budget.
-    TableMultClient { a: String, b: String, memory_limit: usize },
-    /// Client-side TableMult routed through the blocked dense-GEMM path.
-    TableMultDense { a: String, b: String, tile: usize },
+    /// TableMult, unified: where the product goes ([`MultDest`]) and
+    /// which execution strategy computes it ([`ExecHint`]). Replaces the
+    /// retired `TableMult`/`TableMultClient`/`TableMultDense` triplet
+    /// (wire v3 tags 3/4/5 — decoding the retired tags yields a typed
+    /// `WireError::Retired`).
+    TableMult { a: String, b: String, dest: MultDest, exec: ExecHint },
+    /// A compiled expression-language program, executed server-side with
+    /// streaming fusion by [`plan`] (see `assoc::expr` for the language
+    /// and `DESIGN.md` §Plan language).
+    Plan { ops: Vec<PlanOp> },
     /// Server-side BFS.
     Bfs { table: String, seeds: Vec<String>, hops: usize },
     /// Server-side Jaccard into table `out`.
@@ -68,6 +75,30 @@ pub enum Request {
     ListTables,
 }
 
+/// Where a [`Request::TableMult`] product lands.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MultDest {
+    /// Accumulate into server table `out` (`out += A^T B`, the Graphulo
+    /// server-side iterator).
+    Table { out: String },
+    /// Return the product to the caller as an [`Assoc`].
+    Client,
+}
+
+/// How a [`Request::TableMult`] is computed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecHint {
+    /// Stream the operands through the server-side Graphulo iterator
+    /// (the only strategy that can accumulate into a table).
+    Stream,
+    /// Read both operands into RAM under a byte budget and multiply
+    /// client-style (typed [`D4mError::MemoryLimit`] past the budget).
+    Memory { limit: usize },
+    /// Route through the blocked dense-GEMM path with the given tile
+    /// (0 = auto-tile).
+    Dense { tile: usize },
+}
+
 impl Request {
     /// Whether replaying this request after an ambiguous transport
     /// failure is safe — i.e. executing it twice leaves the server in
@@ -77,21 +108,21 @@ impl Request {
     /// else surfaces [`D4mError::AmbiguousWrite`].
     ///
     /// Non-idempotent today: `Ingest` (maintains accumulating `_Deg`
-    /// degree companions), `TableMult` (server-side `out += A^T B`
-    /// accumulation), and `Jaccard`/`KTruss` (write server-side result
-    /// tables mid-computation). `CreateTable` binds create-if-needed,
-    /// so it is safe.
+    /// degree companions), `TableMult` into a server table (`out += A^T
+    /// B` accumulation — client-destined multiplies are pure reads),
+    /// `Plan`s containing a `Store` op, and `Jaccard`/`KTruss` (write
+    /// server-side result tables mid-computation). `CreateTable` binds
+    /// create-if-needed, so it is safe.
     pub fn is_idempotent(&self) -> bool {
         match self {
             Request::CreateTable { .. }
             | Request::Query { .. }
-            | Request::TableMultClient { .. }
-            | Request::TableMultDense { .. }
             | Request::Bfs { .. }
             | Request::PageRank { .. }
             | Request::ListTables => true,
+            Request::TableMult { dest, .. } => matches!(dest, MultDest::Client),
+            Request::Plan { ops } => crate::assoc::expr::plan_is_idempotent(ops),
             Request::Ingest { .. }
-            | Request::TableMult { .. }
             | Request::Jaccard { .. }
             | Request::KTruss { .. } => false,
         }
@@ -108,6 +139,9 @@ pub enum Response {
     Distances(BTreeMap<String, usize>),
     Ranks(graphulo::PageRankResult),
     MultStats(graphulo::TableMultStats),
+    /// A plan's result plus the executor's fusion counters
+    /// ([`PlanStats`] proves what was — and was not — materialised).
+    PlanResult { result: Assoc, stats: PlanStats },
 }
 
 impl Response {
@@ -136,6 +170,7 @@ impl Response {
             Response::Distances(_) => "Distances",
             Response::Ranks(_) => "Ranks",
             Response::MultStats(_) => "MultStats",
+            Response::PlanResult { .. } => "PlanResult",
         }
     }
 }
@@ -302,34 +337,48 @@ impl D4mServer {
                 let a = self.hist("query").time(|| t.query(&query))?;
                 Ok(Response::Assoc(a))
             }
-            Request::TableMult { a, b, out } => {
+            Request::TableMult { a, b, dest, exec } => {
                 let ta = self.main_table(&a)?;
                 let tb = self.main_table(&b)?;
-                let store = self.acc.store();
-                let tc = store.ensure_table(&out, vec![])?;
-                let stats = self.hist("tablemult_server").time(|| {
-                    graphulo::table_mult(&ta, &tb, &tc, &TableMultOpts::default())
-                })?;
-                Ok(Response::MultStats(stats))
+                match (dest, exec) {
+                    (MultDest::Table { out }, ExecHint::Stream) => {
+                        let store = self.acc.store();
+                        let tc = store.ensure_table(&out, vec![])?;
+                        let stats = self.hist("tablemult_server").time(|| {
+                            graphulo::table_mult(&ta, &tb, &tc, &TableMultOpts::default())
+                        })?;
+                        Ok(Response::MultStats(stats))
+                    }
+                    (MultDest::Client, ExecHint::Memory { limit }) => {
+                        let ctx = ClientCtx::with_limit(limit);
+                        let c = self
+                            .hist("tablemult_client")
+                            .time(|| ctx.table_mult(&ta, &tb))?;
+                        Ok(Response::Assoc(c))
+                    }
+                    (MultDest::Client, ExecHint::Dense { tile }) => {
+                        let aa = ClientCtx::default().read_table(&ta)?;
+                        let bb = ClientCtx::default().read_table(&tb)?;
+                        let c = self.hist("tablemult_dense").time(|| {
+                            crate::runtime::blocks::assoc_matmul_auto(
+                                self.engine.as_ref(),
+                                &aa,
+                                &bb,
+                                tile,
+                            )
+                        })?;
+                        Ok(Response::Assoc(c))
+                    }
+                    (dest, exec) => Err(D4mError::InvalidArg(format!(
+                        "unsupported TableMult combination: {dest:?} with {exec:?} \
+                         (Table needs Stream; Client needs Memory or Dense)"
+                    ))),
+                }
             }
-            Request::TableMultClient { a, b, memory_limit } => {
-                let ta = self.main_table(&a)?;
-                let tb = self.main_table(&b)?;
-                let ctx = ClientCtx::with_limit(memory_limit);
-                let c = self
-                    .hist("tablemult_client")
-                    .time(|| ctx.table_mult(&ta, &tb))?;
-                Ok(Response::Assoc(c))
-            }
-            Request::TableMultDense { a, b, tile } => {
-                let ta = self.main_table(&a)?;
-                let tb = self.main_table(&b)?;
-                let aa = ClientCtx::default().read_table(&ta)?;
-                let bb = ClientCtx::default().read_table(&tb)?;
-                let c = self.hist("tablemult_dense").time(|| {
-                    crate::runtime::blocks::assoc_matmul_auto(self.engine.as_ref(), &aa, &bb, tile)
-                })?;
-                Ok(Response::Assoc(c))
+            Request::Plan { ops } => {
+                let (result, stats) =
+                    self.hist("plan").time(|| self.execute_plan(&ops))?;
+                Ok(Response::PlanResult { result, stats })
             }
             Request::Bfs { table, seeds, hops } => {
                 let t = self.main_table(&table)?;
@@ -408,6 +457,27 @@ impl D4mServer {
         let t = self.bound(table)?;
         self.hist("cursor_open").time(|| {
             let stream = t.scan_triples(query)?;
+            self.cursors.open(owner, page_entries, stream)
+        })
+    }
+
+    /// Execute a plan and page its result through the cursor machinery
+    /// instead of returning it in one response: the plan runs to
+    /// completion server-side (same fusion path as [`Request::Plan`]),
+    /// then the result's triples stream out as a normal owned cursor —
+    /// resume tokens, ownership, caps and TTL all apply unchanged.
+    /// Returns `(cursor id, resume token)`.
+    pub fn open_plan_cursor_owned(
+        &self,
+        owner: u64,
+        ops: &[PlanOp],
+        page_entries: usize,
+    ) -> Result<(u64, u64)> {
+        self.requests.add(1);
+        let (result, _stats) = self.hist("plan").time(|| self.execute_plan(ops))?;
+        self.hist("cursor_open").time(|| {
+            let stream: crate::connectors::TripleStream =
+                Box::new(result.str_triples().into_iter().map(Ok));
             self.cursors.open(owner, page_entries, stream)
         })
     }
@@ -491,6 +561,20 @@ impl D4mServer {
             mean_latency_ns: 0.0,
             p99_latency_ns: 0,
         }));
+        let pc = plan::counters();
+        let plans = [
+            ("plan.ops", pc.ops.get()),
+            ("plan.fused_selects", pc.fused_selects.get()),
+            ("plan.fused_reduces", pc.fused_reduces.get()),
+            ("plan.intermediates", pc.intermediates.get()),
+        ];
+        out.extend(plans.into_iter().map(|(name, count)| Snapshot {
+            name: name.to_string(),
+            count,
+            rate_per_sec: 0.0,
+            mean_latency_ns: 0.0,
+            p99_latency_ns: 0,
+        }));
         out.sort_by(|a, b| a.name.cmp(&b.name));
         out
     }
@@ -515,6 +599,11 @@ impl D4mApi for D4mServer {
 
     fn open_cursor(&self, table: &str, query: &TableQuery, page_entries: usize) -> Result<u64> {
         self.open_cursor_owned(cursor::LOCAL_OWNER, table, query, page_entries)
+            .map(|(id, _token)| id)
+    }
+
+    fn open_plan_cursor(&self, ops: &[PlanOp], page_entries: usize) -> Result<u64> {
+        self.open_plan_cursor_owned(cursor::LOCAL_OWNER, ops, page_entries)
             .map(|(id, _token)| id)
     }
 
@@ -605,17 +694,23 @@ mod tests {
     fn server_tablemult_vs_client() {
         let s = server_with_graph();
         match s
-            .handle(Request::TableMult { a: "G".into(), b: "G".into(), out: "C".into() })
+            .handle(Request::TableMult {
+                a: "G".into(),
+                b: "G".into(),
+                dest: MultDest::Table { out: "C".into() },
+                exec: ExecHint::Stream,
+            })
             .unwrap()
         {
             Response::MultStats(stats) => assert!(stats.partial_products > 0),
             other => panic!("unexpected {other:?}"),
         }
         let client = s
-            .handle(Request::TableMultClient {
+            .handle(Request::TableMult {
                 a: "G".into(),
                 b: "G".into(),
-                memory_limit: usize::MAX,
+                dest: MultDest::Client,
+                exec: ExecHint::Memory { limit: usize::MAX },
             })
             .unwrap()
             .into_assoc()
@@ -627,12 +722,52 @@ mod tests {
     #[test]
     fn client_memory_wall() {
         let s = server_with_graph();
-        let r = s.handle(Request::TableMultClient {
+        let r = s.handle(Request::TableMult {
             a: "G".into(),
             b: "G".into(),
-            memory_limit: 10,
+            dest: MultDest::Client,
+            exec: ExecHint::Memory { limit: 10 },
         });
         assert!(matches!(r, Err(D4mError::MemoryLimit { .. })));
+    }
+
+    #[test]
+    fn tablemult_rejects_unsupported_combinations() {
+        let s = server_with_graph();
+        // a table destination cannot be computed by the in-RAM paths,
+        // and a client destination has no streaming accumulator
+        let bad = [
+            (MultDest::Table { out: "C".into() }, ExecHint::Memory { limit: 1 }),
+            (MultDest::Table { out: "C".into() }, ExecHint::Dense { tile: 0 }),
+            (MultDest::Client, ExecHint::Stream),
+        ];
+        for (dest, exec) in bad {
+            let r = s.handle(Request::TableMult {
+                a: "G".into(),
+                b: "G".into(),
+                dest,
+                exec,
+            });
+            assert!(matches!(r, Err(D4mError::InvalidArg(_))), "accepted {r:?}");
+        }
+    }
+
+    #[test]
+    fn tablemult_idempotency_follows_dest() {
+        let mult = |dest: MultDest, exec: ExecHint| Request::TableMult {
+            a: "G".into(),
+            b: "G".into(),
+            dest,
+            exec,
+        };
+        assert!(!mult(MultDest::Table { out: "C".into() }, ExecHint::Stream).is_idempotent());
+        assert!(mult(MultDest::Client, ExecHint::Memory { limit: 1 }).is_idempotent());
+        assert!(mult(MultDest::Client, ExecHint::Dense { tile: 0 }).is_idempotent());
+        // plans: read-only replayable, stores not
+        let ro = crate::assoc::expr::Plan::table("G").sum(1).compile().unwrap();
+        assert!(Request::Plan { ops: ro }.is_idempotent());
+        let wr = crate::assoc::expr::Plan::table("G").store_into("X").compile().unwrap();
+        assert!(!Request::Plan { ops: wr }.is_idempotent());
     }
 
     #[test]

@@ -1,0 +1,576 @@
+//! Server-side streaming plan executor (DESIGN.md §Plan language).
+//!
+//! Walks a validated [`PlanOp`] program (`assoc::expr`) slot by slot.
+//! Each slot is one of three states, and the state machine exists to
+//! keep work *lazy* until an op genuinely needs a value:
+//!
+//! * **Scan** — a table name plus a pushdown [`TableQuery`]; nothing has
+//!   touched the engine yet. A `Select` whose source is a sole-use,
+//!   still-unfiltered scan folds its selectors into the query instead of
+//!   materialising (the classic predicate pushdown).
+//! * **Pending** — a matmul whose only consumer is a `Reduce`: the
+//!   operands are forced (scan timing stays identical to the eager
+//!   walk), but the product is never built — the reduce streams the
+//!   contraction through [`Assoc::matmul_sum`], which is bit-identical
+//!   to matmul-then-sum by construction.
+//! * **Val** — a materialised [`Assoc`].
+//!
+//! [`PlanStats`] reports what the fusion actually did — `intermediates`
+//! counts materialised results of non-leaf ops that are not the plan's
+//! result, so `intermediates == 0` on a fused select→matmul→reduce plan
+//! is the proof that nothing was built that the answer didn't need. The
+//! same four counts accumulate process-wide in [`counters`] and surface
+//! as `plan.*` rows in [`D4mServer::snapshots`].
+
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+use crate::assoc::expr::{validate_plan, PlanOp};
+use crate::assoc::{Assoc, KeySel};
+use crate::connectors::TableQuery;
+use crate::error::{D4mError, Result};
+use crate::metrics::Counter;
+use crate::pipeline::{IngestPipeline, PipelineConfig};
+
+use super::D4mServer;
+
+/// Per-plan execution counters, returned with every plan result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PlanStats {
+    /// Ops in the executed program.
+    pub ops: u64,
+    /// `Select` ops folded into a scan's pushdown query.
+    pub fused_selects: u64,
+    /// `Reduce` ops streamed through a pending matmul without building
+    /// the product.
+    pub fused_reduces: u64,
+    /// Materialised non-leaf op results that were not the plan's result
+    /// — 0 means the fused path built nothing the answer didn't need.
+    pub intermediates: u64,
+}
+
+impl fmt::Display for PlanStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} ops, {} fused selects, {} fused reduces, {} intermediates",
+            self.ops, self.fused_selects, self.fused_reduces, self.intermediates
+        )
+    }
+}
+
+/// Process-wide plan-executor counters (the [`PlanStats`] fields,
+/// accumulated across every plan served; `plan.*` in stats output).
+pub struct PlanCounters {
+    pub ops: Counter,
+    pub fused_selects: Counter,
+    pub fused_reduces: Counter,
+    pub intermediates: Counter,
+}
+
+pub fn counters() -> &'static PlanCounters {
+    static CELL: OnceLock<PlanCounters> = OnceLock::new();
+    CELL.get_or_init(|| PlanCounters {
+        ops: Counter::new(),
+        fused_selects: Counter::new(),
+        fused_reduces: Counter::new(),
+        intermediates: Counter::new(),
+    })
+}
+
+/// One plan slot: the executor's lazy value states (module doc).
+enum Slot {
+    /// A not-yet-run table scan with its pushdown query.
+    Scan { table: String, query: TableQuery },
+    /// A matmul deferred into its consuming reduce: operands forced,
+    /// product never built.
+    Pending(Arc<Assoc>, Arc<Assoc>),
+    /// A materialised value.
+    Val(Arc<Assoc>),
+    /// Consumed by a fusion (folded scan source, drained pending mul) —
+    /// unreachable afterwards because fusion requires sole use.
+    Taken,
+}
+
+/// Materialise slot `i`. Scans run their pushdown query through the
+/// same [`crate::connectors::DbTable::query`] path `Request::Query`
+/// takes, so a plan answer is bit-identical to the sequential
+/// round-trip answer.
+fn force(server: &D4mServer, slots: &mut [Slot], i: usize) -> Result<Arc<Assoc>> {
+    match &slots[i] {
+        Slot::Val(a) => Ok(a.clone()),
+        Slot::Scan { table, query } => {
+            let t = server.bound(table)?;
+            let a = Arc::new(t.query(query)?);
+            slots[i] = Slot::Val(a.clone());
+            Ok(a)
+        }
+        Slot::Pending(..) | Slot::Taken => Err(D4mError::InvalidArg(format!(
+            "plan executor invariant violated: slot {i} referenced after fusion"
+        ))),
+    }
+}
+
+fn scan_is_unfiltered(q: &TableQuery) -> bool {
+    matches!(q.rows, KeySel::All) && matches!(q.cols, KeySel::All) && q.limit.is_none()
+}
+
+impl D4mServer {
+    /// Execute a validated plan; returns the final value and the fusion
+    /// counters. Revalidates the op list first (defense in depth — the
+    /// wire layer already validated, in-process callers may not have).
+    pub fn execute_plan(&self, ops: &[PlanOp]) -> Result<(Assoc, PlanStats)> {
+        validate_plan(ops)?;
+        let n = ops.len();
+
+        // reference counts: fusion is only legal on sole-use slots
+        let mut uses = vec![0usize; n];
+        for op in ops {
+            match op {
+                PlanOp::Load { .. } => {}
+                PlanOp::Select { src, .. }
+                | PlanOp::Transpose { src }
+                | PlanOp::Reduce { src, .. }
+                | PlanOp::Scale { src, .. }
+                | PlanOp::Store { src, .. } => uses[*src] += 1,
+                PlanOp::MatMul { a, b }
+                | PlanOp::CatKeyMul { a, b }
+                | PlanOp::ElemAdd { a, b }
+                | PlanOp::ElemSub { a, b }
+                | PlanOp::ElemMult { a, b }
+                | PlanOp::ElemMin { a, b }
+                | PlanOp::ElemMax { a, b } => {
+                    uses[*a] += 1;
+                    uses[*b] += 1;
+                }
+            }
+        }
+
+        // result slots: the last op, plus — through a trailing Store
+        // chain — the value being stored (a store's output IS its input,
+        // so materialising it is not "an intermediate")
+        let mut is_result = vec![false; n];
+        let mut i = n - 1;
+        is_result[i] = true;
+        while let PlanOp::Store { src, .. } = &ops[i] {
+            is_result[*src] = true;
+            i = *src;
+        }
+
+        // matmuls whose sole consumer is a Reduce: defer the product
+        let mut deferred_mul = vec![false; n];
+        for op in ops {
+            if let PlanOp::Reduce { src, .. } = op {
+                if uses[*src] == 1 && matches!(ops[*src], PlanOp::MatMul { .. }) {
+                    deferred_mul[*src] = true;
+                }
+            }
+        }
+
+        let mut stats = PlanStats { ops: n as u64, ..Default::default() };
+        let mut slots: Vec<Slot> = Vec::with_capacity(n);
+        for (i, op) in ops.iter().enumerate() {
+            // count a computed non-leaf value that isn't the plan result
+            let computed = |v: Arc<Assoc>, stats: &mut PlanStats| {
+                if !is_result[i] {
+                    stats.intermediates += 1;
+                }
+                Slot::Val(v)
+            };
+            let slot = match op {
+                PlanOp::Load { table, rows, cols, limit } => {
+                    let mut q = TableQuery::all()
+                        .rows(rows.clone())
+                        .cols(cols.clone());
+                    q.limit = *limit;
+                    Slot::Scan { table: table.clone(), query: q }
+                }
+                PlanOp::Select { src, rows, cols } => {
+                    let foldable = uses[*src] == 1
+                        && matches!(&slots[*src], Slot::Scan { query, .. } if scan_is_unfiltered(query));
+                    if foldable {
+                        let taken = std::mem::replace(&mut slots[*src], Slot::Taken);
+                        let Slot::Scan { table, query } = taken else { unreachable!() };
+                        stats.fused_selects += 1;
+                        Slot::Scan {
+                            table,
+                            query: query.rows(rows.clone()).cols(cols.clone()),
+                        }
+                    } else {
+                        let a = force(self, &mut slots, *src)?;
+                        computed(Arc::new(a.subsref(rows, cols)), &mut stats)
+                    }
+                }
+                PlanOp::Transpose { src } => {
+                    let a = force(self, &mut slots, *src)?;
+                    computed(Arc::new(a.transpose()), &mut stats)
+                }
+                PlanOp::MatMul { a, b } => {
+                    // operands are forced HERE even when the product is
+                    // deferred, so scan timing (snapshot pinning order)
+                    // matches the eager walk exactly
+                    let aa = force(self, &mut slots, *a)?;
+                    let bb = force(self, &mut slots, *b)?;
+                    if deferred_mul[i] {
+                        Slot::Pending(aa, bb)
+                    } else {
+                        computed(Arc::new(aa.matmul(&bb)), &mut stats)
+                    }
+                }
+                PlanOp::CatKeyMul { a, b } => {
+                    let aa = force(self, &mut slots, *a)?;
+                    let bb = force(self, &mut slots, *b)?;
+                    computed(Arc::new(aa.catkeymul(&bb)), &mut stats)
+                }
+                PlanOp::ElemAdd { a, b }
+                | PlanOp::ElemSub { a, b }
+                | PlanOp::ElemMult { a, b }
+                | PlanOp::ElemMin { a, b }
+                | PlanOp::ElemMax { a, b } => {
+                    let aa = force(self, &mut slots, *a)?;
+                    let bb = force(self, &mut slots, *b)?;
+                    let v = match op {
+                        PlanOp::ElemAdd { .. } => aa.add(&bb),
+                        PlanOp::ElemSub { .. } => aa.sub(&bb),
+                        PlanOp::ElemMult { .. } => aa.elem_mult(&bb),
+                        PlanOp::ElemMin { .. } => aa.elem_min(&bb),
+                        _ => aa.elem_max(&bb),
+                    };
+                    computed(Arc::new(v), &mut stats)
+                }
+                PlanOp::Reduce { src, dim } => {
+                    let fused = match &slots[*src] {
+                        Slot::Pending(aa, bb) => Some(Arc::new(aa.matmul_sum(bb, *dim))),
+                        _ => None,
+                    };
+                    match fused {
+                        Some(v) => {
+                            slots[*src] = Slot::Taken;
+                            stats.fused_reduces += 1;
+                            computed(v, &mut stats)
+                        }
+                        None => {
+                            let a = force(self, &mut slots, *src)?;
+                            computed(Arc::new(a.sum(*dim)), &mut stats)
+                        }
+                    }
+                }
+                PlanOp::Scale { src, factor } => {
+                    let a = force(self, &mut slots, *src)?;
+                    computed(Arc::new(a.scale(*factor)), &mut stats)
+                }
+                PlanOp::Store { src, table } => {
+                    let v = force(self, &mut slots, *src)?;
+                    let t = self.bind_d4m(table, vec![])?;
+                    IngestPipeline::new(t, PipelineConfig::default())
+                        .run(v.str_triples().into_iter())?;
+                    // pass the stored value through as this op's value
+                    Slot::Val(v)
+                }
+            };
+            slots.push(slot);
+        }
+
+        let result = force(self, &mut slots, n - 1)?;
+        let c = counters();
+        c.ops.add(stats.ops);
+        c.fused_selects.add(stats.fused_selects);
+        c.fused_reduces.add(stats.fused_reduces);
+        c.intermediates.add(stats.intermediates);
+        let result = Arc::try_unwrap(result).unwrap_or_else(|a| (*a).clone());
+        Ok((result, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{D4mApi, Request, Response};
+    use super::*;
+    use crate::assoc::expr::Plan;
+    use crate::pipeline::TripleMsg;
+
+    /// Numeric graph: r00..r09 x c00..c11, values 1..5.
+    fn server_with_matrix() -> D4mServer {
+        let s = D4mServer::with_engine(None);
+        let triples: Vec<TripleMsg> = (0..60)
+            .map(|i| {
+                (
+                    format!("r{:02}", i % 10),
+                    format!("c{:02}", (i * 7) % 12),
+                    format!("{}", i % 5 + 1),
+                )
+            })
+            .collect();
+        s.handle(Request::Ingest {
+            table: "A".into(),
+            triples,
+            pipeline: PipelineConfig { num_workers: 2, ..Default::default() },
+        })
+        .unwrap();
+        // B = a second table sharing A's column keys as row keys, so
+        // A * B contracts non-trivially
+        let triples: Vec<TripleMsg> = (0..50)
+            .map(|i| {
+                (
+                    format!("c{:02}", i % 12),
+                    format!("k{:02}", (i * 3) % 8),
+                    format!("{}", i % 4 + 1),
+                )
+            })
+            .collect();
+        s.handle(Request::Ingest {
+            table: "B".into(),
+            triples,
+            pipeline: PipelineConfig { num_workers: 2, ..Default::default() },
+        })
+        .unwrap();
+        s
+    }
+
+    fn q_all() -> TableQuery {
+        TableQuery::all()
+    }
+
+    // ---------------------------------------------------- bit-identity
+    //
+    // every plan answer must equal the answer assembled from the
+    // equivalent sequential Request round trips, compared with
+    // assert_eq! on the Assoc — pattern, keys, and exact f64 bits
+
+    #[test]
+    fn fused_select_matmul_reduce_matches_sequential_with_zero_intermediates() {
+        let s = server_with_matrix();
+        let rows = KeySel::Range("r00".into(), "r06".into());
+
+        // sequential: Query(A, rows) -> Query(B) -> matmul -> sum
+        let a = s.query("A", q_all().rows(rows.clone())).unwrap();
+        let b = s.query("B", q_all()).unwrap();
+        let want = a.matmul(&b).sum(2);
+
+        // plan: one round trip, select folded, product never built
+        let ops = Plan::table("A")
+            .select(rows, KeySel::All)
+            .matmul(&Plan::table("B"))
+            .sum(2)
+            .compile()
+            .unwrap();
+        let (got, stats) = s.execute_plan(&ops).unwrap();
+        assert_eq!(got, want, "plan diverged from sequential");
+        assert_eq!(stats.ops, 4);
+        assert_eq!(stats.fused_selects, 1, "select was not folded into the scan");
+        assert_eq!(stats.fused_reduces, 1, "reduce did not stream the matmul");
+        assert_eq!(stats.intermediates, 0, "fused path materialised an intermediate");
+    }
+
+    #[test]
+    fn fused_reduce_dim1_matches_sequential() {
+        let s = server_with_matrix();
+        let a = s.query("A", q_all()).unwrap();
+        let b = s.query("B", q_all()).unwrap();
+        let want = a.matmul(&b).sum(1);
+        let ops = Plan::table("A").matmul(&Plan::table("B")).sum(1).compile().unwrap();
+        let (got, stats) = s.execute_plan(&ops).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(stats.fused_reduces, 1);
+        assert_eq!(stats.intermediates, 0);
+    }
+
+    #[test]
+    fn shared_matmul_is_not_fused_and_counts_an_intermediate() {
+        let s = server_with_matrix();
+        let a = s.query("A", q_all()).unwrap();
+        let b = s.query("B", q_all()).unwrap();
+        let prod = a.matmul(&b);
+        let want = prod.sum(2).add(&prod.scale(2.0).sum(1));
+        // the product feeds two consumers — fusing the reduce would
+        // recompute the contraction, so the executor materialises it
+        let p = Plan::table("A").matmul(&Plan::table("B"));
+        let ops = p.sum(2).add(&p.scale(2.0).sum(1)).compile().unwrap();
+        let (got, stats) = s.execute_plan(&ops).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(stats.fused_reduces, 0);
+        assert!(stats.intermediates > 0);
+    }
+
+    #[test]
+    fn limit_is_pushed_down_and_select_after_limit_is_not_folded() {
+        let s = server_with_matrix();
+        let cols = KeySel::Prefix("c0".into());
+        // sequential: limited scan, then client-side subsref — the
+        // order matters (limit first, select after)
+        let limited = s.query("A", q_all().limit(13)).unwrap();
+        let want = limited.subsref(&KeySel::All, &cols);
+        let ops = Plan::table("A")
+            .limit(13)
+            .unwrap()
+            .select(KeySel::All, cols)
+            .compile()
+            .unwrap();
+        let (got, stats) = s.execute_plan(&ops).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(stats.fused_selects, 0, "folding across a limit changes semantics");
+    }
+
+    #[test]
+    fn string_valued_tables_flow_through_plans() {
+        let s = D4mServer::with_engine(None);
+        let triples: Vec<TripleMsg> = vec![
+            ("a".into(), "x".into(), "red".into()),
+            ("a".into(), "y".into(), "green".into()),
+            ("b".into(), "x".into(), "blue".into()),
+        ];
+        s.handle(Request::Ingest {
+            table: "S".into(),
+            triples,
+            pipeline: PipelineConfig { num_workers: 1, ..Default::default() },
+        })
+        .unwrap();
+        let sv = s.query("S", q_all()).unwrap();
+        assert!(sv.is_string_valued(), "fixture must be string-valued");
+        // plain load round-trips the string values
+        let (got, _) = s.execute_plan(&Plan::table("S").compile().unwrap()).unwrap();
+        assert_eq!(got, sv);
+        // algebra on string-valued operands coerces exactly like the
+        // sequential path
+        let want = sv.transpose().matmul(&sv).sum(2);
+        let p = Plan::table("S");
+        let ops = p.transpose().matmul(&p).sum(2).compile().unwrap();
+        let (got, stats) = s.execute_plan(&ops).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(stats.fused_reduces, 1);
+        // catkeymul provenance strings, bit-identical
+        let want = sv.transpose().catkeymul(&sv);
+        let ops = p.transpose().catkeymul(&p).compile().unwrap();
+        let (got, _) = s.execute_plan(&ops).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn elementwise_transpose_scale_chain_matches_sequential() {
+        let s = server_with_matrix();
+        let a = s.query("A", q_all()).unwrap();
+        let want = a
+            .add(&a.scale(0.5))
+            .elem_mult(&a)
+            .sub(&a.elem_min(&a.elem_max(&a.transpose().transpose())))
+            .sum(1);
+        let p = Plan::table("A");
+        let ops = p
+            .add(&p.scale(0.5))
+            .elem_mult(&p)
+            .sub(&p.elem_min(&p.elem_max(&p.transpose().transpose())))
+            .sum(1)
+            .compile()
+            .unwrap();
+        let (got, _) = s.execute_plan(&ops).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parsed_text_plan_matches_built_plan() {
+        let s = server_with_matrix();
+        let built = Plan::table("A")
+            .select(KeySel::Range("r00".into(), "r06".into()), KeySel::All)
+            .matmul(&Plan::table("B"))
+            .sum(2)
+            .compile()
+            .unwrap();
+        let parsed = Plan::parse("sum(A('r00,:,r06,', ':') * B, 2)")
+            .unwrap()
+            .compile()
+            .unwrap();
+        let (want, _) = s.execute_plan(&built).unwrap();
+        let (got, _) = s.execute_plan(&parsed).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn store_into_writes_a_readable_table_and_passes_value_through() {
+        let s = server_with_matrix();
+        let a = s.query("A", q_all()).unwrap();
+        let b = s.query("B", q_all()).unwrap();
+        let want = a.matmul(&b);
+        let ops = Plan::table("A")
+            .matmul(&Plan::table("B"))
+            .store_into("C")
+            .compile()
+            .unwrap();
+        let (got, stats) = s.execute_plan(&ops).unwrap();
+        assert_eq!(got, want, "store must pass the stored value through");
+        // the store target is a real bound table now
+        let read_back = s.query("C", q_all()).unwrap();
+        assert_eq!(read_back, want, "stored product must read back bit-identically");
+        // the stored product is the result, not an intermediate
+        assert_eq!(stats.intermediates, 0);
+    }
+
+    #[test]
+    fn plan_request_roundtrips_through_handle() {
+        let s = server_with_matrix();
+        let ops = Plan::table("A").matmul(&Plan::table("B")).sum(2).compile().unwrap();
+        let (want, want_stats) = s.execute_plan(&ops).unwrap();
+        match s.handle(Request::Plan { ops }).unwrap() {
+            Response::PlanResult { result, stats } => {
+                assert_eq!(result, want);
+                assert_eq!(stats, want_stats);
+            }
+            other => panic!("expected PlanResult, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plan_pages_cursor_is_bit_identical_to_one_shot() {
+        let s = server_with_matrix();
+        let ops = Plan::table("A").matmul(&Plan::table("B")).compile().unwrap();
+        let (want, _) = s.execute_plan(&ops).unwrap();
+        // page size 3 forces many pages through the cursor machinery
+        let mut triples: Vec<TripleMsg> = Vec::new();
+        let mut pages = 0usize;
+        for page in s.plan_pages(&ops, 3) {
+            let p = page.unwrap();
+            assert!(p.len() <= 3);
+            pages += 1;
+            triples.extend(p);
+        }
+        assert!(pages > 1, "result too small to page");
+        let paged = crate::assoc::io::parse_triples(triples).unwrap();
+        assert_eq!(paged, want);
+        assert_eq!(s.open_cursor_count(), 0, "drained plan cursor must free itself");
+    }
+
+    #[test]
+    fn plan_trait_entry_points_work() {
+        let s = server_with_matrix();
+        let ops = Plan::table("A").sum(1).compile().unwrap();
+        let (want, want_stats) = s.execute_plan(&ops).unwrap();
+        let (got, stats) = s.plan(&ops).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(stats, want_stats);
+        let (got, _) = s.plan_expr("sum(A, 1)").unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn plan_errors_are_typed() {
+        let s = server_with_matrix();
+        // unknown table
+        let ops = Plan::table("nope").sum(1).compile().unwrap();
+        assert!(matches!(s.execute_plan(&ops), Err(D4mError::NotFound(_))));
+        // structurally invalid op list (built by hand, skipping compile)
+        let bad = vec![PlanOp::Transpose { src: 0 }];
+        assert!(matches!(s.execute_plan(&bad), Err(D4mError::InvalidArg(_))));
+    }
+
+    #[test]
+    fn plan_counters_surface_in_snapshots() {
+        let s = server_with_matrix();
+        let before = counters().fused_reduces.get();
+        let ops = Plan::table("A").matmul(&Plan::table("B")).sum(2).compile().unwrap();
+        s.execute_plan(&ops).unwrap();
+        assert!(counters().fused_reduces.get() > before);
+        let snaps = s.snapshots();
+        for key in ["plan.ops", "plan.fused_selects", "plan.fused_reduces", "plan.intermediates"] {
+            assert!(snaps.iter().any(|x| x.name == key), "missing {key} in snapshots");
+        }
+    }
+}

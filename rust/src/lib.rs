@@ -5,7 +5,9 @@
 //!
 //! * [`assoc`] — associative arrays, the mathematical core: string-keyed
 //!   sparse arrays with an algebra of union-add, intersection-multiply and
-//!   key-aligned matrix multiply.
+//!   key-aligned matrix multiply, plus [`assoc::expr`] — the lazy
+//!   expression language whose compiled plans execute server-side in one
+//!   round trip.
 //! * [`kvstore`] — an embedded Accumulo-class sorted key-value store with
 //!   tablets, LSM write path and the server-side iterator framework.
 //! * [`arraystore`] — a SciDB-class chunked array store with in-store ops.
@@ -49,8 +51,9 @@ pub mod relational;
 pub mod runtime;
 pub mod util;
 
+pub use assoc::expr::{Plan, PlanOp};
 pub use assoc::{Assoc, KeySel};
 pub use connectors::{BindOpts, DbServer, DbTable, TableQuery};
-pub use coordinator::{D4mApi, ScanPages};
+pub use coordinator::{D4mApi, ExecHint, MultDest, PlanStats, ScanPages};
 pub use error::{D4mError, Result};
 pub use net::RemoteD4m;

@@ -17,11 +17,18 @@
 //!                                   shutdown); --data-dir turns on the
 //!                                   durable engine: WAL + on-disk runs,
 //!                                   crash recovery on restart
-//! d4m client <ping|tables|quickstart|scan4|scan-pages|pipeline-bench|
-//!             ingest-batches|verify-batches|stats|shutdown> [--addr H:P]
+//! d4m client <ping|tables|quickstart|query|plan|scan4|scan-pages|
+//!             pipeline-bench|ingest-batches|verify-batches|stats|
+//!             shutdown> [--addr H:P]
 //!                                   drive a remote d4m serve (typed ops
 //!                                   self-heal: retries with backoff,
-//!                                   reconnect, cursor resume)
+//!                                   reconnect, cursor resume);
+//!                                   `query T --rows SEL --cols SEL`
+//!                                   pushes selectors server-side, and
+//!                                   `plan '<expr>'` compiles a whole
+//!                                   expression (e.g. "sum(A('r1,:,r9,',
+//!                                   ':') * B, 2)") to one server-side
+//!                                   round trip
 //! d4m chaos   --upstream H:P [--listen H:P] [--seed N]
 //!             [--profile drop|delay|corrupt|mixed|none] [--rate F]
 //!             [--delay-ms N]        fault-injection proxy in front of a
@@ -34,12 +41,12 @@ use std::time::Duration;
 
 use d4m::assoc::{io::display_full, Assoc, KeySel};
 use d4m::connectors::TableQuery;
-use d4m::coordinator::{D4mApi, D4mServer, Request, Response};
+use d4m::coordinator::{D4mApi, D4mServer, ExecHint, MultDest, Request, Response};
 use d4m::gen::{kronecker_triples, KroneckerParams};
 use d4m::kvstore::{KvStore, StorageConfig, TabletConfig};
 use d4m::net::{ChaosOpts, ChaosProxy, NetOpts, Profile, RemoteD4m, RetryPolicy};
 use d4m::pipeline::PipelineConfig;
-use d4m::util::fmt_rate;
+use d4m::util::{fmt_rate, parse_keysel};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut out = HashMap::new();
@@ -115,7 +122,12 @@ fn cmd_tablemult(flags: HashMap<String, String>) {
     match mode.as_str() {
         "server" => {
             let r = server
-                .handle(Request::TableMult { a: "G".into(), b: "G".into(), out: "C".into() })
+                .handle(Request::TableMult {
+                    a: "G".into(),
+                    b: "G".into(),
+                    dest: MultDest::Table { out: "C".into() },
+                    exec: ExecHint::Stream,
+                })
                 .expect("tablemult failed");
             if let Response::MultStats(s) = r {
                 println!(
@@ -126,10 +138,11 @@ fn cmd_tablemult(flags: HashMap<String, String>) {
         }
         "client" => {
             let c = server
-                .handle(Request::TableMultClient {
+                .handle(Request::TableMult {
                     a: "G".into(),
                     b: "G".into(),
-                    memory_limit: usize::MAX,
+                    dest: MultDest::Client,
+                    exec: ExecHint::Memory { limit: usize::MAX },
                 })
                 .expect("tablemult failed")
                 .into_assoc()
@@ -142,7 +155,12 @@ fn cmd_tablemult(flags: HashMap<String, String>) {
                 std::process::exit(2);
             }
             let c = server
-                .handle(Request::TableMultDense { a: "G".into(), b: "G".into(), tile: 128 })
+                .handle(Request::TableMult {
+                    a: "G".into(),
+                    b: "G".into(),
+                    dest: MultDest::Client,
+                    exec: ExecHint::Dense { tile: 128 },
+                })
                 .expect("tablemult failed")
                 .into_assoc()
                 .expect("assoc response");
@@ -353,6 +371,31 @@ fn cmd_client(args: &[String]) {
             }
         }
         "quickstart" => client_quickstart(&connect()),
+        "query" => {
+            // positional table first (`d4m client query G --rows ...`),
+            // falling back to --table
+            let table = args
+                .get(1)
+                .filter(|s| !s.starts_with("--"))
+                .cloned()
+                .unwrap_or_else(|| flag(&flags, "table", "G".to_string()));
+            let mut q = TableQuery::all()
+                .rows(parse_keysel(&flag(&flags, "rows", String::new())))
+                .cols(parse_keysel(&flag(&flags, "cols", String::new())));
+            let limit: usize = flag(&flags, "limit", 0);
+            if limit > 0 {
+                q = q.limit(limit);
+            }
+            client_query(&connect(), &table, q);
+        }
+        "plan" => {
+            let src = args.get(1).filter(|s| !s.starts_with("--")).cloned().unwrap_or_default();
+            if src.is_empty() {
+                eprintln!("usage: d4m client plan '<expr>' [--addr H:P]");
+                std::process::exit(2);
+            }
+            client_plan(&connect(), &src);
+        }
         "scan4" => {
             let clients: usize = flag(&flags, "clients", 4);
             let passes: usize = flag(&flags, "passes", 8);
@@ -361,7 +404,10 @@ fn cmd_client(args: &[String]) {
         "scan-pages" => {
             let table: String = flag(&flags, "table", "G".to_string());
             let page: usize = flag(&flags, "page", 2);
-            client_scan_pages(&connect(), &table, page);
+            let query = TableQuery::all()
+                .rows(parse_keysel(&flag(&flags, "rows", String::new())))
+                .cols(parse_keysel(&flag(&flags, "cols", String::new())));
+            client_scan_pages(&connect(), &table, query, page);
         }
         "pipeline-bench" => {
             let table: String = flag(&flags, "table", "G".to_string());
@@ -404,10 +450,12 @@ fn cmd_client(args: &[String]) {
         }
         other => {
             eprintln!(
-                "usage: d4m client <ping|tables|quickstart|scan4|scan-pages|\
-                 pipeline-bench|ingest-batches|verify-batches|stats|shutdown> \
+                "usage: d4m client <ping|tables|quickstart|query|plan|scan4|\
+                 scan-pages|pipeline-bench|ingest-batches|verify-batches|\
+                 stats|shutdown> \
                  [--addr H:P] [--retries N] [--clients N] [--passes N] \
-                 [--table T] [--page N] [--inflight N] [--requests N] \
+                 [--table T] [--rows SEL] [--cols SEL] [--limit N] \
+                 [--page N] [--inflight N] [--requests N] \
                  [--batches N] [--batch-size N] [--upto N] (got {other:?})"
             );
             std::process::exit(2);
@@ -471,16 +519,48 @@ fn client_verify_batches(c: &RemoteD4m, table: &str, upto: usize, batch_size: us
     );
 }
 
+/// `d4m client query T --rows SEL --cols SEL --limit N` — a selective
+/// remote read with the selectors pushed down server-side (the shared
+/// [`parse_keysel`] grammar: "a,b,", "lo,:,hi,", "pre*", ":").
+fn client_query(c: &RemoteD4m, table: &str, query: TableQuery) {
+    let t0 = std::time::Instant::now();
+    let a = ok_or_die("query", c.query(table, query));
+    for (r, col, v) in a.str_triples() {
+        println!("{r}\t{col}\t{v}");
+    }
+    println!(
+        "query: table {table}: {} entries ({:.3}s)",
+        a.nnz(),
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+/// `d4m client plan '<expr>'` — parse + compile the expression
+/// client-side, execute the whole program server-side in **one** round
+/// trip, print the result and the executor's fusion counters.
+fn client_plan(c: &RemoteD4m, src: &str) {
+    let t0 = std::time::Instant::now();
+    let (a, stats) = ok_or_die("plan", c.plan_expr(src));
+    for (r, col, v) in a.str_triples() {
+        println!("{r}\t{col}\t{v}");
+    }
+    println!(
+        "plan: {} entries in one round trip ({:.3}s); {stats}",
+        a.nnz(),
+        t0.elapsed().as_secs_f64()
+    );
+}
+
 /// Remote paged scan through a server-side cursor, checked against the
 /// one-shot query: every page must respect the `page_entries` bound and
 /// the assembled result must be bit-identical (the CI paged-scan leg —
 /// any divergence exits nonzero).
-fn client_scan_pages(c: &RemoteD4m, table: &str, page: usize) {
+fn client_scan_pages(c: &RemoteD4m, table: &str, query: TableQuery, page: usize) {
     let t0 = std::time::Instant::now();
-    let reference = ok_or_die("one-shot query", c.query(table, TableQuery::all()));
+    let reference = ok_or_die("one-shot query", c.query(table, query.clone()));
     let mut pages = 0usize;
     let mut triples: Vec<(String, String, String)> = Vec::new();
-    for p in c.scan_pages(table, TableQuery::all(), page) {
+    for p in c.scan_pages(table, query, page) {
         let p = ok_or_die("cursor page", p);
         assert_or_die(p.len() <= page, "a page exceeded the page_entries bound");
         pages += 1;

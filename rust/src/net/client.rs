@@ -51,6 +51,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::assoc::expr::{self, PlanOp};
 use crate::connectors::TableQuery;
 use crate::coordinator::{CursorPage, CursorResume, D4mApi, Request, Response};
 use crate::error::{D4mError, Result};
@@ -817,6 +818,33 @@ impl D4mApi for RemoteD4m {
             }
             ServerMsg::Reply(Err(e)) => Err(e),
             other => Err(unexpected_frame("CursorPage", &other)),
+        }
+    }
+
+    fn open_plan_cursor(&self, ops: &[PlanOp], page_entries: usize) -> Result<u64> {
+        let msg = ClientMsg::OpenPlanCursor {
+            ops: ops.to_vec(),
+            page_entries: page_entries as u64,
+        };
+        // a plan containing a Store writes server state, so replaying it
+        // after an ambiguous send is not safe — same gate as handle()
+        let idempotent = expr::plan_is_idempotent(ops);
+        let mut epoch = 0u64;
+        let reply = self.with_retry(idempotent, &mut |deadline| {
+            let conn = self.current().map_err(|e| (e, false))?;
+            epoch = conn.epoch;
+            self.attempt(&conn, &msg, deadline)
+        })?;
+        match reply {
+            ServerMsg::CursorOpened { cursor, token } => {
+                self.cursors
+                    .lock()
+                    .unwrap()
+                    .insert(cursor, CursorMeta { token, pages_acked: 0, epoch });
+                Ok(cursor)
+            }
+            ServerMsg::Reply(Err(e)) => Err(e),
+            other => Err(unexpected_frame("CursorOpened", &other)),
         }
     }
 

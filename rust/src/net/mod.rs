@@ -1,11 +1,12 @@
 //! Network front-end over the [`coordinator`](crate::coordinator) — the
 //! paper's client↔server split, realised as three std-only layers:
 //!
-//! * [`wire`] — length-prefixed binary frame codec, **v2**: every frame
+//! * [`wire`] — length-prefixed binary frame codec, **v4**: every frame
 //!   carries a client-assigned request id (responses may complete out of
-//!   order), cursor messages stream scan results in bounded pages, and
-//!   version skew surfaces as a typed [`WireError::Version`] before any
-//!   payload is read.
+//!   order), cursor messages stream scan results in bounded pages,
+//!   compiled plans travel as `Request::Plan`/`OpenPlanCursor` (and are
+//!   SSA-revalidated at decode), and version skew surfaces as a typed
+//!   [`WireError::Version`] before any payload is read.
 //! * [`server`] — a `TcpListener` accept loop sharing one
 //!   `Arc<D4mServer>` across a bounded thread-per-connection pool; each
 //!   connection is a demux (one reader + bounded workers) so N pipelined

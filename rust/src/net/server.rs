@@ -586,6 +586,22 @@ fn execute(sh: &Shared, owner: u64, msg: ClientMsg) -> (ServerMsg, bool) {
             },
             false,
         ),
+        ClientMsg::OpenPlanCursor { ops, page_entries } => {
+            // same entry clamp as a scan cursor; the plan was already
+            // SSA-revalidated at wire decode, so the executor only ever
+            // sees well-formed programs
+            let pe = usize::try_from(page_entries)
+                .unwrap_or(MAX_PAGE_ENTRIES)
+                .clamp(1, MAX_PAGE_ENTRIES);
+            let r = sh.requests.time(|| sh.server.open_plan_cursor_owned(owner, &ops, pe));
+            (
+                match r {
+                    Ok((cursor, token)) => ServerMsg::CursorOpened { cursor, token },
+                    Err(e) => ServerMsg::Reply(Err(e)),
+                },
+                false,
+            )
+        }
     }
 }
 

@@ -43,7 +43,15 @@
 //! the server-issued resume secret — both changes to existing tag
 //! encodings, hence the bump; error tags 14–16 (`Overloaded`,
 //! `RetryExhausted`, `AmbiguousWrite`) are compatible trailing
-//! additions.
+//! additions. v3 → v4: the three TableMult request tags collapsed into
+//! one (tag 3 re-encoded with destination + execution-hint bytes; tags
+//! 4/5 retired — decoding them is the typed [`WireError::Retired`],
+//! never a silent re-interpretation), and the plan surface landed:
+//! `Request::Plan` (tag 11), `Response::PlanResult` (tag 7), and
+//! `ClientMsg::OpenPlanCursor` (tag 7). Decoded plans are re-validated
+//! with [`crate::assoc::expr::validate_plan`] before they reach the
+//! executor, so a hostile frame cannot smuggle forward references or
+//! an over-cap program past the client-side compiler.
 //!
 //! [`Assoc`] frames carry the array structurally — sorted key vectors,
 //! the optional value-key table and the raw CSR arrays — so a decoded
@@ -57,10 +65,13 @@ use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::time::Duration;
 
+use crate::assoc::expr::{self, PlanOp};
 use crate::assoc::spmat::SpMat;
 use crate::assoc::{Assoc, KeySel};
 use crate::connectors::TableQuery;
-use crate::coordinator::{CursorPage, CursorResume, Request, Response};
+use crate::coordinator::{
+    CursorPage, CursorResume, ExecHint, MultDest, PlanStats, Request, Response,
+};
 use crate::error::D4mError;
 use crate::graphulo::{PageRankOpts, PageRankResult, TableMultStats};
 use crate::metrics::Snapshot;
@@ -68,9 +79,10 @@ use crate::pipeline::{IngestReport, PipelineConfig, TripleMsg};
 
 /// Frame magic (the version byte follows it).
 pub const MAGIC: [u8; 3] = *b"D4M";
-/// Wire-protocol version carried in every frame header (v3: cursor
-/// resume tokens; v2: request-id framing + cursor messages).
-pub const VERSION: u8 = 3;
+/// Wire-protocol version carried in every frame header (v4: collapsed
+/// TableMult + plan messages; v3: cursor resume tokens; v2: request-id
+/// framing + cursor messages).
+pub const VERSION: u8 = 4;
 /// Request id reserved for connection-level server errors (a reply the
 /// server could not attribute to any request). Clients assign from 1.
 pub const CONN_ERR_ID: u64 = 0;
@@ -105,6 +117,11 @@ pub enum WireError {
     FrameTooLarge(usize),
     /// A tag byte outside the known range for `what`.
     UnknownTag { what: &'static str, tag: u8 },
+    /// A tag that existed in an earlier protocol version and was
+    /// deliberately retired (not reused) — distinct from
+    /// [`WireError::UnknownTag`] so a peer can tell "too old" from
+    /// "garbage".
+    Retired { what: &'static str, tag: u8 },
     /// A string field was not valid UTF-8.
     BadUtf8,
     /// A structural invariant failed (the message names it).
@@ -125,6 +142,9 @@ impl std::fmt::Display for WireError {
                 write!(f, "frame of {n} bytes exceeds the {MAX_FRAME}-byte cap")
             }
             WireError::UnknownTag { what, tag } => write!(f, "unknown {what} tag {tag}"),
+            WireError::Retired { what, tag } => {
+                write!(f, "{what} tag {tag} was retired in wire v{VERSION}")
+            }
             WireError::BadUtf8 => write!(f, "string field is not valid UTF-8"),
             WireError::Malformed(m) => write!(f, "malformed payload: {m}"),
             WireError::TrailingBytes(n) => write!(f, "{n} trailing bytes after message"),
@@ -175,6 +195,11 @@ pub enum ClientMsg {
     /// Close a cursor early (idempotent), answered by
     /// [`ServerMsg::CursorClosed`].
     CursorClose { cursor: u64 },
+    /// Execute a plan server-side and page its result back: answered by
+    /// [`ServerMsg::CursorOpened`], then drained with the ordinary
+    /// `CursorNext`/`CursorClose` ops (plan cursors and scan cursors
+    /// share the id space and resume machinery).
+    OpenPlanCursor { ops: Vec<PlanOp>, page_entries: u64 },
 }
 
 /// Server→client messages (each carries the request id it answers).
@@ -597,23 +622,28 @@ pub fn encode_request(b: &mut Vec<u8>, req: &Request) {
             put_str(b, table);
             put_query(b, query);
         }
-        Request::TableMult { a, b: rhs, out } => {
+        Request::TableMult { a, b: rhs, dest, exec } => {
             put_u8(b, 3);
             put_str(b, a);
             put_str(b, rhs);
-            put_str(b, out);
-        }
-        Request::TableMultClient { a, b: rhs, memory_limit } => {
-            put_u8(b, 4);
-            put_str(b, a);
-            put_str(b, rhs);
-            put_varint(b, *memory_limit as u64);
-        }
-        Request::TableMultDense { a, b: rhs, tile } => {
-            put_u8(b, 5);
-            put_str(b, a);
-            put_str(b, rhs);
-            put_varint(b, *tile as u64);
+            match dest {
+                MultDest::Table { out } => {
+                    put_u8(b, 0);
+                    put_str(b, out);
+                }
+                MultDest::Client => put_u8(b, 1),
+            }
+            match exec {
+                ExecHint::Stream => put_u8(b, 0),
+                ExecHint::Memory { limit } => {
+                    put_u8(b, 1);
+                    put_varint(b, *limit as u64);
+                }
+                ExecHint::Dense { tile } => {
+                    put_u8(b, 2);
+                    put_varint(b, *tile as u64);
+                }
+            }
         }
         Request::Bfs { table, seeds, hops } => {
             put_u8(b, 6);
@@ -639,7 +669,147 @@ pub fn encode_request(b: &mut Vec<u8>, req: &Request) {
             put_f64(b, opts.tol);
         }
         Request::ListTables => put_u8(b, 10),
+        Request::Plan { ops } => {
+            put_u8(b, 11);
+            put_plan_ops(b, ops);
+        }
     }
+}
+
+// ---------------------------------------------------------------------
+// plans
+
+fn put_limit(b: &mut Vec<u8>, limit: &Option<usize>) {
+    match limit {
+        Some(n) => {
+            put_u8(b, 1);
+            put_varint(b, *n as u64);
+        }
+        None => put_u8(b, 0),
+    }
+}
+
+/// Encode a compiled plan (varint op count, then each op as a tag byte
+/// in [`PlanOp`] variant order + its body).
+fn put_plan_ops(b: &mut Vec<u8>, ops: &[PlanOp]) {
+    put_varint(b, ops.len() as u64);
+    for op in ops {
+        match op {
+            PlanOp::Load { table, rows, cols, limit } => {
+                put_u8(b, 0);
+                put_str(b, table);
+                put_keysel(b, rows);
+                put_keysel(b, cols);
+                put_limit(b, limit);
+            }
+            PlanOp::Select { src, rows, cols } => {
+                put_u8(b, 1);
+                put_varint(b, *src as u64);
+                put_keysel(b, rows);
+                put_keysel(b, cols);
+            }
+            PlanOp::Transpose { src } => {
+                put_u8(b, 2);
+                put_varint(b, *src as u64);
+            }
+            PlanOp::MatMul { a, b: rhs } => {
+                put_u8(b, 3);
+                put_varint(b, *a as u64);
+                put_varint(b, *rhs as u64);
+            }
+            PlanOp::CatKeyMul { a, b: rhs } => {
+                put_u8(b, 4);
+                put_varint(b, *a as u64);
+                put_varint(b, *rhs as u64);
+            }
+            PlanOp::ElemAdd { a, b: rhs } => {
+                put_u8(b, 5);
+                put_varint(b, *a as u64);
+                put_varint(b, *rhs as u64);
+            }
+            PlanOp::ElemSub { a, b: rhs } => {
+                put_u8(b, 6);
+                put_varint(b, *a as u64);
+                put_varint(b, *rhs as u64);
+            }
+            PlanOp::ElemMult { a, b: rhs } => {
+                put_u8(b, 7);
+                put_varint(b, *a as u64);
+                put_varint(b, *rhs as u64);
+            }
+            PlanOp::ElemMin { a, b: rhs } => {
+                put_u8(b, 8);
+                put_varint(b, *a as u64);
+                put_varint(b, *rhs as u64);
+            }
+            PlanOp::ElemMax { a, b: rhs } => {
+                put_u8(b, 9);
+                put_varint(b, *a as u64);
+                put_varint(b, *rhs as u64);
+            }
+            PlanOp::Reduce { src, dim } => {
+                put_u8(b, 10);
+                put_varint(b, *src as u64);
+                put_u8(b, *dim as u8);
+            }
+            PlanOp::Scale { src, factor } => {
+                put_u8(b, 11);
+                put_varint(b, *src as u64);
+                put_f64(b, *factor);
+            }
+            PlanOp::Store { src, table } => {
+                put_u8(b, 12);
+                put_varint(b, *src as u64);
+                put_str(b, table);
+            }
+        }
+    }
+}
+
+fn get_limit(c: &mut Cursor) -> WireResult<Option<usize>> {
+    if c.bool()? {
+        Ok(Some(to_usize(c.varint()?, "limit overflows usize")?))
+    } else {
+        Ok(None)
+    }
+}
+
+/// Decode a plan and re-validate its SSA shape — forward/self refs, an
+/// empty program, or one beyond [`expr::MAX_PLAN_OPS`] are rejected
+/// here, before the executor ever sees the ops.
+fn get_plan_ops(c: &mut Cursor) -> WireResult<Vec<PlanOp>> {
+    let n = c.count(1)?;
+    let slot = |c: &mut Cursor| -> WireResult<usize> {
+        to_usize(c.varint()?, "plan slot overflows usize")
+    };
+    let mut ops = Vec::with_capacity(n.min(PREALLOC_CAP));
+    for _ in 0..n {
+        ops.push(match c.u8()? {
+            0 => PlanOp::Load {
+                table: c.str()?,
+                rows: get_keysel(c)?,
+                cols: get_keysel(c)?,
+                limit: get_limit(c)?,
+            },
+            1 => PlanOp::Select { src: slot(c)?, rows: get_keysel(c)?, cols: get_keysel(c)? },
+            2 => PlanOp::Transpose { src: slot(c)? },
+            3 => PlanOp::MatMul { a: slot(c)?, b: slot(c)? },
+            4 => PlanOp::CatKeyMul { a: slot(c)?, b: slot(c)? },
+            5 => PlanOp::ElemAdd { a: slot(c)?, b: slot(c)? },
+            6 => PlanOp::ElemSub { a: slot(c)?, b: slot(c)? },
+            7 => PlanOp::ElemMult { a: slot(c)?, b: slot(c)? },
+            8 => PlanOp::ElemMin { a: slot(c)?, b: slot(c)? },
+            9 => PlanOp::ElemMax { a: slot(c)?, b: slot(c)? },
+            10 => PlanOp::Reduce { src: slot(c)?, dim: c.u8()? as usize },
+            11 => PlanOp::Scale { src: slot(c)?, factor: c.f64()? },
+            12 => PlanOp::Store { src: slot(c)?, table: c.str()? },
+            tag => return Err(WireError::UnknownTag { what: "PlanOp", tag }),
+        });
+    }
+    if expr::validate_plan(&ops).is_err() {
+        return Err(WireError::Malformed("plan fails SSA validation"));
+    }
+    Ok(ops)
 }
 
 fn get_request(c: &mut Cursor) -> WireResult<Request> {
@@ -661,17 +831,28 @@ fn get_request(c: &mut Cursor) -> WireResult<Request> {
             Ok(Request::Ingest { table, triples, pipeline })
         }
         2 => Ok(Request::Query { table: c.str()?, query: get_query(c)? }),
-        3 => Ok(Request::TableMult { a: c.str()?, b: c.str()?, out: c.str()? }),
-        4 => Ok(Request::TableMultClient {
-            a: c.str()?,
-            b: c.str()?,
-            memory_limit: to_usize(c.varint()?, "memory_limit overflows usize")?,
-        }),
-        5 => Ok(Request::TableMultDense {
-            a: c.str()?,
-            b: c.str()?,
-            tile: to_usize(c.varint()?, "tile overflows usize")?,
-        }),
+        3 => {
+            let a = c.str()?;
+            let b = c.str()?;
+            let dest = match c.u8()? {
+                0 => MultDest::Table { out: c.str()? },
+                1 => MultDest::Client,
+                tag => return Err(WireError::UnknownTag { what: "MultDest", tag }),
+            };
+            let exec = match c.u8()? {
+                0 => ExecHint::Stream,
+                1 => ExecHint::Memory {
+                    limit: to_usize(c.varint()?, "memory limit overflows usize")?,
+                },
+                2 => ExecHint::Dense { tile: to_usize(c.varint()?, "tile overflows usize")? },
+                tag => return Err(WireError::UnknownTag { what: "ExecHint", tag }),
+            };
+            Ok(Request::TableMult { a, b, dest, exec })
+        }
+        // v3 tags 4/5 (TableMultClient / TableMultDense) collapsed into
+        // tag 3's dest/exec bytes; the tags stay burned so old frames
+        // fail typed instead of decoding as something else
+        tag @ (4 | 5) => Err(WireError::Retired { what: "Request", tag }),
         6 => Ok(Request::Bfs {
             table: c.str()?,
             seeds: c.str_vec()?,
@@ -692,6 +873,7 @@ fn get_request(c: &mut Cursor) -> WireResult<Request> {
             Ok(Request::PageRank { table, opts })
         }
         10 => Ok(Request::ListTables),
+        11 => Ok(Request::Plan { ops: get_plan_ops(c)? }),
         tag => Err(WireError::UnknownTag { what: "Request", tag }),
     }
 }
@@ -756,6 +938,14 @@ pub fn encode_response(b: &mut Vec<u8>, resp: &Response) {
             put_varint(b, s.partial_products);
             put_varint(b, s.peak_row_entries as u64);
         }
+        Response::PlanResult { result, stats } => {
+            put_u8(b, 7);
+            encode_assoc(b, result);
+            put_varint(b, stats.ops);
+            put_varint(b, stats.fused_selects);
+            put_varint(b, stats.fused_reduces);
+            put_varint(b, stats.intermediates);
+        }
     }
 }
 
@@ -813,6 +1003,16 @@ fn get_response(c: &mut Cursor) -> WireResult<Response> {
             partial_products: c.varint()?,
             peak_row_entries: to_usize(c.varint()?, "peak_row_entries overflows usize")?,
         })),
+        7 => {
+            let result = get_assoc(c)?;
+            let stats = PlanStats {
+                ops: c.varint()?,
+                fused_selects: c.varint()?,
+                fused_reduces: c.varint()?,
+                intermediates: c.varint()?,
+            };
+            Ok(Response::PlanResult { result, stats })
+        }
         tag => Err(WireError::UnknownTag { what: "Response", tag }),
     }
 }
@@ -975,6 +1175,11 @@ pub fn encode_client_frame(id: u64, m: &ClientMsg) -> Vec<u8> {
             put_u8(&mut b, 6);
             put_varint(&mut b, *cursor);
         }
+        ClientMsg::OpenPlanCursor { ops, page_entries } => {
+            put_u8(&mut b, 7);
+            put_plan_ops(&mut b, ops);
+            put_varint(&mut b, *page_entries);
+        }
     }
     b
 }
@@ -1005,6 +1210,10 @@ pub fn decode_client_frame(buf: &[u8]) -> WireResult<(u64, ClientMsg)> {
         },
         5 => ClientMsg::CursorNext { cursor: c.varint()? },
         6 => ClientMsg::CursorClose { cursor: c.varint()? },
+        7 => ClientMsg::OpenPlanCursor {
+            ops: get_plan_ops(&mut c)?,
+            page_entries: c.varint()?,
+        },
         tag => return Err(WireError::UnknownTag { what: "ClientMsg", tag }),
     };
     c.finish()?;
@@ -1162,8 +1371,46 @@ mod tests {
         }
     }
 
+    /// A random **valid** plan: op 0 is a Load, every later op only
+    /// references earlier slots, dims stay in {1, 2} — so the decoder's
+    /// revalidation pass accepts it.
+    fn rand_plan_ops(rng: &mut XorShift64) -> Vec<PlanOp> {
+        let n = 1 + rng.below(8) as usize;
+        let mut ops = vec![PlanOp::Load {
+            table: rand_str(rng),
+            rows: rand_keysel(rng),
+            cols: rand_keysel(rng),
+            limit: if rng.below(2) == 0 { None } else { Some(rng.below(1 << 20) as usize) },
+        }];
+        for i in 1..n {
+            let src = rng.below(i as u64) as usize;
+            let b = rng.below(i as u64) as usize;
+            ops.push(match rng.below(13) {
+                0 => PlanOp::Load {
+                    table: rand_str(rng),
+                    rows: rand_keysel(rng),
+                    cols: rand_keysel(rng),
+                    limit: if rng.below(2) == 0 { None } else { Some(rng.below(64) as usize) },
+                },
+                1 => PlanOp::Select { src, rows: rand_keysel(rng), cols: rand_keysel(rng) },
+                2 => PlanOp::Transpose { src },
+                3 => PlanOp::MatMul { a: src, b },
+                4 => PlanOp::CatKeyMul { a: src, b },
+                5 => PlanOp::ElemAdd { a: src, b },
+                6 => PlanOp::ElemSub { a: src, b },
+                7 => PlanOp::ElemMult { a: src, b },
+                8 => PlanOp::ElemMin { a: src, b },
+                9 => PlanOp::ElemMax { a: src, b },
+                10 => PlanOp::Reduce { src, dim: 1 + rng.below(2) as usize },
+                11 => PlanOp::Scale { src, factor: rng.f64() * 16.0 - 8.0 },
+                _ => PlanOp::Store { src, table: rand_str(rng) },
+            });
+        }
+        ops
+    }
+
     fn rand_request(rng: &mut XorShift64) -> Request {
-        match rng.below(11) {
+        match rng.below(12) {
             0 => Request::CreateTable {
                 name: rand_str(rng),
                 splits: (0..rng.below(4)).map(|_| rand_str(rng)).collect(),
@@ -1181,17 +1428,28 @@ mod tests {
                 },
             },
             2 => Request::Query { table: rand_str(rng), query: rand_query(rng) },
-            3 => Request::TableMult { a: rand_str(rng), b: rand_str(rng), out: rand_str(rng) },
-            4 => {
-                let unlimited = rng.below(2) == 0;
-                let cap = if unlimited { usize::MAX } else { rng.below(1 << 30) as usize };
-                Request::TableMultClient { a: rand_str(rng), b: rand_str(rng), memory_limit: cap }
+            3 | 4 | 5 => {
+                let dest = if rng.below(2) == 0 {
+                    MultDest::Table { out: rand_str(rng) }
+                } else {
+                    MultDest::Client
+                };
+                let exec = match rng.below(3) {
+                    0 => ExecHint::Stream,
+                    1 => {
+                        let unlimited = rng.below(2) == 0;
+                        ExecHint::Memory {
+                            limit: if unlimited {
+                                usize::MAX
+                            } else {
+                                rng.below(1 << 30) as usize
+                            },
+                        }
+                    }
+                    _ => ExecHint::Dense { tile: 1 + rng.below(512) as usize },
+                };
+                Request::TableMult { a: rand_str(rng), b: rand_str(rng), dest, exec }
             }
-            5 => Request::TableMultDense {
-                a: rand_str(rng),
-                b: rand_str(rng),
-                tile: 1 + rng.below(512) as usize,
-            },
             6 => Request::Bfs {
                 table: rand_str(rng),
                 seeds: (0..rng.below(5)).map(|_| rand_str(rng)).collect(),
@@ -1207,12 +1465,13 @@ mod tests {
                     tol: rng.f64() / 1e6,
                 },
             },
+            10 => Request::Plan { ops: rand_plan_ops(rng) },
             _ => Request::ListTables,
         }
     }
 
     fn rand_response(rng: &mut XorShift64) -> Response {
-        match rng.below(7) {
+        match rng.below(8) {
             0 => Response::Ok,
             1 => Response::Tables((0..rng.below(6)).map(|_| rand_str(rng)).collect()),
             2 => Response::Ingested(IngestReport {
@@ -1233,11 +1492,20 @@ mod tests {
                 iterations: rng.below(200) as usize,
                 converged: rng.below(2) == 0,
             }),
-            _ => Response::MultStats(TableMultStats {
+            6 => Response::MultStats(TableMultStats {
                 rows_contracted: rng.below(1 << 20),
                 partial_products: rng.below(1 << 30),
                 peak_row_entries: rng.below(1 << 16) as usize,
             }),
+            _ => Response::PlanResult {
+                result: rand_assoc(rng),
+                stats: PlanStats {
+                    ops: rng.below(64),
+                    fused_selects: rng.below(8),
+                    fused_reduces: rng.below(8),
+                    intermediates: rng.below(8),
+                },
+            },
         }
     }
 
@@ -1366,6 +1634,119 @@ mod tests {
             ));
             let b = encode_server_frame(id, &ServerMsg::CursorClosed);
             assert!(matches!(decode_server_frame(&b).unwrap(), (_, ServerMsg::CursorClosed)));
+        }
+    }
+
+    #[test]
+    fn plan_request_and_cursor_roundtrip() {
+        crate::util::forall(300, 0xD4B0, |rng| {
+            let ops = rand_plan_ops(rng);
+            let req = Request::Plan { ops: ops.clone() };
+            let mut b = Vec::new();
+            encode_request(&mut b, &req);
+            assert_eq!(decode_request(&b).expect("decode"), req);
+
+            let id = 1 + rng.below(1 << 30);
+            let msg = ClientMsg::OpenPlanCursor { ops, page_entries: 1 + rng.below(1 << 16) };
+            let b = encode_client_frame(id, &msg);
+            match (decode_client_frame(&b).expect("decode"), &msg) {
+                (
+                    (bid, ClientMsg::OpenPlanCursor { ops, page_entries }),
+                    ClientMsg::OpenPlanCursor { ops: o0, page_entries: p0 },
+                ) => {
+                    assert_eq!(bid, id);
+                    assert_eq!(&ops, o0);
+                    assert_eq!(&page_entries, p0);
+                }
+                other => panic!("wrong shape: {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn retired_tablemult_tags_fail_typed() {
+        // hand-build v3-era tag-4/5 payloads: a retired tag must decode
+        // to the dedicated error, not UnknownTag and not a misparse
+        for tag in [4u8, 5] {
+            let mut b = Vec::new();
+            put_u8(&mut b, tag);
+            put_str(&mut b, "A");
+            put_str(&mut b, "B");
+            put_varint(&mut b, 64);
+            assert_eq!(
+                decode_request(&b),
+                Err(WireError::Retired { what: "Request", tag })
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_plans_rejected_at_decode() {
+        // forward reference: op 0 selecting from slot 5
+        let mut b = Vec::new();
+        put_u8(&mut b, 11);
+        put_varint(&mut b, 1);
+        put_u8(&mut b, 1); // Select
+        put_varint(&mut b, 5);
+        put_keysel(&mut b, &KeySel::All);
+        put_keysel(&mut b, &KeySel::All);
+        assert_eq!(decode_request(&b), Err(WireError::Malformed("plan fails SSA validation")));
+
+        // empty program
+        let mut b = Vec::new();
+        put_u8(&mut b, 11);
+        put_varint(&mut b, 0);
+        assert_eq!(decode_request(&b), Err(WireError::Malformed("plan fails SSA validation")));
+
+        // reduce dim outside {1, 2}
+        let mut b = Vec::new();
+        put_u8(&mut b, 11);
+        put_varint(&mut b, 2);
+        put_u8(&mut b, 0); // Load
+        put_str(&mut b, "T");
+        put_keysel(&mut b, &KeySel::All);
+        put_keysel(&mut b, &KeySel::All);
+        put_u8(&mut b, 0); // no limit
+        put_u8(&mut b, 10); // Reduce
+        put_varint(&mut b, 0);
+        put_u8(&mut b, 3); // bad dim
+        assert_eq!(decode_request(&b), Err(WireError::Malformed("plan fails SSA validation")));
+
+        // unknown op tag
+        let mut b = Vec::new();
+        put_u8(&mut b, 11);
+        put_varint(&mut b, 1);
+        put_u8(&mut b, 13);
+        assert_eq!(
+            decode_request(&b),
+            Err(WireError::UnknownTag { what: "PlanOp", tag: 13 })
+        );
+
+        // random bytes after a Plan tag never panic
+        crate::util::forall(300, 0xD4B1, |rng| {
+            let n = rng.below(64) as usize;
+            let mut b = vec![11u8];
+            for _ in 0..n {
+                b.push(rng.below(256) as u8);
+            }
+            let _ = decode_request(&b); // Ok or Err — never a panic
+        });
+    }
+
+    #[test]
+    fn plan_result_roundtrip() {
+        let result = Assoc::from_triples(&[("r0", "", 6.5), ("r1", "", 2.0)]);
+        let stats =
+            PlanStats { ops: 4, fused_selects: 1, fused_reduces: 1, intermediates: 0 };
+        let resp = Response::PlanResult { result: result.clone(), stats };
+        let mut b = Vec::new();
+        encode_response(&mut b, &resp);
+        match decode_response(&b).unwrap() {
+            Response::PlanResult { result: r, stats: s } => {
+                assert_eq!(r, result);
+                assert_eq!(s, stats);
+            }
+            other => panic!("wrong shape: {other:?}"),
         }
     }
 

@@ -1,5 +1,6 @@
 //! Small shared utilities: deterministic RNG, sorted-vec helpers, a tiny
-//! property-testing harness (`forall`), and human-readable rate formatting.
+//! property-testing harness (`forall`), the shared [`KeySel`] string
+//! parser, and human-readable rate formatting.
 
 pub mod bench;
 pub mod fasthash;
@@ -7,6 +8,46 @@ pub mod rng;
 
 pub use fasthash::{FastHasher, FastMap};
 pub use rng::XorShift64;
+
+use crate::assoc::KeySel;
+
+/// Parse the D4M selector string forms shared by the CLI
+/// (`scan-pages`/`client query` flags) and the plan expression language
+/// (`G('a,:,m,', ':')`). Infallible — every string means *some*
+/// selector:
+///
+/// - `""` or `":"` → [`KeySel::All`]
+/// - `"a,:,m,"` (three items, middle `:`) → [`KeySel::Range`]`("a", "m")`
+/// - `"pre*"` (single item, trailing `*`) → [`KeySel::Prefix`]`("pre")`
+/// - `"a,b,c,"` → [`KeySel::Keys`] (trailing comma optional)
+pub fn parse_keysel(s: &str) -> KeySel {
+    let s = s.trim();
+    if s.is_empty() || s == ":" {
+        return KeySel::All;
+    }
+    let mut items: Vec<&str> = s.split(',').collect();
+    // D4M selector strings conventionally end with the separator
+    // ("a,b,"), which split() renders as a trailing empty item
+    if items.last() == Some(&"") {
+        items.pop();
+    }
+    if items.len() == 1 && items[0] == ":" {
+        return KeySel::All;
+    }
+    if items.len() == 3 && items[1] == ":" {
+        return KeySel::Range(items[0].to_string(), items[2].to_string());
+    }
+    if items.len() == 1 {
+        if let Some(prefix) = items[0].strip_suffix('*') {
+            return if prefix.is_empty() {
+                KeySel::All
+            } else {
+                KeySel::Prefix(prefix.to_string())
+            };
+        }
+    }
+    KeySel::Keys(items.iter().map(|k| k.to_string()).collect())
+}
 
 /// Merge two sorted, deduplicated string slices into a sorted, deduplicated
 /// union. Returns the union plus, for each input, a mapping from its local
@@ -207,6 +248,43 @@ mod tests {
             expect.sort();
             expect.dedup();
             assert_eq!(u, expect);
+        });
+    }
+
+    #[test]
+    fn parse_keysel_forms() {
+        assert_eq!(parse_keysel(""), KeySel::All);
+        assert_eq!(parse_keysel(":"), KeySel::All);
+        assert_eq!(parse_keysel(" : "), KeySel::All);
+        assert_eq!(parse_keysel("*"), KeySel::All);
+        assert_eq!(
+            parse_keysel("a,:,m,"),
+            KeySel::Range("a".into(), "m".into())
+        );
+        assert_eq!(
+            parse_keysel("a,:,m"),
+            KeySel::Range("a".into(), "m".into())
+        );
+        assert_eq!(parse_keysel("pre*"), KeySel::Prefix("pre".into()));
+        assert_eq!(
+            parse_keysel("a,b,c,"),
+            KeySel::Keys(v(&["a", "b", "c"]))
+        );
+        assert_eq!(parse_keysel("solo"), KeySel::Keys(v(&["solo"])));
+        // a '*' inside a multi-item list is a literal key, not a prefix
+        assert_eq!(
+            parse_keysel("a*,b,"),
+            KeySel::Keys(v(&["a*", "b"]))
+        );
+    }
+
+    #[test]
+    fn parse_keysel_never_panics() {
+        forall(300, 0x5E1E_C70F, |rng| {
+            let len = rng.below(32) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let s = String::from_utf8_lossy(&bytes).into_owned();
+            let _ = parse_keysel(&s);
         });
     }
 

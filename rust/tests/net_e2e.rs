@@ -17,10 +17,10 @@ use std::time::Duration;
 
 use d4m::assoc::KeySel;
 use d4m::connectors::TableQuery;
-use d4m::coordinator::{D4mApi, D4mServer, Request, Response};
+use d4m::coordinator::{D4mApi, D4mServer, ExecHint, MultDest, Request, Response};
 use d4m::net::{serve, NetOpts, RemoteD4m, RetryPolicy};
 use d4m::pipeline::{PipelineConfig, TripleMsg};
-use d4m::D4mError;
+use d4m::{D4mError, Plan};
 
 /// Readiness-probe connect (the old fixed-interval `connect_retry`).
 fn connect(addr: &str) -> RemoteD4m {
@@ -139,10 +139,11 @@ fn remote_mirrors_every_coordinator_op() {
 
     let mult_remote = c.tablemult_client("G", "G", usize::MAX).unwrap();
     let mult_local = server
-        .handle(Request::TableMultClient {
+        .handle(Request::TableMult {
             a: "G".into(),
             b: "G".into(),
-            memory_limit: usize::MAX,
+            dest: MultDest::Client,
+            exec: ExecHint::Memory { limit: usize::MAX },
         })
         .unwrap()
         .into_assoc()
@@ -368,6 +369,69 @@ fn remote_scan_pages_bit_identical_and_bounded() {
 
     // drained cursors freed themselves server-side
     assert_eq!(server.open_cursor_count(), 0);
+    handle.shutdown();
+}
+
+/// The plan-language acceptance criterion: a select → matmul → reduce
+/// chain executes server-side in **one** round trip, bit-identical to
+/// the sequential remote round trips, and the executor counters prove
+/// zero intermediates were materialised. The same compiled plan also
+/// drains through a streaming plan cursor page by page.
+#[test]
+fn remote_plan_one_round_trip_bit_identical_zero_intermediates() {
+    let server = server_with_graph();
+    let (mut handle, addr) = spawn_net(server.clone());
+    let c = connect(&addr);
+
+    // sequential: two Query round trips plus client-side matmul + sum
+    let rows = KeySel::Range("a".into(), "b".into());
+    let lhs = c.query("G", TableQuery::all().rows(rows.clone())).unwrap();
+    let rhs = c.query("G", TableQuery::all()).unwrap();
+    let want = lhs.matmul(&rhs).sum(2);
+
+    // the same chain as one compiled plan: exactly one request crosses
+    // the wire (net.requests is counted server-side, outside this client)
+    let requests = |h: &d4m::net::NetHandle| {
+        h.snapshots()
+            .iter()
+            .find(|s| s.name == "net.requests")
+            .map(|s| s.count)
+            .unwrap_or(0)
+    };
+    let ops = Plan::table("G")
+        .select(rows, KeySel::All)
+        .matmul(&Plan::table("G"))
+        .sum(2)
+        .compile()
+        .unwrap();
+    let n0 = requests(&handle);
+    let (got, stats) = c.plan(&ops).unwrap();
+    assert_eq!(requests(&handle) - n0, 1, "plan took more than one round trip");
+    assert_eq!(got, want, "remote plan diverged from sequential remote ops");
+    assert_eq!(got.matrix(), want.matrix(), "CSR arrays must match bit-for-bit");
+    assert_eq!(stats.ops, 5);
+    assert_eq!(stats.fused_selects, 1, "select was not folded into the scan");
+    assert_eq!(stats.fused_reduces, 1, "reduce did not stream the matmul");
+    assert_eq!(stats.intermediates, 0, "fused plan materialised an intermediate");
+
+    // the compact text syntax takes the same path end to end
+    let (got_expr, _) = c.plan_expr("sum(G('a,:,b,', ':') * G, 2)").unwrap();
+    assert_eq!(got_expr, got);
+
+    // the same ops through a remote plan cursor: page size 1 forces one
+    // entry per page, reassembles bit-identically, and frees itself
+    let mut pages = 0usize;
+    let mut triples: Vec<TripleMsg> = Vec::new();
+    for page in c.plan_pages(&ops, 1) {
+        let p = page.expect("plan cursor page");
+        assert!(p.len() <= 1, "page exceeded page_entries bound");
+        pages += 1;
+        triples.extend(p);
+    }
+    assert!(pages > 1, "expected multiple pages, got {pages}");
+    let paged = d4m::assoc::io::parse_triples(triples).unwrap();
+    assert_eq!(paged, got, "paged plan diverged from one-shot plan");
+    assert_eq!(server.open_cursor_count(), 0, "drained plan cursor must free itself");
     handle.shutdown();
 }
 
