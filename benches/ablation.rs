@@ -7,6 +7,9 @@
 //!       threshold (the naive merge-all this repo replaced).
 //!   A3. BatchWriter batch size on the raw store write path.
 
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::sync::Arc;
 use std::time::Instant;
 

@@ -14,6 +14,9 @@
 //! so the trajectory is diffable across commits. `--smoke` runs the
 //! smallest size only (the CI regression probe).
 
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::path::Path;
 use std::time::Instant;
 

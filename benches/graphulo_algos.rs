@@ -6,6 +6,9 @@
 //! materialising the full operands client-side; the gap narrows (or
 //! flips) as data grows and client memory pressure rises.
 
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::sync::Arc;
 use std::time::Instant;
 

@@ -13,6 +13,9 @@
 //! Machine-readable records are appended to `BENCH_ingest.json`;
 //! `--smoke` runs the smallest sizes only (the CI regression probe).
 
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::path::Path;
 use std::sync::Arc;
 

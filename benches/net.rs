@@ -34,6 +34,9 @@
 //! Records append to `BENCH_net.json`; `--smoke` runs the smallest size
 //! only (the CI regression probe checked by tools/bench_check.py).
 
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::Arc;

@@ -15,6 +15,9 @@
 //! Machine-readable records are appended to `BENCH_scan.json`;
 //! `--smoke` runs the smallest size only (the CI regression probe).
 
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;

@@ -15,6 +15,9 @@
 //! are appended to `BENCH_assoc.json`; `--smoke` runs the two smallest
 //! scales only (the CI regression probe).
 
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;

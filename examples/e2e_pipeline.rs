@@ -21,6 +21,9 @@
 //! Run with: `make e2e` or
 //! `cargo run --release --example e2e_pipeline [SCALE]`
 
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::time::Instant;
 
 use d4m::assoc::KeySel;

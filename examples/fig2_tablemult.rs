@@ -13,6 +13,9 @@
 //!
 //! Run with: `cargo run --release --example fig2_tablemult`
 
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::sync::Arc;
 use std::time::Instant;
 

@@ -5,6 +5,9 @@
 //!
 //! Run with: `cargo run --release --example graph_analytics`
 
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::sync::Arc;
 
 use d4m::assoc::Assoc;

@@ -8,6 +8,9 @@
 //!
 //! Run with: `cargo run --release --example polystore_etl`
 
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use d4m::assoc::KeySel;
 use d4m::connectors::{AccumuloConnector, D4mTableConfig, DbTable, SciDbConnector, TableQuery};
 use d4m::gen::doc_word_triples;

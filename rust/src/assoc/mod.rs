@@ -19,6 +19,10 @@
 //! key, no per-triple binary search), and key selection binary-searches
 //! the sorted key vectors instead of scanning them.
 
+// unwrap/expect are disallowed repo-wide (clippy.toml); this module's
+// call sites predate the policy and are tracked for burn-down in
+// EXPERIMENTS.md — never-panic modules carry no such allow.
+#![allow(clippy::disallowed_methods)]
 pub mod expr;
 pub mod io;
 pub mod kernel;

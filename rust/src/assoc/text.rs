@@ -83,6 +83,7 @@ pub fn facet(a: &Assoc, column: &str) -> Vec<(String, f64)> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
 

@@ -231,10 +231,12 @@ impl DbServer for SqlConnector {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn numeric_roundtrip() {
         let c = SqlConnector::new();
         let a = Assoc::from_triples(&[("r1", "c1", 1.5), ("r2", "c2", -2.0)]);
@@ -243,6 +245,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn string_roundtrip() {
         let c = SqlConnector::new();
         let a = Assoc::from_str_triples(&[("r", "c", "hello")]);
@@ -252,6 +255,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn where_pushdown() {
         let c = SqlConnector::new();
         let a = Assoc::from_triples(&[("r1", "c1", 1.0), ("r2", "c2", 10.0)]);
@@ -263,6 +267,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn put_assoc_builds_row_key_index() {
         let c = SqlConnector::new();
         c.put_assoc("t", &Assoc::from_triples(&[("r1", "c1", 1.0), ("r2", "c1", 2.0)]))
@@ -276,12 +281,14 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn missing_table_errors() {
         let c = SqlConnector::new();
         assert!(c.get_assoc("nope").is_err());
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn rebind_put_replaces_contents() {
         let c = SqlConnector::new();
         let t = c.bind("t", &BindOpts::default()).unwrap();

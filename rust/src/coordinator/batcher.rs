@@ -129,6 +129,7 @@ impl OpBatcher {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
     use crate::connectors::{AccumuloConnector, D4mTableConfig};
@@ -150,6 +151,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn size_triggered_flush() {
         let (acc, mut b) = batcher(10);
         for i in 0..25 {
@@ -165,6 +167,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn age_triggered_flush() {
         let (_acc, mut b) = batcher(1_000_000);
         b.push("T", trip(0)).unwrap();
@@ -175,6 +178,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn unknown_table_flush_errors() {
         let (_acc, mut b) = batcher(2);
         b.pending.insert(

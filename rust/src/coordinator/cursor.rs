@@ -40,6 +40,10 @@
 //! resume that lands mid-pull is asked to retry with
 //! [`D4mError::Overloaded`].
 
+// unwrap/expect are disallowed repo-wide (clippy.toml); this module's
+// call sites predate the policy and are tracked for burn-down in
+// EXPERIMENTS.md — never-panic modules carry no such allow.
+#![allow(clippy::disallowed_methods)]
 use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};

@@ -14,6 +14,10 @@
 //! native Accumulo handles — they are server-side iterators, not
 //! put/get/query dispatch.
 
+// unwrap/expect are disallowed repo-wide (clippy.toml); this module's
+// call sites predate the policy and are tracked for burn-down in
+// EXPERIMENTS.md — never-panic modules carry no such allow.
+#![allow(clippy::disallowed_methods)]
 pub mod api;
 pub mod batcher;
 pub mod cursor;
@@ -34,7 +38,7 @@ use crate::connectors::{AccumuloConnector, D4mTable, D4mTableConfig, DbTable, Ta
 use crate::error::{D4mError, Result};
 use crate::graphulo::{self, ClientCtx, TableMultOpts};
 use crate::kvstore::{KvStore, Table};
-use crate::metrics::{Histogram, RateMeter, Snapshot};
+use crate::metrics::{names, Histogram, RateMeter, Snapshot};
 use crate::pipeline::{IngestPipeline, IngestReport, PipelineConfig, TripleMsg};
 use crate::runtime::DenseEngine;
 
@@ -534,11 +538,11 @@ impl D4mServer {
             .collect();
         if let Some(c) = self.acc.store().storage_counters() {
             let storage = [
-                ("wal.bytes_appended", c.wal_bytes_appended.get()),
-                ("wal.fsyncs", c.wal_fsyncs.get()),
-                ("storage.flushes", c.flushes.get()),
-                ("storage.compactions", c.compactions.get()),
-                ("storage.backpressure_stalls", c.backpressure_stalls.get()),
+                (names::STORAGE_WAL_BYTES_APPENDED, c.wal_bytes_appended.get()),
+                (names::STORAGE_WAL_FSYNCS, c.wal_fsyncs.get()),
+                (names::STORAGE_FLUSHES, c.flushes.get()),
+                (names::STORAGE_COMPACTIONS, c.compactions.get()),
+                (names::STORAGE_BACKPRESSURE_STALLS, c.backpressure_stalls.get()),
             ];
             out.extend(storage.into_iter().map(|(name, count)| Snapshot {
                 name: name.to_string(),
@@ -550,9 +554,9 @@ impl D4mServer {
         }
         let kc = crate::assoc::kernel::counters();
         let kernels = [
-            ("kernels.parallel_ops", kc.parallel_ops.get()),
-            ("kernels.serial_ops", kc.serial_ops.get()),
-            ("kernels.blocked_rows", kc.blocked_rows.get()),
+            (names::KERNELS_PARALLEL_OPS, kc.parallel_ops.get()),
+            (names::KERNELS_SERIAL_OPS, kc.serial_ops.get()),
+            (names::KERNELS_BLOCKED_ROWS, kc.blocked_rows.get()),
         ];
         out.extend(kernels.into_iter().map(|(name, count)| Snapshot {
             name: name.to_string(),
@@ -563,10 +567,10 @@ impl D4mServer {
         }));
         let pc = plan::counters();
         let plans = [
-            ("plan.ops", pc.ops.get()),
-            ("plan.fused_selects", pc.fused_selects.get()),
-            ("plan.fused_reduces", pc.fused_reduces.get()),
-            ("plan.intermediates", pc.intermediates.get()),
+            (names::PLAN_OPS, pc.ops.get()),
+            (names::PLAN_FUSED_SELECTS, pc.fused_selects.get()),
+            (names::PLAN_FUSED_REDUCES, pc.fused_reduces.get()),
+            (names::PLAN_INTERMEDIATES, pc.intermediates.get()),
         ];
         out.extend(plans.into_iter().map(|(name, count)| Snapshot {
             name: name.to_string(),
@@ -639,6 +643,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn ingest_then_query() {
         let s = server_with_graph();
         let a = s
@@ -650,6 +655,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn query_by_col_via_transpose() {
         let s = server_with_graph();
         let a = s
@@ -664,6 +670,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn query_row_range_pushdown() {
         let s = server_with_graph();
         let a = s
@@ -678,6 +685,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn into_assoc_mismatch_is_typed_unexpected_response() {
         let s = server_with_graph();
         let r = s.handle(Request::ListTables).unwrap();
@@ -691,6 +699,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn server_tablemult_vs_client() {
         let s = server_with_graph();
         match s
@@ -720,6 +729,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn client_memory_wall() {
         let s = server_with_graph();
         let r = s.handle(Request::TableMult {
@@ -732,6 +742,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn tablemult_rejects_unsupported_combinations() {
         let s = server_with_graph();
         // a table destination cannot be computed by the in-RAM paths,
@@ -753,6 +764,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn tablemult_idempotency_follows_dest() {
         let mult = |dest: MultDest, exec: ExecHint| Request::TableMult {
             a: "G".into(),
@@ -771,6 +783,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn bfs_request() {
         let s = server_with_graph();
         match s
@@ -785,6 +798,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn jaccard_and_ktruss_requests() {
         let s = server_with_graph();
         let j = s
@@ -804,6 +818,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn unknown_table_errors() {
         let s = D4mServer::with_engine(None);
         assert!(s
@@ -812,6 +827,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn metrics_populate() {
         let s = server_with_graph();
         s.handle(Request::Query { table: "G".into(), query: TableQuery::all() }).unwrap();
@@ -839,6 +855,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn scan_pages_bit_identical_to_query_across_page_boundaries() {
         let s = server_with_bigger_graph();
         let one_shot = D4mApi::query(&s, "G", TableQuery::all()).unwrap();
@@ -864,6 +881,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn scan_pages_honours_selectors_and_limit() {
         let s = server_with_bigger_graph();
         let q = TableQuery::all().rows(KeySel::Prefix("r0".into())).limit(5);
@@ -873,6 +891,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn cursor_close_releases_snapshot_and_isolates_from_writes() {
         let s = server_with_graph();
         let id = s.open_cursor("G", &TableQuery::all(), 2).unwrap();
@@ -916,6 +935,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn cursor_cap_rejects_excess_opens() {
         let s = server_with_graph();
         s.set_cursor_limits(2, Duration::from_secs(300));
@@ -933,6 +953,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn cursor_idle_ttl_evicts() {
         let s = server_with_graph();
         s.set_cursor_limits(8, Duration::from_millis(20));
@@ -945,6 +966,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn cursor_ownership_is_enforced_and_reaped() {
         let s = server_with_graph();
         let (id, _token) = s.open_cursor_owned(7, "G", &TableQuery::all(), 2).unwrap();
@@ -962,6 +984,7 @@ mod tests {
     // the chaos e2e suite)
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn cursor_resume_continues_bit_identically() {
         let s = server_with_bigger_graph();
         let one_shot = D4mApi::query(&s, "G", TableQuery::all()).unwrap();
@@ -992,6 +1015,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn cursor_resume_replays_a_lost_page() {
         let s = server_with_bigger_graph();
         let one_shot = D4mApi::query(&s, "G", TableQuery::all()).unwrap();
@@ -1021,6 +1045,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn cursor_resume_replays_a_lost_done_page() {
         let s = server_with_graph();
         let (id, token) = s.open_cursor_owned(7, "G", &TableQuery::all(), 100).unwrap();
@@ -1038,6 +1063,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn cursor_resume_rejects_bad_token_and_gaps() {
         let s = server_with_bigger_graph();
         let (id, token) = s.open_cursor_owned(7, "G", &TableQuery::all(), 3).unwrap();
@@ -1064,6 +1090,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn orphaned_cursors_expire_after_grace() {
         let s = server_with_graph();
         s.set_cursor_grace(Duration::from_millis(20));
@@ -1081,6 +1108,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn reap_is_immediate_but_orphan_keeps_resumable() {
         let s = server_with_graph();
         let (_id, _) = s.open_cursor_owned(7, "G", &TableQuery::all(), 2).unwrap();
@@ -1098,6 +1126,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn open_cursor_unknown_table_is_not_found() {
         let s = D4mServer::with_engine(None);
         assert!(matches!(

@@ -187,6 +187,7 @@ pub fn symmetrise_table(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
     use crate::assoc::Assoc;
@@ -202,6 +203,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn bfs_server_matches_client() {
         let g = Assoc::from_triples(&[
             ("a", "b", 1.0),
@@ -217,6 +219,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn jaccard_server_matches_client() {
         let g = Assoc::from_triples(&[
             ("r1", "x", 1.0),
@@ -238,6 +241,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn ktruss_server_matches_client() {
         // triangle + dangling edge, symmetrised in-store
         let g = Assoc::from_triples(&[
@@ -254,6 +258,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn ktruss_server_empty_when_no_truss() {
         let g = Assoc::from_triples(&[("a", "b", 1.0), ("b", "c", 1.0)]); // path, no triangle
         let (s, t, _d) = store_with_graph(&g);
@@ -263,6 +268,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn bfs_server_disconnected() {
         let g = Assoc::from_triples(&[("a", "b", 1.0), ("x", "y", 1.0)]);
         let (_s, t, _d) = store_with_graph(&g);

@@ -13,6 +13,10 @@
 //! independent of the output size — while client-side D4M must hold
 //! A, B *and* C in RAM.
 
+// unwrap/expect are disallowed repo-wide (clippy.toml); this module's
+// call sites predate the policy and are tracked for burn-down in
+// EXPERIMENTS.md — never-panic modules carry no such allow.
+#![allow(clippy::disallowed_methods)]
 use std::sync::Arc;
 
 use crate::assoc::io::fmt_num;
@@ -268,6 +272,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn matches_client_side_transpose_matmul() {
         let a = Assoc::from_triples(&[
             ("k1", "i1", 2.0),
@@ -285,6 +290,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn disjoint_rows_empty_product() {
         let a = Assoc::from_triples(&[("k1", "i", 1.0)]);
         let b = Assoc::from_triples(&[("k9", "j", 1.0)]);
@@ -295,6 +301,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn accumulates_into_existing_product() {
         // two successive TableMults sum into C (the "+=" semantics)
         let a = Assoc::from_triples(&[("k", "i", 1.0)]);
@@ -307,6 +314,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn bounded_peak_memory() {
         // a power-law-ish table: one hub row, many leaf rows
         let mut t = vec![];
@@ -325,6 +333,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn parallel_workers_match_serial() {
         // ~60 contracted rows with integer-valued products, so the
         // shard sums are exact and serial/parallel must agree exactly
@@ -362,6 +371,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn parallel_respects_row_range_bounds() {
         // parallel sharding of a bounded range contracts the same rows
         let mut t = vec![];
@@ -392,6 +402,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn row_range_shards_compose() {
         // running two disjoint row-range shards == one full run
         let a = Assoc::from_triples(&[

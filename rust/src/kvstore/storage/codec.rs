@@ -76,6 +76,23 @@ fn corrupt(what: &str) -> D4mError {
     D4mError::Storage(format!("corrupt record: {what}"))
 }
 
+/// Little-endian `u32` at byte offset `pos`; `None` when `b` is too
+/// short. The fixed-width header fields (record length prefixes, CRCs,
+/// index offsets) all read through these two so a torn file surfaces as
+/// a recoverable `None`, never a slice panic.
+pub fn u32_le_at(b: &[u8], pos: usize) -> Option<u32> {
+    let end = pos.checked_add(4)?;
+    let arr: [u8; 4] = b.get(pos..end)?.try_into().ok()?;
+    Some(u32::from_le_bytes(arr))
+}
+
+/// Little-endian `u64` at byte offset `pos`; `None` when `b` is too short.
+pub fn u64_le_at(b: &[u8], pos: usize) -> Option<u64> {
+    let end = pos.checked_add(8)?;
+    let arr: [u8; 8] = b.get(pos..end)?.try_into().ok()?;
+    Some(u64::from_le_bytes(arr))
+}
+
 /// Bounds-checked reader over a decoded-and-checksummed payload slice.
 pub struct Reader<'a> {
     buf: &'a [u8],
@@ -96,16 +113,18 @@ impl<'a> Reader<'a> {
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.remaining() < n {
-            return Err(corrupt("truncated"));
-        }
-        let out = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| corrupt("truncated"))?;
+        let out = self.buf.get(self.pos..end).ok_or_else(|| corrupt("truncated"))?;
+        self.pos = end;
         Ok(out)
     }
 
     pub fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        Ok(*self.take(1)?.first().ok_or_else(|| corrupt("truncated"))?)
     }
 
     pub fn varint(&mut self) -> Result<u64> {
@@ -166,6 +185,7 @@ pub fn sync_dir(dir: &std::path::Path) -> std::io::Result<()> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
 
@@ -226,5 +246,17 @@ mod tests {
             assert!(r.entry().is_err(), "cut at {cut} must not decode");
         }
         assert!(Reader::new(&b).entry().is_ok());
+    }
+
+    #[test]
+    fn fixed_width_reads_are_total() {
+        let b = 0x1122_3344_5566_7788u64.to_le_bytes();
+        assert_eq!(u64_le_at(&b, 0), Some(0x1122_3344_5566_7788));
+        assert_eq!(u32_le_at(&b, 0), Some(0x5566_7788));
+        assert_eq!(u32_le_at(&b, 4), Some(0x1122_3344));
+        assert_eq!(u32_le_at(&b, 5), None);
+        assert_eq!(u64_le_at(&b, 1), None);
+        assert_eq!(u32_le_at(&b, usize::MAX), None); // offset overflow
+        assert_eq!(u64_le_at(&[], 0), None);
     }
 }

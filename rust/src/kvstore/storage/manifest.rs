@@ -50,20 +50,20 @@ pub fn load(dir: &Path) -> Result<Option<Manifest>> {
     if bytes.len() < 13 {
         return Err(bad("truncated"));
     }
-    if &bytes[..4] != MAGIC {
+    if !bytes.starts_with(MAGIC) {
         return Err(bad("bad magic"));
     }
-    if bytes[4] != VERSION {
+    if bytes.get(4) != Some(&VERSION) {
         return Err(bad("unsupported manifest version"));
     }
-    let len = u32::from_le_bytes(bytes[5..9].try_into().unwrap()) as usize;
-    let crc = u32::from_le_bytes(bytes[9..13].try_into().unwrap());
+    let len = codec::u32_le_at(&bytes, 5).ok_or_else(|| bad("truncated"))? as usize;
+    let crc = codec::u32_le_at(&bytes, 9).ok_or_else(|| bad("truncated"))?;
     // the manifest is rename-replaced whole: anything but an exact-length
     // checksummed payload is corruption, including trailing garbage
     if bytes.len() - 13 != len {
         return Err(bad("payload length mismatch"));
     }
-    let payload = &bytes[13..];
+    let payload = bytes.get(13..).ok_or_else(|| bad("truncated"))?;
     if codec::crc32(payload) != crc {
         return Err(bad("checksum mismatch"));
     }
@@ -137,6 +137,7 @@ pub fn store(dir: &Path, m: &Manifest) -> Result<()> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicU64, Ordering};
@@ -163,6 +164,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn roundtrip() {
         let dir = tmp_dir("roundtrip");
         let m = sample();
@@ -172,6 +174,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn missing_is_none() {
         let dir = tmp_dir("missing");
         assert_eq!(load(&dir).unwrap(), None);
@@ -179,6 +182,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn store_replaces_atomically() {
         let dir = tmp_dir("replace");
         store(&dir, &sample()).unwrap();
@@ -192,6 +196,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn truncation_every_cut_is_typed_error() {
         let dir = tmp_dir("cut");
         store(&dir, &sample()).unwrap();
@@ -208,6 +213,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn garbage_suffix_is_typed_error() {
         let dir = tmp_dir("suffix");
         store(&dir, &sample()).unwrap();
@@ -220,6 +226,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn bit_flips_error_never_panic() {
         let dir = tmp_dir("flip");
         store(&dir, &sample()).unwrap();

@@ -91,7 +91,7 @@ impl StorageGate {
     /// Publish `table`'s current debt and wake waiters (writers waiting
     /// for the backlog to drain, and the compactor waiting for work).
     pub fn set(&self, table: &str, bytes: u64) {
-        let mut debt = self.debt.lock().unwrap();
+        let mut debt = crate::util::lock_recover(&self.debt);
         if bytes == 0 {
             debt.remove(table);
         } else {
@@ -103,7 +103,7 @@ impl StorageGate {
 
     /// Total debt across all tables.
     pub fn total(&self) -> u64 {
-        self.debt.lock().unwrap().values().sum()
+        crate::util::lock_recover(&self.debt).values().sum()
     }
 
     /// Wake everyone without changing state (shutdown).
@@ -114,7 +114,7 @@ impl StorageGate {
     /// Block until total debt is within `budget`. Returns whether the
     /// caller stalled at all; times out as a typed error naming `table`.
     pub fn wait_below(&self, budget: u64, timeout: Duration, table: &str) -> Result<bool> {
-        let mut debt = self.debt.lock().unwrap();
+        let mut debt = crate::util::lock_recover(&self.debt);
         if debt.values().sum::<u64>() <= budget {
             return Ok(false);
         }
@@ -129,7 +129,7 @@ impl StorageGate {
             let (guard, _) = self
                 .cv
                 .wait_timeout(debt, left.min(Duration::from_millis(50)))
-                .unwrap();
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             debt = guard;
             if debt.values().sum::<u64>() <= budget {
                 return Ok(true);
@@ -139,8 +139,11 @@ impl StorageGate {
 
     /// Park the compactor until debt changes somewhere (or `timeout`).
     pub fn wait_for_work(&self, timeout: Duration) {
-        let debt = self.debt.lock().unwrap();
-        let _ = self.cv.wait_timeout(debt, timeout).unwrap();
+        let debt = crate::util::lock_recover(&self.debt);
+        let _ = self
+            .cv
+            .wait_timeout(debt, timeout)
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
     }
 }
 
@@ -211,11 +214,13 @@ pub fn unescape_table_name(dir: &str) -> Option<String> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
     use std::sync::Arc;
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn escape_roundtrips() {
         for name in [
             "simple",
@@ -239,6 +244,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn escape_is_injective_on_tricky_pairs() {
         // '.' escapes, so "a.b" and its escaped form can't collide
         assert_ne!(escape_table_name("a.b"), escape_table_name("a%2Eb"));
@@ -246,6 +252,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn unescape_rejects_foreign_dirs() {
         assert_eq!(unescape_table_name("%zz"), None);
         assert_eq!(unescape_table_name("trailing%"), None);
@@ -253,6 +260,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn gate_waits_until_debt_drains() {
         let gate = Arc::new(StorageGate::new());
         gate.set("t", 100);
@@ -272,6 +280,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn gate_times_out_typed() {
         let gate = StorageGate::new();
         gate.set("big", 1 << 30);
@@ -285,6 +294,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn gate_sums_across_tables() {
         let gate = StorageGate::new();
         gate.set("a", 30);

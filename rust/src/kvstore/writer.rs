@@ -103,6 +103,7 @@ impl Drop for BatchWriter {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
     use crate::kvstore::iterator::IterConfig;
@@ -110,6 +111,7 @@ mod tests {
     use crate::kvstore::store::KvStore;
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn batches_by_count() {
         let store = KvStore::new();
         let t = store.create_table("t", vec![]).unwrap();
@@ -125,6 +127,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn batches_by_bytes() {
         let store = KvStore::new();
         let t = store.create_table("t", vec![]).unwrap();
@@ -137,6 +140,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn drop_flushes() {
         let store = KvStore::new();
         let t = store.create_table("t", vec![]).unwrap();

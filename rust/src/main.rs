@@ -35,6 +35,10 @@
 //!                                   d4m serve (runs until killed)
 //! ```
 
+// unwrap/expect are disallowed repo-wide (clippy.toml); this module's
+// call sites predate the policy and are tracked for burn-down in
+// EXPERIMENTS.md — never-panic modules carry no such allow.
+#![allow(clippy::disallowed_methods)]
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Duration;
@@ -803,6 +807,7 @@ mod tests {
     use super::*;
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn kernel_threads_flag_clamps_invalid_values() {
         let hw = d4m::assoc::kernel::default_threads();
         assert_eq!(resolve_kernel_threads(None), hw);
@@ -815,6 +820,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn parse_flags_keeps_kernel_threads_value() {
         let args: Vec<String> =
             ["--kernel-threads", "4", "--addr", "h:1"].iter().map(|s| s.to_string()).collect();

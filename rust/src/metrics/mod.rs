@@ -1,6 +1,8 @@
 //! Lightweight metrics used by the pipeline, kvstore and coordinator:
 //! atomic counters, rate meters and log-scale latency histograms.
 
+pub mod names;
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
@@ -209,6 +211,7 @@ impl std::fmt::Display for Snapshot {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
 
@@ -221,6 +224,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn counter_concurrent() {
         let c = std::sync::Arc::new(Counter::new());
         let hs: Vec<_> = (0..8)
@@ -240,6 +244,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn rate_meter_counts() {
         let m = RateMeter::new();
         m.add(100);
@@ -270,6 +275,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn rate_uses_op_span_not_process_lifetime() {
         let h = Histogram::new();
         // idle "server lifetime" before the op is first exercised

@@ -1,0 +1,72 @@
+//! The counter/histogram name registry: every fixed metric name the
+//! server or client exports is declared here exactly once.
+//!
+//! Names follow the `segment.segment` grammar with the first segment
+//! naming the owning subsystem — one of `net`, `kernels`, `plan`,
+//! `storage`, `client`. `tools/d4m-verify`'s counter pass enforces both
+//! rules: a name declared twice, a name violating the grammar, or a
+//! counter-shaped string literal at a stats-assembly site that does not
+//! appear here is a CI failure. Per-op latency histograms (keyed by
+//! request op like `query` or `ingest`) are single-segment dynamic names
+//! and intentionally live outside this registry.
+
+// --------------------------------------------------------------- net.*
+
+/// Request histogram: every decoded client request.
+pub const NET_REQUESTS: &str = "net.requests";
+/// Frames that failed magic/version/length validation or decode.
+pub const NET_BAD_FRAMES: &str = "net.bad_frames";
+/// Bytes read off accepted connections (header + payload).
+pub const NET_BYTES_IN: &str = "net.bytes_in";
+/// Bytes written to accepted connections (header + payload).
+pub const NET_BYTES_OUT: &str = "net.bytes_out";
+/// Currently-open server-side scan cursors (gauge).
+pub const NET_CURSORS_OPEN: &str = "net.cursors_open";
+/// Cursors reaped by the background sweep after the grace window.
+pub const NET_CURSORS_REAPED: &str = "net.cursors_reaped";
+/// Cursors parked when their connection died (resume-grace window).
+pub const NET_CURSORS_ORPHANED: &str = "net.cursors_orphaned";
+/// Connections shed with a typed Overloaded error under pool pressure.
+pub const NET_SHEDS: &str = "net.sheds";
+
+// ----------------------------------------------------------- kernels.*
+
+/// Algebra kernel invocations that took the parallel path.
+pub const KERNELS_PARALLEL_OPS: &str = "kernels.parallel_ops";
+/// Algebra kernel invocations that stayed serial (below threshold).
+pub const KERNELS_SERIAL_OPS: &str = "kernels.serial_ops";
+/// Rows processed through the blocked SpGEMM row partitioner.
+pub const KERNELS_BLOCKED_ROWS: &str = "kernels.blocked_rows";
+
+// -------------------------------------------------------------- plan.*
+
+/// Plan ops executed by the streaming plan executor.
+pub const PLAN_OPS: &str = "plan.ops";
+/// Select ops folded into their source scan's pushdown query.
+pub const PLAN_FUSED_SELECTS: &str = "plan.fused_selects";
+/// Reduce ops fused with a pending matmul (product never built).
+pub const PLAN_FUSED_REDUCES: &str = "plan.fused_reduces";
+/// Materialised non-result intermediate values.
+pub const PLAN_INTERMEDIATES: &str = "plan.intermediates";
+
+// ----------------------------------------------------------- storage.*
+
+/// Bytes appended to write-ahead logs (record header + payload).
+pub const STORAGE_WAL_BYTES_APPENDED: &str = "storage.wal_bytes_appended";
+/// WAL fsync calls (group-commit cadence).
+pub const STORAGE_WAL_FSYNCS: &str = "storage.wal_fsyncs";
+/// Memtable flushes frozen into on-disk runs.
+pub const STORAGE_FLUSHES: &str = "storage.flushes";
+/// Background compactions completed.
+pub const STORAGE_COMPACTIONS: &str = "storage.compactions";
+/// Writer stalls waiting for the compaction backlog to drain.
+pub const STORAGE_BACKPRESSURE_STALLS: &str = "storage.backpressure_stalls";
+
+// ------------------------------------------------------------ client.*
+
+/// Requests retried by the self-healing client.
+pub const CLIENT_RETRIES: &str = "client.retries";
+/// Reconnects performed by the self-healing client.
+pub const CLIENT_RECONNECTS: &str = "client.reconnects";
+/// Cursors re-attached via a resume token after a reconnect.
+pub const CLIENT_CURSOR_RESUMES: &str = "client.cursor_resumes";

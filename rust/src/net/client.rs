@@ -44,6 +44,10 @@
 //! single-connection and never retries: ids are claimed against the
 //! connection current at submit time, exactly as before.
 
+// unwrap/expect are disallowed repo-wide (clippy.toml); this module's
+// call sites predate the policy and are tracked for burn-down in
+// EXPERIMENTS.md — never-panic modules carry no such allow.
+#![allow(clippy::disallowed_methods)]
 use std::collections::{HashMap, HashSet};
 use std::io::Read;
 use std::net::TcpStream;
@@ -478,9 +482,9 @@ impl RemoteD4m {
     /// server's `stats` uses, so CLI output can print both uniformly.
     pub fn client_snapshots(&self) -> Vec<Snapshot> {
         [
-            ("client.retries", self.retries.get()),
-            ("client.reconnects", self.reconnects.get()),
-            ("client.cursor_resumes", self.cursor_resumes.get()),
+            (crate::metrics::names::CLIENT_RETRIES, self.retries.get()),
+            (crate::metrics::names::CLIENT_RECONNECTS, self.reconnects.get()),
+            (crate::metrics::names::CLIENT_CURSOR_RESUMES, self.cursor_resumes.get()),
         ]
         .into_iter()
         .map(|(name, count)| Snapshot {

@@ -59,8 +59,9 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{CursorPage, D4mServer};
 use crate::error::{D4mError, Result};
-use crate::metrics::{Counter, Histogram, Snapshot};
+use crate::metrics::{names, Counter, Histogram, Snapshot};
 use crate::net::wire::{self, ClientMsg, ServerMsg, WireError};
+use crate::util::lock_recover;
 
 /// Cap on the `page_entries` a remote `OpenCursor` may request. The
 /// per-page byte budget ([`crate::coordinator::cursor::PAGE_BYTE_BUDGET`])
@@ -152,20 +153,20 @@ impl Shared {
     fn snapshots(&self) -> Vec<Snapshot> {
         let mut snaps = self.server.snapshots();
         snaps.push(Snapshot {
-            name: "net.requests".into(),
+            name: names::NET_REQUESTS.into(),
             count: self.requests.count(),
             rate_per_sec: self.requests.rate_per_sec(),
             mean_latency_ns: self.requests.mean_ns(),
             p99_latency_ns: self.requests.quantile_ns(0.99),
         });
         for (name, count) in [
-            ("net.bad_frames", self.bad_frames.get()),
-            ("net.bytes_in", self.bytes_in.get()),
-            ("net.bytes_out", self.bytes_out.get()),
-            ("net.cursors_open", self.server.open_cursor_count() as u64),
-            ("net.cursors_reaped", self.cursors_reaped.get()),
-            ("net.cursors_orphaned", self.cursors_orphaned.get()),
-            ("net.sheds", self.sheds.get()),
+            (names::NET_BAD_FRAMES, self.bad_frames.get()),
+            (names::NET_BYTES_IN, self.bytes_in.get()),
+            (names::NET_BYTES_OUT, self.bytes_out.get()),
+            (names::NET_CURSORS_OPEN, self.server.open_cursor_count() as u64),
+            (names::NET_CURSORS_REAPED, self.cursors_reaped.get()),
+            (names::NET_CURSORS_ORPHANED, self.cursors_orphaned.get()),
+            (names::NET_SHEDS, self.sheds.get()),
         ] {
             snaps.push(Snapshot {
                 name: name.into(),
@@ -319,7 +320,7 @@ fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
         // the peer on the condvar indefinitely
         {
             let shed_deadline = Instant::now() + sh.opts.shed_after;
-            let mut active = sh.active.lock().unwrap();
+            let mut active = lock_recover(&sh.active);
             let mut shed_now = false;
             while *active >= sh.opts.max_conns && !sh.shutdown.load(Ordering::SeqCst) {
                 let now = Instant::now();
@@ -327,7 +328,10 @@ fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
                     shed_now = true;
                     break;
                 }
-                let (g, _) = sh.pool_cv.wait_timeout(active, shed_deadline - now).unwrap();
+                let (g, _) = sh
+                    .pool_cv
+                    .wait_timeout(active, shed_deadline - now)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 active = g;
             }
             if sh.shutdown.load(Ordering::SeqCst) {
@@ -353,7 +357,7 @@ fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
         });
         if spawned.is_err() {
             // never happened in practice; release the reserved slot
-            let mut active = sh.active.lock().unwrap();
+            let mut active = lock_recover(&sh.active);
             *active -= 1;
             sh.pool_cv.notify_all();
         }
@@ -361,9 +365,12 @@ fn accept_loop(listener: TcpListener, sh: Arc<Shared>) {
     // drain: connection readers notice the flag within one idle_poll,
     // hang up their dispatch queues, and join their workers —
     // in-flight requests run to completion first
-    let mut active = sh.active.lock().unwrap();
+    let mut active = lock_recover(&sh.active);
     while *active > 0 {
-        active = sh.pool_cv.wait(active).unwrap();
+        active = sh
+            .pool_cv
+            .wait(active)
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
     }
 }
 
@@ -390,10 +397,7 @@ impl Drop for ConnGuard<'_> {
         // recover a poisoned lock rather than double-panicking in drop:
         // the counter itself is always coherent (only ever touched under
         // the lock, never across a panic point)
-        let mut active = match self.sh.active.lock() {
-            Ok(g) => g,
-            Err(poisoned) => poisoned.into_inner(),
-        };
+        let mut active = lock_recover(&self.sh.active);
         *active -= 1;
         self.sh.pool_cv.notify_all();
     }
@@ -445,8 +449,8 @@ fn reader_loop(
         // poll for a frame's first byte so an idle connection notices
         // shutdown (or a dead writer) without a dedicated waker
         stream.set_read_timeout(Some(sh.opts.idle_poll))?;
-        let mut first = [0u8; 1];
-        match stream.read(&mut first) {
+        let mut first = 0u8;
+        match stream.read(std::slice::from_mut(&mut first)) {
             Ok(0) => return Ok(()), // peer closed
             Ok(_) => {}
             Err(e)
@@ -466,7 +470,7 @@ fn reader_loop(
         // a peer dribbling bytes cannot reset the budget)
         let deadline = Instant::now() + sh.opts.io_timeout;
         let mut reader = DeadlineReader { stream: &mut *stream, sh, deadline };
-        let payload = match wire::read_frame_rest(first[0], &mut reader) {
+        let payload = match wire::read_frame_rest(first, &mut reader) {
             Ok(p) => p,
             // malformed frame: framed error back, close this connection
             Err(e @ D4mError::Wire(_)) => return poison(writer, sh, e),
@@ -497,7 +501,7 @@ fn worker_loop(
         // the lock is held only across the blocking recv — the classic
         // shared-receiver pattern: one worker waits, the rest park on
         // the mutex, and execution happens after the lock is released
-        let item = rx.lock().unwrap().recv();
+        let item = lock_recover(rx).recv();
         let (id, msg) = match item {
             Ok(it) => it,
             Err(_) => return, // reader hung up and the queue is drained
@@ -711,7 +715,7 @@ fn send(writer: &Mutex<TcpStream>, sh: &Shared, id: u64, msg: &ServerMsg) -> Res
         // interleave a partial frame
         return Err(WireError::FrameTooLarge(buf.len()).into());
     }
-    let mut stream = writer.lock().unwrap();
+    let mut stream = lock_recover(writer);
     wire::write_frame(&mut *stream, &buf)?;
     sh.bytes_out.add((wire::HEADER_LEN + buf.len()) as u64);
     Ok(())

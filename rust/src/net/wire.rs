@@ -236,10 +236,9 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> crate::error::Result<(
     if payload.len() > MAX_FRAME {
         return Err(WireError::FrameTooLarge(payload.len()).into());
     }
-    let mut head = [0u8; HEADER_LEN];
-    head[..3].copy_from_slice(&MAGIC);
-    head[3] = VERSION;
-    head[4..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    let [l0, l1, l2, l3] = (payload.len() as u32).to_le_bytes();
+    let [m0, m1, m2] = MAGIC;
+    let head: [u8; HEADER_LEN] = [m0, m1, m2, VERSION, l0, l1, l2, l3];
     w.write_all(&head)?;
     w.write_all(payload)?;
     w.flush()?;
@@ -248,18 +247,19 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> crate::error::Result<(
 
 /// Read one frame, returning its payload.
 pub fn read_frame(r: &mut impl Read) -> crate::error::Result<Vec<u8>> {
-    let mut first = [0u8; 1];
-    r.read_exact(&mut first).map_err(eof_as_truncated)?;
-    read_frame_rest(first[0], r)
+    let mut first = 0u8;
+    r.read_exact(std::slice::from_mut(&mut first)).map_err(eof_as_truncated)?;
+    read_frame_rest(first, r)
 }
 
 /// Read a frame whose first header byte was already consumed (the
 /// server reads that byte separately while polling an idle connection
 /// for shutdown — see `net::server`).
 pub fn read_frame_rest(first: u8, r: &mut impl Read) -> crate::error::Result<Vec<u8>> {
-    let mut header = [0u8; HEADER_LEN];
-    header[0] = first;
-    r.read_exact(&mut header[1..]).map_err(eof_as_truncated)?;
+    let mut rest = [0u8; HEADER_LEN - 1];
+    r.read_exact(&mut rest).map_err(eof_as_truncated)?;
+    let [r1, r2, r3, r4, r5, r6, r7] = rest;
+    let header: [u8; HEADER_LEN] = [first, r1, r2, r3, r4, r5, r6, r7];
     let len = frame_payload_len(&header)?;
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload).map_err(eof_as_truncated)?;
@@ -271,14 +271,15 @@ pub fn read_frame_rest(first: u8, r: &mut impl Read) -> crate::error::Result<Vec
 /// self-healing client's poll loop, the chaos proxy's frame splitter)
 /// instead of blocking in [`read_frame`].
 pub fn frame_payload_len(header: &[u8; HEADER_LEN]) -> crate::error::Result<usize> {
-    let magic = [header[0], header[1], header[2]];
+    let [m0, m1, m2, version, l0, l1, l2, l3] = *header;
+    let magic = [m0, m1, m2];
     if magic != MAGIC {
         return Err(WireError::BadMagic(magic).into());
     }
-    if header[3] != VERSION {
-        return Err(WireError::Version { got: header[3], want: VERSION }.into());
+    if version != VERSION {
+        return Err(WireError::Version { got: version, want: VERSION }.into());
     }
-    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
+    let len = u32::from_le_bytes([l0, l1, l2, l3]) as usize;
     if len > MAX_FRAME {
         return Err(WireError::FrameTooLarge(len).into());
     }
@@ -358,11 +359,9 @@ impl<'a> Cursor<'a> {
     }
 
     fn bytes(&mut self, n: usize) -> WireResult<&'a [u8]> {
-        if self.remaining() < n {
-            return Err(WireError::Truncated);
-        }
-        let out = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated)?;
+        let out = self.buf.get(self.pos..end).ok_or(WireError::Truncated)?;
+        self.pos = end;
         Ok(out)
     }
 
@@ -538,7 +537,7 @@ fn get_assoc(c: &mut Cursor) -> WireResult<Assoc> {
         return Err(WireError::Malformed("matrix shape disagrees with key counts"));
     }
     for keys in [&row_keys, &col_keys].into_iter().chain(vals.iter()) {
-        if !keys.windows(2).all(|w| w[0] < w[1]) {
+        if !keys.windows(2).all(|w| matches!(w, [a, b] if a < b)) {
             return Err(WireError::Malformed("key vector not sorted/unique"));
         }
     }
@@ -550,7 +549,10 @@ fn get_assoc(c: &mut Cursor) -> WireResult<Assoc> {
     for _ in 0..nr + 1 {
         indptr.push(to_usize(c.varint()?, "indptr overflows usize")?);
     }
-    if indptr[0] != 0 || indptr[nr] != nnz || indptr.windows(2).any(|w| w[0] > w[1]) {
+    if indptr.first() != Some(&0)
+        || indptr.get(nr) != Some(&nnz)
+        || indptr.windows(2).any(|w| matches!(w, [a, b] if a > b))
+    {
         return Err(WireError::Malformed("indptr not a monotone 0..nnz row pointer"));
     }
     let mut indices = Vec::with_capacity(nnz.min(PREALLOC_CAP));
@@ -559,9 +561,12 @@ fn get_assoc(c: &mut Cursor) -> WireResult<Assoc> {
     }
     // within each row: strictly increasing, in bounds (the CSR invariant
     // every kernel relies on)
-    for r in 0..nr {
-        let row = &indices[indptr[r]..indptr[r + 1]];
-        if row.iter().any(|&i| i >= nc) || row.windows(2).any(|w| w[0] >= w[1]) {
+    for w in indptr.windows(2) {
+        let [s, e] = w else { continue };
+        let Some(row) = indices.get(*s..*e) else {
+            return Err(WireError::Malformed("row indices unsorted or out of bounds"));
+        };
+        if row.iter().any(|&i| i >= nc) || row.windows(2).any(|w| matches!(w, [a, b] if a >= b)) {
             return Err(WireError::Malformed("row indices unsorted or out of bounds"));
         }
     }
@@ -1311,6 +1316,7 @@ pub fn decode_server_frame(buf: &[u8]) -> WireResult<(u64, ServerMsg)> {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
     use crate::util::XorShift64;

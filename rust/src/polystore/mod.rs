@@ -144,6 +144,7 @@ pub enum CrossOp {
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
     use crate::assoc::KeySel;
@@ -153,6 +154,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn put_get_each_island() {
         let p = Polystore::new();
         let a = sample();
@@ -164,6 +166,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn cast_text_to_array_to_relational() {
         let p = Polystore::new();
         let a = sample();
@@ -175,6 +178,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn cross_island_matmul() {
         let p = Polystore::new();
         let a = Assoc::from_triples(&[("r", "k", 2.0)]);
@@ -190,6 +194,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn island_query_pushdown() {
         let p = Polystore::new();
         let a = sample();
@@ -202,6 +207,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn register_swaps_island_engine() {
         let mut p = Polystore::new();
         p.put(Island::Array, "obj", &sample()).unwrap();
@@ -216,6 +222,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn missing_object_errors() {
         let p = Polystore::new();
         // every island, including the eager key-value engine: a read of a

@@ -194,6 +194,7 @@ pub fn assoc_matmul_auto(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
 
@@ -219,6 +220,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn dense_path_matches_csr_small() {
         let e = engine();
         let a = dense_assoc(40, 30, 1);
@@ -234,6 +236,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn dense_path_multi_tile() {
         let e = engine();
         // spans >1 tile in every dimension (tile = 128)
@@ -249,6 +252,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn gemm_bit_identical_across_tiles_and_threads() {
         let (m, k, n) = (45, 45, 45);
         let mut rng = crate::util::XorShift64::new(11);
@@ -270,6 +274,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn auto_router_falls_back_without_engine() {
         let a = dense_assoc(10, 10, 5);
         let b = dense_assoc(10, 10, 6);
@@ -278,6 +283,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn density_estimate_sane() {
         let a = dense_assoc(20, 20, 7);
         let d = aligned_density(&a, &a);

@@ -135,6 +135,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn tablemult_tile_identity() {
         let e = engine();
         let t = TILE_SMALL;
@@ -150,6 +151,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn matmul_tile_matches_scalar() {
         let e = engine();
         let t = TILE_SMALL;
@@ -163,6 +165,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn rectangular_matmul_matches_scalar() {
         let (m, k, n) = (37, 21, 53); // deliberately not tile multiples
         let a: Vec<f64> = (0..m * k).map(|i| ((i % 11) as f64) / 3.0 - 1.5).collect();
@@ -177,6 +180,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn degree_tile_rowsums() {
         let e = engine();
         let t = TILE_SMALL;
@@ -187,6 +191,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn jaccard_tile_diagonal_ones() {
         let e = engine();
         let t = TILE_SMALL;

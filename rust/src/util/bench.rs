@@ -91,6 +91,7 @@ pub fn append_records(path: &Path, records: &[BenchRecord]) -> std::io::Result<(
 }
 
 #[cfg(test)]
+#[allow(clippy::disallowed_methods)] // tests panic by design
 mod tests {
     use super::*;
 
@@ -101,6 +102,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn record_json_shape() {
         let r = BenchRecord::new("add", 1024, "csr", 0.5, 1024);
         let j = r.to_json();
@@ -112,6 +114,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn append_creates_then_splices() {
         let p = tmp("append.json");
         let _ = std::fs::remove_file(&p);
@@ -130,6 +133,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn escape_quotes() {
         assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
     }

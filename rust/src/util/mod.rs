@@ -11,6 +11,16 @@ pub use rng::XorShift64;
 
 use crate::assoc::KeySel;
 
+/// Lock a mutex, recovering from poisoning. Every mutex this is used on
+/// guards state that stays coherent across a panicking holder (counters,
+/// maps, seek-locked file handles — never multi-step invariants), so a
+/// poisoned lock is recovered rather than propagated; propagating would
+/// turn one worker's panic into a panic in every thread that touches the
+/// lock afterwards, including `Drop` impls (see `net::server::ConnGuard`).
+pub fn lock_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Parse the D4M selector string forms shared by the CLI
 /// (`scan-pages`/`client query` flags) and the plan expression language
 /// (`G('a,:,m,', ':')`). Infallible — every string means *some*

@@ -98,9 +98,12 @@ mod tests {
     #[test]
     fn f64_roughly_uniform() {
         let mut r = XorShift64::new(11);
-        let n = 20_000;
+        // Miri executes this interpreter-speed; 2k keeps the mean test
+        // meaningful (tolerance loosened accordingly) without the wait.
+        let n = if cfg!(miri) { 2_000 } else { 20_000 };
         let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
-        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        let tol = if cfg!(miri) { 0.05 } else { 0.02 };
+        assert!((mean - 0.5).abs() < tol, "mean {mean}");
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //! whose reply is eaten must surface a typed `AmbiguousWrite` — and the
 //! server must have applied it exactly once.
 
+// Integration-test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::sync::Arc;
 use std::time::Duration;
 

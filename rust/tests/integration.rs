@@ -1,6 +1,9 @@
 //! Cross-module integration tests: every layer composed the way the
 //! examples and the e2e driver use them.
 
+// Integration-test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::sync::Arc;
 
 use d4m::assoc::{Assoc, KeySel};

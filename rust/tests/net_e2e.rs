@@ -12,6 +12,9 @@
 //! while every page respects the `page_entries` bound** — the remote
 //! path adds transport, never semantics.
 
+// Integration-test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::sync::Arc;
 use std::time::Duration;
 

@@ -11,6 +11,9 @@
 //!     (the sequential lazy stream vs. the scoped-thread parallel
 //!     collect must agree entry for entry).
 
+// Integration-test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;

@@ -10,6 +10,9 @@
 //! orphan files — may ever panic the open path: it recovers a prefix or
 //! fails with a typed [`D4mError::Storage`].
 
+// Integration-test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 

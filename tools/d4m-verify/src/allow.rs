@@ -1,0 +1,213 @@
+//! The explicit allowlist (`allow.toml`): legacy findings are burned
+//! down deliberately, never silenced wholesale.
+//!
+//! Format — a TOML subset parsed by hand (array-of-tables with quoted
+//! string values only):
+//!
+//! ```toml
+//! [[allow]]
+//! pass = "panic"            # required: pass name
+//! file = "rust/src/....rs"  # required: repo-relative path
+//! func = "crc_table"        # required for protected files
+//! what = "index"            # optional: finding kind
+//! reason = "why it's safe"  # required, must be non-empty
+//! ```
+//!
+//! Policy, enforced as findings of pass `allow`:
+//! - `reason` must be non-empty (`no-reason`)
+//! - entries for the never-panic net/storage files must name a `func` —
+//!   no blanket module suppressions (`blanket`)
+//! - entries that match nothing are stale and must be removed (`unused`)
+
+use crate::findings::Finding;
+
+/// Files for which blanket (function-less) allow entries are rejected.
+const PROTECTED: &[&str] = &[
+    "rust/src/net/wire.rs",
+    "rust/src/net/server.rs",
+    "rust/src/kvstore/storage/",
+];
+
+#[derive(Debug, Clone, Default)]
+pub struct AllowEntry {
+    pub pass: String,
+    pub file: String,
+    pub func: String,
+    pub what: String,
+    pub reason: String,
+    /// Line in allow.toml where the entry starts (for policy findings).
+    pub line: u32,
+}
+
+impl AllowEntry {
+    fn matches(&self, f: &Finding) -> bool {
+        self.pass == f.pass
+            && self.file == f.file
+            && (self.func.is_empty() || self.func == f.func)
+            && (self.what.is_empty() || self.what == f.what)
+    }
+}
+
+/// Parse the allowlist. Unparseable lines are reported as `allow/parse`
+/// findings rather than aborting — the tool must keep auditing.
+pub fn parse(src: &str, path_label: &str) -> (Vec<AllowEntry>, Vec<Finding>) {
+    let mut entries: Vec<AllowEntry> = Vec::new();
+    let mut findings = Vec::new();
+    let mut cur: Option<AllowEntry> = None;
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = (idx + 1) as u32;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            if let Some(e) = cur.take() {
+                entries.push(e);
+            }
+            cur = Some(AllowEntry { line: lineno, ..AllowEntry::default() });
+            continue;
+        }
+        let Some((key, value)) = parse_kv(line) else {
+            findings.push(Finding::new(
+                "allow",
+                "parse",
+                path_label,
+                lineno,
+                "",
+                format!("unparseable allowlist line: {line:?}"),
+            ));
+            continue;
+        };
+        let Some(entry) = cur.as_mut() else {
+            findings.push(Finding::new(
+                "allow",
+                "parse",
+                path_label,
+                lineno,
+                "",
+                "key/value outside any [[allow]] table".to_string(),
+            ));
+            continue;
+        };
+        match key {
+            "pass" => entry.pass = value,
+            "file" => entry.file = value,
+            "func" => entry.func = value,
+            "what" => entry.what = value,
+            "reason" => entry.reason = value,
+            other => findings.push(Finding::new(
+                "allow",
+                "parse",
+                path_label,
+                lineno,
+                "",
+                format!("unknown allowlist key `{other}`"),
+            )),
+        }
+    }
+    if let Some(e) = cur.take() {
+        entries.push(e);
+    }
+    // policy checks
+    for e in &entries {
+        if e.pass.is_empty() || e.file.is_empty() {
+            findings.push(Finding::new(
+                "allow",
+                "incomplete",
+                path_label,
+                e.line,
+                "",
+                "allow entry must set both `pass` and `file`".to_string(),
+            ));
+        }
+        if e.reason.trim().is_empty() {
+            findings.push(Finding::new(
+                "allow",
+                "no-reason",
+                path_label,
+                e.line,
+                "",
+                format!(
+                    "allow entry for {} has no justification — `reason` must be non-empty",
+                    e.file
+                ),
+            ));
+        }
+        let protected = PROTECTED.iter().any(|p| e.file.starts_with(p));
+        if protected && e.func.is_empty() {
+            findings.push(Finding::new(
+                "allow",
+                "blanket",
+                path_label,
+                e.line,
+                "",
+                format!(
+                    "blanket module suppression for protected file {} — entries for \
+                     net/wire.rs, net/server.rs and kvstore/storage/ must name a `func`",
+                    e.file
+                ),
+            ));
+        }
+    }
+    (entries, findings)
+}
+
+/// `key = "value"` with a double-quoted value (no escapes needed for
+/// paths/reasons; a `\"` inside reasons is not supported by design).
+fn parse_kv(line: &str) -> Option<(&str, String)> {
+    let (key, rest) = line.split_once('=')?;
+    let key = key.trim();
+    let rest = rest.trim();
+    // strip a trailing comment after the closing quote
+    let inner = rest.strip_prefix('"')?;
+    let (value, tail) = inner.split_once('"')?;
+    let tail = tail.trim();
+    if !tail.is_empty() && !tail.starts_with('#') {
+        return None;
+    }
+    Some((key, value.to_string()))
+}
+
+/// Split `findings` into (unallowed, allowed_count) and append policy
+/// findings for entries that matched nothing.
+pub fn apply(
+    entries: &[AllowEntry],
+    findings: Vec<Finding>,
+    path_label: &str,
+) -> (Vec<Finding>, usize) {
+    let mut used = vec![false; entries.len()];
+    let mut unallowed = Vec::new();
+    let mut allowed = 0usize;
+    for f in findings {
+        let mut hit = false;
+        for (k, e) in entries.iter().enumerate() {
+            if e.matches(&f) {
+                if let Some(u) = used.get_mut(k) {
+                    *u = true;
+                }
+                hit = true;
+            }
+        }
+        if hit {
+            allowed += 1;
+        } else {
+            unallowed.push(f);
+        }
+    }
+    for (k, e) in entries.iter().enumerate() {
+        if !used.get(k).copied().unwrap_or(true) {
+            unallowed.push(Finding::new(
+                "allow",
+                "unused",
+                path_label,
+                e.line,
+                "",
+                format!(
+                    "stale allow entry (pass={}, file={}, func={}) matches no finding — remove it",
+                    e.pass, e.file, e.func
+                ),
+            ));
+        }
+    }
+    (unallowed, allowed)
+}

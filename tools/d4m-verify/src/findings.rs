@@ -1,0 +1,93 @@
+//! Typed findings and their text/JSON rendering.
+
+/// One violation: which pass, where, in what function, and why.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Pass name: `panic`, `locks`, `wire`, `counters`, `allow`.
+    pub pass: String,
+    /// Short machine-stable kind within the pass (`unwrap`, `index`,
+    /// `dup-tag`, `undeclared`, ...). Allowlist entries match on it.
+    pub what: String,
+    /// Repo-relative path.
+    pub file: String,
+    /// 1-based line (0 when the finding is file- or registry-level).
+    pub line: u32,
+    /// Enclosing function name (empty when not inside a fn).
+    pub func: String,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn new(
+        pass: &str,
+        what: &str,
+        file: &str,
+        line: u32,
+        func: &str,
+        msg: String,
+    ) -> Self {
+        Finding {
+            pass: pass.to_string(),
+            what: what.to_string(),
+            file: file.to_string(),
+            line,
+            func: func.to_string(),
+            msg,
+        }
+    }
+
+    pub fn render_text(&self) -> String {
+        let func = if self.func.is_empty() {
+            String::new()
+        } else {
+            format!(" in `{}`", self.func)
+        };
+        format!(
+            "{}:{}: [{}/{}]{} {}",
+            self.file, self.line, self.pass, self.what, func, self.msg
+        )
+    }
+}
+
+/// Minimal JSON string escaping (the only non-trivial JSON we emit).
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn finding_json(f: &Finding) -> String {
+    format!(
+        "{{\"pass\":\"{}\",\"what\":\"{}\",\"file\":\"{}\",\"line\":{},\"func\":\"{}\",\"msg\":\"{}\"}}",
+        json_escape(&f.pass),
+        json_escape(&f.what),
+        json_escape(&f.file),
+        f.line,
+        json_escape(&f.func),
+        json_escape(&f.msg),
+    )
+}
+
+/// The whole report as one JSON object:
+/// `{"findings":[...],"allowed":N,"total":N}` where `findings` holds
+/// only unallowlisted violations and `allowed` counts suppressed ones.
+pub fn report_json(unallowed: &[Finding], allowed_count: usize) -> String {
+    let items: Vec<String> = unallowed.iter().map(finding_json).collect();
+    format!(
+        "{{\"findings\":[{}],\"allowed\":{},\"total\":{}}}",
+        items.join(","),
+        allowed_count,
+        unallowed.len(),
+    )
+}

@@ -1,0 +1,424 @@
+//! A token-level Rust lexer: just enough structure for invariant
+//! checking — identifiers, numbers, string/char/lifetime literals and
+//! single-character punctuation, with comments and whitespace dropped
+//! and line numbers preserved. Deliberately NOT a parser: the passes
+//! work on token patterns (`.` `unwrap` `(`, `match` arm shapes, brace
+//! depth), which is robust to everything rustfmt does and avoids a
+//! `syn` dependency in the offline build.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Number,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lex `src` into tokens. Unterminated literals and comments are
+/// tolerated (the remainder becomes one token) — the tool must never
+/// die on the code it is auditing.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let count_lines = |from: usize, to: usize| -> u32 {
+        b.get(from..to).map_or(0, |s| s.iter().filter(|&&c| c == b'\n').count() as u32)
+    };
+
+    while i < n {
+        let c = match b.get(i) {
+            Some(&c) => c,
+            None => break,
+        };
+        // ---- block comment (nested)
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b.get(j) == Some(&b'/') && b.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if b.get(j) == Some(&b'*') && b.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            line += count_lines(i, j);
+            i = j;
+            continue;
+        }
+        // ---- line comment
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            while i < n && b.get(i) != Some(&b'\n') {
+                i += 1;
+            }
+            continue;
+        }
+        // ---- raw / byte-raw string: r"", r#""#, br#""#
+        if c == b'r' || (c == b'b' && b.get(i + 1) == Some(&b'r')) {
+            if let Some((hashes, body_start)) = raw_string_start(b, i) {
+                let mut j = body_start;
+                let close_len = 1 + hashes;
+                loop {
+                    if j >= n {
+                        break;
+                    }
+                    if b.get(j) == Some(&b'"') && hashes_follow(b, j + 1, hashes) {
+                        j += close_len;
+                        break;
+                    }
+                    j += 1;
+                }
+                push_span(&mut toks, src, i, j, Kind::Str, line);
+                line += count_lines(i, j);
+                i = j;
+                continue;
+            }
+        }
+        // ---- plain / byte string
+        if c == b'"' || (c == b'b' && b.get(i + 1) == Some(&b'"')) {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            while j < n {
+                match b.get(j) {
+                    Some(&b'\\') => j += 2,
+                    Some(&b'"') => {
+                        j += 1;
+                        break;
+                    }
+                    Some(_) => j += 1,
+                    None => break,
+                }
+            }
+            let j = j.min(n);
+            push_span(&mut toks, src, i, j, Kind::Str, line);
+            line += count_lines(i, j);
+            i = j;
+            continue;
+        }
+        // ---- char literal vs lifetime
+        if c == b'\'' {
+            if let Some(end) = char_literal_end(b, i) {
+                push_span(&mut toks, src, i, end, Kind::Char, line);
+                i = end;
+                continue;
+            }
+            if b.get(i + 1).is_some_and(|&c2| is_ident_start(c2)) {
+                let mut j = i + 1;
+                while j < n && b.get(j).is_some_and(|&c2| is_ident_cont(c2)) {
+                    j += 1;
+                }
+                push_span(&mut toks, src, i, j, Kind::Lifetime, line);
+                i = j;
+                continue;
+            }
+            push_span(&mut toks, src, i, i + 1, Kind::Punct, line);
+            i += 1;
+            continue;
+        }
+        // ---- whitespace
+        if c.is_ascii_whitespace() {
+            let mut j = i;
+            while j < n && b.get(j).is_some_and(|c2| c2.is_ascii_whitespace()) {
+                j += 1;
+            }
+            line += count_lines(i, j);
+            i = j;
+            continue;
+        }
+        // ---- identifier / keyword
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && b.get(j).is_some_and(|&c2| is_ident_cont(c2)) {
+                j += 1;
+            }
+            push_span(&mut toks, src, i, j, Kind::Ident, line);
+            i = j;
+            continue;
+        }
+        // ---- number (no '.' so `0..n` and `0.99` split cleanly)
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && b.get(j).is_some_and(|&c2| is_ident_cont(c2)) {
+                j += 1;
+            }
+            push_span(&mut toks, src, i, j, Kind::Number, line);
+            i = j;
+            continue;
+        }
+        // ---- punctuation (single byte; multibyte UTF-8 outside literals
+        // is tolerated byte-by-byte — it only occurs inside literals in
+        // well-formed Rust anyway)
+        push_span(&mut toks, src, i, i + 1, Kind::Punct, line);
+        i += 1;
+    }
+    toks
+}
+
+fn push_span(toks: &mut Vec<Tok>, src: &str, from: usize, to: usize, kind: Kind, line: u32) {
+    let text = match src.get(from..to) {
+        Some(s) => s.to_string(),
+        // mid-UTF-8 span (stray multibyte punct): lossy-decode the bytes
+        None => {
+            let bytes = src.as_bytes().get(from..to.min(src.len())).unwrap_or(&[]);
+            String::from_utf8_lossy(bytes).into_owned()
+        }
+    };
+    toks.push(Tok { kind, text, line });
+}
+
+/// `r` / `br` + hashes + `"` → (hash count, index past the opening quote).
+fn raw_string_start(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i + if b.get(i) == Some(&b'b') { 2 } else { 1 };
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+fn hashes_follow(b: &[u8], at: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| b.get(at + k) == Some(&b'#'))
+}
+
+/// If position `i` (a `'`) starts a char literal, the index one past its
+/// closing quote; `None` if it reads as a lifetime.
+fn char_literal_end(b: &[u8], i: usize) -> Option<usize> {
+    match b.get(i + 1) {
+        Some(&b'\\') => {
+            // escape: scan to the closing quote (handles \', \\, \u{...})
+            let mut j = i + 3;
+            while j < b.len() && j < i + 12 {
+                if b.get(j) == Some(&b'\'') {
+                    return Some(j + 1);
+                }
+                j += 1;
+            }
+            None
+        }
+        Some(&c) if c != b'\'' => {
+            // one char (possibly multibyte) then a closing quote; an
+            // ident char NOT followed by a quote reads as a lifetime
+            let mut j = i + 2;
+            while j < b.len() && j <= i + 5 && b.get(j).is_some_and(|&c2| c2 >= 0x80) {
+                j += 1;
+            }
+            if b.get(j) == Some(&b'\'') {
+                Some(j + 1)
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// `masked[k]` is true when token `k` is inside `#[cfg(test)]` /
+/// `#[test]`-attributed items (test modules and test fns) — those are
+/// allowed to panic by design.
+pub fn mask_test_code(toks: &[Tok]) -> Vec<bool> {
+    let n = toks.len();
+    let mut masked = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        let is_attr_start = toks.get(i).is_some_and(|t| t.is("#"))
+            && toks.get(i + 1).is_some_and(|t| t.is("["));
+        if !is_attr_start {
+            i += 1;
+            continue;
+        }
+        // collect the attribute text
+        let mut j = i + 2;
+        let mut depth = 1i32;
+        let mut attr = String::new();
+        while j < n && depth > 0 {
+            let t = match toks.get(j) {
+                Some(t) => t,
+                None => break,
+            };
+            if t.is("[") {
+                depth += 1;
+            } else if t.is("]") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            attr.push_str(&t.text);
+            j += 1;
+        }
+        let is_test_attr = attr.starts_with("cfg(test") || attr == "test";
+        if !is_test_attr {
+            i = j + 1;
+            continue;
+        }
+        // skip any further attributes, then mask the following item's
+        // brace span (mod body or fn body)
+        let mut k = j + 1;
+        while toks.get(k).is_some_and(|t| t.is("#"))
+            && toks.get(k + 1).is_some_and(|t| t.is("["))
+        {
+            let mut d = 1i32;
+            k += 2;
+            while k < n && d > 0 {
+                if toks.get(k).is_some_and(|t| t.is("[")) {
+                    d += 1;
+                } else if toks.get(k).is_some_and(|t| t.is("]")) {
+                    d -= 1;
+                }
+                k += 1;
+            }
+        }
+        let mut open = None;
+        let mut m = k;
+        while m < n {
+            let t = match toks.get(m) {
+                Some(t) => t,
+                None => break,
+            };
+            if t.is(";") {
+                break; // e.g. `mod foo;` — nothing inline to mask
+            }
+            if t.is("{") {
+                open = Some(m);
+                break;
+            }
+            m += 1;
+        }
+        let Some(open) = open else {
+            i = j + 1;
+            continue;
+        };
+        let mut d = 0i32;
+        let mut close = open;
+        while close < n {
+            if toks.get(close).is_some_and(|t| t.is("{")) {
+                d += 1;
+            } else if toks.get(close).is_some_and(|t| t.is("}")) {
+                d -= 1;
+                if d == 0 {
+                    break;
+                }
+            }
+            close += 1;
+        }
+        for slot in masked.iter_mut().take((close + 1).min(n)).skip(i) {
+            *slot = true;
+        }
+        i = close + 1;
+    }
+    masked
+}
+
+/// One function body: name plus the token span of its `{ ... }` block
+/// (indices into the token stream, inclusive).
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Every `fn name ... { ... }` body span in the stream. Nested fns and
+/// closures inside a body are attributed to the innermost named fn by
+/// [`containing_fn`].
+pub fn fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
+    let n = toks.len();
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        let is_fn = toks.get(i).is_some_and(|t| t.kind == Kind::Ident && t.is("fn"));
+        let name = toks.get(i + 1).filter(|t| t.kind == Kind::Ident).map(|t| t.text.clone());
+        if let (true, Some(name)) = (is_fn, name) {
+            // find the body `{` at paren/bracket depth 0 (skips argument
+            // lists, return types, where clauses)
+            let mut j = i + 2;
+            let mut level = 0i32;
+            let mut open = None;
+            while j < n {
+                let t = match toks.get(j) {
+                    Some(t) => t,
+                    None => break,
+                };
+                if t.is("(") || t.is("[") {
+                    level += 1;
+                } else if t.is(")") || t.is("]") {
+                    level -= 1;
+                } else if t.is(";") && level == 0 {
+                    break; // trait method / extern decl: no body
+                } else if t.is("{") && level == 0 {
+                    open = Some(j);
+                    break;
+                }
+                j += 1;
+            }
+            if let Some(open) = open {
+                let mut d = 0i32;
+                let mut close = open;
+                while close < n {
+                    if toks.get(close).is_some_and(|t| t.is("{")) {
+                        d += 1;
+                    } else if toks.get(close).is_some_and(|t| t.is("}")) {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    close += 1;
+                }
+                spans.push(FnSpan { name, start: open, end: close.min(n.saturating_sub(1)) });
+                i = open; // bodies may contain nested fns
+            } else {
+                i = j;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Innermost named fn whose body contains token `idx` (empty if none).
+pub fn containing_fn(spans: &[FnSpan], idx: usize) -> String {
+    let mut best: Option<&FnSpan> = None;
+    for s in spans {
+        if s.start <= idx && idx <= s.end {
+            let better = best.map_or(true, |b| s.start > b.start);
+            if better {
+                best = Some(s);
+            }
+        }
+    }
+    best.map(|s| s.name.clone()).unwrap_or_default()
+}

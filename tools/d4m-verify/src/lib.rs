@@ -1,0 +1,41 @@
+//! d4m-verify — repo-invariant static analysis for the d4m tree.
+//!
+//! Four token-level passes over `rust/src/`:
+//! 1. `panic`    — panic-freedom audit of never-panic modules
+//! 2. `locks`    — lock-acquisition partial order + scan_stream rule
+//! 3. `wire`     — wire-tag registry (uniqueness, retired tags, docs)
+//! 4. `counters` — counter-name registry and grammar
+//!
+//! Pure std, no dependencies; the lexer is hand-rolled (see
+//! [`lexer`]). Findings are typed `file:line` records; the explicit
+//! allowlist (`allow.toml`) requires a non-empty justification per
+//! entry and forbids blanket suppressions for protected modules.
+
+pub mod allow;
+pub mod findings;
+pub mod lexer;
+pub mod passes;
+
+use std::path::Path;
+
+use findings::Finding;
+
+/// Run every pass, apply the allowlist at `allow_path` (if it exists),
+/// and return `(unallowed_findings, allowed_count)`.
+pub fn verify(root: &Path, allow_path: &Path) -> (Vec<Finding>, usize) {
+    let raw = passes::run_all(root);
+    let label = allow_path
+        .strip_prefix(root)
+        .unwrap_or(allow_path)
+        .to_string_lossy()
+        .replace('\\', "/");
+    match std::fs::read_to_string(allow_path) {
+        Ok(src) => {
+            let (entries, mut policy) = allow::parse(&src, &label);
+            let (mut unallowed, allowed) = allow::apply(&entries, raw, &label);
+            unallowed.append(&mut policy);
+            (unallowed, allowed)
+        }
+        Err(_) => (raw, 0),
+    }
+}

@@ -1,0 +1,89 @@
+//! CLI: `d4m-verify [--root DIR] [--allow FILE] [--json]`
+//!
+//! Exit codes: 0 = clean, 1 = findings, 2 = usage error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use d4m_verify::findings::report_json;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut allow: Option<PathBuf> = None;
+    let mut json = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return usage("--root requires a directory argument"),
+            },
+            "--allow" => match args.next() {
+                Some(v) => allow = Some(PathBuf::from(v)),
+                None => return usage("--allow requires a file argument"),
+            },
+            "--help" | "-h" => {
+                println!(
+                    "d4m-verify [--root DIR] [--allow FILE] [--json]\n\
+                     \n\
+                     Static-analysis pass over rust/src enforcing repo invariants:\n\
+                     panic-freedom, lock order, wire-tag registry, counter registry.\n\
+                     Exit codes: 0 clean, 1 findings, 2 usage error."
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+
+    let root = root.unwrap_or_else(find_repo_root);
+    if !root.join("rust/src").is_dir() {
+        eprintln!(
+            "d4m-verify: {} does not contain rust/src — pass --root pointing at \
+             the repository root",
+            root.display()
+        );
+        return ExitCode::from(2);
+    }
+    let allow = allow.unwrap_or_else(|| root.join("tools/d4m-verify/allow.toml"));
+
+    let (unallowed, allowed) = d4m_verify::verify(&root, &allow);
+    if json {
+        println!("{}", report_json(&unallowed, allowed));
+    } else {
+        for f in &unallowed {
+            println!("{}", f.render_text());
+        }
+        println!(
+            "d4m-verify: {} finding(s), {} allowlisted",
+            unallowed.len(),
+            allowed
+        );
+    }
+    if unallowed.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("d4m-verify: {msg}\nusage: d4m-verify [--root DIR] [--allow FILE] [--json]");
+    ExitCode::from(2)
+}
+
+/// Walk up from the current directory to the first ancestor containing
+/// `rust/src` (so the tool works from the workspace root and from
+/// `tools/d4m-verify/` alike).
+fn find_repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return dir;
+        }
+        if !dir.pop() {
+            return PathBuf::from(".");
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Pass 4 — counter-name registry.
+//!
+//! Fixed metric names live in `rust/src/metrics/names.rs`, declared
+//! exactly once each, following the `segment.segment` grammar with the
+//! first segment drawn from the known namespaces. Stats-assembly sites
+//! must reference declared names — a counter-shaped string literal in
+//! a metric file that is not in the registry is a typo or an
+//! undocumented metric, both findings.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::findings::Finding;
+use crate::lexer::{containing_fn, Kind};
+
+use super::{SourceFile, ALLOWED_NAMESPACES, METRIC_FILES, REGISTRY_FILE};
+
+/// `segment.segment` with `[a-z][a-z0-9_]*` segments, exactly one dot.
+fn counter_shaped(s: &str) -> bool {
+    let Some((ns, rest)) = s.split_once('.') else { return false };
+    segment_ok(ns) && segment_ok(rest)
+}
+
+fn segment_ok(s: &str) -> bool {
+    let mut chars = s.chars();
+    let Some(first) = chars.next() else { return false };
+    first.is_ascii_lowercase()
+        && chars.all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// The inner value of a plain `"..."` string token (raw/byte strings
+/// are not used for counter names and are skipped).
+fn plain_str(text: &str) -> Option<&str> {
+    text.strip_prefix('"')?.strip_suffix('"')
+}
+
+pub fn run(root: &Path, findings: &mut Vec<Finding>) {
+    let mut declared: BTreeMap<String, u32> = BTreeMap::new();
+    match SourceFile::load(root, REGISTRY_FILE) {
+        Some(reg) => {
+            for (i, t) in reg.toks.iter().enumerate() {
+                if reg.masked.get(i).copied().unwrap_or(false) || t.kind != Kind::Str {
+                    continue;
+                }
+                let Some(val) = plain_str(&t.text) else { continue };
+                if !counter_shaped(val) {
+                    findings.push(Finding::new(
+                        "counters",
+                        "grammar",
+                        REGISTRY_FILE,
+                        t.line,
+                        "",
+                        format!(
+                            "declared counter \"{val}\" violates the segment.segment grammar"
+                        ),
+                    ));
+                    continue;
+                }
+                let ns = val.split('.').next().unwrap_or("");
+                if !ALLOWED_NAMESPACES.contains(&ns) {
+                    findings.push(Finding::new(
+                        "counters",
+                        "namespace",
+                        REGISTRY_FILE,
+                        t.line,
+                        "",
+                        format!(
+                            "declared counter \"{val}\" uses namespace \"{ns}\" \
+                             (allowed: {ALLOWED_NAMESPACES:?})"
+                        ),
+                    ));
+                }
+                if declared.contains_key(val) {
+                    findings.push(Finding::new(
+                        "counters",
+                        "dup-declare",
+                        REGISTRY_FILE,
+                        t.line,
+                        "",
+                        format!("counter \"{val}\" declared more than once"),
+                    ));
+                }
+                declared.entry(val.to_string()).or_insert(t.line);
+            }
+        }
+        None => {
+            findings.push(Finding::new(
+                "counters",
+                "no-registry",
+                REGISTRY_FILE,
+                0,
+                "",
+                "counter registry file missing — every fixed metric name must be \
+                 declared in metrics/names.rs"
+                    .to_string(),
+            ));
+        }
+    }
+
+    for rel in METRIC_FILES {
+        let Some(sf) = SourceFile::load(root, rel) else { continue };
+        for (i, t) in sf.toks.iter().enumerate() {
+            if sf.masked.get(i).copied().unwrap_or(false) || t.kind != Kind::Str {
+                continue;
+            }
+            let Some(val) = plain_str(&t.text) else { continue };
+            if !val.contains('.') || !counter_shaped(val) {
+                continue;
+            }
+            if !declared.contains_key(val) {
+                findings.push(Finding::new(
+                    "counters",
+                    "undeclared",
+                    rel,
+                    t.line,
+                    &containing_fn(&sf.spans, i),
+                    format!(
+                        "counter-shaped literal \"{val}\" is not declared in \
+                         metrics/names.rs (use the named constant)"
+                    ),
+                ));
+            }
+        }
+    }
+}

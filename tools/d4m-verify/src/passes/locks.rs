@@ -1,0 +1,203 @@
+//! Pass 2 — lock-order checker.
+//!
+//! Extracts `lock()` / `read()` / `write()` acquisition sequences per
+//! function (token-level, intra-procedural) and verifies them against
+//! the documented partial order (DESIGN.md §Durable storage):
+//!
+//! - the WAL/checkpoint lock `inner` is always acquired BEFORE any
+//!   tablet lock — equivalently, never while a tablet guard is live
+//! - no lock guard may be held across a `scan_stream` call
+//!   (DESIGN.md §Snapshot/streaming: streams borrow no locks)
+//!
+//! Guard liveness is tracked through `let g = x.lock()...` bindings:
+//! a guard lives until its enclosing block closes or `drop(g)` runs.
+//! Unbound (transient) acquisitions like `x.lock().unwrap().method()`
+//! release at the end of the statement and do not constrain ordering.
+//! Receivers are classified by their last identifier — `inner` for the
+//! WAL/checkpoint lock; `tablets`/`tablet`/`tl` for tablet locks (the
+//! iteration-variable names the store uses).
+
+use crate::findings::Finding;
+use crate::lexer::{Kind, Tok};
+
+use super::SourceFile;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LockClass {
+    Inner,
+    Tablet,
+}
+
+fn classify(receiver: &str) -> Option<LockClass> {
+    match receiver {
+        "inner" => Some(LockClass::Inner),
+        "tablets" | "tablet" | "tl" => Some(LockClass::Tablet),
+        _ => None,
+    }
+}
+
+fn class_name(c: LockClass) -> &'static str {
+    match c {
+        LockClass::Inner => "inner",
+        LockClass::Tablet => "tablet",
+    }
+}
+
+/// The documented partial order: acquire `.0` before `.1`; i.e. a `.0`
+/// acquisition while a `.1` guard is live is a violation.
+const ORDER: &[(LockClass, LockClass)] = &[(LockClass::Inner, LockClass::Tablet)];
+
+struct Guard {
+    var: String,
+    class: LockClass,
+    depth: i32,
+    line: u32,
+}
+
+pub fn run(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    for span in &sf.spans {
+        // a fn entirely inside test code is exempt
+        if sf.masked.get(span.start).copied().unwrap_or(false) {
+            continue;
+        }
+        check_fn(sf, span.start, span.end, &span.name, findings);
+    }
+}
+
+fn check_fn(
+    sf: &SourceFile,
+    start: usize,
+    end: usize,
+    fn_name: &str,
+    findings: &mut Vec<Finding>,
+) {
+    let toks = &sf.toks;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0i32;
+    // the binding target of an in-progress `let name = ...` statement
+    let mut pending_let: Option<(String, i32)> = None;
+    let mut i = start;
+    while i <= end {
+        let Some(t) = toks.get(i) else { break };
+        if t.is("{") {
+            depth += 1;
+        } else if t.is("}") {
+            depth -= 1;
+            guards.retain(|g| g.depth <= depth);
+        } else if t.kind == Kind::Ident && t.is("let") {
+            let mut j = i + 1;
+            if toks.get(j).is_some_and(|x| x.is("mut")) {
+                j += 1;
+            }
+            if let Some(name) = toks.get(j).filter(|x| x.kind == Kind::Ident) {
+                pending_let = Some((name.text.clone(), depth));
+            }
+        } else if t.is(";") {
+            pending_let = None;
+        } else if t.kind == Kind::Ident
+            && t.is("drop")
+            && toks.get(i + 1).is_some_and(|x| x.is("("))
+        {
+            if let Some(dropped) = toks.get(i + 2).filter(|x| x.kind == Kind::Ident) {
+                guards.retain(|g| g.var != dropped.text);
+            }
+        } else if t.kind == Kind::Ident
+            && (t.is("lock") || t.is("read") || t.is("write"))
+            && i > 0
+            && toks.get(i - 1).is_some_and(|x| x.is("."))
+            && toks.get(i + 1).is_some_and(|x| x.is("("))
+            && toks.get(i + 2).is_some_and(|x| x.is(")"))
+        {
+            // an empty-arg .lock()/.read()/.write() call — io::Write's
+            // write(buf) and io::Read's read(buf) always take arguments
+            if let Some(class) = receiver_of(toks, i).as_deref().and_then(classify) {
+                for g in &guards {
+                    for &(first, second) in ORDER {
+                        if g.class == second && class == first {
+                            findings.push(Finding::new(
+                                "locks",
+                                "order",
+                                &sf.rel,
+                                t.line,
+                                fn_name,
+                                format!(
+                                    "acquires `{}` lock while `{}` guard (line {}) is held — \
+                                     the documented order is {} before {}",
+                                    class_name(first),
+                                    class_name(second),
+                                    g.line,
+                                    class_name(first),
+                                    class_name(second),
+                                ),
+                            ));
+                        }
+                    }
+                }
+                if let Some((var, let_depth)) = pending_let.take() {
+                    if let_depth == depth {
+                        guards.push(Guard { var, class, depth, line: t.line });
+                    }
+                }
+            }
+        } else if t.kind == Kind::Ident && t.is("scan_stream") {
+            if let Some(g) = guards.first() {
+                findings.push(Finding::new(
+                    "locks",
+                    "scan-stream",
+                    &sf.rel,
+                    t.line,
+                    fn_name,
+                    format!(
+                        "calls scan_stream while a `{}` guard (line {}) is held — no lock \
+                         may be held across scan_stream consumption (DESIGN.md \
+                         §Snapshot/streaming)",
+                        class_name(g.class),
+                        g.line,
+                    ),
+                ));
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Walk back from the lock-method ident across a `.`-chain, skipping
+/// balanced `(..)` / `[..]` groups, to the receiver's last identifier.
+/// `self.tablets[t].write` → `tablets`; `self.inner.lock` → `inner`.
+fn receiver_of(toks: &[Tok], method_idx: usize) -> Option<String> {
+    let mut j = method_idx.checked_sub(1)?; // the `.` before the method
+    if !toks.get(j)?.is(".") {
+        return None;
+    }
+    loop {
+        j = j.checked_sub(1)?;
+        let t = toks.get(j)?;
+        if t.is(")") || t.is("]") {
+            let (open, close) = if t.is(")") { ("(", ")") } else { ("[", "]") };
+            let mut d = 0i32;
+            loop {
+                let x = toks.get(j)?;
+                if x.is(close) {
+                    d += 1;
+                } else if x.is(open) {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                j = j.checked_sub(1)?;
+            }
+            continue;
+        }
+        if t.is(".") {
+            continue;
+        }
+        if t.kind == Kind::Ident {
+            if t.is("self") || t.is("Self") {
+                return None;
+            }
+            return Some(t.text.clone());
+        }
+        return None;
+    }
+}

@@ -1,0 +1,130 @@
+//! The four invariant passes plus the repo-specific configuration that
+//! drives them. The configuration is code, not a config file, on
+//! purpose: changing an invariant should be a reviewed diff here, in
+//! DESIGN.md, and in the source — not an edit to a dotfile.
+
+pub mod counters;
+pub mod locks;
+pub mod panic;
+pub mod wire_tags;
+
+use std::path::{Path, PathBuf};
+
+use crate::findings::Finding;
+use crate::lexer::{self, FnSpan, Tok};
+
+/// Modules where hostile input must surface typed errors, never a
+/// panic (DESIGN.md §Static analysis). Directory entries end in `/`.
+pub const NEVER_PANIC: &[&str] = &[
+    "rust/src/net/wire.rs",
+    "rust/src/net/server.rs",
+    "rust/src/kvstore/storage/",
+    "rust/src/coordinator/plan.rs",
+];
+
+/// Files whose counter-shaped string literals must be declared in the
+/// registry (the stats-assembly and stats-printing sites).
+pub const METRIC_FILES: &[&str] = &[
+    "rust/src/coordinator/mod.rs",
+    "rust/src/coordinator/plan.rs",
+    "rust/src/net/server.rs",
+    "rust/src/net/client.rs",
+    "rust/src/main.rs",
+];
+
+/// The counter-name registry: every fixed metric name, declared once.
+pub const REGISTRY_FILE: &str = "rust/src/metrics/names.rs";
+
+/// First-segment namespaces the counter grammar allows.
+pub const ALLOWED_NAMESPACES: &[&str] = &["net", "kernels", "plan", "storage", "client"];
+
+/// The wire codec all tag registries live in.
+pub const WIRE_FILE: &str = "rust/src/net/wire.rs";
+
+/// One lexed file ready for the passes.
+pub struct SourceFile {
+    pub rel: String,
+    pub toks: Vec<Tok>,
+    pub masked: Vec<bool>,
+    pub spans: Vec<FnSpan>,
+}
+
+impl SourceFile {
+    pub fn load(root: &Path, rel: &str) -> Option<SourceFile> {
+        let src = std::fs::read_to_string(root.join(rel)).ok()?;
+        Some(SourceFile::from_source(rel, &src))
+    }
+
+    pub fn from_source(rel: &str, src: &str) -> SourceFile {
+        let toks = lexer::lex(src);
+        let masked = lexer::mask_test_code(&toks);
+        let spans = lexer::fn_spans(&toks);
+        SourceFile { rel: rel.to_string(), toks, masked, spans }
+    }
+}
+
+/// Recursively list `.rs` files under `root/rust/src`, repo-relative,
+/// sorted for deterministic output.
+pub fn rust_src_files(root: &Path) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.join("rust/src")];
+    while let Some(dir) = stack.pop() {
+        let Ok(entries) = std::fs::read_dir(&dir) else { continue };
+        for entry in entries.flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                if let Ok(rel) = p.strip_prefix(root) {
+                    out.push(path_to_rel(rel));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+fn path_to_rel(p: &Path) -> String {
+    // normalise to forward slashes so findings and allowlist entries
+    // are byte-identical across platforms
+    let mut s = String::new();
+    for comp in p.components() {
+        if !s.is_empty() {
+            s.push('/');
+        }
+        s.push_str(&comp.as_os_str().to_string_lossy());
+    }
+    s
+}
+
+fn in_never_panic(rel: &str) -> bool {
+    NEVER_PANIC.iter().any(|p| {
+        if let Some(dir) = p.strip_suffix('/') {
+            rel.starts_with(dir) && rel.len() > dir.len()
+        } else {
+            rel == *p
+        }
+    })
+}
+
+/// Run every pass over the repo at `root`; returns raw findings (the
+/// allowlist is applied by the caller).
+pub fn run_all(root: &Path) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let files = rust_src_files(root);
+    for rel in &files {
+        let Some(sf) = SourceFile::load(root, rel) else { continue };
+        if in_never_panic(rel) {
+            panic::run(&sf, &mut findings);
+        }
+        locks::run(&sf, &mut findings);
+        if rel == WIRE_FILE {
+            let design: PathBuf = root.join("DESIGN.md");
+            let tables = wire_tags::parse_design_tables(&design);
+            wire_tags::run(&sf, tables.as_ref(), &mut findings);
+        }
+    }
+    counters::run(root, &mut findings);
+    findings
+}

@@ -1,0 +1,95 @@
+//! Pass 1 — panic-freedom audit.
+//!
+//! In never-panic modules ([`super::NEVER_PANIC`]) hostile input must
+//! surface typed `WireError`/`D4mError` values. Flags, outside
+//! `#[cfg(test)]` code:
+//! - calls to panicking methods: `.unwrap()`, `.expect(..)`,
+//!   `.unwrap_err()`, `.expect_err(..)`
+//! - panicking macros: `panic!`, `unreachable!`, `todo!`,
+//!   `unimplemented!`, `assert!` family excluded (debug_assert is
+//!   compiled out of release builds; plain assert is not used on these
+//!   paths)
+//! - slice/array indexing in expression position (`x[i]`, `x[a..b]`),
+//!   which panics out of bounds — use `.get()`/`.get_mut()` or a
+//!   pattern instead
+
+use crate::findings::Finding;
+use crate::lexer::{containing_fn, Kind};
+
+use super::SourceFile;
+
+const PANIC_METHODS: &[&str] = &["unwrap", "expect", "unwrap_err", "expect_err"];
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Keywords that may directly precede `[` without it being an index
+/// expression (slice patterns, array types after `as`, etc.).
+const NON_EXPR_BEFORE_BRACKET: &[&str] = &[
+    "mut", "ref", "in", "return", "else", "match", "if", "let", "move", "as", "dyn",
+    "impl", "where", "box", "break", "const", "static", "type", "use", "pub", "fn",
+];
+
+pub fn run(sf: &SourceFile, findings: &mut Vec<Finding>) {
+    let toks = &sf.toks;
+    let n = toks.len();
+    for i in 0..n {
+        if sf.masked.get(i).copied().unwrap_or(false) {
+            continue;
+        }
+        let Some(t) = toks.get(i) else { continue };
+
+        // ---- panicking methods and macros
+        if t.kind == Kind::Ident {
+            let prev_dot = i > 0 && toks.get(i - 1).is_some_and(|p| p.is("."));
+            let next_paren = toks.get(i + 1).is_some_and(|p| p.is("("));
+            let next_bang = toks.get(i + 1).is_some_and(|p| p.is("!"));
+            if prev_dot && next_paren && PANIC_METHODS.contains(&t.text.as_str()) {
+                findings.push(Finding::new(
+                    "panic",
+                    &t.text,
+                    &sf.rel,
+                    t.line,
+                    &containing_fn(&sf.spans, i),
+                    format!(
+                        "call to panicking method `{}` in never-panic module — return a \
+                         typed error instead",
+                        t.text
+                    ),
+                ));
+            } else if next_bang && PANIC_MACROS.contains(&t.text.as_str()) {
+                findings.push(Finding::new(
+                    "panic",
+                    &format!("{}!", t.text),
+                    &sf.rel,
+                    t.line,
+                    &containing_fn(&sf.spans, i),
+                    format!("`{}!` in never-panic module — return a typed error instead", t.text),
+                ));
+            }
+        }
+
+        // ---- slice-index-without-get: `[` in expression position
+        if t.is("[") && i > 0 {
+            let Some(prev) = toks.get(i - 1) else { continue };
+            let expr_pos = match prev.kind {
+                Kind::Ident => !NON_EXPR_BEFORE_BRACKET.contains(&prev.text.as_str()),
+                Kind::Number => true,
+                Kind::Punct => prev.is(")") || prev.is("]") || prev.is("?"),
+                _ => false,
+            };
+            // `#[...]` attributes and `name![...]` macro brackets have
+            // punct `#`/`!` before them and are already excluded above
+            if expr_pos {
+                findings.push(Finding::new(
+                    "panic",
+                    "index",
+                    &sf.rel,
+                    t.line,
+                    &containing_fn(&sf.spans, i),
+                    "slice/array index panics out of bounds in never-panic module — use \
+                     `.get()`/`.get_mut()` or a pattern"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Pass 3 — wire-tag registry.
+//!
+//! Every frame-type tag is assigned exactly once per registry; retired
+//! tags (removed message types) keep a decode arm that returns
+//! `WireError::Retired` forever — they are never reassigned, so an old
+//! peer speaking a retired message gets a typed protocol error instead
+//! of a misparse. The DESIGN.md tag tables (anchored by
+//! `<!-- d4m-verify:tags NAME -->` comments) must match the code.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::findings::Finding;
+use crate::lexer::{Kind, Tok};
+
+use super::SourceFile;
+
+/// Decode fn → registry name. Each registry's tag space is the set of
+/// integer literals matched in that fn's top-level `match`.
+const DECODE_FNS: &[(&str, &str)] = &[
+    ("get_request", "Request"),
+    ("get_response", "Response"),
+    ("decode_client_frame", "ClientMsg"),
+    ("decode_server_frame", "ServerMsg"),
+    ("get_error", "Error"),
+    ("get_keysel", "KeySel"),
+];
+
+/// Tags that were retired and must decode only to `WireError::Retired`.
+const RETIRED: &[(&str, &[u32])] = &[("Request", &[4, 5])];
+
+/// One DESIGN.md table row: tag → (retired?, DESIGN.md line).
+pub type DesignTables = BTreeMap<String, BTreeMap<u32, (bool, u32)>>;
+
+pub fn run(sf: &SourceFile, design: Option<&DesignTables>, findings: &mut Vec<Finding>) {
+    // registry -> tag -> retired?
+    let mut tag_map: BTreeMap<&str, BTreeMap<u32, bool>> = BTreeMap::new();
+    for span in &sf.spans {
+        let Some(&(_, reg)) =
+            DECODE_FNS.iter().find(|(f, _)| span.name == *f)
+        else {
+            continue;
+        };
+        let arms = match_arms(&sf.toks, span.start, span.end);
+        let seen = tag_map.entry(reg).or_default();
+        for (pat, body) in &arms {
+            let line = pat.first().map_or(0, |t| t.line);
+            let retired = body.iter().take(400).any(|t| t.is("Retired"));
+            for t in pat {
+                if t.kind != Kind::Number {
+                    continue;
+                }
+                let Ok(v) = t.text.parse::<u32>() else { continue };
+                if seen.contains_key(&v) {
+                    findings.push(Finding::new(
+                        "wire",
+                        "dup-tag",
+                        &sf.rel,
+                        line,
+                        &span.name,
+                        format!("duplicate {reg} tag {v} in decode match"),
+                    ));
+                }
+                seen.insert(v, retired);
+            }
+        }
+    }
+    // retired-tag policy
+    for &(reg, tags) in RETIRED {
+        for &v in tags {
+            match tag_map.get(reg).and_then(|m| m.get(&v)) {
+                None => findings.push(Finding::new(
+                    "wire",
+                    "retired-missing",
+                    &sf.rel,
+                    0,
+                    "",
+                    format!(
+                        "retired {reg} tag {v} has no decode arm — retired tags must \
+                         decode to WireError::Retired forever"
+                    ),
+                )),
+                Some(false) => findings.push(Finding::new(
+                    "wire",
+                    "retired-reassigned",
+                    &sf.rel,
+                    0,
+                    "",
+                    format!(
+                        "retired {reg} tag {v} decodes to something other than \
+                         WireError::Retired — retired tags are never reassigned"
+                    ),
+                )),
+                Some(true) => {}
+            }
+        }
+    }
+    // DESIGN.md tables (only when DESIGN.md exists — fixtures may omit it)
+    let Some(design) = design else { return };
+    for (reg, rows) in design {
+        let Some(code) = tag_map.get(reg.as_str()) else { continue };
+        for (&v, &(_, doc_line)) in rows {
+            if !code.contains_key(&v) {
+                findings.push(Finding::new(
+                    "wire",
+                    "doc-extra",
+                    "DESIGN.md",
+                    doc_line,
+                    reg,
+                    format!("DESIGN.md lists {reg} tag {v} but wire.rs has no decode arm"),
+                ));
+            }
+        }
+        for (&v, &code_retired) in code {
+            match rows.get(&v) {
+                None => findings.push(Finding::new(
+                    "wire",
+                    "doc-missing",
+                    "DESIGN.md",
+                    0,
+                    reg,
+                    format!("wire.rs decodes {reg} tag {v} but the DESIGN.md table omits it"),
+                )),
+                Some(&(doc_retired, doc_line)) if doc_retired != code_retired => {
+                    findings.push(Finding::new(
+                        "wire",
+                        "doc-retired",
+                        "DESIGN.md",
+                        doc_line,
+                        reg,
+                        format!(
+                            "{reg} tag {v}: retired flag disagrees between DESIGN.md \
+                             and wire.rs"
+                        ),
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+    }
+}
+
+/// Parse DESIGN.md tag tables. A table is anchored by a line containing
+/// `<!-- d4m-verify:tags NAME -->`; subsequent `| N | name |` rows are
+/// its entries ("retired" anywhere in the name marks the tag retired).
+/// A non-blank, non-`|` line ends the table.
+pub fn parse_design_tables(path: &Path) -> Option<DesignTables> {
+    let src = std::fs::read_to_string(path).ok()?;
+    let mut tables: DesignTables = BTreeMap::new();
+    let mut cur: Option<String> = None;
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = (idx + 1) as u32;
+        let line = raw.trim();
+        if let Some(name) = anchor_name(line) {
+            tables.entry(name.clone()).or_default();
+            cur = Some(name);
+            continue;
+        }
+        let Some(reg) = cur.clone() else { continue };
+        if let Some((tag, label)) = table_row(line) {
+            let retired = label.to_ascii_lowercase().contains("retired");
+            if let Some(t) = tables.get_mut(&reg) {
+                t.insert(tag, (retired, lineno));
+            }
+        } else if !line.is_empty() && !line.starts_with('|') {
+            cur = None;
+        }
+    }
+    Some(tables)
+}
+
+/// `<!-- d4m-verify:tags NAME -->` → `NAME`.
+fn anchor_name(line: &str) -> Option<String> {
+    let rest = line.strip_prefix("<!--")?.trim_start();
+    let rest = rest.strip_prefix("d4m-verify:tags")?.trim_start();
+    let end = rest.find("-->")?;
+    let name = rest.get(..end)?.trim();
+    if name.is_empty() || name.contains(char::is_whitespace) {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+/// `| N | name ... |` → `(N, name)`. Separator rows (`|---|---|`) and
+/// header rows fail the integer parse and are skipped.
+fn table_row(line: &str) -> Option<(u32, String)> {
+    let rest = line.strip_prefix('|')?;
+    let mut cells = rest.split('|');
+    let tag: u32 = cells.next()?.trim().parse().ok()?;
+    let label = cells.next()?.trim().to_string();
+    Some((tag, label))
+}
+
+/// Extract the arms of the first `match` inside token span `[s, e]`.
+/// Returns `(pattern_tokens, body_tokens)` pairs. Handles block bodies
+/// without trailing commas and struct patterns containing braces.
+fn match_arms(toks: &[Tok], s: usize, e: usize) -> Vec<(Vec<Tok>, Vec<Tok>)> {
+    let mut i = s;
+    while i <= e && !toks.get(i).is_some_and(|t| t.kind == Kind::Ident && t.is("match")) {
+        i += 1;
+    }
+    if i > e {
+        return Vec::new();
+    }
+    // first `{` at paren/bracket level 0 after the scrutinee
+    let mut lvl = 0i32;
+    while i <= e {
+        let Some(t) = toks.get(i) else { return Vec::new() };
+        if t.is("(") || t.is("[") {
+            lvl += 1;
+        } else if t.is(")") || t.is("]") {
+            lvl -= 1;
+        } else if t.is("{") && lvl == 0 {
+            break;
+        }
+        i += 1;
+    }
+    if i > e {
+        return Vec::new();
+    }
+    let mut arms = Vec::new();
+    let mut j = i + 1;
+    while j <= e {
+        if toks.get(j).is_some_and(|t| t.is("}")) {
+            break; // end of the match block
+        }
+        // ---- pattern: tokens until `=>` at nest level 0
+        let mut pat: Vec<Tok> = Vec::new();
+        let mut lvl = 0i32;
+        while j <= e {
+            let Some(t) = toks.get(j) else { break };
+            if t.is("(") || t.is("[") || t.is("{") {
+                lvl += 1;
+            } else if t.is(")") || t.is("]") || t.is("}") {
+                lvl -= 1;
+            }
+            if lvl == 0 && t.is("=") && toks.get(j + 1).is_some_and(|x| x.is(">")) {
+                j += 2;
+                break;
+            }
+            pat.push(t.clone());
+            j += 1;
+        }
+        // ---- body: balanced block (+ optional comma), or expression
+        // up to a top-level comma / the match's closing brace
+        let mut body: Vec<Tok> = Vec::new();
+        if toks.get(j).is_some_and(|t| t.is("{")) {
+            let mut d = 0i32;
+            while j <= e {
+                let Some(t) = toks.get(j) else { break };
+                body.push(t.clone());
+                if t.is("{") {
+                    d += 1;
+                } else if t.is("}") {
+                    d -= 1;
+                    if d == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            if toks.get(j).is_some_and(|t| t.is(",")) {
+                j += 1;
+            }
+        } else {
+            let mut lvl = 0i32;
+            while j <= e {
+                let Some(t) = toks.get(j) else { break };
+                if lvl == 0 && t.is(",") {
+                    j += 1;
+                    break;
+                }
+                if lvl == 0 && t.is("}") {
+                    break; // closes the match itself
+                }
+                if t.is("(") || t.is("[") || t.is("{") {
+                    lvl += 1;
+                } else if t.is(")") || t.is("]") || t.is("}") {
+                    lvl -= 1;
+                }
+                body.push(t.clone());
+                j += 1;
+            }
+        }
+        if !pat.is_empty() {
+            arms.push((pat, body));
+        } else if body.is_empty() {
+            break; // no progress — malformed stream, stop rather than loop
+        }
+    }
+    arms
+}

@@ -1,0 +1,2 @@
+pub const NET_REQUESTS: &str = "net.requests";
+pub const STORAGE_FLUSHES: &str = "storage.flushes";

@@ -1,0 +1,13 @@
+pub enum WireError {
+    Retired { what: &'static str, tag: u8 },
+    Unknown(u8),
+}
+
+pub fn get_request(tag: u8) -> Result<u32, WireError> {
+    match tag {
+        0 => Ok(0),
+        1 => Ok(1),
+        tag @ (4 | 5) => Err(WireError::Retired { what: "Request", tag }),
+        other => Err(WireError::Unknown(other)),
+    }
+}

@@ -1,0 +1,12 @@
+use std::sync::{Mutex, RwLock};
+pub struct S { inner: Mutex<u32>, tablets: Vec<RwLock<u32>> }
+impl S {
+    pub fn ordered(&self) -> u32 {
+        let g = self.inner.lock().unwrap();
+        let tl = self.tablets[0].read().unwrap();
+        let v = *g + *tl;
+        drop(tl);
+        drop(g);
+        v
+    }
+}

@@ -1,0 +1,6 @@
+fn main() {
+    let rows = vec![("net.requests", 1u64), ("net.bogus_counter", 2u64)];
+    for (name, v) in rows {
+        println!("{name} {v}");
+    }
+}

@@ -1,0 +1,21 @@
+use std::sync::{Mutex, RwLock};
+pub struct S { inner: Mutex<u32>, tablets: Vec<RwLock<u32>> }
+impl S {
+    pub fn bad(&self) {
+        let tl = self.tablets[0].read().unwrap();
+        let g = self.inner.lock().unwrap();
+        drop(g);
+        drop(tl);
+    }
+    pub fn good(&self) {
+        let g = self.inner.lock().unwrap();
+        let tl = self.tablets[0].read().unwrap();
+        drop(tl);
+        drop(g);
+    }
+    pub fn bad_stream(&self, st: &Store) {
+        let g = self.inner.lock().unwrap();
+        let _it = st.scan_stream(0);
+        drop(g);
+    }
+}

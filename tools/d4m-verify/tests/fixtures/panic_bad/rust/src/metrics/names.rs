@@ -1,0 +1,1 @@
+pub const NET_REQUESTS: &str = "net.requests";

@@ -1,0 +1,5 @@
+pub fn parse(buf: &[u8]) -> u8 {
+    let first = buf.first().copied().unwrap();
+    let second = buf[1];
+    first + second
+}

@@ -1,0 +1,182 @@
+//! Fixture tests for d4m-verify: each bad fixture is a miniature repo
+//! seeded with exactly one class of violation; the tests assert the
+//! exact `file:line` the tool reports and the non-zero exit code, and
+//! the clean fixture asserts the zero-findings/exit-0 leg.
+
+// Bench/example/test scaffolding: unwrap/expect on setup is idiomatic
+// here; clippy.toml's disallowed-methods targets library code.
+#![allow(clippy::disallowed_methods)]
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn run_on(root: &Path, extra: &[&str]) -> Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_d4m-verify"));
+    cmd.arg("--root").arg(root);
+    for a in extra {
+        cmd.arg(a);
+    }
+    cmd.output().expect("spawn d4m-verify")
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn panic_fixture_reports_exact_sites_and_fails() {
+    let out = run_on(&fixture("panic_bad"), &[]);
+    let text = stdout_of(&out);
+    assert_eq!(out.status.code(), Some(1), "expected exit 1, got {out:?}");
+    assert!(
+        text.contains("rust/src/net/server.rs:2: [panic/unwrap] in `parse`"),
+        "missing unwrap finding at server.rs:2 in:\n{text}"
+    );
+    assert!(
+        text.contains("rust/src/net/server.rs:3: [panic/index] in `parse`"),
+        "missing index finding at server.rs:3 in:\n{text}"
+    );
+    assert!(text.contains("2 finding(s), 0 allowlisted"), "unexpected totals:\n{text}");
+}
+
+#[test]
+fn lock_fixture_reports_inversion_and_stream_under_lock() {
+    let out = run_on(&fixture("locks_bad"), &[]);
+    let text = stdout_of(&out);
+    assert_eq!(out.status.code(), Some(1), "expected exit 1, got {out:?}");
+    assert!(
+        text.contains("rust/src/store.rs:6: [locks/order] in `bad`"),
+        "missing lock-order finding at store.rs:6 in:\n{text}"
+    );
+    assert!(
+        text.contains("rust/src/store.rs:18: [locks/scan-stream] in `bad_stream`"),
+        "missing scan-stream finding at store.rs:18 in:\n{text}"
+    );
+    // the correctly-ordered fn must NOT be flagged
+    assert!(!text.contains("in `good`"), "false positive on correctly ordered fn:\n{text}");
+    assert!(text.contains("2 finding(s), 0 allowlisted"), "unexpected totals:\n{text}");
+}
+
+#[test]
+fn wire_fixture_reports_duplicate_tag() {
+    let out = run_on(&fixture("wire_bad"), &[]);
+    let text = stdout_of(&out);
+    assert_eq!(out.status.code(), Some(1), "expected exit 1, got {out:?}");
+    assert!(
+        text.contains("rust/src/net/wire.rs:9: [wire/dup-tag] in `get_request`"),
+        "missing dup-tag finding at wire.rs:9 in:\n{text}"
+    );
+    assert!(text.contains("1 finding(s), 0 allowlisted"), "unexpected totals:\n{text}");
+}
+
+#[test]
+fn counter_fixture_reports_undeclared_name() {
+    let out = run_on(&fixture("counters_bad"), &[]);
+    let text = stdout_of(&out);
+    assert_eq!(out.status.code(), Some(1), "expected exit 1, got {out:?}");
+    assert!(
+        text.contains("rust/src/main.rs:2: [counters/undeclared] in `main`"),
+        "missing undeclared-counter finding at main.rs:2 in:\n{text}"
+    );
+    assert!(text.contains("net.bogus_counter"), "finding should name the literal:\n{text}");
+    assert!(text.contains("1 finding(s), 0 allowlisted"), "unexpected totals:\n{text}");
+}
+
+#[test]
+fn clean_fixture_exits_zero_with_no_findings() {
+    let out = run_on(&fixture("clean"), &[]);
+    let text = stdout_of(&out);
+    assert_eq!(out.status.code(), Some(0), "expected exit 0 on clean fixture:\n{text}");
+    assert!(text.contains("0 finding(s)"), "expected zero findings:\n{text}");
+}
+
+#[test]
+fn json_output_is_machine_readable() {
+    let out = run_on(&fixture("panic_bad"), &["--json"]);
+    let text = stdout_of(&out);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(text.starts_with("{\"findings\":["), "not a JSON object:\n{text}");
+    assert!(text.contains("\"pass\":\"panic\""), "missing pass field:\n{text}");
+    assert!(text.contains("\"file\":\"rust/src/net/server.rs\""), "missing file field:\n{text}");
+    assert!(text.contains("\"total\":2"), "missing total:\n{text}");
+}
+
+#[test]
+fn unknown_flag_is_a_usage_error() {
+    let out = run_on(&fixture("clean"), &["--frobnicate"]);
+    assert_eq!(out.status.code(), Some(2), "usage errors must exit 2, got {out:?}");
+}
+
+#[test]
+fn repo_tree_has_no_unallowlisted_findings() {
+    // CARGO_MANIFEST_DIR = <repo>/tools/d4m-verify
+    let repo = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("repo root")
+        .to_path_buf();
+    let out = run_on(&repo, &[]);
+    let text = stdout_of(&out);
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "the tree must be clean modulo the allowlist; findings:\n{text}"
+    );
+}
+
+// ---------------------------------------------------- allowlist policy
+
+#[test]
+fn allow_entry_without_reason_is_a_finding() {
+    let src = "[[allow]]\npass = \"panic\"\nfile = \"rust/src/x.rs\"\nreason = \"\"\n";
+    let (entries, findings) = d4m_verify::allow::parse(src, "allow.toml");
+    assert_eq!(entries.len(), 1);
+    assert!(
+        findings.iter().any(|f| f.what == "no-reason"),
+        "empty reason must be rejected: {findings:?}"
+    );
+}
+
+#[test]
+fn blanket_suppression_of_protected_file_is_a_finding() {
+    let src = "[[allow]]\npass = \"panic\"\nfile = \"rust/src/net/wire.rs\"\nreason = \"x\"\n";
+    let (_, findings) = d4m_verify::allow::parse(src, "allow.toml");
+    assert!(
+        findings.iter().any(|f| f.what == "blanket"),
+        "func-less entry for a protected file must be rejected: {findings:?}"
+    );
+}
+
+#[test]
+fn scoped_entry_for_protected_file_is_accepted() {
+    let src = "[[allow]]\npass = \"panic\"\nfile = \"rust/src/net/wire.rs\"\n\
+               func = \"f\"\nwhat = \"index\"\nreason = \"bounds proven\"\n";
+    let (entries, findings) = d4m_verify::allow::parse(src, "allow.toml");
+    assert_eq!(entries.len(), 1);
+    assert!(findings.is_empty(), "scoped justified entry must parse clean: {findings:?}");
+}
+
+#[test]
+fn stale_allow_entries_are_reported_unused() {
+    let src = "[[allow]]\npass = \"panic\"\nfile = \"rust/src/x.rs\"\n\
+               func = \"f\"\nreason = \"x\"\n";
+    let (entries, _) = d4m_verify::allow::parse(src, "allow.toml");
+    let (unallowed, allowed) = d4m_verify::allow::apply(&entries, Vec::new(), "allow.toml");
+    assert_eq!(allowed, 0);
+    assert!(
+        unallowed.iter().any(|f| f.pass == "allow" && f.what == "unused"),
+        "stale entry must surface as allow/unused: {unallowed:?}"
+    );
+}
+
+#[test]
+fn real_allowlist_parses_clean() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("allow.toml");
+    let src = std::fs::read_to_string(&path).expect("read allow.toml");
+    let (entries, findings) = d4m_verify::allow::parse(&src, "tools/d4m-verify/allow.toml");
+    assert!(!entries.is_empty(), "allow.toml should carry the burned-down entries");
+    assert!(findings.is_empty(), "allow.toml violates its own policy: {findings:?}");
+}
